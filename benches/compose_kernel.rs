@@ -1,0 +1,76 @@
+//! REAL-measurement bench: the fused-vs-eager compose on CPU
+//! (regenerates the *mechanism* behind Figure 6 / Table 9's compose
+//! column — see DESIGN.md §1 on what transfers from the simulator).
+//!
+//! Both paths run in the caching-allocator regime (preallocated, reused
+//! buffers — exactly PyTorch's steady state), so the measurement isolates
+//! PASS COUNT: eager makes 4 separate passes through 9 array-streams,
+//! fused one pass through 3. Past LLC both are memory-bound, so the
+//! speedup and its growth with working-set size are real measurements.
+
+use dorafactors::bench::{shapes, timing};
+use dorafactors::dora::compose_cpu;
+use dorafactors::util::stats;
+use dorafactors::util::table::{fmt_secs, fmt_speedup, Table};
+use dorafactors::util::rng::Rng;
+
+fn main() {
+    let cfg = timing::BenchCfg { warmup: 3, trials: 30, time_cap_s: 15.0 };
+    let mut t = Table::new(
+        "compose kernel (REAL CPU): eager 4-pass vs fused 1-pass",
+        &["rows x d_out", "MiB", "eager", "fused", "dual", "speedup", "fused GB/s"],
+    );
+    let mut speedups = Vec::new();
+    for act in shapes::cpu_act_shapes() {
+        let mut rng = Rng::new(act.rows as u64);
+        let base = rng.normal_vec_f32(act.elems(), 1.0);
+        let lora = rng.normal_vec_f32(act.elems(), 0.3);
+        let g: Vec<f32> = (0..act.d_out)
+            .map(|_| 1.0 + rng.normal() as f32 * 0.002)
+            .collect();
+        let s = 2.0f32;
+
+        let mut temps = compose_cpu::EagerTemps::new(act);
+        let mut out = vec![0f32; act.elems()];
+        let eager = timing::bench("eager", cfg, || {
+            compose_cpu::compose_eager_into(&base, &lora, &g, s, act, &mut temps, &mut out);
+            std::hint::black_box(&out);
+        });
+        let fused = timing::bench("fused", cfg, || {
+            compose_cpu::compose_fused_into(&base, &lora, &g, s, act, &mut out);
+            std::hint::black_box(&out);
+        });
+        let mut inner = vec![0f32; act.elems()];
+        let dual = timing::bench("dual", cfg, || {
+            compose_cpu::compose_fused_dual_into(&base, &lora, &g, s, act, &mut out, &mut inner);
+            std::hint::black_box((&out, &inner));
+        });
+        let speedup = eager.median_s / fused.median_s;
+        speedups.push(speedup);
+        // Useful traffic of the fused pass: 3 reads + 1 write, f32.
+        let bytes = (4 * act.elems() * 4) as u64;
+        t.row(vec![
+            format!("{}x{}", act.rows, act.d_out),
+            format!("{:.0}", (act.elems() * 4) as f64 / (1 << 20) as f64),
+            fmt_secs(eager.median_s),
+            fmt_secs(fused.median_s),
+            fmt_secs(dual.median_s),
+            fmt_speedup(speedup),
+            format!("{:.1}", fused.throughput_gbps(bytes)),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "geomean speedup: {} (paper compose-fwd geomeans: 1.47-2.70x across GPUs)",
+        fmt_speedup(stats::geomean(&speedups))
+    );
+    assert!(
+        stats::geomean(&speedups) > 1.2,
+        "fused compose should beat the 4-pass chain on CPU"
+    );
+    // The mechanism check: fused wins at every shape.
+    assert!(
+        speedups.iter().all(|&s| s > 1.1),
+        "fused lost somewhere: {speedups:?}"
+    );
+}

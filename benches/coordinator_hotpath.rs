@@ -1,0 +1,92 @@
+//! REAL-measurement bench: L3 hot-path overheads — dispatch decision
+//! latency, allocator-simulator replay throughput, and PJRT executable
+//! invocation latency for the compose artifacts (eager vs fused).
+//!
+//! The paper's L3 target (PERFORMANCE OPTIMIZATION §L3): the coordinator
+//! must never be the bottleneck — dispatch < 1 us/module, PJRT dispatch
+//! overhead small relative to kernel time.
+
+use dorafactors::bench::timing;
+use dorafactors::dispatch::{self, ComposeCtx, DispatchEnv};
+use dorafactors::dora::config::{ActShape, Config, ModuleShape};
+use dorafactors::dora::mem_events;
+use dorafactors::memsim::allocator::CachingAllocator;
+use dorafactors::numerics::Dtype;
+use dorafactors::runtime::{manifest, Engine, Tensor};
+use dorafactors::util::rng::Rng;
+use dorafactors::util::table::{fmt_secs, Table};
+
+fn main() {
+    let cfg = timing::BenchCfg { warmup: 3, trials: 50, time_cap_s: 10.0 };
+    let mut t = Table::new("L3 hot-path overheads (REAL)", &["operation", "median", "per unit"]);
+
+    // Dispatch: full model inventory (252 modules for Qwen3-VL-8B).
+    let env = DispatchEnv::default();
+    let spec = dorafactors::models::find("Qwen3-VL-8B").unwrap();
+    let inv = spec.inventory(384);
+    let m = timing::bench("dispatch", cfg, || {
+        for (_, shape, count) in &inv {
+            for _ in 0..*count {
+                std::hint::black_box(dispatch::select_tier(
+                    &env,
+                    &ComposeCtx::training(ActShape::new(4096, shape.d_out)),
+                ));
+            }
+        }
+    });
+    let n_mod = spec.n_adapted_modules();
+    t.row(vec![
+        format!("dispatch x{n_mod} modules"),
+        fmt_secs(m.median_s),
+        format!("{:.1} ns/module", m.median_s / n_mod as f64 * 1e9),
+    ]);
+    assert!(
+        (m.median_s / n_mod as f64) < 1e-6,
+        "dispatch exceeds 1 us/module"
+    );
+
+    // Allocator replay: one full model's norm event streams.
+    let shape = ModuleShape::new(4096, 4096, 384);
+    let events = mem_events::norm_events(shape, Config::Eager, Dtype::Bf16, 256 << 20);
+    let m = timing::bench("memsim replay", cfg, || {
+        let mut a = CachingAllocator::new();
+        a.replay(std::hint::black_box(&events));
+        std::hint::black_box(a.max_allocated());
+    });
+    t.row(vec![
+        format!("allocator replay ({} events)", events.len()),
+        fmt_secs(m.median_s),
+        format!("{:.0} ns/event", m.median_s / events.len() as f64 * 1e9),
+    ]);
+
+    // PJRT invocation: compose artifacts, eager vs fused lowering.
+    let dir = manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::load(&dir).expect("engine");
+        let (rows, d_out) = (512usize, 2048usize);
+        let mut rng = Rng::new(1);
+        let inputs = [
+            Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 1.0)),
+            Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 0.3)),
+            Tensor::f32(vec![d_out], rng.normal_vec_f32(d_out, 0.01)),
+        ];
+        for name in ["compose_eager_512x2048", "compose_fused_512x2048"] {
+            engine.executable(name).unwrap(); // warm compile
+            let m = timing::bench(name, cfg, || {
+                std::hint::black_box(engine.run(name, &inputs).unwrap());
+            });
+            t.row(vec![
+                format!("PJRT {name}"),
+                fmt_secs(m.median_s),
+                format!(
+                    "{:.2} GB/s effective",
+                    (4 * rows * d_out * 4) as f64 / m.median_s / 1e9
+                ),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts missing — run `make artifacts` for the PJRT rows)");
+    }
+
+    println!("{}", t.to_markdown());
+}

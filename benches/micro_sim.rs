@@ -1,0 +1,14 @@
+//! Cost-model bench: regenerates the microbenchmark evaluation — Tables
+//! 9/14 and Figures 1, 6, 7, 8, 10, 11, 13-15 — on the simulated testbed,
+//! plus the g-distribution and dispatch statistics.
+
+use dorafactors::bench::report;
+
+fn main() {
+    for id in [
+        "table1", "table7", "table9", "fig1", "fig6", "fig7", "fig8", "fig10", "fig11",
+        "fig13", "gdist",
+    ] {
+        println!("{}", report::by_name(id).unwrap());
+    }
+}

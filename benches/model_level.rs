@@ -1,0 +1,12 @@
+//! Cost-model bench: regenerates the model-level evaluation — Tables 4, 5,
+//! 6, 8/13 and Figures 3, 4, 5 — on the simulated six-GPU testbed.
+//! (DESIGN.md §1 explains the substitution; the shapes — who wins, by what
+//! factor, where OOMs fall — are the reproduction target.)
+
+use dorafactors::bench::report;
+
+fn main() {
+    for id in ["table4", "table6", "table8", "fig4", "fig5"] {
+        println!("{}", report::by_name(id).unwrap());
+    }
+}

@@ -1,0 +1,71 @@
+//! REAL-measurement bench: the three weight-norm engines on CPU, with
+//! measured transient memory (Figure 10's latency tradeoff + Table 1/7's
+//! measured-memory methodology, at CPU-feasible scales).
+//!
+//! Expected shape of the results (the paper's claims):
+//! * factored uses orders of magnitude less transient memory;
+//! * the dense engines pay the materialization; the factored path's
+//!   latency is dominated by the U contraction (rank-dependent).
+
+use dorafactors::bench::{shapes, timing};
+use dorafactors::dora::norm_cpu::{self, AllocTracker};
+use dorafactors::util::table::{fmt_bytes, fmt_secs, Table};
+use dorafactors::util::rng::Rng;
+
+fn main() {
+    let cfg = timing::BenchCfg { warmup: 1, trials: 10, time_cap_s: 20.0 };
+    let mut t = Table::new(
+        "weight-norm engines (REAL CPU): latency + measured transient peak",
+        &["shape", "r", "peft", "dense", "factored", "peft mem", "dense mem", "fact mem", "mem x"],
+    );
+    for m in shapes::cpu_norm_shapes() {
+        let mut rng = Rng::new(m.rank as u64);
+        let w = rng.normal_vec_f32(m.d_out * m.d_in, 0.05);
+        let a = rng.normal_vec_f32(m.rank * m.d_in, 0.1);
+        let b = rng.normal_vec_f32(m.d_out * m.rank, 0.1);
+        let s = 1.5f32;
+
+        let mut tp = AllocTracker::new();
+        let peft = timing::bench("peft", cfg, || {
+            let mut tr = AllocTracker::new();
+            std::hint::black_box(norm_cpu::peft_norm(&w, &a, &b, s, m, &mut tr));
+        });
+        norm_cpu::peft_norm(&w, &a, &b, s, m, &mut tp);
+
+        let mut td = AllocTracker::new();
+        let dense = timing::bench("dense", cfg, || {
+            let mut tr = AllocTracker::new();
+            std::hint::black_box(norm_cpu::dense_ba_norm(&w, &a, &b, s, m, &mut tr));
+        });
+        norm_cpu::dense_ba_norm(&w, &a, &b, s, m, &mut td);
+
+        let mut tf = AllocTracker::new();
+        let fact = timing::bench("factored", cfg, || {
+            let mut tr = AllocTracker::new();
+            std::hint::black_box(norm_cpu::factored_norm(
+                &w, &a, &b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tr,
+            ));
+        });
+        norm_cpu::factored_norm(&w, &a, &b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tf);
+
+        t.row(vec![
+            format!("{}x{}", m.d_out, m.d_in),
+            m.rank.to_string(),
+            fmt_secs(peft.median_s),
+            fmt_secs(dense.median_s),
+            fmt_secs(fact.median_s),
+            fmt_bytes(tp.peak()),
+            fmt_bytes(td.peak()),
+            fmt_bytes(tf.peak()),
+            format!("{:.1}x", tp.peak() as f64 / tf.peak() as f64),
+        ]);
+        // Invariant mirrored from the paper: the factored path's
+        // transient memory is strictly smaller. Latency is NOT asserted —
+        // the paper itself reports the factored norm 4.8x slower than the
+        // dense reference in isolation (§2.3 compute tradeoff); what wins
+        // end-to-end is avoiding the materialization, not the norm op.
+        assert!(tf.peak() < td.peak(), "factored must use less transient memory");
+    }
+    println!("{}", t.to_markdown());
+    println!("(paper Table 7 measured reductions at datacenter scales: 2.6-11x)");
+}

@@ -1,0 +1,56 @@
+//! Perf-pass probe: candidate optimizations for the compose hot paths.
+//! Used during the §Perf iteration (EXPERIMENTS.md); kept as a bench so
+//! the measurements are reproducible.
+
+use dorafactors::bench::timing::{bench, BenchCfg};
+use dorafactors::dora::compose_cpu;
+use dorafactors::dora::config::ActShape;
+use dorafactors::util::rng::Rng;
+
+/// Candidate A: current collect-based fused kernel (baseline).
+/// Candidate B: into-buffer (no allocation) — the coordinator's reuse path.
+/// Candidate C: into-buffer with precomputed (g-1) vector.
+fn compose_fused_pregm1(base: &[f32], lora: &[f32], g: &[f32], gm1: &[f32], s: f32, act: ActShape, out: &mut [f32]) {
+    let d = act.d_out;
+    for ((orow, brow), lrow) in out
+        .chunks_exact_mut(d)
+        .zip(base.chunks_exact(d))
+        .zip(lora.chunks_exact(d))
+    {
+        for j in 0..d {
+            orow[j] = gm1[j] * brow[j] + g[j] * (s * lrow[j]);
+        }
+    }
+}
+
+fn main() {
+    let cfg = BenchCfg { warmup: 3, trials: 30, time_cap_s: 12.0 };
+    for act in [ActShape::new(1024, 4096), ActShape::new(4096, 8192)] {
+        let mut rng = Rng::new(1);
+        let base = rng.normal_vec_f32(act.elems(), 1.0);
+        let lora = rng.normal_vec_f32(act.elems(), 0.3);
+        let g: Vec<f32> = (0..act.d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect();
+        let gm1: Vec<f32> = g.iter().map(|&x| x - 1.0).collect();
+        let mut out = vec![0f32; act.elems()];
+        let bytes = (4 * act.elems() * 4) as u64;
+
+        let a = bench("collect", cfg, || {
+            std::hint::black_box(compose_cpu::compose_fused(&base, &lora, &g, 2.0, act));
+        });
+        let b = bench("into", cfg, || {
+            compose_cpu::compose_fused_into(&base, &lora, &g, 2.0, act, &mut out);
+            std::hint::black_box(&out);
+        });
+        let c = bench("into+pregm1", cfg, || {
+            compose_fused_pregm1(&base, &lora, &g, &gm1, 2.0, act, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{}x{}: collect {:.2} ms ({:.1} GB/s) | into {:.2} ms ({:.1} GB/s) | pregm1 {:.2} ms ({:.1} GB/s)",
+            act.rows, act.d_out,
+            a.median_s * 1e3, a.throughput_gbps(bytes),
+            b.median_s * 1e3, b.throughput_gbps(bytes),
+            c.median_s * 1e3, c.throughput_gbps(bytes),
+        );
+    }
+}

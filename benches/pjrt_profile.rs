@@ -1,0 +1,50 @@
+use dorafactors::runtime::{manifest, Engine, Tensor};
+use dorafactors::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let engine = Engine::load(&manifest::default_dir()).unwrap();
+    let (rows, d_out) = (512usize, 2048usize);
+    let mut rng = Rng::new(1);
+    let inputs = [
+        Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 1.0)),
+        Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 0.3)),
+        Tensor::f32(vec![d_out], rng.normal_vec_f32(d_out, 0.01)),
+    ];
+    for name in ["compose_eager_512x2048", "compose_fused_512x2048"] {
+        let exe = engine.executable(name).unwrap();
+        // Pre-build literals once.
+        let lits: Vec<xla::Literal> = inputs.iter().map(|t| {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(t.as_f32().unwrap()).reshape(&dims).unwrap()
+        }).collect();
+        for _ in 0..3 { let _ = exe.execute::<xla::Literal>(&lits).unwrap(); }
+        let t0 = Instant::now();
+        let n = 10;
+        for _ in 0..n {
+            let r = exe.execute::<xla::Literal>(&lits).unwrap();
+            std::hint::black_box(&r);
+        }
+        let exec_only = t0.elapsed().as_secs_f64() / n as f64;
+        // Now with output download:
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let r = exe.execute::<xla::Literal>(&lits).unwrap();
+            let lit = r[0][0].to_literal_sync().unwrap();
+            std::hint::black_box(&lit);
+        }
+        let with_dl = t0.elapsed().as_secs_f64() / n as f64;
+        // Literal construction cost:
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let l: Vec<xla::Literal> = inputs.iter().map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.as_f32().unwrap()).reshape(&dims).unwrap()
+            }).collect();
+            std::hint::black_box(&l);
+        }
+        let lit_cost = t0.elapsed().as_secs_f64() / n as f64;
+        println!("{name}: exec {:.2} ms | +download {:.2} ms | literal-build {:.2} ms",
+            exec_only*1e3, with_dl*1e3, lit_cost*1e3);
+    }
+}

@@ -1,0 +1,96 @@
+//! Serving example: train an adapter briefly, hand the adapted parameters
+//! to the batched inference server (Tier-2 fused forward), then fire
+//! concurrent client traffic and report latency/throughput/occupancy —
+//! the paper's deployment context (§6.1) in miniature.
+//!
+//! Run with:
+//!   cargo run --release --example serve -- \
+//!       [--config small] [--train-steps 20] [--clients 8] [--requests 64]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::coordinator::data::MarkovCorpus;
+use dorafactors::runtime::{manifest, Engine};
+use dorafactors::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let config = args.get_or("config", "small").to_string();
+    let train_steps = args.get_usize("train-steps", 20);
+    let n_clients = args.get_usize("clients", 8);
+    let n_requests = args.get_usize("requests", 64);
+
+    let dir = manifest::default_dir();
+    let engine = Engine::load(&dir)?;
+    let info = engine.manifest().config(&config)?.clone();
+
+    // --- phase 1: fine-tune the adapter -----------------------------------
+    println!("== phase 1: training {train_steps} steps on config {config} ==");
+    let mut tr = Trainer::new(
+        engine,
+        TrainerCfg { config: config.clone(), variant: "fused".into(), seed: 7, branching: 4, eval_every: 0 },
+    )?;
+    tr.train_steps(train_steps)?;
+    println!(
+        "trained: loss {:.4} -> {:.4}",
+        tr.history.first().unwrap().loss,
+        tr.history.last().unwrap().loss
+    );
+
+    // --- phase 2: serve with the adapted parameters ------------------------
+    println!("\n== phase 2: serving with {n_clients} clients x {n_requests} requests ==");
+    let server = Server::start_with_params(
+        &dir,
+        ServerCfg { config: config.clone(), max_wait: Duration::from_millis(5) },
+        tr.frozen().to_vec(),
+        tr.trainable().to_vec(),
+    )?;
+    let client = server.client();
+
+    let t0 = Instant::now();
+    let per_client = n_requests / n_clients.max(1);
+    let vocab = info.vocab;
+    let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let handles: Vec<_> = (0..n_clients)
+        .map(|cid| {
+            let c = client.clone();
+            let counter = counter.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut corpus = MarkovCorpus::new(vocab, 4, 1000 + cid as u64);
+                for _ in 0..per_client {
+                    let prompt_len = 8 + (cid % 5) * 3;
+                    let prompt = corpus.sequence(prompt_len);
+                    let reply = c.infer(&prompt)?;
+                    counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = reply;
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+
+    println!(
+        "served {} requests in {} batches over {:.2} s",
+        m.completed, m.batches, wall
+    );
+    println!(
+        "throughput: {:.1} req/s | latency p50 {:.1} ms, p95 {:.1} ms | mean batch occupancy {:.2}/{}",
+        m.completed as f64 / wall,
+        m.p50_us() / 1e3,
+        m.p95_us() / 1e3,
+        m.mean_occupancy(),
+        info.train_batch
+    );
+    assert_eq!(m.completed as usize, per_client * n_clients);
+    println!("\nserve OK");
+    Ok(())
+}

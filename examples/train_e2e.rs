@@ -1,0 +1,95 @@
+//! End-to-end training driver — proves all three layers compose on a real
+//! workload: the ~100M-parameter `e2e` transformer, DoRA-adapted on every
+//! projection, trained on a synthetic Markov corpus with the fused
+//! (Pallas + factored-norm) pipeline, entirely through AOT artifacts.
+//!
+//! Logs the loss curve (recorded in EXPERIMENTS.md) and reports tokens/s.
+//!
+//! Run with:
+//!   cargo run --release --example train_e2e -- \
+//!       [--config e2e] [--steps 200] [--seed 0] [--eval-every 25]
+//!       [--variant fused] [--csv losses.csv]
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use dorafactors::coordinator::{Trainer, TrainerCfg};
+use dorafactors::runtime::{manifest, Engine};
+use dorafactors::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let config = args.get_or("config", "e2e").to_string();
+    let steps = args.get_usize("steps", 200);
+    let eval_every = args.get_usize("eval-every", 25);
+    let variant = args.get_or("variant", "fused").to_string();
+    let csv_path = args.get("csv").map(str::to_string);
+
+    let engine = Engine::load(&manifest::default_dir())?;
+    let info = engine.manifest().config(&config)?.clone();
+    let tokens_per_step = info.train_batch * (info.seq + 1);
+    println!(
+        "== e2e training: {} params, vocab {}, d_model {}, {} layers, r={}, variant={} ==",
+        info.n_params, info.vocab, info.d_model, info.n_layers, info.rank, variant
+    );
+    println!(
+        "{} steps x {} tokens/step = {} tokens total\n",
+        steps,
+        tokens_per_step,
+        steps * tokens_per_step
+    );
+
+    let mut tr = Trainer::new(
+        engine,
+        TrainerCfg {
+            config,
+            variant,
+            seed: args.get_u64("seed", 0),
+            branching: 4,
+            eval_every,
+        },
+    )?;
+    println!("corpus entropy floor: (branching 4 Markov chain)");
+
+    let t0 = std::time::Instant::now();
+    let mut csv = String::from("step,loss\n");
+    while tr.step_count() < steps {
+        let recs: Vec<_> = tr.run_chunk()?.to_vec();
+        for r in &recs {
+            let _ = writeln!(csv, "{},{:.6}", r.step, r.loss);
+        }
+        let last = recs.last().unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let tok_s = tr.step_count() as f64 * tokens_per_step as f64 / elapsed;
+        println!(
+            "step {:5} / {steps}  loss {:.4}  | {:7.0} tok/s  ({:.0} s elapsed)",
+            last.step, last.loss, tok_s, elapsed
+        );
+    }
+
+    let first = tr.history.first().unwrap().loss;
+    let last = tr.history.last().unwrap().loss;
+    let final_eval = tr.eval()?;
+    println!("\nloss: {first:.4} -> {last:.4} over {} steps", tr.step_count());
+    println!("final eval loss: {final_eval:.4}");
+    println!(
+        "PJRT wall time: {:.1} s ({:.2} s/step, {:.0} tok/s)",
+        tr.wall_seconds,
+        tr.wall_seconds / tr.step_count() as f64,
+        tr.step_count() as f64 * tokens_per_step as f64 / tr.wall_seconds
+    );
+    if !tr.eval_history.is_empty() {
+        println!("\neval curve:");
+        for r in &tr.eval_history {
+            println!("  step {:5}  eval loss {:.4}", r.step, r.loss);
+        }
+    }
+    if let Some(path) = csv_path {
+        std::fs::write(&path, csv)?;
+        println!("loss curve written to {path}");
+    }
+    assert!(last < first, "loss did not decrease — e2e run failed");
+    println!("\ntrain_e2e OK");
+    Ok(())
+}

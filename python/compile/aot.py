@@ -1,0 +1,292 @@
+"""AOT compiler: lower L2/L1 JAX programs to HLO *text* artifacts.
+
+``python -m compile.aot --out ../artifacts`` writes one ``.hlo.txt`` per
+entry point plus ``manifest.json`` describing every artifact's I/O
+signature, so the Rust runtime can feed PJRT literals without a pytree
+library.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# All AOT artifacts target CPU-PJRT execution: identity blocking (see
+# kernels/compose.py — the single-block direct path) avoids XLA 0.5.1's
+# poor compilation of interpret-mode grid loops. Set before any lowering.
+os.environ.setdefault("PALLAS_IDENTITY_BLOCKS", "1")
+
+# ---------------------------------------------------------------------------
+# Configurations exported for the Rust side.
+#
+# tiny  — runtime integration tests (sub-second compiles)
+# small — convergence study (Table 10 / Fig 12) + serving example
+# e2e   — the ~100M-parameter end-to-end training driver
+# ---------------------------------------------------------------------------
+
+CONFIGS: dict[str, M.ModelConfig] = {
+    "tiny": M.ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=4,
+                          d_ff=128, seq=32, rank=8, alpha=4.0),
+    "small": M.ModelConfig(vocab=512, d_model=256, n_layers=4, n_heads=8,
+                           d_ff=512, seq=128, rank=32, alpha=16.0),
+    "e2e": M.ModelConfig(vocab=16384, d_model=768, n_layers=12, n_heads=12,
+                         d_ff=3072, seq=256, rank=64, alpha=32.0),
+}
+
+# (batch size, in-graph steps per chunk) per config.
+TRAIN_SHAPES = {"tiny": (4, 2), "small": (4, 10), "e2e": (2, 5)}
+
+# Which configs get training/serving artifacts per variant.
+TRAIN_VARIANTS = ("eager", "fused")
+
+# Standalone compose-kernel shapes (rows = batch*seq), mirroring the
+# paper's microbenchmark sweep classes (§5.4).
+COMPOSE_SHAPES = [(512, 2048), (2048, 4096), (4096, 8192)]
+
+# Standalone norm shapes (d_out, d_in, rank) — Table 7 classes scaled to
+# CPU-friendly sizes plus one paper-exact shape.
+NORM_SHAPES = [(1024, 1024, 64), (2048, 2048, 384), (4096, 4096, 512)]
+
+OPT = M.OptConfig()
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def leaf_specs(cfg: M.ModelConfig, names):
+    return [spec(M.leaf_shape(cfg, n)) for n in names]
+
+
+def io_entry(name, shape, dtype, role):
+    return {"name": name, "shape": list(shape), "dtype": dtype, "role": role}
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: object
+    in_specs: list
+    inputs: list  # manifest io entries
+    outputs: list
+    meta: dict
+
+
+def build_artifacts(only: str | None, skip_e2e: bool) -> list[Artifact]:
+    arts: list[Artifact] = []
+
+    def add(name, fn, in_specs, inputs, outputs, **meta):
+        if only and only not in name:
+            return
+        arts.append(Artifact(name, fn, in_specs, inputs, outputs, meta))
+
+    # -- standalone kernels ------------------------------------------------
+    for rows, d_out in COMPOSE_SHAPES:
+        for variant in ("eager", "fused"):
+            s = 2.0
+            add(
+                f"compose_{variant}_{rows}x{d_out}",
+                lambda base, lora, g, v=variant, s_=s: M.compose_only(v, s_, base, lora, g),
+                [spec((rows, d_out)), spec((rows, d_out)), spec((d_out,))],
+                [io_entry("base", (rows, d_out), "f32", "data"),
+                 io_entry("lora", (rows, d_out), "f32", "data"),
+                 io_entry("g", (d_out,), "f32", "data")],
+                [io_entry("delta", (rows, d_out), "f32", "out")],
+                kind="compose", variant=variant, rows=rows, d_out=d_out, scale=s,
+            )
+
+    for d_out, d_in, r in NORM_SHAPES:
+        for variant in ("dense_ba", "eager", "fused"):
+            s = 0.5
+            chunk = min(d_in, 1024)
+            add(
+                f"norm_{variant}_{d_out}x{d_in}r{r}",
+                lambda w, a, b, v=variant, s_=s, c=chunk: M.norm_only(v, s_, c, w, a, b),
+                [spec((d_out, d_in)), spec((r, d_in)), spec((d_out, r))],
+                [io_entry("w", (d_out, d_in), "f32", "data"),
+                 io_entry("a", (r, d_in), "f32", "data"),
+                 io_entry("b", (d_out, r), "f32", "data")],
+                [io_entry("w_norm", (d_out,), "f32", "out")],
+                kind="norm", variant=variant, d_out=d_out, d_in=d_in, rank=r,
+                scale=s, chunk=chunk,
+            )
+
+    # -- single DoRA linear (quickstart + runtime cross-check) -------------
+    lin_cfg = M.ModelConfig(d_model=256, d_ff=512, rank=32, alpha=16.0,
+                            norm_chunk=256)
+    bs, sq, d = 2, 64, 256
+    for variant in M.VARIANTS:
+        add(
+            f"dora_linear_{variant}",
+            lambda x, w, a, b, m, v=variant: M.dora_linear(lin_cfg, v, x, w, a, b, m),
+            [spec((bs, sq, d)), spec((d, d)), spec((lin_cfg.rank, d)),
+             spec((d, lin_cfg.rank)), spec((d,))],
+            [io_entry("x", (bs, sq, d), "f32", "data"),
+             io_entry("w", (d, d), "f32", "frozen"),
+             io_entry("a", (lin_cfg.rank, d), "f32", "trainable"),
+             io_entry("b", (d, lin_cfg.rank), "f32", "trainable"),
+             io_entry("m", (d,), "f32", "trainable")],
+            [io_entry("y", (bs, sq, d), "f32", "out")],
+            kind="dora_linear", variant=variant, scale=lin_cfg.scale,
+            d_model=d, rank=lin_cfg.rank,
+        )
+
+    # -- per-config model programs ------------------------------------------
+    for cname, cfg in CONFIGS.items():
+        if skip_e2e and cname == "e2e":
+            continue
+        fnames = M.flatten_names_frozen(cfg)
+        tnames = M.flatten_names_trainable(cfg)
+        bs, k = TRAIN_SHAPES[cname]
+
+        frozen_io = [io_entry(n, M.leaf_shape(cfg, n), "f32", "frozen") for n in fnames]
+        train_io = [io_entry(n, M.leaf_shape(cfg, n), "f32", "trainable") for n in tnames]
+        m1_io = [io_entry(f"m1.{n}", M.leaf_shape(cfg, n), "f32", "opt") for n in tnames]
+        m2_io = [io_entry(f"m2.{n}", M.leaf_shape(cfg, n), "f32", "opt") for n in tnames]
+
+        # init: seed -> frozen..., trainable..., (opt state is zeros; Rust
+        # materializes those locally to avoid doubling the artifact I/O).
+        def init_fn(seed, cfg=cfg):
+            frozen, trainable = M.init_params(cfg, seed)
+            return tuple(M.flatten(frozen)) + tuple(M.flatten(trainable))
+
+        add(
+            f"init_{cname}",
+            init_fn,
+            [spec((), jnp.int32)],
+            [io_entry("seed", (), "s32", "data")],
+            frozen_io + train_io,
+            kind="init", config=cname,
+        )
+
+        for variant in TRAIN_VARIANTS:
+            def train_fn(*leaves, cfg=cfg, v=variant, nf=len(fnames), nt=len(tnames)):
+                fl = leaves[:nf]
+                tl = leaves[nf:nf + nt]
+                m1 = leaves[nf + nt:nf + 2 * nt]
+                m2 = leaves[nf + 2 * nt:nf + 3 * nt]
+                step = leaves[nf + 3 * nt]
+                tokens = leaves[nf + 3 * nt + 1]
+                tr, m1_, m2_, step_, losses = M.train_chunk(
+                    cfg, OPT, v, fl, tl, m1, m2, step, tokens)
+                return tuple(tr) + tuple(m1_) + tuple(m2_) + (step_, losses)
+
+            in_specs = (leaf_specs(cfg, fnames) + leaf_specs(cfg, tnames)
+                        + leaf_specs(cfg, tnames) + leaf_specs(cfg, tnames)
+                        + [spec((), jnp.int32), spec((k, bs, cfg.seq + 1), jnp.int32)])
+            inputs = (frozen_io + train_io + m1_io + m2_io
+                      + [io_entry("step", (), "s32", "step"),
+                         io_entry("tokens", (k, bs, cfg.seq + 1), "s32", "data")])
+            outputs = (train_io + m1_io + m2_io
+                       + [io_entry("step", (), "s32", "out"),
+                          io_entry("losses", (k,), "f32", "out")])
+            add(f"train_{cname}_{variant}", train_fn, in_specs, inputs, outputs,
+                kind="train_chunk", config=cname, variant=variant,
+                chunk_steps=k, batch=bs, lr=OPT.lr)
+
+            def evalf(*leaves, cfg=cfg, v=variant, nf=len(fnames), nt=len(tnames)):
+                return M.eval_loss(cfg, v, leaves[:nf], leaves[nf:nf + nt],
+                                   leaves[nf + nt])
+
+            add(f"eval_{cname}_{variant}", evalf,
+                leaf_specs(cfg, fnames) + leaf_specs(cfg, tnames)
+                + [spec((bs, cfg.seq + 1), jnp.int32)],
+                frozen_io + train_io
+                + [io_entry("tokens", (bs, cfg.seq + 1), "s32", "data")],
+                [io_entry("loss", (), "f32", "out")],
+                kind="eval", config=cname, variant=variant, batch=bs)
+
+        # serving (fused only; Tier-2 forward)
+        def inferf(*leaves, cfg=cfg, nf=len(fnames), nt=len(tnames)):
+            return M.infer_step(cfg, "fused", leaves[:nf], leaves[nf:nf + nt],
+                                leaves[nf + nt])
+
+        add(f"infer_{cname}_fused", inferf,
+            leaf_specs(cfg, fnames) + leaf_specs(cfg, tnames)
+            + [spec((bs, cfg.seq), jnp.int32)],
+            frozen_io + train_io
+            + [io_entry("tokens", (bs, cfg.seq), "s32", "data")],
+            [io_entry("logits", (bs, cfg.vocab), "f32", "out")],
+            kind="infer", config=cname, variant="fused", batch=bs)
+
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--skip-e2e", action="store_true",
+                    help="skip the ~100M e2e config (slow to lower)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = build_artifacts(args.only, args.skip_e2e)
+    manifest = {
+        "schema": 1,
+        "generated_unix": int(time.time()),
+        "configs": {
+            n: {**dataclasses.asdict(c), "scale": c.scale,
+                "n_params": c.n_params(),
+                "frozen": M.flatten_names_frozen(c),
+                "trainable": M.flatten_names_trainable(c),
+                "train_batch": TRAIN_SHAPES[n][0],
+                "chunk_steps": TRAIN_SHAPES[n][1]}
+            for n, c in CONFIGS.items()
+        },
+        "opt": dataclasses.asdict(OPT),
+        "artifacts": {},
+    }
+
+    for art in arts:
+        t0 = time.time()
+        lowered = jax.jit(art.fn).lower(*art.in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{art.name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][art.name] = {
+            "file": fname,
+            "sha256_16": digest,
+            "inputs": art.inputs,
+            "outputs": art.outputs,
+            "meta": art.meta,
+        }
+        print(f"  {art.name:36s} {len(text)/1024:9.1f} KiB  "
+              f"{time.time() - t0:6.1f}s")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(arts)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 kernels: Pallas implementations + pure-jnp reference oracles.
+
+``ref``      — ground-truth oracles (pure jnp; what pytest asserts against).
+``compose``  — fused compose fwd / dual-output / bwd Pallas kernels.
+``norm``     — norm-assembly and factored-norm-chunk Pallas kernels.
+"""
+
+from . import compose, norm, ref  # noqa: F401

@@ -1,0 +1,281 @@
+"""Pallas compose kernels — the paper's Triton kernels re-targeted to TPU.
+
+Three kernels (paper §3, Appendix C):
+
+1. ``fused_compose``        — forward: ``delta = (g-1)*base + g*s*lora`` in
+                              one pass (3 reads + 1 write per element).
+2. ``fused_compose_inner``  — Tier-1 dual-output: ``(delta, inner)`` where
+                              ``inner = s*lora + base`` is the saved tensor
+                              the backward needs, produced in the same pass.
+3. ``fused_compose_bwd``    — backward pair ``d_lora = g*s*d``,
+                              ``d_base = (g-1)*d`` in one pass. ``d_g`` is a
+                              separate deterministic reduction in the caller
+                              (never atomics).
+
+Hardware adaptation (DESIGN.md §2): the Triton kernels tile a CUDA grid of
+thread-blocks over rows; here a 2-D Pallas grid maps ``[ROWS_TILE,
+DOUT_TILE]`` blocks of ``base``/``lora`` HBM→VMEM via BlockSpec, and ``g``
+rides along as a ``[DOUT_TILE]`` vector block broadcast down the rows —
+the memory schedule the paper expressed with threadblocks. The stable form
+and fp32 intermediate compute are preserved exactly.
+
+All kernels run under ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the AOT artifacts
+run anywhere (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "fused_compose",
+    "fused_compose_inner",
+    "fused_compose_bwd",
+    "DEFAULT_ROWS_TILE",
+    "DEFAULT_DOUT_TILE",
+]
+
+# Default VMEM tiles. At bf16, three input blocks + one output block of
+# 256x512 are 4 * 256KiB = 1 MiB, comfortably inside a 16 MiB VMEM with
+# double-buffering headroom. DOUT_TILE=512 keeps the last dim a multiple of
+# the 128-lane VPU registers.
+DEFAULT_ROWS_TILE = 256
+DEFAULT_DOUT_TILE = 512
+
+# AOT-for-CPU knob (EXPERIMENTS.md §Perf L1): identity blocking makes every
+# compose a single block. Interpret-mode pallas then takes the direct-eval
+# path below — XLA 0.5.1 compiles the multi-block lowering's 1..N-trip
+# while-loops with full-array tuple state very poorly (~9x slower than the
+# same math inlined). Real-TPU lowering keeps the tiled BlockSpec schedule.
+def _identity_blocks() -> bool:
+    return os.environ.get("PALLAS_IDENTITY_BLOCKS", "0") == "1"
+
+
+def _tile(n: int, preferred: int) -> int:
+    """Largest divisor of ``n`` that is <= preferred (block shape must tile
+    the array exactly; shapes in this stack are powers of two)."""
+    t = min(n, preferred)
+    while n % t:
+        t -= 1
+    return t
+
+
+def _compose_math(base, lora, g, s, out_dtype):
+    """The kernel arithmetic, shared by the Pallas body and the
+    single-block direct path: delta = (g-1)*base + g*(s*lora), fp32
+    compute, stable form, canonical order (``s*lora`` first, then
+    ``g*(.)`` — paper §3.1: bf16 multiplication is non-associative; one
+    order everywhere)."""
+    base = base.astype(jnp.float32)
+    lora = lora.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    delta = (g - 1.0) * base + g * (jnp.float32(s) * lora)
+    return delta.astype(out_dtype)
+
+
+def _compose_kernel(base_ref, lora_ref, g_ref, o_ref, *, s: float):
+    o_ref[...] = _compose_math(base_ref[...], lora_ref[...], g_ref[...], s,
+                               o_ref.dtype)
+
+
+def _compose_inner_math(base, lora, g, s, out_dtype):
+    base = base.astype(jnp.float32)
+    lora = lora.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    sl = jnp.float32(s) * lora
+    delta = ((g - 1.0) * base + g * sl).astype(out_dtype)
+    inner = (sl + base).astype(out_dtype)
+    return delta, inner
+
+
+def _compose_inner_kernel(base_ref, lora_ref, g_ref, o_ref, inner_ref, *, s: float):
+    """Dual-output Tier-1 kernel: delta AND inner = s*lora + base."""
+    o_ref[...], inner_ref[...] = _compose_inner_math(
+        base_ref[...], lora_ref[...], g_ref[...], s, o_ref.dtype)
+
+
+def _compose_bwd_math(d, g, s, out_dtype):
+    d = d.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    d_lora = (g * (jnp.float32(s) * d)).astype(out_dtype)
+    d_base = ((g - 1.0) * d).astype(out_dtype)
+    return d_lora, d_base
+
+
+def _compose_bwd_kernel(d_ref, g_ref, dl_ref, db_ref, *, s: float):
+    """d_lora = g * s * d, d_base = (g-1) * d — one read of d, two writes.
+
+    The Triton version reduces ROWS_PER_PROGRAM to lower register pressure
+    when writing two outputs (paper §3.2); the Pallas analogue is simply a
+    smaller rows tile, chosen by the caller.
+    """
+    dl_ref[...], db_ref[...] = _compose_bwd_math(d_ref[...], g_ref[...], s,
+                                                 dl_ref.dtype)
+
+
+def _grid_and_specs(shape, rows_tile, dout_tile):
+    """2-D grid over (row blocks, d_out blocks) for a [rows, d_out] array.
+
+    ``g`` is carried as a [1, d_out] array so its BlockSpec can present a
+    [1, DOUT_TILE] VMEM block per grid column.
+    """
+    rows, d_out = shape
+    rt = _tile(rows, rows_tile)
+    dt_ = _tile(d_out, dout_tile)
+    grid = (rows // rt, d_out // dt_)
+    act_spec = pl.BlockSpec((rt, dt_), lambda i, j: (i, j))
+    g_spec = pl.BlockSpec((1, dt_), lambda i, j: (0, j))
+    return grid, act_spec, g_spec
+
+
+def _flatten_rows(x):
+    """Collapse leading dims: [..., d_out] -> [rows, d_out]."""
+    d_out = x.shape[-1]
+    return x.reshape(-1, d_out), x.shape
+
+
+def fused_compose(base, lora, g, s, *, rows_tile=DEFAULT_ROWS_TILE,
+                  dout_tile=DEFAULT_DOUT_TILE, interpret=True):
+    """Single-pass DoRA compose (paper §3.1 / Appendix C.1).
+
+    Args:
+      base: ``[..., d_out]`` frozen-path activations.
+      lora: ``[..., d_out]`` low-rank-path activations (un-scaled).
+      g:    ``[d_out]`` post-division scale ``m / w_norm``.
+      s:    python float scaling coefficient (static).
+    Returns ``delta`` with ``base``'s shape and dtype.
+    """
+    base2, orig_shape = _flatten_rows(base)
+    lora2, _ = _flatten_rows(lora)
+    # g stays fp32: casting it to bf16 would round (g-1) to zero in the
+    # near-unity regime — the exact collapse the stable form exists to
+    # avoid (paper §3.1). base/lora stay in the input dtype.
+    g2 = g.reshape(1, -1).astype(jnp.float32)
+    if _identity_blocks():
+        rows_tile, dout_tile = base2.shape
+    grid, act_spec, g_spec = _grid_and_specs(base2.shape, rows_tile, dout_tile)
+    if grid == (1, 1):
+        # Single block covers the array: evaluate the kernel math directly
+        # (identical ops/order; skips the interpret-mode grid machinery,
+        # which XLA 0.5.1 compiles as a 1-trip while over full-array
+        # tuple state — EXPERIMENTS.md §Perf L1).
+        return _compose_math(base2, lora2, g2, float(s), base.dtype).reshape(orig_shape)
+    out = pl.pallas_call(
+        functools.partial(_compose_kernel, s=float(s)),
+        grid=grid,
+        in_specs=[act_spec, act_spec, g_spec],
+        out_specs=act_spec,
+        out_shape=jax.ShapeDtypeStruct(base2.shape, base.dtype),
+        interpret=interpret,
+    )(base2, lora2, g2)
+    return out.reshape(orig_shape)
+
+
+def fused_compose_inner(base, lora, g, s, *, rows_tile=DEFAULT_ROWS_TILE,
+                        dout_tile=DEFAULT_DOUT_TILE, interpret=True):
+    """Tier-1 dual-output compose: returns ``(delta, inner)`` (paper §4).
+
+    ``inner = s*lora + base`` is what the magnitude gradient contracts
+    against in the backward; emitting it here removes the sequential-op
+    VRAM spike. When the magnitude is frozen, call :func:`fused_compose`
+    instead and skip the allocation entirely.
+    """
+    base2, orig_shape = _flatten_rows(base)
+    lora2, _ = _flatten_rows(lora)
+    # g stays fp32: casting it to bf16 would round (g-1) to zero in the
+    # near-unity regime — the exact collapse the stable form exists to
+    # avoid (paper §3.1). base/lora stay in the input dtype.
+    g2 = g.reshape(1, -1).astype(jnp.float32)
+    if _identity_blocks():
+        rows_tile, dout_tile = base2.shape
+    grid, act_spec, g_spec = _grid_and_specs(base2.shape, rows_tile, dout_tile)
+    if grid == (1, 1):
+        delta, inner = _compose_inner_math(base2, lora2, g2, float(s), base.dtype)
+        return delta.reshape(orig_shape), inner.reshape(orig_shape)
+    delta, inner = pl.pallas_call(
+        functools.partial(_compose_inner_kernel, s=float(s)),
+        grid=grid,
+        in_specs=[act_spec, act_spec, g_spec],
+        out_specs=[act_spec, act_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(base2.shape, base.dtype),
+            jax.ShapeDtypeStruct(base2.shape, base.dtype),
+        ],
+        interpret=interpret,
+    )(base2, lora2, g2)
+    return delta.reshape(orig_shape), inner.reshape(orig_shape)
+
+
+def fused_compose_bwd(d_delta, g, s, *, rows_tile=DEFAULT_ROWS_TILE // 2,
+                      dout_tile=DEFAULT_DOUT_TILE, interpret=True):
+    """Fused backward pair (paper §3.2 / Appendix C.2).
+
+    Returns ``(d_lora, d_base)``. The default rows tile is halved versus the
+    forward: the kernel writes two outputs, doubling per-block VMEM, the
+    same pressure the Triton kernel relieves via ROWS_PER_PROGRAM.
+
+    ``d_g`` (= d_mag direction) is intentionally NOT computed here — do
+    ``jnp.sum(d_delta * inner, axis=leading)`` in the caller for a
+    deterministic reduction (paper: "d_mag via PyTorch reduction").
+    """
+    d2, orig_shape = _flatten_rows(d_delta)
+    g2 = g.reshape(1, -1).astype(jnp.float32)  # fp32, see fused_compose
+    if _identity_blocks():
+        rows_tile, dout_tile = d2.shape
+    grid, act_spec, g_spec = _grid_and_specs(d2.shape, rows_tile, dout_tile)
+    if grid == (1, 1):
+        d_lora, d_base = _compose_bwd_math(d2, g2, float(s), d_delta.dtype)
+        return d_lora.reshape(orig_shape), d_base.reshape(orig_shape)
+    d_lora, d_base = pl.pallas_call(
+        functools.partial(_compose_bwd_kernel, s=float(s)),
+        grid=grid,
+        in_specs=[act_spec, g_spec],
+        out_specs=[act_spec, act_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(d2.shape, d_delta.dtype),
+            jax.ShapeDtypeStruct(d2.shape, d_delta.dtype),
+        ],
+        interpret=interpret,
+    )(d2, g2)
+    return d_lora.reshape(orig_shape), d_base.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff wiring: Tier-1 of the paper's dispatch. The forward saves
+# ``inner = s*lora + base`` via the dual-output kernel; the backward runs the
+# fused pair kernel and a separate deterministic reduction for d_g
+# ("d_mag via PyTorch reduction" — never atomics).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_compose_ad(base, lora, g, s):
+    """Differentiable fused compose (training entry point, Tier 1).
+
+    Identical values to :func:`fused_compose`; the custom VJP replays the
+    paper's fused backward instead of differentiating through pallas_call.
+    """
+    return fused_compose(base, lora, g, s)
+
+
+def _fused_compose_fwd(base, lora, g, s):
+    delta, inner = fused_compose_inner(base, lora, g, s)
+    return delta, (g, inner)
+
+
+def _fused_compose_bwd_rule(s, res, d_delta):
+    g, inner = res
+    d_lora, d_base = fused_compose_bwd(d_delta, g, s)
+    red_axes = tuple(range(d_delta.ndim - 1))
+    d_g = jnp.sum(d_delta.astype(jnp.float32)
+                  * inner.astype(jnp.float32), axis=red_axes)
+    return d_base, d_lora, d_g.astype(g.dtype)
+
+
+fused_compose_ad.defvjp(_fused_compose_fwd, _fused_compose_bwd_rule)

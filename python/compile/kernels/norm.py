@@ -1,0 +1,127 @@
+"""Pallas norm kernels: assembly (paper Appendix C.3) and the factored-norm
+chunk contraction (Algorithm 1, one chunk).
+
+The paper's third Triton kernel fuses Eq. 5::
+
+    w_norm = sqrt(max(base_sq + two_s * cross + s2 * ba_sq, 0))
+
+with fp32 compute, store-reload barriers against FMA contraction, and an
+IEEE correctly-rounded sqrt. On the XLA path the analogous guarantees are:
+
+* fp32 compute — enforced by explicit casts here;
+* no FMA reassociation — XLA does not contract ``a*b + c`` across separate
+  HLO ops by default on CPU, and the interpret-mode Pallas kernel evaluates
+  with numpy semantics (round-to-nearest per op), which matches the
+  store-reload-barrier behaviour of the Triton kernel;
+* IEEE sqrt — ``jnp.sqrt`` on fp32 is correctly rounded on CPU/XLA, i.e.
+  the property the inline ``sqrt.rn.f32`` PTX restores on SM90.
+
+The magnitude division (Eq. 6) is deliberately NOT fused — it stays in the
+L2 jax model so both norm engines share one precision context (paper §4
+"Magnitude division").
+
+``factored_norm_chunk`` is the MXU-facing contraction of Algorithm 1's loop
+body: given fp32-cast chunks ``W_c [d_out, cs]`` and ``A_c [r, cs]`` plus
+``B [d_out, r]``, it emits the per-chunk partials
+``(base_sq_c, cross_c, G_c)`` in one pallas_call; the L2 layer accumulates
+them across chunks. The paper leaves this fusion to the chunked-PyTorch
+path — implementing it as a kernel is the natural TPU mapping (DESIGN.md
+§2) and is exercised by the 'fused' norm variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["norm_assembly_kernel", "factored_norm_chunk", "NORM_BLOCK"]
+
+# Paper Appendix C.3: norm kernels are launch-latency bound; a fixed block
+# of 256 is used in default mode rather than autotuning.
+NORM_BLOCK = 256
+
+
+def _assembly_kernel(base_ref, cross_ref, ba_ref, o_ref, *, two_s: float, s2: float):
+    base_sq = base_ref[...].astype(jnp.float32)
+    cross = cross_ref[...].astype(jnp.float32)
+    ba_sq = ba_ref[...].astype(jnp.float32)
+    # Two explicit multiply-adds; scalars were pre-computed in fp64 by the
+    # caller and rounded once to fp32 (Appendix C.3).
+    t1 = base_sq + jnp.float32(two_s) * cross
+    total = t1 + jnp.float32(s2) * ba_sq
+    # max(., 0) preserves NaN (jnp.maximum propagates NaN like clamp_min).
+    o_ref[...] = jnp.sqrt(jnp.maximum(total, 0.0))
+
+
+def norm_assembly_kernel(base_sq, cross, ba_sq, s, *, block=NORM_BLOCK,
+                         interpret=True):
+    """Fused Eq. 5 over fp32 ``[d_out]`` term vectors. Returns fp32.
+
+    ``two_s``/``s2`` are computed in python floats (fp64) then rounded to
+    fp32 exactly once, matching the kernel spec.
+    """
+    d_out = base_sq.shape[0]
+    blk = min(block, d_out)
+    while d_out % blk:
+        blk -= 1
+    grid = (d_out // blk,)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_assembly_kernel, two_s=2.0 * float(s),
+                          s2=float(s) * float(s)),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d_out,), jnp.float32),
+        interpret=interpret,
+    )(base_sq.astype(jnp.float32), cross.astype(jnp.float32),
+      ba_sq.astype(jnp.float32))
+
+
+def _chunk_kernel(w_ref, a_ref, b_ref, base_ref, cross_ref, g_ref):
+    """One Algorithm-1 chunk: base_sq_c, cross_c, G_c from (W_c, A_c, B).
+
+    The two contractions (W_c A_c^T and A_c A_c^T) are MXU work; in bf16
+    inputs they run as bf16-in/fp32-acc matmuls, which is exactly the
+    paper's TensorCore-aligned chunking (Appendix B). Here everything is
+    pre-cast fp32 since accumulation precision is fp32 by contract.
+    """
+    w = w_ref[...].astype(jnp.float32)   # [d_out, cs]
+    a = a_ref[...].astype(jnp.float32)   # [r, cs]
+    b = b_ref[...].astype(jnp.float32)   # [d_out, r]
+    base_ref[...] = jnp.sum(w * w, axis=1)
+    u = jax.lax.dot_general(w, a, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [d_out, r]
+    cross_ref[...] = jnp.sum(b * u, axis=1)
+    g_ref[...] = jax.lax.dot_general(a, a, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+
+def factored_norm_chunk(w_c, a_c, b, *, interpret=True):
+    """Per-chunk factored-norm partials as a single Pallas call.
+
+    Args:
+      w_c: ``[d_out, cs]`` fp32-castable chunk of the frozen weight.
+      a_c: ``[r, cs]`` matching chunk of A.
+      b:   ``[d_out, r]`` full B factor.
+    Returns ``(base_sq_c, cross_c, gram_c)`` — fp32 partials to be summed
+    across chunks by the caller, then fed to :func:`norm_assembly_kernel`.
+
+    Grid note: a single program instance per chunk — the chunk was already
+    sized to the VMEM/working-set budget by the caller (Algorithm 1 chunking
+    IS the blocking), so no further grid decomposition is needed.
+    """
+    d_out, cs = w_c.shape
+    r = a_c.shape[0]
+    return pl.pallas_call(
+        _chunk_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((d_out,), jnp.float32),
+            jax.ShapeDtypeStruct((d_out,), jnp.float32),
+            jax.ShapeDtypeStruct((r, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_c, a_c, b)

@@ -1,0 +1,323 @@
+"""Pure-jnp reference oracles for every kernel in the stack.
+
+These are the CORRECTNESS ground truth. Each function mirrors one code path
+of the paper ("Scaling DoRA", §2-§4) with the paper's exact dtype
+discipline:
+
+* norms accumulate in fp32 regardless of input dtype (paper §2.2);
+* the magnitude division ``g = m / max(w_norm, eps)`` is a separate stage
+  shared by all norm paths (paper Eq. 6, Appendix C.4);
+* the compose uses the numerically stable form
+  ``(g - 1) * base + g * s * lora`` with a single canonical evaluation
+  order (``s * lora`` first, then ``g * (.)``; paper §3.1).
+
+Four weight-norm implementations reproduce the paper's four configurations:
+
+==============  ============================================================
+``peft_*``      upstream HF PEFT: identity-matrix materialization
+``dense_ba_*``  direct ``B @ A`` product (still dense; the §5.3 straw-man)
+``factored_*``  the paper's base/cross/Gram decomposition (Algorithm 1)
+==============  ============================================================
+
+Everything here is plain ``jax.numpy`` so it lowers to ordinary HLO and can
+be compared against the Pallas kernels under ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "EPS_BY_DTYPE",
+    "dtype_eps",
+    "peft_weight_norm",
+    "dense_ba_weight_norm",
+    "factored_norm_terms",
+    "factored_weight_norm",
+    "norm_assembly",
+    "magnitude_divide",
+    "compose_naive",
+    "compose_stable",
+    "compose_stable_inner",
+    "compose_backward",
+    "dora_delta",
+]
+
+# Paper Appendix B: dtype-aware epsilon. 1e-12 for fp32/fp64, 1e-6 for
+# half-precision types (limits the fp16 quotient to ~1e6).
+EPS_BY_DTYPE = {
+    jnp.dtype(jnp.float64): 1e-12,
+    jnp.dtype(jnp.float32): 1e-12,
+    jnp.dtype(jnp.bfloat16): 1e-6,
+    jnp.dtype(jnp.float16): 1e-6,
+}
+
+
+def dtype_eps(dtype) -> float:
+    """The paper's dtype-dependent epsilon for the magnitude division."""
+    return EPS_BY_DTYPE[jnp.dtype(dtype)]
+
+
+# ---------------------------------------------------------------------------
+# Weight-norm paths (paper §2). Weights are [d_out, d_in]; norms are row-wise
+# (dim=1), matching PEFT / torchtune conventions.
+# ---------------------------------------------------------------------------
+
+
+def peft_weight_norm(w, a, b, s):
+    """Upstream HF PEFT norm: materialize B(A(I)) through an identity matrix.
+
+    Reproduces the exact op sequence of ``peft/tuners/lora/dora.py`` at
+    commit 20a9829 (paper §1)::
+
+        x_eye = torch.eye(d_in)                # [d_in, d_in]
+        lora_weight = lora_B(lora_A(x_eye)).T  # [d_out, d_in]
+        norm = linalg.norm(weight + scaling * lora_weight, dim=1)
+
+    The identity matrix alone is O(d_in^2) memory; this is the baseline the
+    paper beats. Computation runs in the input dtype (PEFT does not force
+    fp32), then the norm itself accumulates in fp32 like
+    torch.linalg.norm's internal accumulation.
+    """
+    d_in = w.shape[1]
+    x_eye = jnp.eye(d_in, dtype=a.dtype)
+    # lora_A(x_eye) = x_eye @ A.T -> [d_in, r]; lora_B(.) = . @ B.T -> [d_in, d_out]
+    lora_weight = (x_eye @ a.T @ b.T).T  # [d_out, d_in]
+    composed = w.astype(jnp.float32) + s * lora_weight.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(composed * composed, axis=1))
+
+
+def dense_ba_weight_norm(w, a, b, s):
+    """The "obvious fix" (paper §5.3): direct ``B @ A``, no identity matrix.
+
+    Still materializes the full [d_out, d_in] product — the dominant cost —
+    which is why the paper shows it captures an inconsistent fraction of the
+    eager-to-fused gap.
+    """
+    lora_weight = b @ a  # [d_out, d_in]
+    composed = w.astype(jnp.float32) + s * lora_weight.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(composed * composed, axis=1))
+
+
+def factored_norm_terms(w, a, b, *, chunk_size: int | None = None):
+    """Algorithm 1's three accumulators: (base_sq, cross, ba_sq), all fp32.
+
+    ``||W + sBA||^2_row = base_sq + 2s*cross + s^2*ba_sq`` where
+
+    * ``base_sq = ||W||^2_row`` accumulated chunk-wise along d_in,
+    * ``cross_j = sum_l B_jl * U_jl`` with ``U = W A^T`` accumulated
+      chunk-wise (Eq. 3),
+    * ``ba_sq_j = (B G ⊙ B)_j · 1`` with Gram ``G = A A^T`` accumulated
+      chunk-wise (Eq. 4).
+
+    Every chunk of W and A is cast to fp32 *before* accumulation (paper
+    §2.2: disabling autocast alone does not force fp32 for bf16 inputs).
+    ``chunk_size`` mirrors the 256 MB budget knob; None means one chunk.
+    """
+    d_out, d_in = w.shape
+    r = a.shape[0]
+    if chunk_size is None or chunk_size >= d_in:
+        chunk_size = d_in
+    else:
+        # Align to 64 elements for MXU/TensorCore tiling (paper Appendix B).
+        chunk_size = max(64, (chunk_size // 64) * 64)
+
+    base_sq = jnp.zeros((d_out,), jnp.float32)
+    cross = jnp.zeros((d_out,), jnp.float32)
+    gram = jnp.zeros((r, r), jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    start = 0
+    while start < d_in:
+        stop = min(start + chunk_size, d_in)
+        wc = w[:, start:stop].astype(jnp.float32)
+        ac = a[:, start:stop].astype(jnp.float32)
+        base_sq = base_sq + jnp.sum(wc * wc, axis=1)
+        gram = gram + ac @ ac.T
+        u_c = wc @ ac.T  # [d_out, r], never retained across chunks
+        cross = cross + jnp.sum(bf * u_c, axis=1)
+        start = stop
+
+    ba_sq = jnp.sum((bf @ gram) * bf, axis=1)
+    return base_sq, cross, ba_sq
+
+
+def norm_assembly(base_sq, cross, ba_sq, s):
+    """Eq. 5: ``w_norm = sqrt(max(base + 2s*cross + s^2*ba, 0))`` in fp32.
+
+    ``2s`` and ``s^2`` are pre-computed in fp64 (paper Appendix C.3). The
+    clamp preserves NaN semantics (NaN propagates, like torch.clamp_min).
+    """
+    two_s = jnp.float32(float(s) * 2.0)
+    s2 = jnp.float32(float(s) * float(s))
+    total = base_sq + two_s * cross + s2 * ba_sq
+    return jnp.sqrt(jnp.maximum(total, 0.0))
+
+
+def factored_weight_norm(w, a, b, s, *, chunk_size: int | None = None):
+    """Full factored norm: Algorithm 1 + Eq. 5 assembly. Returns fp32.
+
+    Scale-is-zero fast path (paper Appendix B): when s == 0, cross and
+    ba_sq are skipped and U/G are never formed.
+    """
+    if float(s) == 0.0:
+        d_out, d_in = w.shape
+        base_sq = jnp.zeros((d_out,), jnp.float32)
+        cs = chunk_size or d_in
+        start = 0
+        while start < d_in:
+            stop = min(start + cs, d_in)
+            wc = w[:, start:stop].astype(jnp.float32)
+            base_sq = base_sq + jnp.sum(wc * wc, axis=1)
+            start = stop
+        return jnp.sqrt(base_sq)
+    base_sq, cross, ba_sq = factored_norm_terms(w, a, b, chunk_size=chunk_size)
+    return norm_assembly(base_sq, cross, ba_sq, s)
+
+
+def magnitude_divide(m, w_norm, eps):
+    """Eq. 6: ``g = m / max(w_norm, eps)``, always outside the kernels.
+
+    Shared by every tier and both norm paths so precision is identical
+    regardless of which engine produced ``w_norm`` (paper §2.2, §4).
+    The *norm* is treated as a detached constant (DoRA paper §4.3) — callers
+    wrap the norm computation in ``stop_gradient``, not this division
+    (the gradient must still flow into ``m``).
+    """
+    return m.astype(jnp.float32) / jnp.maximum(w_norm.astype(jnp.float32), eps)
+
+
+# ---------------------------------------------------------------------------
+# Compose paths (paper §3.1). All operate on activations:
+#   base [.., d_out] = x @ W^T (frozen-path output)
+#   lora [.., d_out] = (x @ A^T) @ B^T (low-rank path; s applied in compose)
+#   g    [d_out]     = m / w_norm
+# and return delta so the caller applies y = base + delta.
+# ---------------------------------------------------------------------------
+
+
+def compose_naive(base, lora, g, s):
+    """The cancellation-prone form ``g*(s*lora + base) - base`` in the input
+    dtype. When g ≈ 1 and the intermediate is rounded to bf16, the base
+    correction ``(g-1)*base`` vanishes entirely (paper §3.1, Figure 1)."""
+    dt = base.dtype
+    inner = (jnp.asarray(s, dt) * lora + base).astype(dt)
+    return (g.astype(dt) * inner).astype(dt) - base
+
+
+def compose_stable(base, lora, g, s):
+    """The paper's stable form ``(g-1)*base + g*s*lora`` with fp32 compute.
+
+    Canonical evaluation order: ``s * lora`` first, then ``g * (.)``
+    (bf16 multiplication is non-associative; all paths share this order so
+    eager-path outputs are bitwise identical). Result is cast back to the
+    input dtype only at the end.
+    """
+    dt = base.dtype
+    ct = jnp.promote_types(dt, jnp.float32)  # fp32, or fp64 for fp64 inputs
+    g32 = g.astype(ct)
+    b32 = base.astype(ct)
+    l32 = lora.astype(ct)
+    delta = (g32 - 1.0) * b32 + g32 * (jnp.asarray(s, ct) * l32)
+    return delta.astype(dt)
+
+
+def compose_stable_inner(base, lora, g, s):
+    """Tier-1 dual-output compose: (delta, inner = s*lora + base).
+
+    ``inner`` is the tensor the backward needs for the magnitude gradient;
+    producing it in the same pass eliminates the forward-pass VRAM spike
+    from sequential ops (paper §4 Tier 1).
+    """
+    dt = base.dtype
+    g32 = g.astype(jnp.float32)
+    b32 = base.astype(jnp.float32)
+    sl32 = jnp.float32(s) * lora.astype(jnp.float32)
+    delta = (g32 - 1.0) * b32 + g32 * sl32
+    inner = sl32 + b32
+    return delta.astype(dt), inner.astype(dt)
+
+
+def compose_backward(d_delta, g, s, inner):
+    """Backward of the stable compose w.r.t. (lora, base, g).
+
+    ``d_lora = g * s * d_delta`` and ``d_base = (g - 1) * d_delta`` are the
+    fused pair (paper §3.2). ``d_g = sum_over_rows(d_delta * inner)`` is the
+    magnitude-direction gradient, computed via a separate deterministic
+    reduction (never atomics; paper §3.2 bullet 2).
+    """
+    dt = d_delta.dtype
+    g32 = g.astype(jnp.float32)
+    d32 = d_delta.astype(jnp.float32)
+    d_lora = (g32 * jnp.float32(s) * d32).astype(dt)
+    d_base = ((g32 - 1.0) * d32).astype(dt)
+    red_axes = tuple(range(d_delta.ndim - 1))
+    d_g = jnp.sum(d32 * inner.astype(jnp.float32), axis=red_axes)
+    return d_lora, d_base, d_g
+
+
+# ---------------------------------------------------------------------------
+# Whole-module reference (forward contract, paper Appendix A).
+# ---------------------------------------------------------------------------
+
+
+def dora_delta(x, w, a, b, m, s, *, norm="factored", chunk_size=None):
+    """End-to-end DoRA delta for a linear module, per the forward contract:
+
+        ΔY = g ⊙ (s · X A^T B^T) + (g − 1) ⊙ Y_base,   Y = Y_base + ΔY
+
+    with the norm recomputed every call, detached, fp32-accumulated.
+    ``norm`` selects 'peft' | 'dense_ba' | 'factored'.
+    Returns (y_base, delta, g).
+    """
+    norm_fn = {
+        "peft": lambda: peft_weight_norm(w, a, b, s),
+        "dense_ba": lambda: dense_ba_weight_norm(w, a, b, s),
+        "factored": lambda: factored_weight_norm(w, a, b, s, chunk_size=chunk_size),
+    }[norm]
+    w_norm = jax.lax.stop_gradient(norm_fn())
+    g = magnitude_divide(m, w_norm, dtype_eps(x.dtype))
+    y_base = x @ w.T
+    lora = (x @ a.T) @ b.T
+    delta = compose_stable(y_base, lora, g, s)
+    return y_base, delta, g
+
+
+# ---------------------------------------------------------------------------
+# Embedding-path composition (paper §6 "Embedding formula correction").
+# ---------------------------------------------------------------------------
+
+
+def embedding_dora_delta(indices, emb, a, b, m, s, *, corrected=True):
+    """DoRA delta for an adapted embedding layer.
+
+    PEFT's embedding path computes only ``g ⊙ s ⊙ lora``, omitting the
+    ``(g-1) ⊙ base`` term — so the magnitude re-scaling never reaches the
+    frozen embedding component. ``corrected=True`` (this repo's default)
+    applies the full Appendix-A contract uniformly; ``corrected=False``
+    reproduces the legacy PEFT behaviour for checkpoint compatibility
+    (paper: "checkpoints fine-tuned with PEFT's embedding path may require
+    re-fine-tuning or a legacy composition fallback").
+
+    Shapes (PEFT's embedding-adapter convention):
+      emb [vocab, d]; a [r, vocab]; b [d, r]; m [d].
+    The adapted table is ``emb + s * (B @ A).T``; norms are taken per
+    embedding DIMENSION (the output axis of the lookup), i.e. over the
+    [vocab, d] table's columns.
+    Returns (base, delta) where the adapted lookup is base + delta.
+    """
+    table_delta = (b @ a).T  # [vocab, d]
+    composed = emb.astype(jnp.float32) + s * table_delta.astype(jnp.float32)
+    w_norm = jax.lax.stop_gradient(
+        jnp.sqrt(jnp.sum(composed * composed, axis=0)))  # [d]
+    g = magnitude_divide(m, w_norm, dtype_eps(emb.dtype))
+    base = emb[indices]
+    lora = table_delta[indices]
+    if corrected:
+        delta = compose_stable(base, lora, g, s)
+    else:
+        # Legacy PEFT: magnitude scales only the low-rank path.
+        delta = (g.astype(jnp.float32)
+                 * (jnp.float32(s) * lora.astype(jnp.float32))).astype(base.dtype)
+    return base, delta

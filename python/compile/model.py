@@ -1,0 +1,425 @@
+"""L2: DoRA-adapted transformer in JAX, calling the L1 kernels.
+
+This is the build-time model definition that gets AOT-lowered to HLO text
+by ``aot.py`` and executed from Rust via PJRT. Python never runs on the
+request path.
+
+Architecture (a standard pre-norm decoder, the smallest shape that carries
+the paper's module inventory):
+
+* token embedding (frozen, tied LM head)
+* N blocks of {RMSNorm, MHA with q/k/v/o projections, RMSNorm, SwiGLU MLP
+  with gate/up/down projections}, all seven projections DoRA-adapted
+* final RMSNorm
+
+Every adapted projection follows the paper's forward contract (Appendix A):
+
+    y_base = x @ W^T
+    lora   = (x @ A^T) @ B^T                  (scale applied in compose)
+    w_norm = detached, fp32, recomputed each call (factored or dense)
+    g      = m / max(w_norm, eps)             (PyTorch-stage division)
+    y      = y_base + compose(y_base, lora, g, s)
+
+``variant`` selects the configuration (paper §1):
+    'peft'     — identity-matrix dense norm + stable eager compose
+    'dense_ba' — direct B@A dense norm + stable eager compose
+    'eager'    — factored norm + stable eager compose (pure jnp)
+    'fused'    — factored norm + Pallas fused compose (+ Pallas assembly)
+
+Parameters live in stacked-per-layer pytrees so the block loop is a
+``lax.scan`` (keeps the lowered HLO small at any depth). The flattening
+order used for the Rust FFI boundary is defined by ``flatten_names`` and
+recorded in the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import compose as kcompose
+from .kernels import norm as knorm
+from .kernels import ref
+
+VARIANTS = ("peft", "dense_ba", "eager", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer + DoRA hyper-parameters. ``s = alpha / sqrt(r)`` (rsLoRA,
+    the scaling the paper uses throughout)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 512
+    seq: int = 128
+    rank: int = 32
+    alpha: float = 16.0
+    dropout: float = 0.0  # p=0 keeps the fused path graph-break-free
+    norm_chunk: int | None = None  # factored-norm chunk size (elements)
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / (self.rank ** 0.5)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (frozen + trainable), for reporting."""
+        d, f, v, r = self.d_model, self.d_ff, self.vocab, self.rank
+        per_layer = 4 * d * d + 3 * d * f  # q,k,v,o + gate,up,down
+        adapters = (4 * (r * d + d * r + d)
+                    + 2 * (r * d + f * r + f)      # gate, up: d -> f
+                    + (r * f + d * r + d))          # down: f -> d
+        return v * d + self.n_layers * (per_layer + adapters + 2 * d) + d
+
+
+# Names of the seven adapted projections, with (d_out, d_in) resolvers.
+PROJS = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+def proj_dims(cfg: ModelConfig, name: str) -> tuple[int, int]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+        "gate": (f, d), "up": (f, d), "down": (d, f),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Initialization (in-graph; exported as the `init` artifact so Rust obtains
+# bit-reproducible parameters from a single seed).
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed):
+    """DoRA init (paper §3.1): A ~ N(0, 1/d_in), B = 0, m = ||W||_row —
+    hence g == 1 exactly at step 0, the near-unity regime where the stable
+    compose form matters.
+
+    Returns (frozen, trainable) pytrees with per-layer stacked leaves.
+    """
+    key = jax.random.PRNGKey(seed)
+    n_keys = 2 + len(PROJS) * 2 * cfg.n_layers
+    keys = iter(jax.random.split(key, n_keys))
+
+    embed = jax.random.normal(next(keys), (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+
+    frozen: dict[str, Any] = {"embed": embed, "ln_f": jnp.ones((cfg.d_model,))}
+    trainable: dict[str, Any] = {}
+    for name in PROJS:
+        d_out, d_in = proj_dims(cfg, name)
+        ws, as_, bs, ms = [], [], [], []
+        for _ in range(cfg.n_layers):
+            w = jax.random.normal(next(keys), (d_out, d_in), jnp.float32)
+            w = w * (0.02 if name != "down" else 0.02 / (2 * cfg.n_layers) ** 0.5)
+            a = jax.random.normal(next(keys), (cfg.rank, d_in), jnp.float32)
+            a = a * (1.0 / d_in ** 0.5)
+            b = jnp.zeros((d_out, cfg.rank), jnp.float32)
+            m = jnp.sqrt(jnp.sum(w.astype(jnp.float32) ** 2, axis=1))
+            ws.append(w); as_.append(a); bs.append(b); ms.append(m)
+        frozen[f"{name}_w"] = jnp.stack(ws)
+        trainable[f"{name}_a"] = jnp.stack(as_)
+        trainable[f"{name}_b"] = jnp.stack(bs)
+        trainable[f"{name}_m"] = jnp.stack(ms)
+    frozen["ln_attn"] = jnp.ones((cfg.n_layers, cfg.d_model))
+    frozen["ln_mlp"] = jnp.ones((cfg.n_layers, cfg.d_model))
+    return frozen, trainable
+
+
+def flatten_names(tree: dict[str, Any]) -> list[str]:
+    """Deterministic leaf order for the Rust FFI boundary: sorted keys
+    (matches jax.tree_util dict flattening order)."""
+    return sorted(tree.keys())
+
+
+def flatten(tree: dict[str, Any]) -> list[jax.Array]:
+    return [tree[k] for k in flatten_names(tree)]
+
+
+def unflatten(names: list[str], leaves) -> dict[str, Any]:
+    return dict(zip(names, leaves))
+
+
+# ---------------------------------------------------------------------------
+# DoRA projection (the paper's module, all four variants).
+# ---------------------------------------------------------------------------
+
+
+def weight_norm(w, a, b, s, variant: str, chunk: int | None):
+    """Detached row-wise norm of W + sBA, per variant. Returns fp32.
+
+    'fused' uses the Pallas chunk kernel + Pallas assembly; 'eager' the
+    chunked-jnp Algorithm 1; the two baselines materialize dense products.
+
+    The norm is DETACHED (DoRA paper §4.3): inputs are stop_gradient'ed so
+    no tangent ever reaches the norm computation — this both matches the
+    paper's semantics and spares the Pallas kernels from needing an
+    autodiff rule they'd never use.
+    """
+    w = jax.lax.stop_gradient(w)
+    a = jax.lax.stop_gradient(a)
+    b = jax.lax.stop_gradient(b)
+    if variant == "peft":
+        wn = ref.peft_weight_norm(w, a, b, s)
+    elif variant == "dense_ba":
+        wn = ref.dense_ba_weight_norm(w, a, b, s)
+    elif variant == "eager":
+        wn = ref.factored_weight_norm(w, a, b, s, chunk_size=chunk)
+    elif variant == "fused":
+        d_in = w.shape[1]
+        cs = min(chunk or d_in, d_in)
+        base_sq = cross = gram = None
+        start = 0
+        while start < d_in:
+            stop = min(start + cs, d_in)
+            bs_c, cr_c, g_c = knorm.factored_norm_chunk(
+                w[:, start:stop].astype(jnp.float32),
+                a[:, start:stop].astype(jnp.float32),
+                b.astype(jnp.float32))
+            base_sq = bs_c if base_sq is None else base_sq + bs_c
+            cross = cr_c if cross is None else cross + cr_c
+            gram = g_c if gram is None else gram + g_c
+            start = stop
+        # ba_sq via the accumulated Gram (Eq. 4) then fused assembly (Eq. 5).
+        bf = b.astype(jnp.float32)
+        ba_sq = jnp.sum((bf @ gram) * bf, axis=1)
+        wn = knorm.norm_assembly_kernel(base_sq, cross, ba_sq, s)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return jax.lax.stop_gradient(wn)
+
+
+def dora_proj(x, w, a, b, m, cfg: ModelConfig, variant: str):
+    """One adapted projection y = base + compose(base, lora, g, s)."""
+    s = cfg.scale
+    wn = weight_norm(w, a, b, s, variant, cfg.norm_chunk)
+    g = ref.magnitude_divide(m, wn, ref.dtype_eps(x.dtype))
+    y_base = x @ w.T
+    lora = (x @ a.T) @ b.T
+    if variant == "fused":
+        # Tier-1 path: custom VJP replays the fused backward kernel.
+        delta = kcompose.fused_compose_ad(y_base, lora, g, s)
+    else:
+        delta = ref.compose_stable(y_base, lora, g, s)
+    return y_base + delta
+
+
+# ---------------------------------------------------------------------------
+# Transformer.
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rope(x, positions):
+    """Rotary position embedding over the head dim (standard theta=10000)."""
+    *_, h = x.shape
+    half = h // 2
+    freq = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]  # [seq, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def attention(x, layer_p, cfg: ModelConfig, variant: str):
+    bs, seq, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = dora_proj(x, layer_p["q_w"], layer_p["q_a"], layer_p["q_b"], layer_p["q_m"], cfg, variant)
+    k = dora_proj(x, layer_p["k_w"], layer_p["k_a"], layer_p["k_b"], layer_p["k_m"], cfg, variant)
+    v = dora_proj(x, layer_p["v_w"], layer_p["v_a"], layer_p["v_b"], layer_p["v_m"], cfg, variant)
+
+    pos = jnp.arange(seq)
+    q = rope(q.reshape(bs, seq, h, hd).transpose(0, 2, 1, 3), pos)
+    k = rope(k.reshape(bs, seq, h, hd).transpose(0, 2, 1, 3), pos)
+    v = v.reshape(bs, seq, h, hd).transpose(0, 2, 1, 3)
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bs, seq, d)
+    return dora_proj(ctx, layer_p["o_w"], layer_p["o_a"], layer_p["o_b"], layer_p["o_m"], cfg, variant)
+
+
+def mlp(x, layer_p, cfg: ModelConfig, variant: str):
+    gate = dora_proj(x, layer_p["gate_w"], layer_p["gate_a"], layer_p["gate_b"], layer_p["gate_m"], cfg, variant)
+    up = dora_proj(x, layer_p["up_w"], layer_p["up_a"], layer_p["up_b"], layer_p["up_m"], cfg, variant)
+    act = jax.nn.silu(gate) * up
+    return dora_proj(act, layer_p["down_w"], layer_p["down_a"], layer_p["down_b"], layer_p["down_m"], cfg, variant)
+
+
+def block(x, layer_p, cfg: ModelConfig, variant: str):
+    x = x + attention(rms_norm(x, layer_p["ln_attn"]), layer_p, cfg, variant)
+    x = x + mlp(rms_norm(x, layer_p["ln_mlp"]), layer_p, cfg, variant)
+    return x
+
+
+def forward(frozen, trainable, tokens, cfg: ModelConfig, variant: str):
+    """tokens [bs, seq] int32 -> logits [bs, seq, vocab] (fp32)."""
+    x = frozen["embed"][tokens]
+
+    # Per-layer stacked params -> scan. Layer-indexed leaves get sliced by
+    # the scan carry; shared leaves (embed, ln_f) stay outside.
+    layer_keys = ([f"{p}_{t}" for p in PROJS for t in ("w",)]
+                  + ["ln_attn", "ln_mlp"])
+    train_keys = [f"{p}_{t}" for p in PROJS for t in ("a", "b", "m")]
+    stacked = {k: frozen[k] for k in layer_keys}
+    stacked.update({k: trainable[k] for k in train_keys})
+
+    def body(h, layer_p):
+        return block(h, layer_p, cfg, variant), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    x = rms_norm(x, frozen["ln_f"])
+    return (x @ frozen["embed"].T).astype(jnp.float32)
+
+
+def loss_fn(trainable, frozen, tokens, cfg: ModelConfig, variant: str):
+    """Next-token cross-entropy. tokens [bs, seq+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(frozen, trainable, inp, cfg, variant)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (AdamW, in-graph) and the train/infer entry points that aot.py
+# lowers. All entry points take/return FLAT LISTS in flatten_names order so
+# the Rust side can feed Literals without a pytree library.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # adapters conventionally skip decay
+
+
+def adamw_update(p, g, m1, m2, step, oc: OptConfig):
+    m1 = oc.beta1 * m1 + (1 - oc.beta1) * g
+    m2 = oc.beta2 * m2 + (1 - oc.beta2) * g * g
+    t = step.astype(jnp.float32)
+    mhat = m1 / (1 - oc.beta1 ** t)
+    vhat = m2 / (1 - oc.beta2 ** t)
+    p = p - oc.lr * (mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p)
+    return p, m1, m2
+
+
+def train_chunk(cfg: ModelConfig, oc: OptConfig, variant: str,
+                frozen_leaves, train_leaves, m1_leaves, m2_leaves, step,
+                tokens):
+    """Run ``k`` optimizer steps in-graph (k = tokens.shape[0]).
+
+    tokens: [k, bs, seq+1] int32. Returns (new trainables, new m1, new m2,
+    new step, losses[k]). Lowered once per (cfg, variant); Rust calls it
+    repeatedly, so the host round-trip amortizes over k steps.
+    """
+    fnames = flatten_names_frozen(cfg)
+    tnames = flatten_names_trainable(cfg)
+    frozen = unflatten(fnames, frozen_leaves)
+
+    def body(carry, batch):
+        tr, m1, m2, step = carry
+        trainable = unflatten(tnames, tr)
+        loss, grads = jax.value_and_grad(loss_fn)(
+            trainable, frozen, batch, cfg, variant)
+        gl = flatten(grads)
+        new_tr, new_m1, new_m2 = [], [], []
+        step = step + 1
+        for p, g, a, b in zip(tr, gl, m1, m2):
+            np_, na, nb = adamw_update(p, g, a, b, step, oc)
+            new_tr.append(np_); new_m1.append(na); new_m2.append(nb)
+        return (new_tr, new_m1, new_m2, step), loss
+
+    (tr, m1, m2, step), losses = jax.lax.scan(
+        body, (list(train_leaves), list(m1_leaves), list(m2_leaves), step),
+        tokens)
+    return tr, m1, m2, step, losses
+
+
+def infer_step(cfg: ModelConfig, variant: str, frozen_leaves, train_leaves,
+               tokens):
+    """tokens [bs, seq] -> logits of the LAST position [bs, vocab] (keeps
+    the serving artifact output small)."""
+    frozen = unflatten(flatten_names_frozen(cfg), frozen_leaves)
+    trainable = unflatten(flatten_names_trainable(cfg), train_leaves)
+    logits = forward(frozen, trainable, tokens, cfg, variant)
+    return logits[:, -1, :]
+
+
+def eval_loss(cfg: ModelConfig, variant: str, frozen_leaves, train_leaves,
+              tokens):
+    """tokens [bs, seq+1] -> scalar mean loss (for eval curves)."""
+    frozen = unflatten(flatten_names_frozen(cfg), frozen_leaves)
+    trainable = unflatten(flatten_names_trainable(cfg), train_leaves)
+    return loss_fn(trainable, frozen, tokens, cfg, variant)
+
+
+def flatten_names_frozen(cfg: ModelConfig) -> list[str]:
+    names = ["embed", "ln_f", "ln_attn", "ln_mlp"] + [f"{p}_w" for p in PROJS]
+    return sorted(names)
+
+
+def flatten_names_trainable(cfg: ModelConfig) -> list[str]:
+    return sorted(f"{p}_{t}" for p in PROJS for t in ("a", "b", "m"))
+
+
+def leaf_shape(cfg: ModelConfig, name: str) -> tuple[int, ...]:
+    """Shape of a flattened leaf by name (manifest generation)."""
+    L, r = cfg.n_layers, cfg.rank
+    if name == "embed":
+        return (cfg.vocab, cfg.d_model)
+    if name == "ln_f":
+        return (cfg.d_model,)
+    if name in ("ln_attn", "ln_mlp"):
+        return (L, cfg.d_model)
+    proj, kind = name.rsplit("_", 1)
+    d_out, d_in = proj_dims(cfg, proj)
+    return {
+        "w": (L, d_out, d_in),
+        "a": (L, r, d_in),
+        "b": (L, d_out, r),
+        "m": (L, d_out),
+    }[kind]
+
+
+# ---------------------------------------------------------------------------
+# Standalone module-level entry points (microbenchmark / runtime-test
+# artifacts): one DoRA linear, one compose, one norm.
+# ---------------------------------------------------------------------------
+
+
+def dora_linear(cfg: ModelConfig, variant: str, x, w, a, b, m):
+    """Single adapted projection, the Appendix-A contract in isolation."""
+    return dora_proj(x, w, a, b, m, cfg, variant)
+
+
+def compose_only(variant: str, s: float, base, lora, g):
+    if variant == "fused":
+        return kcompose.fused_compose(base, lora, g, s)
+    return ref.compose_stable(base, lora, g, s)
+
+
+def norm_only(variant: str, s: float, chunk: int | None, w, a, b):
+    cfg = ModelConfig(norm_chunk=chunk)
+    return weight_norm(w, a, b, s, variant, chunk)

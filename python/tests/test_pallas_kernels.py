@@ -1,0 +1,190 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes and asserts allclose against ref.py, per
+the paper's operator-level fidelity envelope (§4 "Precision"): fp32 within
+1e-4 max-abs, half precision within dtype-appropriate tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compose as kc
+from compile.kernels import norm as kn
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = {
+    jnp.dtype(jnp.float32): dict(rtol=1e-5, atol=1e-5),
+    jnp.dtype(jnp.bfloat16): dict(rtol=3e-2, atol=3e-2),
+    jnp.dtype(jnp.float16): dict(rtol=4e-3, atol=4e-3),
+}
+
+
+def make(seed, shape, d_out, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    base = jax.random.normal(k1, (*shape, d_out)).astype(dtype)
+    lora = jax.random.normal(k2, (*shape, d_out)).astype(dtype)
+    g = (1.0 + 0.1 * jax.random.normal(k3, (d_out,))).astype(jnp.float32)
+    return base, lora, g
+
+
+class TestFusedCompose:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+    @pytest.mark.parametrize("shape,d_out", [
+        ((4, 32), 64), ((128,), 512), ((2, 8, 16), 128),
+    ])
+    def test_matches_ref(self, dtype, shape, d_out):
+        base, lora, g = make(0, shape, d_out, dtype)
+        got = kc.fused_compose(base, lora, g, 1.7)
+        want = ref.compose_stable(base, lora, g, 1.7)
+        assert got.shape == want.shape and got.dtype == want.dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[jnp.dtype(dtype)])
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.sampled_from([1, 3, 16, 100]),
+        d_out=st.sampled_from([8, 32, 96, 256]),
+        s=st.floats(0.0, 4.0),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_sweep(self, rows, d_out, s, dtype, seed):
+        """Odd row counts + non-power-of-two d_out exercise the grid-tile
+        divisor logic (_tile)."""
+        base, lora, g = make(seed, (rows,), d_out, dtype)
+        got = kc.fused_compose(base, lora, g, s)
+        want = ref.compose_stable(base, lora, g, s)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[jnp.dtype(dtype)])
+
+    def test_near_unity_g_stability(self):
+        """The kernel keeps the stable form's accuracy in the collapse zone
+        (Figure 1's fused trace)."""
+        d = 128
+        base = jnp.full((8, d), 100.0, jnp.bfloat16)
+        lora = jnp.zeros((8, d), jnp.bfloat16)
+        g = jnp.full((d,), 1.0 + 1e-3, jnp.float32)
+        got = np.asarray(kc.fused_compose(base, lora, g, 1.0), np.float64)
+        truth = 1e-3 * 100.0
+        assert np.abs(got - truth).max() < 5e-4
+
+    def test_dual_output_inner(self):
+        base, lora, g = make(1, (16,), 64, jnp.float32)
+        delta, inner = kc.fused_compose_inner(base, lora, g, 0.6)
+        np.testing.assert_allclose(
+            np.asarray(delta), np.asarray(ref.compose_stable(base, lora, g, 0.6)),
+            rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(inner), np.asarray(0.6 * lora + base),
+            rtol=1e-5, atol=1e-6)
+
+
+class TestFusedComposeBackward:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, dtype):
+        d_delta, _, g = make(2, (4, 8), 64, dtype)
+        dl, db = kc.fused_compose_bwd(d_delta, g, 1.1)
+        want_dl, want_db, _ = ref.compose_backward(
+            d_delta, g, 1.1, jnp.zeros_like(d_delta))
+        np.testing.assert_allclose(np.asarray(dl, np.float32),
+                                   np.asarray(want_dl, np.float32),
+                                   **TOL[jnp.dtype(dtype)])
+        np.testing.assert_allclose(np.asarray(db, np.float32),
+                                   np.asarray(want_db, np.float32),
+                                   **TOL[jnp.dtype(dtype)])
+
+    def test_custom_vjp_equals_autodiff_of_eager(self):
+        """Tier-1 wiring: grad through fused_compose_ad == grad through the
+        eager stable compose."""
+        base, lora, g = make(3, (8,), 32, jnp.float32)
+        s = 0.9
+
+        def f_fused(base, lora, g):
+            return jnp.sum(jnp.sin(kc.fused_compose_ad(base, lora, g, s)))
+
+        def f_eager(base, lora, g):
+            return jnp.sum(jnp.sin(ref.compose_stable(base, lora, g, s)))
+
+        gf = jax.grad(f_fused, argnums=(0, 1, 2))(base, lora, g)
+        ge = jax.grad(f_eager, argnums=(0, 1, 2))(base, lora, g)
+        for a, b in zip(gf, ge):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestNormKernels:
+    @pytest.mark.parametrize("d_out", [8, 64, 250, 256, 1000])
+    def test_assembly_matches_ref(self, d_out):
+        k = jax.random.split(jax.random.PRNGKey(4), 3)
+        base_sq = jnp.abs(jax.random.normal(k[0], (d_out,))) * 10
+        cross = jax.random.normal(k[1], (d_out,))
+        ba_sq = jnp.abs(jax.random.normal(k[2], (d_out,)))
+        for s in (0.0, 0.37, 2.0):
+            got = kn.norm_assembly_kernel(base_sq, cross, ba_sq, s)
+            want = ref.norm_assembly(base_sq, cross, ba_sq, s)
+            # XLA may contract the eager reference's multiply-adds into
+            # FMAs; the kernel's per-op rounding then differs in the last
+            # bits. Well inside the paper's fp32 envelope (1e-4 max-abs).
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-5, atol=1e-6)
+
+    def test_assembly_clamp_and_nan(self):
+        base_sq = jnp.array([1.0, 0.0, jnp.nan, 4.0])
+        cross = jnp.array([-10.0, 0.0, 0.0, 0.0])
+        ba_sq = jnp.zeros((4,))
+        got = np.asarray(kn.norm_assembly_kernel(base_sq, cross, ba_sq, 1.0))
+        assert got[0] == 0.0          # clamped: 1 + 2*(-10) < 0
+        assert got[1] == 0.0
+        assert np.isnan(got[2])       # NaN propagates
+        assert got[3] == 2.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        d_out=st.sampled_from([16, 64, 128]),
+        cs=st.sampled_from([16, 64, 128]),
+        r=st.sampled_from([2, 8, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_chunk_kernel(self, d_out, cs, r, seed):
+        k = jax.random.split(jax.random.PRNGKey(seed), 3)
+        wc = jax.random.normal(k[0], (d_out, cs))
+        ac = jax.random.normal(k[1], (r, cs))
+        b = jax.random.normal(k[2], (d_out, r))
+        base_sq, cross, gram = kn.factored_norm_chunk(wc, ac, b)
+        np.testing.assert_allclose(np.asarray(base_sq),
+                                   np.asarray(jnp.sum(wc * wc, axis=1)),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gram),
+                                   np.asarray(ac @ ac.T), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(cross),
+            np.asarray(jnp.sum(b * (wc @ ac.T), axis=1)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_full_fused_norm_path_vs_dense(self):
+        """Chunk kernel + Gram assembly + assembly kernel == dense norm."""
+        k = jax.random.split(jax.random.PRNGKey(5), 3)
+        d_out, d_in, r, s, cs = 96, 320, 16, 1.3, 64
+        w = jax.random.normal(k[0], (d_out, d_in)) * 0.05
+        a = jax.random.normal(k[1], (r, d_in)) * 0.1
+        b = jax.random.normal(k[2], (d_out, r)) * 0.1
+
+        base_sq = cross = gram = None
+        for st_ in range(0, d_in, cs):
+            bs_c, cr_c, g_c = kn.factored_norm_chunk(
+                w[:, st_:st_ + cs], a[:, st_:st_ + cs], b)
+            base_sq = bs_c if base_sq is None else base_sq + bs_c
+            cross = cr_c if cross is None else cross + cr_c
+            gram = g_c if gram is None else gram + g_c
+        ba_sq = jnp.sum((b @ gram) * b, axis=1)
+        got = np.asarray(kn.norm_assembly_kernel(base_sq, cross, ba_sq, s))
+        want = np.asarray(ref.dense_ba_weight_norm(w, a, b, s))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,202 @@
+"""Compose-path oracles: stable vs naive forms, backward math, and the
+paper's numerical-stability claim (§3.1, Figure 1) at the oracle level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_acts(seed, shape, d_out, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    base = jax.random.normal(k1, (*shape, d_out)).astype(dtype)
+    lora = jax.random.normal(k2, (*shape, d_out)).astype(dtype)
+    g = (1.0 + 0.0015 * jax.random.normal(k3, (d_out,))).astype(jnp.float32)
+    return base, lora, g
+
+
+def dense_truth(base, lora, g, s):
+    b = np.asarray(base, np.float64)
+    l = np.asarray(lora, np.float64)
+    gg = np.asarray(g, np.float64)
+    return (gg - 1.0) * b + gg * s * l
+
+
+class TestComposeForms:
+    @pytest.mark.parametrize("s", [0.0, 0.5, 2.0])
+    def test_stable_matches_fp64_truth(self, s):
+        base, lora, g = make_acts(0, (4, 16), 64)
+        got = np.asarray(ref.compose_stable(base, lora, g, s), np.float64)
+        np.testing.assert_allclose(got, dense_truth(base, lora, g, s),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_naive_equals_stable_in_fp64(self):
+        """The two forms are ALGEBRAICALLY identical — only rounding
+        separates them. In fp64 they agree to machine precision.
+        (Requires x64 mode: without it JAX silently truncates to fp32.)"""
+        with jax.experimental.enable_x64():
+            base, lora, g = make_acts(1, (8,), 32)
+            b64, l64 = base.astype(jnp.float64), lora.astype(jnp.float64)
+            g64 = g.astype(jnp.float64)
+            naive = np.asarray(ref.compose_naive(b64, l64, g64, 1.3))
+            stable = np.asarray(ref.compose_stable(b64, l64, g64, 1.3))
+        np.testing.assert_allclose(naive, stable, rtol=1e-12, atol=1e-12)
+
+    def test_bf16_collapse_zone(self):
+        """Paper §3.1: when |g-1| < eps_bf16/2 ≈ 3.9e-3, the naive form
+        evaluated in bf16 loses the base correction ENTIRELY, while the
+        stable form (fp32 intermediates) keeps it."""
+        d = 256
+        base = jnp.full((16, d), 100.0, jnp.bfloat16)
+        lora = jnp.zeros((16, d), jnp.bfloat16)  # isolate the base term
+        g = jnp.full((d,), 1.0 + 1e-3, jnp.float32)  # inside collapse zone
+        truth = dense_truth(base, lora, g, 1.0)  # = 1e-3 * 100 = 0.1
+
+        naive = np.asarray(ref.compose_naive(base, lora, g, 1.0),
+                           np.float64)
+        stable = np.asarray(ref.compose_stable(base, lora, g, 1.0),
+                            np.float64)
+        err_naive = np.abs(naive - truth).max()
+        err_stable = np.abs(stable - truth).max()
+        # naive: g*base rounds to base in bf16 -> delta == 0 -> error 0.1
+        assert err_naive > 0.05
+        # stable keeps (g-1)*base in fp32; only the final bf16 cast rounds
+        assert err_stable < 5e-4
+        assert err_naive / max(err_stable, 1e-12) > 3.0  # paper: 3.0x
+
+    def test_stable_peak_error_ratio_sweep(self):
+        """Figure 1's sweep shape: peak naive error >= 3x peak stable error
+        across a band of g values around unity (bf16)."""
+        d = 512
+        key = jax.random.PRNGKey(7)
+        base = (jax.random.normal(key, (64, d)) * 10).astype(jnp.bfloat16)
+        lora = jnp.zeros((64, d), jnp.bfloat16)
+        worst_naive, worst_stable = 0.0, 0.0
+        for delta_g in np.logspace(-5, -2, 10):
+            g = jnp.full((d,), 1.0 + delta_g, jnp.float32)
+            truth = dense_truth(base, lora, g, 1.0)
+            scale = np.abs(truth).max() + 1e-30
+            en = np.abs(np.asarray(ref.compose_naive(base, lora, g, 1.0),
+                                   np.float64) - truth).max() / scale
+            es = np.abs(np.asarray(ref.compose_stable(base, lora, g, 1.0),
+                                   np.float64) - truth).max() / scale
+            worst_naive, worst_stable = max(worst_naive, en), max(worst_stable, es)
+        assert worst_naive / worst_stable > 3.0
+
+
+class TestComposeBackward:
+    def test_backward_matches_jax_autodiff(self):
+        """The hand-derived (d_lora, d_base, d_g) equal JAX's autodiff of
+        the stable compose."""
+        base, lora, g = make_acts(2, (4, 8), 32)
+        s = 0.8
+
+        def f(base, lora, g):
+            return jnp.sum(ref.compose_stable(base, lora, g, s) ** 2)
+
+        gb, gl, gg = jax.grad(f, argnums=(0, 1, 2))(base, lora, g)
+        d_delta = 2 * ref.compose_stable(base, lora, g, s)
+        inner = s * lora + base
+        d_lora, d_base, d_g = ref.compose_backward(d_delta, g, s, inner)
+        np.testing.assert_allclose(np.asarray(gl), np.asarray(d_lora),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(d_base),
+                                   rtol=1e-4, atol=1e-5)
+        # d_g via inner: d(delta)/dg = base + s*lora = inner
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(d_g),
+                                   rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.sampled_from([1, 7, 32]),
+        d_out=st.sampled_from([8, 64, 128]),
+        s=st.floats(0.0, 4.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_backward_linearity(self, rows, d_out, s, seed):
+        """d_lora/d_base are linear in d_delta with the claimed factors."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        d_delta = jax.random.normal(k1, (rows, d_out))
+        g = 1.0 + 0.01 * jax.random.normal(k2, (d_out,))
+        inner = jnp.zeros_like(d_delta)
+        d_lora, d_base, _ = ref.compose_backward(d_delta, g, s, inner)
+        np.testing.assert_allclose(np.asarray(d_lora),
+                                   np.asarray(g * s * d_delta),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(d_base),
+                                   np.asarray((g - 1.0) * d_delta),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestDoraDelta:
+    @pytest.mark.parametrize("norm", ["peft", "dense_ba", "factored"])
+    def test_module_contract_matches_direct_composition(self, norm):
+        """Appendix A: y_base + delta == m ⊙ (x @ (W+sBA)^T) / ||W+sBA||."""
+        k = jax.random.split(jax.random.PRNGKey(3), 5)
+        d_out, d_in, r, s = 32, 48, 4, 1.5
+        x = jax.random.normal(k[0], (2, 5, d_in))
+        w = jax.random.normal(k[1], (d_out, d_in)) * 0.1
+        a = jax.random.normal(k[2], (r, d_in)) * 0.1
+        b = jax.random.normal(k[3], (d_out, r)) * 0.1
+        m = jnp.abs(jax.random.normal(k[4], (d_out,))) + 0.5
+
+        y_base, delta, g = ref.dora_delta(x, w, a, b, m, s, norm=norm)
+        y = np.asarray(y_base + delta, np.float64)
+
+        w64 = np.asarray(w, np.float64)
+        comp = w64 + s * np.asarray(b, np.float64) @ np.asarray(a, np.float64)
+        wn = np.linalg.norm(comp, axis=1)
+        direct = (np.asarray(x, np.float64) @ comp.T) \
+            * (np.asarray(m, np.float64) / wn)
+        np.testing.assert_allclose(y, direct, rtol=1e-4, atol=1e-5)
+
+
+class TestEmbeddingCorrection:
+    """Paper §6: PEFT's embedding path omits (g-1) ⊙ base."""
+
+    def _setup(self, seed=21, vocab=32, d=16, r=4):
+        k = jax.random.split(jax.random.PRNGKey(seed), 4)
+        emb = jax.random.normal(k[0], (vocab, d)) * 0.1
+        a = jax.random.normal(k[1], (r, vocab)) * 0.2
+        b = jax.random.normal(k[2], (d, r)) * 0.2
+        # magnitude drifted away from the norm so g != 1
+        m = jnp.abs(jax.random.normal(k[3], (d,))) + 0.5
+        idx = jnp.array([[0, 3, 7], [1, 2, 31]])
+        return idx, emb, a, b, m
+
+    def test_corrected_matches_direct_formula(self):
+        idx, emb, a, b, m = self._setup()
+        s = 1.5
+        base, delta = ref.embedding_dora_delta(idx, emb, a, b, m, s)
+        comp = np.asarray(emb, np.float64) + s * (np.asarray(b, np.float64)
+                                                  @ np.asarray(a, np.float64)).T
+        wn = np.linalg.norm(comp, axis=0)
+        direct = comp[np.asarray(idx)] * (np.asarray(m, np.float64) / wn)
+        np.testing.assert_allclose(np.asarray(base + delta, np.float64),
+                                   direct, rtol=1e-4, atol=1e-5)
+
+    def test_legacy_omits_base_correction(self):
+        idx, emb, a, b, m = self._setup()
+        _, d_corr = ref.embedding_dora_delta(idx, emb, a, b, m, 1.5)
+        base, d_leg = ref.embedding_dora_delta(idx, emb, a, b, m, 1.5,
+                                               corrected=False)
+        # They differ by exactly (g-1) * base.
+        diff = np.asarray(d_corr, np.float64) - np.asarray(d_leg, np.float64)
+        assert np.abs(diff).max() > 1e-3, "legacy should diverge when g != 1"
+
+    def test_paths_agree_at_unity_g(self):
+        idx, emb, a, b, _ = self._setup()
+        # m == column norms => g == 1 => the omitted term vanishes.
+        comp = np.asarray(emb) + 1.5 * (np.asarray(b) @ np.asarray(a)).T
+        m = jnp.asarray(np.linalg.norm(comp, axis=0))
+        _, d_corr = ref.embedding_dora_delta(idx, emb, a, b, m, 1.5)
+        _, d_leg = ref.embedding_dora_delta(idx, emb, a, b, m, 1.5,
+                                            corrected=False)
+        np.testing.assert_allclose(np.asarray(d_corr), np.asarray(d_leg),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,137 @@
+"""The factored norm is algebraically identical to the dense reference.
+
+Covers paper §2 (Eq. 2-5, Algorithm 1): the three norm engines agree, the
+chunking is invariant, the s=0 fast path holds, and the fp32 accumulation
+discipline survives bf16 inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_wab(seed, d_out, d_in, r, dtype=jnp.float32, w_scale=0.02):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = (jax.random.normal(k1, (d_out, d_in)) * w_scale).astype(dtype)
+    a = (jax.random.normal(k2, (r, d_in)) / d_in**0.5).astype(dtype)
+    b = (jax.random.normal(k3, (d_out, r)) * 0.1).astype(dtype)
+    return w, a, b
+
+
+class TestNormAgreement:
+    @pytest.mark.parametrize("d_out,d_in,r", [
+        (32, 32, 4), (64, 128, 8), (128, 64, 16), (256, 256, 32),
+        (128, 384, 24),
+    ])
+    @pytest.mark.parametrize("s", [0.25, 1.0, 2.0])
+    def test_three_engines_agree_fp32(self, d_out, d_in, r, s):
+        w, a, b = make_wab(0, d_out, d_in, r)
+        n_peft = np.asarray(ref.peft_weight_norm(w, a, b, s))
+        n_ba = np.asarray(ref.dense_ba_weight_norm(w, a, b, s))
+        n_fact = np.asarray(ref.factored_weight_norm(w, a, b, s))
+        np.testing.assert_allclose(n_peft, n_ba, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(n_ba, n_fact, rtol=1e-5, atol=1e-7)
+
+    def test_chunk_invariance(self):
+        """Algorithm 1 must give the same answer for any chunk size."""
+        w, a, b = make_wab(1, 96, 512, 16)
+        full = np.asarray(ref.factored_weight_norm(w, a, b, 0.7))
+        for cs in (64, 128, 192, 256, 511, 512, 1024):
+            chunked = np.asarray(
+                ref.factored_weight_norm(w, a, b, 0.7, chunk_size=cs))
+            np.testing.assert_allclose(full, chunked, rtol=1e-6, atol=1e-7)
+
+    def test_scale_zero_fast_path(self):
+        """s=0 skips cross/ba_sq: norm reduces to ||W||_row exactly."""
+        w, a, b = make_wab(2, 64, 128, 8)
+        n = np.asarray(ref.factored_weight_norm(w, a, b, 0.0))
+        expect = np.linalg.norm(np.asarray(w, np.float32), axis=1)
+        np.testing.assert_allclose(n, expect, rtol=1e-6)
+
+    def test_bf16_inputs_fp32_accumulation(self):
+        """bf16 weights: the factored path must cast each chunk to fp32
+        BEFORE accumulation, so it tracks the fp64 truth much better than a
+        pure-bf16 accumulation would."""
+        w, a, b = make_wab(3, 64, 2048, 16, dtype=jnp.bfloat16, w_scale=1.0)
+        got = np.asarray(
+            ref.factored_weight_norm(w, a, b, 1.0, chunk_size=256))
+        w64 = np.asarray(w, np.float64)
+        ba64 = np.asarray(b, np.float64) @ np.asarray(a, np.float64)
+        truth = np.linalg.norm(w64 + 1.0 * ba64, axis=1)
+        np.testing.assert_allclose(got, truth, rtol=2e-3)
+
+    def test_b_zero_init_gives_base_norm(self):
+        """DoRA init has B=0, so the composed norm equals ||W||_row and
+        g = m / ||W|| == 1 exactly — the near-unity regime."""
+        w, a, _ = make_wab(4, 64, 128, 8)
+        b = jnp.zeros((64, 8))
+        n = np.asarray(ref.factored_weight_norm(w, a, b, 2.0))
+        expect = np.linalg.norm(np.asarray(w, np.float32), axis=1)
+        np.testing.assert_allclose(n, expect, rtol=1e-6)
+
+    def test_negative_under_sqrt_clamped(self):
+        """Eq. 5 clamps at 0 before sqrt; engineer tiny norms + cancellation."""
+        w = jnp.zeros((4, 8))
+        a = jnp.ones((2, 8)) * 1e-20
+        b = jnp.ones((4, 2)) * 1e-20
+        n = np.asarray(ref.factored_weight_norm(w, a, b, 1.0))
+        assert np.all(np.isfinite(n)) and np.all(n >= 0)
+
+    def test_nan_propagates(self):
+        """clamp_min semantics: NaN in W must surface, not collapse to 0."""
+        w = jnp.ones((4, 8)).at[1, 3].set(jnp.nan)
+        a = jnp.ones((2, 8)) * 0.1
+        b = jnp.ones((4, 2)) * 0.1
+        n = np.asarray(ref.factored_weight_norm(w, a, b, 1.0))
+        assert np.isnan(n[1]) and np.isfinite(n[0])
+
+
+class TestNormTerms:
+    def test_terms_match_dense_expansion(self):
+        """base/cross/ba individually match their dense definitions."""
+        w, a, b = make_wab(5, 48, 96, 8)
+        base_sq, cross, ba_sq = ref.factored_norm_terms(w, a, b)
+        wn = np.asarray(w, np.float64)
+        ban = np.asarray(b, np.float64) @ np.asarray(a, np.float64)
+        np.testing.assert_allclose(base_sq, (wn**2).sum(1), rtol=1e-5)
+        np.testing.assert_allclose(cross, (wn * ban).sum(1), rtol=1e-4,
+                                   atol=1e-8)
+        np.testing.assert_allclose(ba_sq, (ban**2).sum(1), rtol=1e-4,
+                                   atol=1e-10)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        d_out=st.sampled_from([16, 32, 96]),
+        d_in=st.sampled_from([16, 64, 192]),
+        r=st.sampled_from([2, 8, 24]),
+        s=st.floats(0.01, 8.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_factored_equals_dense(self, d_out, d_in, r, s, seed):
+        """Hypothesis sweep: factored == dense over random shapes/scales."""
+        w, a, b = make_wab(seed, d_out, d_in, r)
+        dense = np.asarray(ref.dense_ba_weight_norm(w, a, b, s))
+        fact = np.asarray(
+            ref.factored_weight_norm(w, a, b, s, chunk_size=64))
+        np.testing.assert_allclose(dense, fact, rtol=3e-5, atol=1e-6)
+
+
+class TestMagnitudeDivide:
+    def test_eps_floor(self):
+        m = jnp.ones((4,))
+        wn = jnp.array([1.0, 1e-15, 0.0, 2.0])
+        g = np.asarray(ref.magnitude_divide(m, wn, 1e-12))
+        assert g[0] == 1.0
+        assert g[1] == g[2] == pytest.approx(1e12)
+        assert g[3] == 0.5
+
+    def test_dtype_eps_table(self):
+        assert ref.dtype_eps(jnp.float32) == 1e-12
+        assert ref.dtype_eps(jnp.bfloat16) == 1e-6
+        assert ref.dtype_eps(jnp.float16) == 1e-6

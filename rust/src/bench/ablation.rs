@@ -1,0 +1,115 @@
+//! Factorial ablation — the paper's §6.2 acknowledged gap: "Model-level
+//! speedups reflect both contributions (factored norm + fused kernels)
+//! jointly ... A fuller factorial ablation across additional model
+//! families would strengthen the evidence."
+//!
+//! This unit crosses the two contributions independently on the cost
+//! model: {dense, factored} norm × {eager, fused} compose, for every
+//! model on H200, attributing the end-to-end gain to each axis.
+
+use crate::dora::config::{ActShape, Config};
+use crate::dora::gpu_cost;
+use crate::dora::model_plan::Workload;
+use crate::gpusim::device::{self, Device};
+use crate::models::{ModelSpec, MODELS};
+use crate::util::table::{fmt_speedup, Table};
+
+/// Iteration time with the norm engine and compose engine chosen
+/// INDEPENDENTLY (the four factorial cells; the paper's shipped configs
+/// are the diagonal dense+eager = "Dense (B@A)" and factored+fused =
+/// "Fused").
+fn factorial_time(
+    dev: &Device,
+    spec: &ModelSpec,
+    wl: &Workload,
+    norm_cfg: Config,
+    fused_compose: bool,
+) -> f64 {
+    let rows = wl.rows();
+    let mut t = 0.0;
+    for (_, shape, count) in spec.inventory(wl.rank) {
+        let act = ActShape::new(rows, shape.d_out);
+        // Norm engine per `norm_cfg`; compose per `fused_compose` with
+        // the real dispatch crossover applied.
+        let above = crate::dispatch::above_crossover(act);
+        let use_fused = fused_compose && above;
+        let norm = gpu_cost::weight_norm(dev, shape, wl.dtype, norm_cfg);
+        let base = gpu_cost::base_matmul(dev, shape, rows, wl.dtype);
+        let lora = gpu_cost::lora_matmuls(dev, shape, rows, wl.dtype);
+        let comp_f = gpu_cost::compose_forward(dev, act, wl.dtype, use_fused);
+        let comp_b = gpu_cost::compose_backward(dev, act, wl.dtype, use_fused);
+        let dmag = gpu_cost::dmag_reduction(dev, act, wl.dtype);
+        // fwd + bwd(recompute fwd + grads approximated as in model_plan)
+        let grads = gpu_cost::lora_matmuls(dev, shape, rows, wl.dtype)
+            .add(gpu_cost::base_matmul(dev, shape, rows, wl.dtype));
+        let module = 2.0 * (norm.time + base.time + lora.time + comp_f.time)
+            + comp_b.time
+            + dmag.time
+            + grads.time;
+        t += module * count as f64;
+    }
+    t * wl.grad_accum as f64
+}
+
+/// Render the factorial ablation table.
+pub fn ablation() -> String {
+    let dev = device::find("h200").unwrap();
+    let wl = Workload::default();
+    let mut t = Table::new(
+        "Factorial ablation (H200, bf16, r=384): norm engine x compose engine, \
+         speedup vs (dense norm + eager compose)",
+        &["Model", "dense+eager", "factored+eager", "dense+fused", "factored+fused", "norm share", "compose share"],
+    );
+    for spec in MODELS.iter() {
+        let de = factorial_time(dev, spec, &wl, Config::DenseBA, false);
+        let fe = factorial_time(dev, spec, &wl, Config::Eager, false);
+        let df = factorial_time(dev, spec, &wl, Config::DenseBA, true);
+        let ff = factorial_time(dev, spec, &wl, Config::Fused, true);
+        // Attribution: log-space share of the total gain per axis.
+        let total = (de / ff).ln();
+        let norm_share = ((de / fe).ln() / total * 100.0).round();
+        let compose_share = ((de / df).ln() / total * 100.0).round();
+        t.row(vec![
+            spec.name.into(),
+            "1.00x".into(),
+            fmt_speedup(de / fe),
+            fmt_speedup(de / df),
+            fmt_speedup(de / ff),
+            format!("{norm_share:.0}%"),
+            format!("{compose_share:.0}%"),
+        ]);
+    }
+    format!(
+        "{}\nShares are log-space attributions of the factored+fused gain; \
+         interaction terms make them not sum to exactly 100%.\n",
+        t.to_markdown()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorial_cells_ordered() {
+        // Both axes help; the full system is the fastest cell.
+        let dev = device::find("h200").unwrap();
+        let wl = Workload::default();
+        for spec in MODELS.iter() {
+            let de = factorial_time(dev, spec, &wl, Config::DenseBA, false);
+            let fe = factorial_time(dev, spec, &wl, Config::Eager, false);
+            let df = factorial_time(dev, spec, &wl, Config::DenseBA, true);
+            let ff = factorial_time(dev, spec, &wl, Config::Fused, true);
+            assert!(fe < de, "{}: factored norm should help", spec.name);
+            assert!(df < de, "{}: fused compose should help", spec.name);
+            assert!(ff < fe && ff < df, "{}: full system fastest", spec.name);
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let s = ablation();
+        assert!(s.contains("factored+fused"));
+        assert!(s.lines().count() > 8);
+    }
+}

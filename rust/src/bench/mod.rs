@@ -1,0 +1,8 @@
+//! Benchmark + report layer: the criterion-lite timing harness, the
+//! standard shape sweeps, and the report generator that regenerates every
+//! table and figure of the paper's evaluation (DESIGN.md §5).
+
+pub mod ablation;
+pub mod report;
+pub mod shapes;
+pub mod timing;

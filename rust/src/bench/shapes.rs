@@ -1,0 +1,97 @@
+//! The standard benchmark shape sweeps — the paper's "--shapes extended":
+//! 20 unique activation shapes (rows x d_out) for the compose/backward
+//! microbenchmarks, and the Table-7 weight-norm shape set.
+
+use crate::dora::config::{ActShape, ModuleShape};
+
+/// The 20 activation shapes of the paper's extended microbenchmark sweep
+/// (rows = batch * seq). Spans launch-bound to bandwidth-bound regimes,
+/// including the §4 crossover band around 2048 x 6144.
+pub fn extended_act_shapes() -> Vec<ActShape> {
+    let mut out = Vec::new();
+    for &(rows, d_out) in &[
+        (256, 1024),
+        (256, 4096),
+        (512, 2048),
+        (512, 8192),
+        (1024, 1024),
+        (1024, 4096),
+        (2048, 2048),
+        (2048, 4096),
+        (2048, 6144),
+        (2048, 8192),
+        (4096, 1024),
+        (4096, 4096),
+        (4096, 8192),
+        (8192, 2048),
+        (8192, 4096),
+        (8192, 8192),
+        (16384, 4096),
+        (16384, 8192),
+        (32768, 4096),
+        (32768, 8192),
+    ] {
+        out.push(ActShape::new(rows, d_out));
+    }
+    out
+}
+
+/// Table 7's weight-norm shapes (d_out, d_in, rank).
+pub fn norm_shapes() -> Vec<ModuleShape> {
+    vec![
+        ModuleShape::new(4096, 4096, 64),
+        ModuleShape::new(4096, 4096, 384),
+        ModuleShape::new(4096, 4096, 512),
+        ModuleShape::new(8192, 8192, 384),
+        ModuleShape::new(8192, 8192, 512),
+        ModuleShape::new(8192, 8192, 768),
+        ModuleShape::new(4096, 11008, 384),
+        ModuleShape::new(8192, 28672, 384), // the MoE shape
+    ]
+}
+
+/// CPU-scale activation shapes for the REAL-measurement benches (sized so
+/// the eager chain's working set exceeds LLC but a trial stays sub-second).
+pub fn cpu_act_shapes() -> Vec<ActShape> {
+    vec![
+        ActShape::new(256, 1024),
+        ActShape::new(512, 2048),
+        ActShape::new(1024, 4096),
+        ActShape::new(2048, 4096),
+        ActShape::new(4096, 4096),
+        ActShape::new(4096, 8192),
+    ]
+}
+
+/// CPU-scale norm shapes for real-measurement benches (naive matmul in
+/// the dense baselines caps the size).
+pub fn cpu_norm_shapes() -> Vec<ModuleShape> {
+    vec![
+        ModuleShape::new(256, 256, 16),
+        ModuleShape::new(512, 512, 32),
+        ModuleShape::new(512, 512, 128),
+        ModuleShape::new(1024, 1024, 64),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_unique_shapes() {
+        let shapes = extended_act_shapes();
+        assert_eq!(shapes.len(), 20);
+        let mut set = std::collections::HashSet::new();
+        for s in &shapes {
+            assert!(set.insert((s.rows, s.d_out)), "duplicate {s:?}");
+        }
+    }
+
+    #[test]
+    fn norm_shapes_match_table7() {
+        let shapes = norm_shapes();
+        assert_eq!(shapes.len(), 8);
+        assert!(shapes.contains(&ModuleShape::new(8192, 28672, 384)));
+    }
+}

@@ -1,0 +1,111 @@
+//! Criterion-lite timing harness (no criterion in the vendored set).
+//!
+//! Mirrors the paper's microbenchmark methodology (§5.1): warmup
+//! iterations followed by N timed trials, reporting the **median** (the
+//! paper reports medians of 200 CUDA-event-timed trials) plus CV for the
+//! stability criterion (paper: CV < 1.7%).
+//!
+//! `cargo bench` runs the `benches/*.rs` binaries (harness = false),
+//! which use this module and print aligned result tables.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub cv: f64,
+    pub trials: usize,
+}
+
+impl Measurement {
+    pub fn throughput_gbps(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.median_s / 1e9
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchCfg {
+    pub warmup: usize,
+    pub trials: usize,
+    /// Abort a single benchmark after this many seconds (keeps `cargo
+    /// bench` bounded on slow reference paths).
+    pub time_cap_s: f64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg { warmup: 3, trials: 20, time_cap_s: 10.0 }
+    }
+}
+
+impl BenchCfg {
+    /// Paper-faithful microbenchmark settings (10 warmup, 200 trials) —
+    /// used for the fast CPU kernels.
+    pub fn micro() -> Self {
+        BenchCfg { warmup: 10, trials: 200, time_cap_s: 20.0 }
+    }
+
+    /// Quick settings for heavyweight end-to-end paths.
+    pub fn quick() -> Self {
+        BenchCfg { warmup: 1, trials: 5, time_cap_s: 30.0 }
+    }
+}
+
+/// Time `f`, returning the median-of-trials measurement. `f` should
+/// return something opaque to keep the optimizer honest (use
+/// `std::hint::black_box` inside).
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchCfg, mut f: F) -> Measurement {
+    let start = Instant::now();
+    for _ in 0..cfg.warmup {
+        f();
+        if start.elapsed().as_secs_f64() > cfg.time_cap_s {
+            break;
+        }
+    }
+    let mut samples = Vec::with_capacity(cfg.trials);
+    for _ in 0..cfg.trials {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > cfg.time_cap_s && samples.len() >= 3 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        median_s: stats::median(&samples),
+        mean_s: stats::mean(&samples),
+        cv: stats::cv(&samples),
+        trials: samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep() {
+        let m = bench("sleep", BenchCfg { warmup: 0, trials: 5, time_cap_s: 5.0 }, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(m.median_s >= 0.002, "median {}", m.median_s);
+        assert!(m.median_s < 0.05);
+        assert_eq!(m.trials, 5);
+    }
+
+    #[test]
+    fn time_cap_bounds_trials() {
+        let m = bench("slow", BenchCfg { warmup: 0, trials: 1000, time_cap_s: 0.05 }, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        assert!(m.trials < 1000, "cap ignored: {} trials", m.trials);
+        assert!(m.trials >= 3);
+    }
+}

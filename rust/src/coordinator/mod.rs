@@ -1,0 +1,16 @@
+//! L3 coordinator: the deployable training/serving layer over the PJRT
+//! runtime.
+//!
+//! * `data`    — synthetic Markov corpus (the dataset substitute).
+//! * `trainer` — training-run orchestration: seeded init, chunked
+//!   train-step execution, loss/eval tracking, eager-vs-fused convergence
+//!   comparison (paper §5.9).
+//! * `server`  — batched inference serving over the Tier-2 fused-forward
+//!   artifact (batch-or-timeout policy, latency metrics).
+
+pub mod data;
+pub mod server;
+pub mod trainer;
+
+pub use server::{Client, Reply, Server, ServerCfg, ServerMetrics};
+pub use trainer::{StepRecord, Trainer, TrainerCfg};

@@ -1,0 +1,366 @@
+//! Serving coordinator: batched inference over the Tier-2 fused-forward
+//! artifact (`infer_<cfg>_fused`).
+//!
+//! vLLM-router-style shape: clients submit token prompts to a bounded
+//! queue; a batcher thread groups up to `batch` requests within a
+//! `max_wait` window (batch-or-timeout policy), pads them into the fixed
+//! [bs, seq] artifact shape, executes one PJRT call, and fans the
+//! last-position logits back to per-request channels. Metrics record
+//! per-request latency and batch occupancy so the bench harness can sweep
+//! the batching policy.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Engine, Tensor};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerCfg {
+    /// Manifest config name (must have an `infer_<cfg>_fused` artifact).
+    pub config: String,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg { config: "small".into(), max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// One inference request: a prompt, answered with next-token logits.
+struct Request {
+    prompt: Vec<i32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Reply>>,
+}
+
+/// Response: argmax token + its logit + timing.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub next_token: i32,
+    pub logit: f32,
+    pub latency: Duration,
+    /// How many real requests shared the batch.
+    pub batch_occupancy: usize,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerMetrics {
+    pub completed: u64,
+    pub batches: u64,
+    pub latencies_us: Vec<f64>,
+    pub occupancies: Vec<f64>,
+}
+
+impl ServerMetrics {
+    pub fn p50_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.latencies_us, 50.0)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.latencies_us, 95.0)
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        crate::util::stats::mean(&self.occupancies)
+    }
+}
+
+/// Handle for submitting requests; cheap to clone across client threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    seq: usize,
+    vocab: usize,
+}
+
+impl Client {
+    /// Blocking single-shot inference: returns the next-token prediction.
+    pub fn infer(&self, prompt: &[i32]) -> Result<Reply> {
+        if prompt.is_empty() || prompt.len() > self.seq {
+            bail!("prompt length {} outside 1..={}", prompt.len(), self.seq);
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            bail!("token {t} outside vocab 0..{}", self.vocab);
+        }
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { prompt: prompt.to_vec(), enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx.recv().context("server dropped request")?
+    }
+}
+
+/// The running server: owns the batcher thread.
+pub struct Server {
+    client_tx: Sender<Request>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    seq: usize,
+    vocab: usize,
+}
+
+impl Server {
+    /// Start the batcher thread over the given artifacts directory.
+    /// PJRT client types are not Send, so the batcher thread constructs
+    /// its OWN engine from the directory; host tensors (plain data) are
+    /// what crosses the thread boundary.
+    pub fn start(artifacts_dir: &Path, cfg: ServerCfg) -> Result<Server> {
+        // Serving needs model parameters; initialize from seed 0 by
+        // default (callers with a trained adapter use `start_with_params`).
+        let engine = Engine::load(artifacts_dir)?;
+        let info = engine.manifest().config(&cfg.config)?.clone();
+        let outs = engine.run(&format!("init_{}", cfg.config), &[Tensor::scalar_i32(0)])?;
+        let nf = info.frozen.len();
+        Self::start_with_params(artifacts_dir, cfg, outs[..nf].to_vec(), outs[nf..].to_vec())
+    }
+
+    /// Start with explicit parameters (e.g. a Trainer's adapted weights).
+    pub fn start_with_params(
+        artifacts_dir: &Path,
+        cfg: ServerCfg,
+        frozen: Vec<Tensor>,
+        trainable: Vec<Tensor>,
+    ) -> Result<Server> {
+        // Validate config + shapes up front, on a throwaway engine, so
+        // startup errors surface synchronously.
+        let probe = Engine::load(artifacts_dir)?;
+        let info = probe.manifest().config(&cfg.config)?.clone();
+        if frozen.len() != info.frozen.len() || trainable.len() != info.trainable.len() {
+            bail!(
+                "param count mismatch: got {}+{}, config wants {}+{}",
+                frozen.len(),
+                trainable.len(),
+                info.frozen.len(),
+                info.trainable.len()
+            );
+        }
+        drop(probe);
+        let artifact = format!("infer_{}_fused", cfg.config);
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+
+        let bs = info.train_batch;
+        let seq = info.seq;
+        let vocab = info.vocab;
+        let stop2 = stop.clone();
+        let metrics2 = metrics.clone();
+        let max_wait = cfg.max_wait;
+        let dir: PathBuf = artifacts_dir.to_path_buf();
+
+        let join = std::thread::spawn(move || {
+            let engine = match Engine::load(&dir) {
+                Ok(e) => e,
+                Err(_) => return, // start() already validated; unreachable
+            };
+            if engine.executable(&artifact).is_err() {
+                return;
+            }
+            batcher_loop(
+                engine, artifact, frozen, trainable, rx, stop2, metrics2, bs, seq, vocab, max_wait,
+            );
+        });
+
+        Ok(Server { client_tx: tx, stop, metrics, join: Some(join), seq, vocab })
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.client_tx.clone(), seq: self.seq, vocab: self.vocab }
+    }
+
+    pub fn metrics(&self) -> ServerMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop the batcher and join.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        let m = self.metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batcher_loop(
+    engine: Engine,
+    artifact: String,
+    frozen: Vec<Tensor>,
+    trainable: Vec<Tensor>,
+    rx: Receiver<Request>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    bs: usize,
+    seq: usize,
+    vocab: usize,
+    max_wait: Duration,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        // Collect up to `bs` requests, waiting at most `max_wait` after
+        // the first arrival (batch-or-timeout).
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < bs {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pad into the fixed [bs, seq] shape: left-pad each prompt with
+        // token 0, unused rows are zeros (their outputs are discarded).
+        let mut tokens = vec![0i32; bs * seq];
+        for (row, req) in batch.iter().enumerate() {
+            let p = &req.prompt;
+            let start = seq - p.len();
+            tokens[row * seq + start..(row + 1) * seq].copy_from_slice(p);
+        }
+
+        let mut inputs: Vec<Tensor> = Vec::new();
+        inputs.extend(frozen.iter().cloned());
+        inputs.extend(trainable.iter().cloned());
+        inputs.push(Tensor::i32(vec![bs, seq], tokens));
+
+        let occupancy = batch.len();
+        let result = engine.run(&artifact, &inputs);
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        match result {
+            Ok(outs) => {
+                let logits = outs[0].as_f32().unwrap_or(&[]);
+                for (row, req) in batch.into_iter().enumerate() {
+                    let row_logits = &logits[row * vocab..(row + 1) * vocab];
+                    let (next, &logit) = row_logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, v)| (i as i32, v))
+                        .unwrap_or((0, &0.0));
+                    let latency = req.enqueued.elapsed();
+                    m.completed += 1;
+                    m.latencies_us.push(latency.as_secs_f64() * 1e6);
+                    m.occupancies.push(occupancy as f64);
+                    let _ = req.reply.send(Ok(Reply {
+                        next_token: next,
+                        logit,
+                        latency,
+                        batch_occupancy: occupancy,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_dir;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = default_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn tiny_cfg() -> ServerCfg {
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) }
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let Some(dir) = artifacts() else { return };
+        let server = Server::start(&dir, tiny_cfg()).unwrap();
+        let client = server.client();
+        let reply = client.infer(&[1, 2, 3, 4]).unwrap();
+        assert!(reply.next_token >= 0);
+        assert!(reply.logit.is_finite());
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.batches, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let Some(dir) = artifacts() else { return };
+        let server = Server::start(
+            &dir,
+            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(100) },
+        )
+        .unwrap();
+        let client = server.client();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || c.infer(&[i as i32 + 1, 2, 3]).unwrap())
+            })
+            .collect();
+        let replies: Vec<Reply> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 4);
+        // With a 100 ms window and 4 concurrent clients, batching should
+        // pack more than one request per executable call.
+        assert!(m.batches < 4, "batches {}", m.batches);
+        assert!(replies.iter().any(|r| r.batch_occupancy > 1));
+    }
+
+    #[test]
+    fn rejects_invalid_prompts() {
+        let Some(dir) = artifacts() else { return };
+        let server = Server::start(&dir, tiny_cfg()).unwrap();
+        let client = server.client();
+        assert!(client.infer(&[]).is_err());
+        assert!(client.infer(&vec![0; 10_000]).is_err());
+        assert!(client.infer(&[-1]).is_err());
+        assert!(client.infer(&[1_000_000]).is_err());
+        drop(server);
+    }
+
+    #[test]
+    fn deterministic_given_params() {
+        let Some(dir) = artifacts() else { return };
+        let server = Server::start(&dir, tiny_cfg()).unwrap();
+        let client = server.client();
+        let a = client.infer(&[5, 6, 7]).unwrap();
+        let b = client.infer(&[5, 6, 7]).unwrap();
+        assert_eq!(a.next_token, b.next_token);
+        drop(server);
+    }
+}

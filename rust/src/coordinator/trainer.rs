@@ -1,0 +1,300 @@
+//! Training coordinator: drives the AOT `train_<cfg>_<variant>` artifact
+//! from Rust — parameter lifecycle, data feeding, loss/eval logging.
+//!
+//! Python never runs here. The coordinator:
+//!
+//! 1. runs the `init_<cfg>` artifact once (seeded, in-graph init) to get
+//!    the frozen + trainable leaves;
+//! 2. materializes AdamW state as zeros host-side;
+//! 3. repeatedly packs `chunk_steps` optimizer steps worth of Markov
+//!    corpus into one `train` call — the scan-over-steps artifact — so
+//!    the host round-trip amortizes over the chunk;
+//! 4. tracks per-step losses, periodic eval losses, and wall time.
+//!
+//! The convergence experiment (paper §5.9, Table 10 / Figure 12) runs two
+//! `Trainer`s (eager + fused variants) from the same seed and data stream
+//! and compares their loss trajectories.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::data::MarkovCorpus;
+use crate::runtime::{ConfigInfo, Engine, Tensor};
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerCfg {
+    /// Manifest config name: "tiny" | "small" | "e2e".
+    pub config: String,
+    /// Variant: "eager" | "fused".
+    pub variant: String,
+    /// Parameter-init + data seed.
+    pub seed: u64,
+    /// Markov branching factor (corpus difficulty).
+    pub branching: usize,
+    /// Evaluate every N steps (0 = never).
+    pub eval_every: usize,
+}
+
+impl Default for TrainerCfg {
+    fn default() -> Self {
+        TrainerCfg {
+            config: "small".into(),
+            variant: "fused".into(),
+            seed: 0,
+            branching: 4,
+            eval_every: 0,
+        }
+    }
+}
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+}
+
+/// Training run state + history.
+pub struct Trainer {
+    engine: Engine,
+    cfg: TrainerCfg,
+    info: ConfigInfo,
+    corpus: MarkovCorpus,
+    /// Frozen leaves (constant across steps).
+    frozen: Vec<Tensor>,
+    /// Trainable leaves + AdamW moments.
+    trainable: Vec<Tensor>,
+    m1: Vec<Tensor>,
+    m2: Vec<Tensor>,
+    step: i32,
+    pub history: Vec<StepRecord>,
+    pub eval_history: Vec<StepRecord>,
+    pub wall_seconds: f64,
+    /// Held-out eval block, fixed at construction.
+    eval_tokens: Tensor,
+}
+
+impl Trainer {
+    /// Initialize from the AOT init artifact.
+    pub fn new(engine: Engine, cfg: TrainerCfg) -> Result<Trainer> {
+        let info = engine.manifest().config(&cfg.config)?.clone();
+        if !["eager", "fused"].contains(&cfg.variant.as_str()) {
+            bail!("variant must be eager|fused, got {:?}", cfg.variant);
+        }
+        let init_name = format!("init_{}", cfg.config);
+        let outs = engine
+            .run(&init_name, &[Tensor::scalar_i32(cfg.seed as i32)])
+            .with_context(|| format!("running {init_name}"))?;
+        let nf = info.frozen.len();
+        let nt = info.trainable.len();
+        if outs.len() != nf + nt {
+            bail!("init returned {} leaves, expected {}", outs.len(), nf + nt);
+        }
+        let frozen = outs[..nf].to_vec();
+        let trainable = outs[nf..].to_vec();
+        let zeros = |ts: &[Tensor]| -> Vec<Tensor> {
+            ts.iter()
+                .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.elems()]))
+                .collect()
+        };
+        let m1 = zeros(&trainable);
+        let m2 = zeros(&trainable);
+        // Data stream: seeded identically across variants so eager/fused
+        // see the same batches (the §5.9 controlled setup).
+        let mut corpus = MarkovCorpus::new(info.vocab, cfg.branching, cfg.seed ^ 0xDA7A);
+        let eval_bs = info.train_batch;
+        let eval_tokens = Tensor::i32(
+            vec![eval_bs, info.seq + 1],
+            corpus.block(1, eval_bs, info.seq + 1),
+        );
+        Ok(Trainer {
+            engine,
+            cfg,
+            info,
+            corpus,
+            frozen,
+            trainable,
+            m1,
+            m2,
+            step: 0,
+            history: Vec::new(),
+            eval_history: Vec::new(),
+            wall_seconds: 0.0,
+            eval_tokens,
+        })
+    }
+
+    pub fn config_info(&self) -> &ConfigInfo {
+        &self.info
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step as usize
+    }
+
+    /// Borrow the current trainable leaves (for the serving handoff).
+    pub fn trainable(&self) -> &[Tensor] {
+        &self.trainable
+    }
+
+    pub fn frozen(&self) -> &[Tensor] {
+        &self.frozen
+    }
+
+    fn train_artifact(&self) -> String {
+        format!("train_{}_{}", self.cfg.config, self.cfg.variant)
+    }
+
+    /// Run one chunk (`chunk_steps` optimizer steps in-graph).
+    pub fn run_chunk(&mut self) -> Result<&[StepRecord]> {
+        let k = self.info.chunk_steps;
+        let bs = self.info.train_batch;
+        let seq1 = self.info.seq + 1;
+        let tokens = Tensor::i32(vec![k, bs, seq1], self.corpus.block(k, bs, seq1));
+
+        let mut inputs = Vec::with_capacity(
+            self.frozen.len() + 3 * self.trainable.len() + 2,
+        );
+        inputs.extend(self.frozen.iter().cloned());
+        inputs.extend(self.trainable.iter().cloned());
+        inputs.extend(self.m1.iter().cloned());
+        inputs.extend(self.m2.iter().cloned());
+        inputs.push(Tensor::scalar_i32(self.step));
+        inputs.push(tokens);
+
+        let t0 = Instant::now();
+        let outs = self.engine.run(&self.train_artifact(), &inputs)?;
+        self.wall_seconds += t0.elapsed().as_secs_f64();
+
+        let nt = self.trainable.len();
+        self.trainable = outs[..nt].to_vec();
+        self.m1 = outs[nt..2 * nt].to_vec();
+        self.m2 = outs[2 * nt..3 * nt].to_vec();
+        self.step = outs[3 * nt].as_i32()?[0];
+        let losses = outs[3 * nt + 1].as_f32()?;
+
+        let first = self.history.len();
+        let base_step = self.step as usize - losses.len();
+        for (i, &loss) in losses.iter().enumerate() {
+            self.history.push(StepRecord { step: base_step + i + 1, loss });
+        }
+        if self.cfg.eval_every > 0 && self.step as usize % self.cfg.eval_every == 0 {
+            let loss = self.eval()?;
+            self.eval_history.push(StepRecord { step: self.step as usize, loss });
+        }
+        Ok(&self.history[first..])
+    }
+
+    /// Train until at least `steps` optimizer steps have run.
+    pub fn train_steps(&mut self, steps: usize) -> Result<()> {
+        while (self.step as usize) < steps {
+            self.run_chunk()?;
+        }
+        Ok(())
+    }
+
+    /// Held-out eval loss via the eval artifact.
+    pub fn eval(&self) -> Result<f32> {
+        let name = format!("eval_{}_{}", self.cfg.config, self.cfg.variant);
+        let mut inputs: Vec<Tensor> = Vec::new();
+        inputs.extend(self.frozen.iter().cloned());
+        inputs.extend(self.trainable.iter().cloned());
+        inputs.push(self.eval_tokens.clone());
+        let outs = self.engine.run(&name, &inputs)?;
+        outs[0].scalar_f32()
+    }
+
+    /// Mean |Δloss| between two runs' histories (Table 10's metric).
+    pub fn loss_delta(a: &Trainer, b: &Trainer) -> (f64, f64) {
+        let n = a.history.len().min(b.history.len());
+        let mut sum = 0.0f64;
+        let mut max = 0.0f64;
+        for i in 0..n {
+            let d = (a.history[i].loss as f64 - b.history[i].loss as f64).abs();
+            sum += d;
+            max = max.max(d);
+        }
+        (sum / n.max(1) as f64, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Engine::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    fn tiny(variant: &str, seed: u64) -> TrainerCfg {
+        TrainerCfg {
+            config: "tiny".into(),
+            variant: variant.into(),
+            seed,
+            branching: 3,
+            eval_every: 0,
+        }
+    }
+
+    #[test]
+    fn init_and_one_chunk() {
+        let Some(eng) = engine() else { return };
+        let mut tr = Trainer::new(eng, tiny("eager", 1)).unwrap();
+        let recs = tr.run_chunk().unwrap().to_vec();
+        assert_eq!(recs.len(), tr.config_info().chunk_steps);
+        assert!(recs.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+        assert_eq!(tr.step_count(), tr.config_info().chunk_steps);
+    }
+
+    #[test]
+    fn loss_decreases_over_chunks() {
+        let Some(eng) = engine() else { return };
+        let mut tr = Trainer::new(eng, tiny("eager", 2)).unwrap();
+        tr.train_steps(16).unwrap();
+        let first = tr.history.first().unwrap().loss;
+        let last_avg: f32 = tr.history.iter().rev().take(4).map(|r| r.loss).sum::<f32>() / 4.0;
+        assert!(
+            last_avg < first,
+            "no learning: first {first}, last-4 avg {last_avg}"
+        );
+    }
+
+    #[test]
+    fn eager_fused_convergence_equivalence_tiny() {
+        // Table 10 in miniature: same seed + data, two numeric paths.
+        let Some(eng) = engine() else { return };
+        let mut a = Trainer::new(eng.clone(), tiny("eager", 3)).unwrap();
+        let mut b = Trainer::new(eng, tiny("fused", 3)).unwrap();
+        a.train_steps(8).unwrap();
+        b.train_steps(8).unwrap();
+        let (mean, max) = Trainer::loss_delta(&a, &b);
+        assert!(mean < 1e-4, "mean |dloss| {mean}");
+        assert!(max < 1e-3, "max |dloss| {max}");
+    }
+
+    #[test]
+    fn seeds_produce_different_runs() {
+        let Some(eng) = engine() else { return };
+        let mut a = Trainer::new(eng.clone(), tiny("eager", 4)).unwrap();
+        let mut b = Trainer::new(eng, tiny("eager", 5)).unwrap();
+        a.run_chunk().unwrap();
+        b.run_chunk().unwrap();
+        assert_ne!(a.history[0].loss, b.history[0].loss);
+    }
+
+    #[test]
+    fn eval_runs() {
+        let Some(eng) = engine() else { return };
+        let tr = Trainer::new(eng, tiny("fused", 6)).unwrap();
+        let loss = tr.eval().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! The four configurations compared throughout the paper (§1):
+//!
+//! | Config    | Norm              | Compose                  |
+//! |-----------|-------------------|--------------------------|
+//! | `Peft`    | identity-matrix   | 4-kernel eager chain     |
+//! | `DenseBA` | direct B@A, dense | 4-kernel eager chain     |
+//! | `Eager`   | factored (ours)   | eager chain, stable form |
+//! | `Fused`   | factored (ours)   | single fused kernel      |
+
+use std::fmt;
+
+/// One of the paper's four benchmark configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Config {
+    Peft,
+    DenseBA,
+    Eager,
+    Fused,
+}
+
+pub const ALL_CONFIGS: [Config; 4] = [Config::Peft, Config::DenseBA, Config::Eager, Config::Fused];
+
+impl Config {
+    /// Display name matching the paper's tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Config::Peft => "PEFT",
+            Config::DenseBA => "Dense (B@A)",
+            Config::Eager => "Eager",
+            Config::Fused => "Fused",
+        }
+    }
+
+    /// Does this configuration materialize the dense [d_out, d_in] product
+    /// for the weight norm?
+    pub fn dense_norm(self) -> bool {
+        matches!(self, Config::Peft | Config::DenseBA)
+    }
+
+    /// Does this configuration use the single-pass fused compose kernel?
+    pub fn fused_compose(self) -> bool {
+        matches!(self, Config::Fused)
+    }
+
+    pub fn parse(s: &str) -> Option<Config> {
+        match s.to_lowercase().replace(['(', ')', '@', ' ', '-', '_'], "").as_str() {
+            "peft" => Some(Config::Peft),
+            "denseba" | "dense" => Some(Config::DenseBA),
+            "eager" => Some(Config::Eager),
+            "fused" => Some(Config::Fused),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shape of one adapted projection's weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModuleShape {
+    pub d_out: usize,
+    pub d_in: usize,
+    pub rank: usize,
+}
+
+impl ModuleShape {
+    pub fn new(d_out: usize, d_in: usize, rank: usize) -> Self {
+        ModuleShape { d_out, d_in, rank }
+    }
+
+    /// Elements of the dense composed weight (the thing the factored norm
+    /// never materializes).
+    pub fn dense_elems(&self) -> usize {
+        self.d_out * self.d_in
+    }
+
+    /// Elements of the rank-dependent intermediates U[d_out, r] + G[r, r]
+    /// (paper Table 1).
+    pub fn factored_elems(&self) -> usize {
+        self.d_out * self.rank + self.rank * self.rank
+    }
+
+    /// Table 1/7's "theoretical reduction": dense / (U + G), both fp32.
+    pub fn theoretical_reduction(&self) -> f64 {
+        self.dense_elems() as f64 / self.factored_elems() as f64
+    }
+}
+
+/// Shape of one compose invocation's activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ActShape {
+    /// batch * seq (collapsed leading dims).
+    pub rows: usize,
+    pub d_out: usize,
+}
+
+impl ActShape {
+    pub fn new(rows: usize, d_out: usize) -> Self {
+        ActShape { rows, d_out }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.rows * self.d_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for c in ALL_CONFIGS {
+            assert_eq!(Config::parse(c.name()), Some(c));
+        }
+        assert_eq!(Config::parse("dense (b@a)"), Some(Config::DenseBA));
+        assert_eq!(Config::parse("unknown"), None);
+    }
+
+    #[test]
+    fn norm_classification() {
+        assert!(Config::Peft.dense_norm());
+        assert!(Config::DenseBA.dense_norm());
+        assert!(!Config::Eager.dense_norm());
+        assert!(!Config::Fused.dense_norm());
+        assert!(Config::Fused.fused_compose());
+        assert!(!Config::Eager.fused_compose());
+    }
+
+    #[test]
+    fn table1_theoretical_reduction() {
+        // Paper Table 1: d=8192, r=512 -> 15.1x.
+        let s = ModuleShape::new(8192, 8192, 512);
+        let red = s.theoretical_reduction();
+        assert!((red - 15.1).abs() < 0.2, "got {red}");
+        // Table 7 spot checks.
+        assert!((ModuleShape::new(4096, 4096, 64).theoretical_reduction() - 63.0).abs() < 1.5);
+        assert!((ModuleShape::new(8192, 28672, 384).theoretical_reduction() - 71.3).abs() < 1.5);
+    }
+}

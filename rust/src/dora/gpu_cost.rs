@@ -1,0 +1,339 @@
+//! GPU-time cost of every DoRA operation, per configuration — the engine
+//! behind the microbenchmark figures (6, 7, 8, 10) and the model-level
+//! tables (4, 5, 6).
+//!
+//! Conventions (matching the paper's accounting):
+//!
+//! * Compose traffic is counted in *useful* bytes — the fused kernel's
+//!   3 reads + 1 write — and each path's achieved bandwidth fraction
+//!   absorbs its inefficiency (Figure 7 plots exactly this quantity, with
+//!   "eager values are approximate lower bounds").
+//! * The eager compose chain is 4 element-wise kernel launches plus the
+//!   producer-consumer traffic; the fused kernel is a single launch.
+//! * The fused *backward* writes two outputs (3 useful passes) with a
+//!   dual-output efficiency penalty and a fixed custom-op overhead; the
+//!   eager backward is 2 kernels of 2 passes each. This reproduces the
+//!   paper's Figure-8 crossover: fused trails eager below ~2048x6144 and
+//!   wins above ~8192x8192.
+
+use crate::dora::config::{ActShape, Config, ModuleShape};
+use crate::gpusim::device::Device;
+use crate::gpusim::kernel::{self, BwClass, KernelCost};
+use crate::numerics::Dtype;
+
+/// Number of launches in the eager compose chain: t1 = s*lora,
+/// t2 = g*t1, t3 = (g-1)*base, delta = t3 + t2 (paper §3.1: "four
+/// sequential element-wise operations, each launching a separate kernel").
+pub const EAGER_COMPOSE_LAUNCHES: u32 = 4;
+
+/// Dual-output efficiency penalty for the fused backward (writing two
+/// tensors halves per-output coalescing headroom; the Triton kernel
+/// compensates with ROWS_PER_PROGRAM but still lands below the forward's
+/// fraction — §3.2).
+const FUSED_BWD_EFF: f64 = 0.72;
+
+/// Eager backward chains only 2 kernels, so its cache behaviour is
+/// better than the 4-kernel forward chain.
+const EAGER_BWD_BOOST: f64 = 2.0;
+
+/// Fixed overhead of the fused backward path (custom-op dispatch,
+/// autograd bookkeeping) — the source of the sub-crossover losses.
+const FUSED_BWD_OVERHEAD: f64 = 6.0e-6;
+
+// ---------------------------------------------------------------------------
+// Compose kernels (Figures 6, 7, 8).
+// ---------------------------------------------------------------------------
+
+/// Useful bytes of one compose: read base, lora (rows x d_out), g (d_out),
+/// write delta.
+fn compose_useful_bytes(act: ActShape, dt: Dtype) -> u64 {
+    ((3 * act.elems() + act.d_out) * dt.size()) as u64
+}
+
+/// Forward compose cost.
+pub fn compose_forward(dev: &Device, act: ActShape, dt: Dtype, fused: bool) -> KernelCost {
+    let bytes = compose_useful_bytes(act, dt);
+    if fused {
+        kernel::stream(dev, bytes, BwClass::Fused)
+    } else {
+        let mut c = kernel::stream(dev, bytes, BwClass::EagerChain);
+        // 4 launches instead of 1.
+        c.time += dev.launch_latency * (EAGER_COMPOSE_LAUNCHES - 1) as f64;
+        c.launches = EAGER_COMPOSE_LAUNCHES;
+        c
+    }
+}
+
+/// Tier-1 dual-output forward (delta + inner): one extra write.
+pub fn compose_forward_dual(dev: &Device, act: ActShape, dt: Dtype) -> KernelCost {
+    let bytes = ((4 * act.elems() + act.d_out) * dt.size()) as u64;
+    let mut c = kernel::stream(dev, bytes, BwClass::Fused);
+    c.time /= FUSED_BWD_EFF; // dual-output penalty
+    c
+}
+
+/// Backward compose cost: d_lora and d_base from d_delta.
+pub fn compose_backward(dev: &Device, act: ActShape, dt: Dtype, fused: bool) -> KernelCost {
+    let elems = act.elems();
+    if fused {
+        // One kernel: read d (1), write d_lora + d_base (2).
+        let bytes = ((3 * elems + act.d_out) * dt.size()) as u64;
+        let bw = dev.fused_bw_frac * FUSED_BWD_EFF * dev.peak_bw;
+        KernelCost {
+            time: dev.launch_latency + FUSED_BWD_OVERHEAD + bytes as f64 / bw,
+            bytes,
+            flops: 0.0,
+            launches: 1,
+        }
+    } else {
+        // Two kernels, each read d + write out. The 2-op chain thrashes
+        // less than the 4-op forward chain (boost), converging to the
+        // fused fraction when the working set is L2-resident.
+        let bytes = ((4 * elems + 2 * act.d_out) * dt.size()) as u64;
+        let resid = (-(bytes as f64) / dev.l2_bytes).exp();
+        let big = (dev.eager_bw_frac * EAGER_BWD_BOOST).min(dev.fused_bw_frac * 0.95);
+        let frac = big + (dev.fused_bw_frac - big) * resid;
+        KernelCost {
+            time: 2.0 * dev.launch_latency + bytes as f64 / (frac * dev.peak_bw),
+            bytes,
+            flops: 0.0,
+            launches: 2,
+        }
+    }
+}
+
+/// The d_mag reduction (sum of d_delta * inner over rows), shared by both
+/// paths ("d_mag via PyTorch reduction", §3.2).
+pub fn dmag_reduction(dev: &Device, act: ActShape, dt: Dtype) -> KernelCost {
+    kernel::reduction(dev, 2 * act.elems(), act.d_out, dt.size())
+}
+
+// ---------------------------------------------------------------------------
+// Weight-norm engines (Figure 10, Tables 1/7 timing side).
+// ---------------------------------------------------------------------------
+
+/// Norm computation cost for a module under the given configuration.
+/// fp32 accumulation throughout (elt = 4) for the factored path; the dense
+/// baselines run in the storage dtype then accumulate in fp32.
+pub fn weight_norm(dev: &Device, m: ModuleShape, dt: Dtype, config: Config) -> KernelCost {
+    let ModuleShape { d_out, d_in, rank: r } = m;
+    match config {
+        Config::Peft => {
+            // x_eye = eye(d_in): one write of d_in^2.
+            let eye = kernel::elementwise(dev, d_in * d_in, 0, 1, dt.size(), BwClass::EagerChain);
+            // lora_A(x_eye): [d_in, d_in] @ [d_in, r]
+            let mm1 = kernel::matmul(dev, d_in, r, d_in, dt.size());
+            // lora_B(.): [d_in, r] @ [r, d_out]
+            let mm2 = kernel::matmul(dev, d_in, d_out, r, dt.size());
+            // composed = W + s * lora_weight: 2 reads + 1 write (plus the
+            // scaling temp — part of the eager chain class).
+            let comp = kernel::elementwise(dev, d_out * d_in, 2, 1, dt.size(), BwClass::EagerChain);
+            // row norm: read composed once.
+            let norm = kernel::reduction(dev, d_out * d_in, d_out, dt.size());
+            kernel::total(&[eye, mm1, mm2, comp, norm])
+        }
+        Config::DenseBA => {
+            // B @ A: [d_out, r] @ [r, d_in].
+            let mm = kernel::matmul(dev, d_out, d_in, r, dt.size());
+            let comp = kernel::elementwise(dev, d_out * d_in, 2, 1, dt.size(), BwClass::EagerChain);
+            let norm = kernel::reduction(dev, d_out * d_in, d_out, dt.size());
+            kernel::total(&[mm, comp, norm])
+        }
+        Config::Eager => {
+            // Algorithm 1 in chunked eager ops (fp32 accumulation):
+            // base_sq: read W once (fp32 copies of chunks), square+reduce.
+            let base_sq = kernel::reduction(dev, d_out * d_in, d_out, 4);
+            // U = W A^T chunks: flops 2*d_out*d_in*r, W read again.
+            let u = kernel::matmul(dev, d_out, r, d_in, 4);
+            // G = A A^T: 2*r^2*d_in.
+            let g = kernel::matmul(dev, r, r, d_in, 4);
+            // cross = sum(B * U): small. ba_sq = (B G * B): small.
+            let cross = kernel::elementwise(dev, d_out * r, 2, 0, 4, BwClass::EagerChain);
+            let bg = kernel::matmul(dev, d_out, r, r, 4);
+            let assembly = kernel::elementwise(dev, d_out, 3, 1, 4, BwClass::EagerChain);
+            kernel::total(&[base_sq, u, g, cross, bg, assembly])
+        }
+        Config::Fused => {
+            // Pallas chunk kernel: W read ONCE, all three terms in-pass.
+            // The dominant contraction is U = W A^T — same shape (and
+            // therefore same MXU/TensorCore efficiency curve) as the eager
+            // path's matmul, but with the base_sq pass and the A-read
+            // folded into it, and no separate cross/elementwise launches.
+            let u = kernel::matmul(dev, d_out, r, d_in, 4);
+            let g = kernel::matmul(dev, r, r, d_in, 4);
+            let chunk = KernelCost {
+                time: u.time.max(g.time) + dev.launch_latency,
+                bytes: u.bytes + (2 * d_out * r * 4) as u64,
+                flops: u.flops + g.flops,
+                launches: 1,
+            };
+            // BG matmul + fused assembly kernel.
+            let bg = kernel::matmul(dev, d_out, r, r, 4);
+            let assembly = kernel::stream(dev, (4 * d_out * 4) as u64, BwClass::Fused);
+            kernel::total(&[chunk, bg, assembly])
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-module costs (single-layer E2E, Figures 13-15; model-level §5.2).
+// ---------------------------------------------------------------------------
+
+/// Cost of the LoRA-path matmuls: (x @ A^T) [rows, r] then (. @ B^T)
+/// [rows, d_out].
+pub fn lora_matmuls(dev: &Device, m: ModuleShape, rows: usize, dt: Dtype) -> KernelCost {
+    let a = kernel::matmul(dev, rows, m.rank, m.d_in, dt.size());
+    let b = kernel::matmul(dev, rows, m.d_out, m.rank, dt.size());
+    a.add(b)
+}
+
+/// Cost of the frozen base matmul x @ W^T.
+pub fn base_matmul(dev: &Device, m: ModuleShape, rows: usize, dt: Dtype) -> KernelCost {
+    kernel::matmul(dev, rows, m.d_out, m.d_in, dt.size())
+}
+
+/// Full forward cost of one adapted module under `config`.
+pub fn module_forward(
+    dev: &Device,
+    m: ModuleShape,
+    rows: usize,
+    dt: Dtype,
+    config: Config,
+) -> KernelCost {
+    let act = ActShape::new(rows, m.d_out);
+    let norm = weight_norm(dev, m, dt, config);
+    let base = base_matmul(dev, m, rows, dt);
+    let lora = lora_matmuls(dev, m, rows, dt);
+    let compose = compose_forward(dev, act, dt, config.fused_compose());
+    // magnitude division: [d_out] elementwise, negligible but counted.
+    let div = kernel::elementwise(dev, m.d_out, 2, 1, 4, BwClass::EagerChain);
+    kernel::total(&[norm, base, lora, compose, div])
+}
+
+/// Full backward cost of one adapted module (d_x, d_A, d_B, d_m), with
+/// gradient checkpointing recomputation of the forward included (the
+/// paper's model benchmarks all run with checkpointing).
+pub fn module_backward(
+    dev: &Device,
+    m: ModuleShape,
+    rows: usize,
+    dt: Dtype,
+    config: Config,
+) -> KernelCost {
+    let act = ActShape::new(rows, m.d_out);
+    // Checkpoint recompute: the forward runs again (including the norm).
+    let recompute = module_forward(dev, m, rows, dt, config);
+    // Compose backward.
+    let cbwd = compose_backward(dev, act, dt, config.fused_compose());
+    let dmag = dmag_reduction(dev, act, dt);
+    // Matmul gradients: d_lora -> dB [d_out, r] and d(xa) [rows, r] -> dA;
+    // base path dW skipped (frozen) but d_x needs W: [rows, d_out] @ W.
+    let d_b = kernel::matmul(dev, m.d_out, m.rank, rows, dt.size());
+    let d_xa = kernel::matmul(dev, rows, m.rank, m.d_out, dt.size());
+    let d_a = kernel::matmul(dev, m.rank, m.d_in, rows, dt.size());
+    let d_x_lora = kernel::matmul(dev, rows, m.d_in, m.rank, dt.size());
+    let d_x_base = kernel::matmul(dev, rows, m.d_in, m.d_out, dt.size());
+    kernel::total(&[recompute, cbwd, dmag, d_b, d_xa, d_a, d_x_lora, d_x_base])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::find;
+
+    const BF16: Dtype = Dtype::Bf16;
+
+    #[test]
+    fn fused_compose_faster_at_large_shapes() {
+        let dev = find("b200").unwrap();
+        let act = ActShape::new(8192, 8192);
+        let e = compose_forward(dev, act, BF16, false).time;
+        let f = compose_forward(dev, act, BF16, true).time;
+        let speedup = e / f;
+        // Paper Figure 6: B200 reaches 3-4.5x at the largest shapes.
+        assert!(speedup > 2.5 && speedup < 5.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn compose_speedup_ordering_follows_bandwidth_class() {
+        // B200's eager path is most launch/thrash-bound -> largest gain.
+        let act = ActShape::new(8192, 8192);
+        let s = |n: &str| {
+            let d = find(n).unwrap();
+            compose_forward(d, act, BF16, false).time / compose_forward(d, act, BF16, true).time
+        };
+        assert!(s("b200") > s("h200"), "b200 {} h200 {}", s("b200"), s("h200"));
+        assert!(s("h200") > s("l40s"), "h200 {} l40s {}", s("h200"), s("l40s"));
+    }
+
+    #[test]
+    fn backward_crossover_exists() {
+        let dev = find("h200").unwrap();
+        // Small activation: fused trails (launch/overhead bound).
+        let small = ActShape::new(512, 1024);
+        let e_s = compose_backward(dev, small, BF16, false).time;
+        let f_s = compose_backward(dev, small, BF16, true).time;
+        assert!(f_s > 0.85 * e_s, "fused should not dominate tiny shapes");
+        // Large activation: fused wins.
+        let large = ActShape::new(16384, 8192);
+        let e_l = compose_backward(dev, large, BF16, false).time;
+        let f_l = compose_backward(dev, large, BF16, true).time;
+        assert!(e_l / f_l > 1.1, "large-shape bwd speedup {}", e_l / f_l);
+    }
+
+    #[test]
+    fn peft_norm_time_constant_in_rank_factored_linear() {
+        // Figure 10's shape: PEFT flat in r, factored ~linear in r.
+        let dev = find("rtx").unwrap();
+        let t = |cfg: Config, r: usize| {
+            weight_norm(dev, ModuleShape::new(8192, 8192, r), Dtype::F32, cfg).time
+        };
+        let p16 = t(Config::Peft, 16);
+        let p768 = t(Config::Peft, 768);
+        assert!(p768 / p16 < 1.6, "PEFT should be ~flat in r: {}", p768 / p16);
+        // Factored time grows with r (the U/G contractions), on top of a
+        // rank-independent floor (the two W read passes) — Figure 10's
+        // linear-plus-offset trace.
+        let ranks = [64, 128, 256, 384, 512, 768];
+        let times: Vec<f64> = ranks.iter().map(|&r| t(Config::Eager, r)).collect();
+        assert!(times.windows(2).all(|w| w[1] > w[0]), "not monotone: {times:?}");
+        let factored_growth = times[5] / times[0];
+        let peft_growth = t(Config::Peft, 768) / t(Config::Peft, 64);
+        assert!(factored_growth > 1.25, "factored should scale with r: {factored_growth}");
+        assert!(
+            factored_growth > peft_growth,
+            "factored growth {factored_growth} should exceed PEFT growth {peft_growth}"
+        );
+    }
+
+    #[test]
+    fn factored_matches_peft_at_low_rank_on_rtx() {
+        // Figure 10: at r <= 128 factored matches/beats the reference on
+        // the bandwidth-constrained RTX 6000 PRO.
+        let dev = find("rtx").unwrap();
+        let m = ModuleShape::new(8192, 8192, 128);
+        let peft = weight_norm(dev, m, Dtype::F32, Config::Peft).time;
+        let fact = weight_norm(dev, m, Dtype::F32, Config::Eager).time;
+        assert!(fact <= peft * 1.1, "factored {fact} vs peft {peft}");
+    }
+
+    #[test]
+    fn fused_norm_cheaper_than_eager_norm() {
+        let dev = find("h200").unwrap();
+        let m = ModuleShape::new(4096, 4096, 384);
+        let e = weight_norm(dev, m, BF16, Config::Eager).time;
+        let f = weight_norm(dev, m, BF16, Config::Fused).time;
+        assert!(f < e, "fused {f} eager {e}");
+    }
+
+    #[test]
+    fn module_forward_ordering() {
+        // Whole-module: Fused <= Eager <= DenseBA <= Peft on every device.
+        let m = ModuleShape::new(4096, 4096, 384);
+        for dev in crate::gpusim::device::DEVICES.iter() {
+            let t = |c| module_forward(dev, m, 4096, BF16, c).time;
+            assert!(t(Config::Fused) <= t(Config::Eager) * 1.001, "{}", dev.name);
+            assert!(t(Config::Eager) <= t(Config::Peft), "{}", dev.name);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The DoRA engine: the paper's four configurations as
+//!
+//! * real CPU kernels (`compose_cpu`, `norm_cpu`) — measurable
+//!   implementations with exact allocation accounting;
+//! * GPU cost plans (`gpu_cost`) — per-operation traffic/time models on
+//!   the simulated testbed;
+//! * allocation event streams (`mem_events`) — replayed through `memsim`
+//!   for the memory tables.
+
+pub mod compose_cpu;
+pub mod config;
+pub mod gpu_cost;
+pub mod mem_events;
+pub mod model_plan;
+pub mod norm_cpu;
+pub mod sharded_norm;
+
+pub use config::{ActShape, Config, ModuleShape, ALL_CONFIGS};

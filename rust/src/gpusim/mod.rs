@@ -1,0 +1,13 @@
+//! GPU cost-model simulator.
+//!
+//! Substitutes for the paper's six-GPU NVIDIA testbed (DESIGN.md §1):
+//! devices carry peak bandwidth + achieved-fraction calibration from the
+//! paper's own Figure-7 measurements, and kernels are timed as byte/FLOP
+//! streams. The paper's speedup tables then *follow from traffic ratios*,
+//! which is exactly the causal story the paper tells.
+
+pub mod device;
+pub mod kernel;
+
+pub use device::{Device, DEVICES};
+pub use kernel::KernelCost;

@@ -1,0 +1,25 @@
+//! dorafactors: factored norms and fused kernels for high-rank DoRA.
+//!
+//! Reproduction of "Scaling DoRA: High-Rank Adaptation via Factored Norms
+//! and Fused Kernels" as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * L1/L2 (build time): Pallas kernels + JAX model, AOT-lowered to HLO
+//!   text under `artifacts/` (see `python/compile/`).
+//! * L3 (this crate): the deployable runtime — PJRT execution of the AOT
+//!   artifacts, the three-tier dispatch, a training/serving coordinator,
+//!   real CPU kernels for the compose/norm hot paths, and the simulation
+//!   substrates (GPU cost model, caching allocator) that regenerate every
+//!   table and figure of the paper's evaluation.
+//!
+//! See DESIGN.md for the experiment index and substitution notes.
+
+pub mod bench;
+pub mod coordinator;
+pub mod dispatch;
+pub mod dora;
+pub mod gpusim;
+pub mod memsim;
+pub mod models;
+pub mod numerics;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,151 @@
+//! dorafactors CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   report <id>        regenerate a paper table/figure (or `all`)
+//!   info               manifest + device + config summary
+//!   train              run a training job against the AOT artifacts
+//!   serve-demo         start the batched server and fire demo traffic
+//!
+//! The heavier end-to-end drivers (quickstart, convergence study, the
+//! ~100M e2e training run, serving load test) live in `examples/`.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use dorafactors::bench::report;
+use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::runtime::{manifest, Engine};
+use dorafactors::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("report") => cmd_report(&args),
+        Some("info") => cmd_info(),
+        Some("train") => cmd_train(&args),
+        Some("serve-demo") => cmd_serve_demo(&args),
+        _ => {
+            eprintln!(
+                "usage: dorafactors <report|info|train|serve-demo> [--flags]\n\
+                 \n\
+                 report <id>   one of: {}\n\
+                 train         --config tiny|small|e2e --variant eager|fused \
+                 --steps N --seed S [--eval-every N]\n\
+                 serve-demo    --config tiny|small --requests N",
+                report::REPORT_IDS.join(" ")
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    match report::by_name(id) {
+        Some(body) => {
+            println!("{body}");
+            Ok(())
+        }
+        None => bail!("unknown report id {id:?}; try one of {:?}", report::REPORT_IDS),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("devices (simulated testbed):");
+    for d in dorafactors::gpusim::DEVICES.iter() {
+        println!(
+            "  {:14} SM{:3}  {:5.0} GB  {:4.2} TB/s  fused {:2.0}% / eager {:2.0}%",
+            d.name,
+            d.sm,
+            d.mem_gb,
+            d.peak_bw / 1e12,
+            d.fused_bw_frac * 100.0,
+            d.eager_bw_frac * 100.0
+        );
+    }
+    let dir = manifest::default_dir();
+    match Engine::load(&dir) {
+        Ok(eng) => {
+            println!("\nartifacts: {dir:?} (platform {})", eng.platform());
+            for (name, cfg) in &eng.manifest().configs {
+                println!(
+                    "  config {:5}  {} params, vocab {}, d_model {}, {} layers, r={}",
+                    name, cfg.n_params, cfg.vocab, cfg.d_model, cfg.n_layers, cfg.rank
+                );
+            }
+            println!("  {} artifacts", eng.manifest().artifacts.len());
+        }
+        Err(e) => println!("\nartifacts not available: {e:#}"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainerCfg {
+        config: args.get_or("config", "small").to_string(),
+        variant: args.get_or("variant", "fused").to_string(),
+        seed: args.get_u64("seed", 0),
+        branching: args.get_usize("branching", 4),
+        eval_every: args.get_usize("eval-every", 0),
+    };
+    let steps = args.get_usize("steps", 50);
+    let engine = Engine::load(&manifest::default_dir())?;
+    let mut tr = Trainer::new(engine, cfg.clone())?;
+    println!(
+        "training config={} variant={} seed={} params={}",
+        cfg.config,
+        cfg.variant,
+        cfg.seed,
+        tr.config_info().n_params
+    );
+    while tr.step_count() < steps {
+        let recs: Vec<_> = tr.run_chunk()?.to_vec();
+        let last = recs.last().unwrap();
+        println!(
+            "step {:5}  loss {:.4}  ({:.2} s wall)",
+            last.step, last.loss, tr.wall_seconds
+        );
+    }
+    let eval = tr.eval()?;
+    println!("final eval loss: {eval:.4}");
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny").to_string();
+    let n = args.get_usize("requests", 16);
+    let dir = manifest::default_dir();
+    let server = Server::start(
+        &dir,
+        ServerCfg { config, max_wait: Duration::from_millis(10) },
+    )?;
+    let client = server.client();
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let c = client.clone();
+            std::thread::spawn(move || c.infer(&[(i % 7 + 1) as i32, 2, 3, 4]))
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap()?;
+        println!(
+            "next_token={:4}  latency={:7.1?}  occupancy={}",
+            r.next_token, r.latency, r.batch_occupancy
+        );
+    }
+    let m = server.shutdown();
+    println!(
+        "served {} requests in {} batches; p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}",
+        m.completed,
+        m.batches,
+        m.p50_us(),
+        m.p95_us(),
+        m.mean_occupancy()
+    );
+    Ok(())
+}

@@ -1,0 +1,294 @@
+//! Caching-allocator simulator — the measurement substrate behind every
+//! "measured allocator delta" and "reserved VRAM" number in the paper
+//! (Tables 1, 7, 8/13; Appendix D's three-metric methodology).
+//!
+//! Models the behaviour of PyTorch's CUDA caching allocator that the
+//! paper's methodology depends on:
+//!
+//! * allocations round up to 512-byte granularity and are served from
+//!   size-bucketed free lists when a cached block fits (best-fit);
+//! * freed blocks return to the cache, NOT the device — so `reserved`
+//!   (what the GPU withholds from other processes) only grows until an
+//!   explicit `empty_cache`;
+//! * `allocated` tracks live bytes; `max_allocated` its peak — the
+//!   microbenchmark metric; `reserved - baseline` captures fragmentation
+//!   (the §6.1 concern: transient churn fragments the cache).
+//!
+//! Oversized-block reuse is bounded (a block may serve a request down to
+//! half its size, like the CUDA allocator's split threshold) so churning
+//! mismatched transient sizes grows `reserved` — the fragmentation the
+//! paper's §6.1 deployment anecdote describes.
+
+use std::collections::BTreeMap;
+
+const GRANULARITY: u64 = 512;
+
+/// One allocation event in a replayable stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub name: String,
+    pub bytes: u64,
+    pub kind: EventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Alloc,
+    Free,
+}
+
+impl Event {
+    pub fn alloc(name: &str, bytes: u64) -> Event {
+        Event { name: name.to_string(), bytes, kind: EventKind::Alloc }
+    }
+
+    pub fn free(name: &str) -> Event {
+        Event { name: name.to_string(), bytes: 0, kind: EventKind::Free }
+    }
+
+    /// Indexed variants for per-chunk buffers.
+    pub fn alloc_n(name: &str, i: u64, bytes: u64) -> Event {
+        Event { name: format!("{name}.{i}"), bytes, kind: EventKind::Alloc }
+    }
+
+    pub fn free_n(name: &str, i: u64) -> Event {
+        Event { name: format!("{name}.{i}"), bytes: 0, kind: EventKind::Free }
+    }
+}
+
+/// Simulated caching allocator.
+#[derive(Debug, Default)]
+pub struct CachingAllocator {
+    /// Live named allocations -> (requested rounded size, served block size).
+    /// `allocated` counts the requested size (what torch's allocated stat
+    /// reports); `reserved` counts whole blocks.
+    live: BTreeMap<String, (u64, u64)>,
+    /// Cached (freed but retained) blocks, keyed by size.
+    cache: BTreeMap<u64, u32>,
+    allocated: u64,
+    max_allocated: u64,
+    reserved: u64,
+    max_reserved: u64,
+    n_device_allocs: u64,
+    n_cache_hits: u64,
+}
+
+impl CachingAllocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn round(bytes: u64) -> u64 {
+        bytes.div_ceil(GRANULARITY) * GRANULARITY
+    }
+
+    /// Allocate a named tensor. Panics on duplicate names (stream bug).
+    pub fn alloc(&mut self, name: &str, bytes: u64) {
+        let size = Self::round(bytes.max(1));
+        assert!(
+            !self.live.contains_key(name),
+            "double alloc of {name:?}"
+        );
+        // Best-fit from cache: smallest cached block >= size, but only if
+        // it wastes less than half (split-threshold behaviour).
+        let candidate = self
+            .cache
+            .range(size..)
+            .next()
+            .map(|(&s, _)| s)
+            .filter(|&s| s <= size.saturating_mul(2));
+        let block = match candidate {
+            Some(s) => {
+                let cnt = self.cache.get_mut(&s).unwrap();
+                *cnt -= 1;
+                if *cnt == 0 {
+                    self.cache.remove(&s);
+                }
+                self.n_cache_hits += 1;
+                s
+            }
+            None => {
+                self.reserved += size;
+                self.max_reserved = self.max_reserved.max(self.reserved);
+                self.n_device_allocs += 1;
+                size
+            }
+        };
+        self.live.insert(name.to_string(), (size, block));
+        self.allocated += size;
+        self.max_allocated = self.max_allocated.max(self.allocated);
+    }
+
+    /// Free a named tensor back to the cache.
+    pub fn free(&mut self, name: &str) {
+        let (size, block) = self
+            .live
+            .remove(name)
+            .unwrap_or_else(|| panic!("free of unknown tensor {name:?}"));
+        self.allocated -= size;
+        *self.cache.entry(block).or_insert(0) += 1;
+    }
+
+    /// Replay an event stream.
+    pub fn replay(&mut self, events: &[Event]) {
+        for ev in events {
+            match ev.kind {
+                EventKind::Alloc => self.alloc(&ev.name, ev.bytes),
+                EventKind::Free => self.free(&ev.name),
+            }
+        }
+    }
+
+    /// torch.cuda.empty_cache(): release cached blocks to the device.
+    pub fn empty_cache(&mut self) {
+        let cached: u64 = self.cache.iter().map(|(&s, &c)| s * c as u64).sum();
+        self.reserved -= cached;
+        self.cache.clear();
+    }
+
+    /// reset_peak_memory_stats().
+    pub fn reset_peak(&mut self) {
+        self.max_allocated = self.allocated;
+        self.max_reserved = self.reserved;
+    }
+
+    // ---- the three metrics of Appendix D ----------------------------------
+
+    /// `torch.cuda.max_memory_allocated()` — microbenchmark deltas.
+    pub fn max_allocated(&self) -> u64 {
+        self.max_allocated
+    }
+
+    /// Live bytes right now.
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// `torch.cuda.memory_reserved()` — what the device withholds
+    /// (includes cache + fragmentation).
+    pub fn reserved(&self) -> u64 {
+        self.reserved
+    }
+
+    pub fn max_reserved(&self) -> u64 {
+        self.max_reserved
+    }
+
+    /// Cache effectiveness counters (fragmentation diagnostics).
+    pub fn device_allocs(&self) -> u64 {
+        self.n_device_allocs
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.n_cache_hits
+    }
+}
+
+/// Peak live bytes of an event stream replayed on a fresh allocator —
+/// the "allocator delta after reset_peak + empty_cache" measurement.
+pub fn peak_of_events(events: &[Event]) -> u64 {
+    let mut alloc = CachingAllocator::new();
+    alloc.replay(events);
+    alloc.max_allocated()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(b: u64) -> u64 {
+        CachingAllocator::round(b)
+    }
+
+    #[test]
+    fn tracks_peak() {
+        let mut a = CachingAllocator::new();
+        a.alloc("x", 1000);
+        a.alloc("y", 2000);
+        a.free("x");
+        a.alloc("z", 500);
+        assert_eq!(a.max_allocated(), r(1000) + r(2000));
+        // z is served from x's cached 1024-byte block, but the allocated
+        // stat counts the requested (rounded) size, like torch's.
+        assert_eq!(a.allocated(), r(2000) + r(500));
+        assert_eq!(a.cache_hits(), 1);
+    }
+
+    #[test]
+    fn cache_reuse_keeps_reserved_flat() {
+        let mut a = CachingAllocator::new();
+        for i in 0..100 {
+            a.alloc(&format!("t{i}"), 1 << 20);
+            a.free(&format!("t{i}"));
+        }
+        // One device block, reused 99 times.
+        assert_eq!(a.device_allocs(), 1);
+        assert_eq!(a.cache_hits(), 99);
+        assert_eq!(a.reserved(), 1 << 20);
+    }
+
+    #[test]
+    fn mismatched_sizes_fragment_reserved() {
+        // Churning growing sizes defeats the cache (each block too small
+        // for the next request): reserved grows — §6.1's fragmentation.
+        let mut a = CachingAllocator::new();
+        let mut total = 0u64;
+        for i in 1..=10u64 {
+            let sz = i * 3 << 20;
+            a.alloc("t", sz);
+            a.free("t");
+            total += CachingAllocator::round(sz);
+        }
+        assert_eq!(a.reserved(), total, "no reuse possible");
+    }
+
+    #[test]
+    fn half_size_reuse_allowed_but_not_tiny() {
+        let mut a = CachingAllocator::new();
+        a.alloc("big", 10 << 20);
+        a.free("big");
+        // 6 MiB fits in the cached 10 MiB block (>= half).
+        a.alloc("med", 6 << 20);
+        assert_eq!(a.device_allocs(), 1);
+        a.free("med");
+        // 1 MiB would waste > half of the 10 MiB block: new device alloc.
+        a.alloc("small", 1 << 20);
+        assert_eq!(a.device_allocs(), 2);
+    }
+
+    #[test]
+    fn empty_cache_returns_reserved() {
+        let mut a = CachingAllocator::new();
+        a.alloc("x", 4 << 20);
+        a.free("x");
+        assert_eq!(a.reserved(), 4 << 20);
+        a.empty_cache();
+        assert_eq!(a.reserved(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double alloc")]
+    fn double_alloc_is_a_stream_bug() {
+        let mut a = CachingAllocator::new();
+        a.alloc("x", 10);
+        a.alloc("x", 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown tensor")]
+    fn free_unknown_is_a_stream_bug() {
+        let mut a = CachingAllocator::new();
+        a.free("ghost");
+    }
+
+    #[test]
+    fn replay_peak_helper() {
+        let events = vec![
+            Event::alloc("a", 1 << 20),
+            Event::alloc("b", 1 << 20),
+            Event::free("a"),
+            Event::free("b"),
+        ];
+        assert_eq!(peak_of_events(&events), 2 << 20);
+    }
+}

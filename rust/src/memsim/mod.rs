@@ -1,0 +1,7 @@
+//! Memory simulator: a caching-allocator model (PyTorch-CUDA-style) that
+//! replays allocation event streams to regenerate the paper's three memory
+//! metrics (allocator peak, working-set delta, reserved VRAM — Appendix D).
+
+pub mod allocator;
+
+pub use allocator::{CachingAllocator, Event};

@@ -1,0 +1,252 @@
+//! VLM architecture registry — the six 8-32B models of the paper's
+//! model-level benchmarks (§5.1, Appendix D "Model identifiers"), reduced
+//! to what the cost and memory models need: the per-layer inventory of
+//! adapted projections with their shapes.
+//!
+//! Shapes follow the public configs of each model family (hidden size,
+//! GQA head layout, MLP intermediate size, layer count). The LLM decoder
+//! carries the seven adapted projections per layer (q,k,v,o,gate,up,down);
+//! vision towers are not adapted (PEFT's default target modules), matching
+//! the paper's setup.
+
+use crate::dora::config::ModuleShape;
+
+/// One adapted projection kind within a decoder layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Proj {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+pub const PROJS: [Proj; 7] = [Proj::Q, Proj::K, Proj::V, Proj::O, Proj::Gate, Proj::Up, Proj::Down];
+
+impl Proj {
+    pub fn name(self) -> &'static str {
+        match self {
+            Proj::Q => "q_proj",
+            Proj::K => "k_proj",
+            Proj::V => "v_proj",
+            Proj::O => "o_proj",
+            Proj::Gate => "gate_proj",
+            Proj::Up => "up_proj",
+            Proj::Down => "down_proj",
+        }
+    }
+}
+
+/// Decoder architecture of one model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Paper's display name (Tables 4/5/8).
+    pub name: &'static str,
+    /// Hugging Face model id (Appendix D).
+    pub hf_id: &'static str,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+    /// Approximate total parameters (for FLOP budgeting), billions.
+    pub params_b: f64,
+}
+
+impl ModelSpec {
+    /// Weight shape of one adapted projection at adapter rank `r`.
+    pub fn proj_shape(&self, p: Proj, r: usize) -> ModuleShape {
+        let h = self.hidden;
+        let q_dim = self.n_heads * self.head_dim;
+        let kv_dim = self.n_kv_heads * self.head_dim;
+        let f = self.intermediate;
+        match p {
+            Proj::Q => ModuleShape::new(q_dim, h, r),
+            Proj::K | Proj::V => ModuleShape::new(kv_dim, h, r),
+            Proj::O => ModuleShape::new(h, q_dim, r),
+            Proj::Gate | Proj::Up => ModuleShape::new(f, h, r),
+            Proj::Down => ModuleShape::new(h, f, r),
+        }
+    }
+
+    /// Full adapted-module inventory: (projection, shape, count) with
+    /// count = n_layers for each of the seven kinds.
+    pub fn inventory(&self, r: usize) -> Vec<(Proj, ModuleShape, usize)> {
+        PROJS
+            .iter()
+            .map(|&p| (p, self.proj_shape(p, r), self.n_layers))
+            .collect()
+    }
+
+    /// Total number of adapted modules (the paper's "hundreds of adapted
+    /// modules": 7 per layer).
+    pub fn n_adapted_modules(&self) -> usize {
+        7 * self.n_layers
+    }
+
+    /// Dense FLOPs of one decoder forward pass over `tokens` tokens
+    /// (projections + attention + MLP; 2*params*tokens approximation for
+    /// the matmul-dominated part, plus attention score/context terms).
+    pub fn forward_flops(&self, tokens: usize, seq: usize) -> f64 {
+        let proj_params: usize = self
+            .inventory(1)
+            .iter()
+            .map(|(_, s, n)| s.d_out * s.d_in * n)
+            .sum();
+        let embed = self.vocab * self.hidden; // tied head
+        let matmul_flops = 2.0 * (proj_params + embed) as f64 * tokens as f64;
+        // attention: 2 * tokens * seq * q_dim (scores) * 2 (scores+context)
+        let attn = 4.0
+            * tokens as f64
+            * seq as f64
+            * (self.n_heads * self.head_dim * self.n_layers) as f64;
+        matmul_flops + attn
+    }
+
+    /// Parameter bytes at bf16 (weights resident on device).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.params_b * 1e9 * 2.0) as u64
+    }
+}
+
+/// The six models of Table 4 (shapes from the public configs; Qwen3.5-27B
+/// is pre-release at paper time — dimensioned per its reported class).
+pub const MODELS: [ModelSpec; 6] = [
+    ModelSpec {
+        name: "Qwen2.5-VL-32B",
+        hf_id: "Qwen/Qwen2.5-VL-32B-Instruct",
+        hidden: 5120,
+        n_layers: 64,
+        n_heads: 40,
+        n_kv_heads: 8,
+        head_dim: 128,
+        intermediate: 27648,
+        vocab: 152064,
+        params_b: 32.5,
+    },
+    ModelSpec {
+        name: "Qwen3-VL-32B",
+        hf_id: "Qwen/Qwen3-VL-32B-Instruct",
+        hidden: 5120,
+        n_layers: 64,
+        n_heads: 64,
+        n_kv_heads: 8,
+        head_dim: 128,
+        intermediate: 25600,
+        vocab: 151936,
+        params_b: 32.8,
+    },
+    ModelSpec {
+        name: "Qwen3.5-27B",
+        hf_id: "Qwen/Qwen3.5-27B",
+        hidden: 5120,
+        n_layers: 48,
+        n_heads: 40,
+        n_kv_heads: 8,
+        head_dim: 128,
+        intermediate: 25600,
+        vocab: 151936,
+        params_b: 27.0,
+    },
+    ModelSpec {
+        name: "Gemma3-27B",
+        hf_id: "google/gemma-3-27b-it",
+        hidden: 5376,
+        n_layers: 62,
+        n_heads: 32,
+        n_kv_heads: 16,
+        head_dim: 128,
+        intermediate: 21504,
+        vocab: 262144,
+        params_b: 27.2,
+    },
+    ModelSpec {
+        name: "Mistral-Sm-24B",
+        hf_id: "unsloth/Mistral-Small-3.2-24B-Instruct-2506",
+        hidden: 5120,
+        n_layers: 40,
+        n_heads: 32,
+        n_kv_heads: 8,
+        head_dim: 128,
+        intermediate: 32768,
+        vocab: 131072,
+        params_b: 23.6,
+    },
+    ModelSpec {
+        name: "Qwen3-VL-8B",
+        hf_id: "Qwen/Qwen3-VL-8B-Instruct",
+        hidden: 4096,
+        n_layers: 36,
+        n_heads: 32,
+        n_kv_heads: 8,
+        head_dim: 128,
+        intermediate: 12288,
+        vocab: 151936,
+        params_b: 8.8,
+    },
+];
+
+/// Case-insensitive lookup by paper name or HF id fragment.
+pub fn find(name: &str) -> Option<&'static ModelSpec> {
+    let needle = name.to_lowercase();
+    MODELS
+        .iter()
+        .find(|m| m.name.to_lowercase().contains(&needle) || m.hf_id.to_lowercase().contains(&needle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_models() {
+        assert_eq!(MODELS.len(), 6);
+        assert!(find("mistral").is_some());
+        assert!(find("qwen3-vl-8b").is_some());
+        assert!(find("llama").is_none());
+    }
+
+    #[test]
+    fn inventory_is_seven_kinds_per_layer() {
+        for m in &MODELS {
+            let inv = m.inventory(384);
+            assert_eq!(inv.len(), 7);
+            let total: usize = inv.iter().map(|(_, _, n)| n).sum();
+            assert_eq!(total, m.n_adapted_modules());
+        }
+    }
+
+    #[test]
+    fn kv_projections_are_narrow() {
+        // The §4 dispatch claim: KV projections (d_out as low as 512-2048)
+        // fall below the d_out >= 2048 crossover while q/o/mlp sit above.
+        for m in &MODELS {
+            let kv = m.proj_shape(Proj::K, 384);
+            let gate = m.proj_shape(Proj::Gate, 384);
+            assert!(kv.d_out <= 2048, "{}: kv {}", m.name, kv.d_out);
+            assert!(gate.d_out > 2048, "{}: gate {}", m.name, gate.d_out);
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_params() {
+        let big = find("Qwen2.5-VL-32B").unwrap();
+        let small = find("Qwen3-VL-8B").unwrap();
+        let fb = big.forward_flops(4096, 4096);
+        let fs = small.forward_flops(4096, 4096);
+        let ratio = fb / fs;
+        assert!((2.0..6.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn proj_shapes_match_architecture() {
+        let m = find("mistral").unwrap();
+        assert_eq!(m.proj_shape(Proj::Q, 64), ModuleShape::new(4096, 5120, 64));
+        assert_eq!(m.proj_shape(Proj::K, 64), ModuleShape::new(1024, 5120, 64));
+        assert_eq!(m.proj_shape(Proj::Down, 64), ModuleShape::new(5120, 32768, 64));
+    }
+}

@@ -1,0 +1,258 @@
+//! Software bf16 / fp16 rounding — exact round-to-nearest-even emulation.
+//!
+//! The paper's numerical claims (Figure 1, the g≈1 "collapse zone"
+//! analysis in §3.1) are pure rounding phenomena, so software emulation on
+//! f32/f64 reproduces them bit-exactly. No `half` crate is vendored;
+//! these routines implement IEEE 754 round-to-nearest-even directly.
+
+/// Round an f32 to bfloat16 precision (RNE), returning the value as f32.
+///
+/// bf16 = top 16 bits of f32 (1 sign, 8 exponent, 7 mantissa bits).
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Quiet the NaN in the truncated payload so it stays a NaN.
+        return f32::from_bits((bits | 0x0040_0000) & 0xFFFF_0000);
+    }
+    // Round-to-nearest-even on the low 16 bits.
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb) & 0xFFFF_0000;
+    let _ = round_bit;
+    f32::from_bits(rounded)
+}
+
+/// Round an f32 to IEEE fp16 precision (RNE), returning the value as f32.
+///
+/// Handles normals, subnormals, overflow-to-infinity, and NaN. fp16 =
+/// 1 sign, 5 exponent, 10 mantissa bits, bias 15.
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 -> fp16 bit pattern with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN.
+        return if man != 0 {
+            sign | 0x7E00 // quiet NaN
+        } else {
+            sign | 0x7C00
+        };
+    }
+
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // Normal fp16. 13 mantissa bits are dropped.
+        let man16 = (man >> 13) as u16;
+        let rest = man & 0x1FFF;
+        let halfway = 0x1000;
+        let mut out = sign | (((e + 15) as u16) << 10) | man16;
+        if rest > halfway || (rest == halfway && (man16 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: correct
+        }
+        return out;
+    }
+    if e >= -25 {
+        // Subnormal fp16: implicit leading 1 becomes explicit. e == -25
+        // is included so values in (2^-25, 2^-24) round to the smallest
+        // subnormal rather than flushing; shifts can reach 38 bits, so
+        // widen to u64.
+        let full = (man | 0x0080_0000) as u64;
+        let shift = ((-14 - e) + 13) as u32;
+        let man16 = (full >> shift) as u16;
+        let rest = full & ((1u64 << shift) - 1);
+        let halfway = 1u64 << (shift - 1);
+        let mut out = sign | man16;
+        if rest > halfway || (rest == halfway && (man16 & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow to zero
+}
+
+/// fp16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        // Inf / NaN.
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: normalize.
+            let mut m = man;
+            let mut e = -14i32;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Machine epsilon of bf16 (2^-8 between 1 and 2).
+pub const BF16_EPS: f32 = 0.0078125; // 2^-7 ULP at 1.0; eps = 2^-8 rounding radius*2
+/// Machine epsilon of fp16 (2^-10 ULP at 1.0).
+pub const F16_EPS: f32 = 0.0009765625;
+
+/// Supported emulated dtypes for the stability sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    F16,
+}
+
+impl Dtype {
+    /// Round a value to this dtype's precision (identity for f32).
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Dtype::F32 => x,
+            Dtype::Bf16 => round_bf16(x),
+            Dtype::F16 => round_f16(x),
+        }
+    }
+
+    /// The paper's dtype-dependent epsilon for the magnitude division
+    /// (Appendix B): 1e-12 for fp32, 1e-6 for half types.
+    pub fn division_eps(self) -> f32 {
+        match self {
+            Dtype::F32 => 1e-12,
+            Dtype::Bf16 | Dtype::F16 => 1e-6,
+        }
+    }
+
+    /// Bytes per element (for traffic accounting).
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+
+    /// Representational epsilon: |g-1| below eps/2 collapses to 1 when g is
+    /// stored in this dtype (the paper's collapse-zone threshold §3.1).
+    pub fn machine_eps(self) -> f32 {
+        match self {
+            Dtype::F32 => f32::EPSILON,
+            Dtype::Bf16 => BF16_EPS,
+            Dtype::F16 => F16_EPS,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exact_values_pass_through() {
+        for x in [0.0f32, 1.0, -2.0, 0.5, 128.0, -0.0078125] {
+            assert_eq!(round_bf16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between 1.0 and 1.0078125 (odd LSB
+        // candidate); RNE goes to even (1.0).
+        let halfway = 1.0 + (0.5 * BF16_EPS);
+        assert_eq!(round_bf16(halfway), 1.0);
+        // Just above halfway rounds up.
+        assert_eq!(round_bf16(halfway + 1e-5), 1.0 + BF16_EPS);
+    }
+
+    #[test]
+    fn bf16_collapse_zone() {
+        // The §3.1 phenomenon: g = 1 + 1e-3 is representable only as 1.0
+        // in bf16 (|g-1| < eps/2 = 3.9e-3).
+        assert_eq!(round_bf16(1.0 + 1e-3), 1.0);
+        assert_ne!(round_bf16(1.0 + 5e-3), 1.0);
+    }
+
+    #[test]
+    fn bf16_preserves_nan_and_inf() {
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert_eq!(round_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_exact_and_rounding() {
+        for x in [0.0f32, 1.0, -1.5, 0.25, 2048.0] {
+            assert_eq!(round_f16(x), x, "{x}");
+        }
+        // fp16 max ~ 65504; beyond that -> inf.
+        assert_eq!(round_f16(70000.0), f32::INFINITY);
+        assert_eq!(round_f16(65504.0), 65504.0);
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let min_sub = (2f32).powi(-24); // smallest fp16 subnormal
+        assert_eq!(round_f16(min_sub), min_sub);
+        // Halfway below (2^-25) ties to even -> 0; just above rounds up.
+        assert_eq!(round_f16((2f32).powi(-25)), 0.0);
+        assert_eq!(round_f16((2f32).powi(-25) * 1.5), min_sub);
+        assert_eq!(round_f16(min_sub / 8.0), 0.0);
+    }
+
+    #[test]
+    fn f16_nan() {
+        assert!(round_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f16_collapse_zone_narrower_than_bf16() {
+        // 1 + 1e-3: representable in fp16 (eps = 9.77e-4 -> 1e-3 > eps/2)
+        // but NOT in bf16 — matching the paper's "100% bf16, 20% fp16"
+        // asymmetry.
+        assert_ne!(round_f16(1.0 + 1e-3), 1.0);
+        assert_eq!(round_bf16(1.0 + 1e-3), 1.0);
+    }
+
+    #[test]
+    fn rne_matches_reference_grid() {
+        // Cross-check fp16 round-trip on a dense grid against the
+        // definition: result must be one of the two neighbouring fp16
+        // values, whichever is closer (ties to even).
+        for i in 0..2000 {
+            let x = -4.0 + i as f32 * 0.004;
+            let r = round_f16(x);
+            let up = f16_bits_to_f32(f32_to_f16_bits(x).wrapping_add(1));
+            assert!(
+                (r - x).abs() <= (up - x).abs() + 1e-12,
+                "x={x} r={r} up={up}"
+            );
+        }
+    }
+
+    #[test]
+    fn dtype_quantize_dispatch() {
+        assert_eq!(Dtype::F32.quantize(1.0 + 1e-3), 1.0 + 1e-3);
+        assert_eq!(Dtype::Bf16.quantize(1.0 + 1e-3), 1.0);
+        assert_eq!(Dtype::Bf16.size(), 2);
+        assert_eq!(Dtype::F32.size(), 4);
+    }
+}

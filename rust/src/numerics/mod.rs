@@ -1,0 +1,12 @@
+//! Numerics substrate: software half-precision rounding, the Figure-1
+//! stability analysis, and the g-distribution (collapse zone) measurement.
+//!
+//! Everything here is exact: bf16/fp16 rounding phenomena do not depend on
+//! hardware, so this module is the authoritative reproduction of the
+//! paper's numerical claims (§3.1, Figure 1).
+
+pub mod gdist;
+pub mod half;
+pub mod stability;
+
+pub use half::Dtype;

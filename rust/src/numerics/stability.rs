@@ -1,0 +1,160 @@
+//! Numerical-stability analysis of the DoRA compose (paper §3.1, Figure 1).
+//!
+//! Three evaluation strategies of the algebraically identical composition
+//! `delta = (g-1)*base + g*s*lora`:
+//!
+//! * **naive**  — `g*(s*lora + base) - base`, evaluated entirely in the
+//!   storage dtype. Catastrophic cancellation when g ≈ 1: `g*base` rounds
+//!   to `base` and the correction vanishes.
+//! * **stable** — `(g-1)*base + g*(s*lora)` with fp32 intermediates,
+//!   rounded to the storage dtype only at the end (the paper's eager path
+//!   and both kernels).
+//! * **fused**  — same algebra as stable; in this reproduction the fused
+//!   CPU kernel shares the fp32 intermediate discipline, so its error sits
+//!   on the stable trace (Figure 1's bottom curves).
+//!
+//! The fp64 evaluation is the error reference.
+
+use super::half::Dtype;
+
+/// One point of the Figure-1 sweep: peak absolute error of each form at a
+/// given |g-1| offset.
+#[derive(Debug, Clone)]
+pub struct StabilityPoint {
+    pub g_offset: f64,
+    pub err_naive: f64,
+    pub err_stable: f64,
+}
+
+/// Evaluate the naive form in `dt`: every intermediate is quantized.
+#[inline]
+pub fn compose_naive_quantized(base: f32, lora: f32, g: f32, s: f32, dt: Dtype) -> f32 {
+    let sl = dt.quantize(s * lora);
+    let inner = dt.quantize(sl + base);
+    let scaled = dt.quantize(dt.quantize(g) * inner);
+    dt.quantize(scaled - base)
+}
+
+/// Evaluate the stable form: fp32 compute, one final quantization.
+/// g is NOT quantized to the storage dtype (it is produced by the fp32
+/// magnitude division, Eq. 6) — quantizing it is precisely the collapse
+/// the paper's design avoids.
+#[inline]
+pub fn compose_stable_quantized(base: f32, lora: f32, g: f32, s: f32, dt: Dtype) -> f32 {
+    let delta = (g - 1.0) * base + g * (s * lora);
+    dt.quantize(delta)
+}
+
+/// fp64 ground truth.
+#[inline]
+pub fn compose_f64(base: f64, lora: f64, g: f64, s: f64) -> f64 {
+    (g - 1.0) * base + g * s * lora
+}
+
+/// Sweep |g-1| offsets (log-spaced) and record each form's peak absolute
+/// error against fp64, over pseudo-random activations. Reproduces the
+/// Figure 1 panel for the given dtype.
+pub fn sweep_g_offsets(
+    dt: Dtype,
+    n_offsets: usize,
+    n_elems: usize,
+    seed: u64,
+) -> Vec<StabilityPoint> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    // Match the figure's setup: activations at realistic scale, lora path
+    // active but small relative to base (adapters start near zero).
+    let base: Vec<f32> = (0..n_elems)
+        .map(|_| dt.quantize((rng.normal() * 10.0) as f32))
+        .collect();
+    let lora: Vec<f32> = (0..n_elems)
+        .map(|_| dt.quantize((rng.normal() * 0.1) as f32))
+        .collect();
+    let s = 2.0f32;
+
+    let mut out = Vec::with_capacity(n_offsets);
+    for i in 0..n_offsets {
+        // Log-spaced offsets from 1e-6 to 1e-1 (the figure's x-axis).
+        let t = i as f64 / (n_offsets - 1).max(1) as f64;
+        let offset = 10f64.powf(-6.0 + 5.0 * t);
+        let g = (1.0 + offset) as f32;
+
+        let mut err_naive: f64 = 0.0;
+        let mut err_stable: f64 = 0.0;
+        for j in 0..n_elems {
+            let truth = compose_f64(base[j] as f64, lora[j] as f64, 1.0 + offset, s as f64);
+            let en = (compose_naive_quantized(base[j], lora[j], g, s, dt) as f64 - truth).abs();
+            let es = (compose_stable_quantized(base[j], lora[j], g, s, dt) as f64 - truth).abs();
+            err_naive = err_naive.max(en);
+            err_stable = err_stable.max(es);
+        }
+        out.push(StabilityPoint { g_offset: offset, err_naive, err_stable });
+    }
+    out
+}
+
+/// Figure 1's headline: ratio of peak naive error to peak stable error
+/// over the sweep (paper: 3.0x in bf16).
+pub fn peak_error_ratio(points: &[StabilityPoint]) -> f64 {
+    let pn = points.iter().map(|p| p.err_naive).fold(0.0, f64::max);
+    let ps = points.iter().map(|p| p.err_stable).fold(0.0, f64::max);
+    pn / ps.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forms_agree_in_f32_away_from_unity() {
+        // At g = 1.5 there is no cancellation; both forms are accurate.
+        let (b, l, g, s) = (3.0f32, 0.5, 1.5, 2.0);
+        let truth = compose_f64(b as f64, l as f64, g as f64, s as f64);
+        let n = compose_naive_quantized(b, l, g, s, Dtype::F32) as f64;
+        let st = compose_stable_quantized(b, l, g, s, Dtype::F32) as f64;
+        assert!((n - truth).abs() < 1e-6);
+        assert!((st - truth).abs() < 1e-6);
+    }
+
+    #[test]
+    fn naive_collapses_in_bf16_near_unity() {
+        // g = 1 + 1e-3, base = 100, lora = 0: truth = 0.1. Naive in bf16:
+        // g rounds to 1, delta = 0 — the full correction is lost.
+        let got = compose_naive_quantized(100.0, 0.0, 1.0 + 1e-3, 1.0, Dtype::Bf16);
+        assert_eq!(got, 0.0);
+        let stable = compose_stable_quantized(100.0, 0.0, 1.0 + 1e-3, 1.0, Dtype::Bf16);
+        assert!((stable as f64 - 0.1).abs() < 5e-4, "stable={stable}");
+    }
+
+    #[test]
+    fn figure1_ratio_exceeds_three_bf16() {
+        let pts = sweep_g_offsets(Dtype::Bf16, 12, 512, 42);
+        let ratio = peak_error_ratio(&pts);
+        assert!(ratio > 3.0, "peak error ratio {ratio} <= 3.0");
+    }
+
+    #[test]
+    fn stable_error_sits_near_quantization_floor() {
+        // Stable-form error should be bounded by ~1 ULP of the output,
+        // independent of the g offset (the flat trace in Figure 1).
+        let pts = sweep_g_offsets(Dtype::Bf16, 10, 256, 7);
+        for p in &pts {
+            assert!(
+                p.err_stable <= p.err_naive + 1e-12,
+                "stable worse than naive at offset {}",
+                p.g_offset
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_cancellation_less_severe_than_bf16() {
+        // fp16 has 3 more mantissa bits; its collapse zone is ~8x narrower,
+        // so the same sweep yields a lower peak ratio.
+        let bf = peak_error_ratio(&sweep_g_offsets(Dtype::Bf16, 12, 256, 1));
+        let fp = peak_error_ratio(&sweep_g_offsets(Dtype::F16, 12, 256, 1));
+        assert!(
+            bf > fp,
+            "expected bf16 ratio ({bf}) > fp16 ratio ({fp})"
+        );
+    }
+}

@@ -1,0 +1,242 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! Python AOT compiler (`python/compile/aot.py`) and this runtime.
+//!
+//! The manifest describes every artifact's I/O signature (names, shapes,
+//! dtypes, roles) plus the model configurations (leaf names in flatten
+//! order, optimizer hyper-parameters), so the Rust side can construct and
+//! interpret PJRT literals without a pytree library.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element dtype of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoDtype {
+    F32,
+    S32,
+}
+
+impl IoDtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(IoDtype::F32),
+            "s32" => Ok(IoDtype::S32),
+            other => bail!("unknown dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// One input or output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: IoDtype,
+    /// Role tag: frozen / trainable / opt / step / data / out.
+    pub role: String,
+}
+
+impl IoSlot {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<IoSlot> {
+        Ok(IoSlot {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_shape()?,
+            dtype: IoDtype::parse(v.get("dtype")?.as_str()?)?,
+            role: v.get("role")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT artifact (an HLO text file plus its signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSlot>,
+    pub outputs: Vec<IoSlot>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactInfo {
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64().ok())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str().ok())
+    }
+}
+
+/// One exported model configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub rank: usize,
+    pub scale: f64,
+    pub n_params: usize,
+    pub train_batch: usize,
+    pub chunk_steps: usize,
+    /// Frozen / trainable leaf names, in flatten (sorted) order.
+    pub frozen: Vec<String>,
+    pub trainable: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub configs: BTreeMap<String, ConfigInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, v) in root.get("artifacts")?.as_obj()? {
+            let inputs = v.get("inputs")?.as_arr()?.iter().map(IoSlot::parse).collect::<Result<_>>()?;
+            let outputs = v.get("outputs")?.as_arr()?.iter().map(IoSlot::parse).collect::<Result<_>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: v.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    meta: v.get("meta")?.as_obj()?.clone(),
+                },
+            );
+        }
+
+        let mut configs = BTreeMap::new();
+        for (name, v) in root.get("configs")?.as_obj()? {
+            let names = |key: &str| -> Result<Vec<String>> {
+                v.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| Ok(x.as_str()?.to_string()))
+                    .collect()
+            };
+            configs.insert(
+                name.clone(),
+                ConfigInfo {
+                    name: name.clone(),
+                    vocab: v.get("vocab")?.as_usize()?,
+                    d_model: v.get("d_model")?.as_usize()?,
+                    n_layers: v.get("n_layers")?.as_usize()?,
+                    seq: v.get("seq")?.as_usize()?,
+                    rank: v.get("rank")?.as_usize()?,
+                    scale: v.get("scale")?.as_f64()?,
+                    n_params: v.get("n_params")?.as_usize()?,
+                    train_batch: v.get("train_batch")?.as_usize()?,
+                    chunk_steps: v.get("chunk_steps")?.as_usize()?,
+                    frozen: names("frozen")?,
+                    trainable: names("trainable")?,
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, art: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}
+
+/// Default artifacts directory: `$DORA_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DORA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert!(m.artifacts.len() >= 30, "{}", m.artifacts.len());
+        assert!(m.configs.contains_key("tiny"));
+        assert!(m.configs.contains_key("small"));
+        assert!(m.configs.contains_key("e2e"));
+    }
+
+    #[test]
+    fn train_artifact_signature() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("tiny").unwrap();
+        let art = m.artifact("train_tiny_fused").unwrap();
+        let nf = cfg.frozen.len();
+        let nt = cfg.trainable.len();
+        assert_eq!(art.inputs.len(), nf + 3 * nt + 2);
+        assert_eq!(art.outputs.len(), 3 * nt + 2);
+        assert_eq!(art.inputs.last().unwrap().name, "tokens");
+        assert_eq!(art.inputs.last().unwrap().dtype, IoDtype::S32);
+        assert_eq!(art.outputs.last().unwrap().name, "losses");
+        // tokens shape [k, bs, seq+1]
+        let t = &art.inputs.last().unwrap().shape;
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], cfg.chunk_steps);
+        assert_eq!(t[1], cfg.train_batch);
+        assert_eq!(t[2], cfg.seq + 1);
+    }
+
+    #[test]
+    fn every_artifact_file_exists() {
+        let Some(m) = manifest() else { return };
+        for art in m.artifacts.values() {
+            assert!(m.hlo_path(art).exists(), "{} missing", art.file);
+        }
+    }
+
+    #[test]
+    fn compose_artifact_meta() {
+        let Some(m) = manifest() else { return };
+        let art = m.artifact("compose_fused_512x2048").unwrap();
+        assert_eq!(art.meta_f64("rows"), Some(512.0));
+        assert_eq!(art.meta_f64("d_out"), Some(2048.0));
+        assert_eq!(art.meta_str("variant"), Some("fused"));
+    }
+}

@@ -1,0 +1,360 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path.
+//!
+//! `Engine` wraps the `xla` crate's PJRT CPU client:
+//!
+//! ```text
+//! HloModuleProto::from_text_file -> XlaComputation -> client.compile
+//!   -> PjRtLoadedExecutable (cached per artifact) -> execute(literals)
+//! ```
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! Python never runs here — the engine + artifacts directory is the
+//! entire deployable unit.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn zeros_like_slot(slot: &IoSlot) -> Tensor {
+        match slot.dtype {
+            IoDtype::F32 => Tensor::f32(slot.shape.clone(), vec![0.0; slot.elems()]),
+            IoDtype::S32 => Tensor::i32(slot.shape.clone(), vec![0; slot.elems()]),
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar f32 accessor (loss values etc).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        // Single-copy construction (EXPERIMENTS.md §Perf L3): vec1 +
+        // reshape copies the payload twice; create_from_shape_and_
+        // untyped_data copies once into the final shape.
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &self.shape,
+                bytemuck_f32(v),
+            )?,
+            TensorData::I32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &self.shape,
+                bytemuck_i32(v),
+            )?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+}
+
+/// View a typed slice as bytes (safe: f32/i32 are plain-old-data and the
+/// allocation is at least align 4).
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// The PJRT execution engine. Cheap to clone (shared compiled cache).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over the given artifacts directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            inner: Arc::new(EngineInner { client, manifest, cache: Mutex::new(HashMap::new()) }),
+        })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Get (compiling and caching on first use) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.inner.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.inner.manifest.artifact(name)?;
+        let path = self.inner.manifest.hlo_path(art);
+        let path_str = path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.inner
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name:?}"))?,
+        );
+        self.inner.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors, validating the signature,
+    /// and return the (untupled) outputs as host tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let art = self.inner.manifest.artifact(name)?.clone();
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "artifact {name:?} expects {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (slot, t) in art.inputs.iter().zip(inputs) {
+            if slot.shape != t.shape {
+                bail!(
+                    "artifact {name:?} input {:?}: shape {:?} != expected {:?}",
+                    slot.name,
+                    t.shape,
+                    slot.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let mut out_lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = out_lit.decompose_tuple()?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for part in &parts {
+            outputs.push(Tensor::from_literal(part)?);
+        }
+        if outputs.len() != art.outputs.len() {
+            bail!(
+                "artifact {name:?} returned {} outputs, manifest says {}",
+                outputs.len(),
+                art.outputs.len()
+            );
+        }
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Engine::load(&dir).expect("engine loads"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn tensor_roundtrip_through_literal() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn engine_runs_compose_artifact() {
+        let Some(eng) = engine() else { return };
+        let art = eng.manifest().artifact("compose_eager_512x2048").unwrap().clone();
+        let rows = 512;
+        let d_out = 2048;
+        let s = art.meta_f64("scale").unwrap() as f32;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let base = rng.normal_vec_f32(rows * d_out, 1.0);
+        let lora = rng.normal_vec_f32(rows * d_out, 0.3);
+        let g: Vec<f32> = (0..d_out).map(|_| 1.0 + rng.normal() as f32 * 0.01).collect();
+        let out = eng
+            .run(
+                "compose_eager_512x2048",
+                &[
+                    Tensor::f32(vec![rows, d_out], base.clone()),
+                    Tensor::f32(vec![rows, d_out], lora.clone()),
+                    Tensor::f32(vec![d_out], g.clone()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let delta = out[0].as_f32().unwrap();
+        // Cross-layer check: XLA output == the Rust CPU fused kernel.
+        let act = crate::dora::config::ActShape::new(rows, d_out);
+        let want = crate::dora::compose_cpu::compose_fused(&base, &lora, &g, s, act);
+        for i in (0..delta.len()).step_by(97) {
+            assert!(
+                (delta[i] - want[i]).abs() <= 1e-4 * want[i].abs().max(1.0),
+                "elem {i}: {} vs {}",
+                delta[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fused_and_eager_artifacts_agree() {
+        let Some(eng) = engine() else { return };
+        let rows = 512;
+        let d_out = 2048;
+        let mut rng = crate::util::rng::Rng::new(8);
+        let inputs = [
+            Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 1.0)),
+            Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 0.3)),
+            Tensor::f32(vec![d_out], (0..d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect()),
+        ];
+        let e = eng.run("compose_eager_512x2048", &inputs).unwrap();
+        let f = eng.run("compose_fused_512x2048", &inputs).unwrap();
+        let (ev, fv) = (e[0].as_f32().unwrap(), f[0].as_f32().unwrap());
+        for i in (0..ev.len()).step_by(131) {
+            assert!((ev[i] - fv[i]).abs() <= 1e-4 * ev[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn norm_artifacts_agree_across_engines() {
+        let Some(eng) = engine() else { return };
+        let (d_out, d_in, r) = (1024, 1024, 64);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let inputs = [
+            Tensor::f32(vec![d_out, d_in], rng.normal_vec_f32(d_out * d_in, 0.05)),
+            Tensor::f32(vec![r, d_in], rng.normal_vec_f32(r * d_in, 0.1)),
+            Tensor::f32(vec![d_out, r], rng.normal_vec_f32(d_out * r, 0.1)),
+        ];
+        let dense = eng.run("norm_dense_ba_1024x1024r64", &inputs).unwrap();
+        let eager = eng.run("norm_eager_1024x1024r64", &inputs).unwrap();
+        let fused = eng.run("norm_fused_1024x1024r64", &inputs).unwrap();
+        let (d, e, f) = (
+            dense[0].as_f32().unwrap(),
+            eager[0].as_f32().unwrap(),
+            fused[0].as_f32().unwrap(),
+        );
+        for i in 0..d_out {
+            assert!((d[i] - e[i]).abs() <= 2e-4 * d[i].abs().max(1e-3), "dense vs eager {i}");
+            assert!((e[i] - f[i]).abs() <= 2e-4 * e[i].abs().max(1e-3), "eager vs fused {i}");
+        }
+        // And against the Rust CPU factored norm.
+        let m = crate::dora::config::ModuleShape::new(d_out, d_in, r);
+        let mut tracker = crate::dora::norm_cpu::AllocTracker::new();
+        let cpu = crate::dora::norm_cpu::factored_norm(
+            inputs[0].as_f32().unwrap(),
+            inputs[1].as_f32().unwrap(),
+            inputs[2].as_f32().unwrap(),
+            0.5,
+            m,
+            1 << 22,
+            &mut tracker,
+        );
+        for i in (0..d_out).step_by(37) {
+            assert!((cpu[i] - f[i]).abs() <= 2e-4 * cpu[i].abs().max(1e-3), "cpu vs xla {i}");
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(eng) = engine() else { return };
+        let err = eng.run("compose_eager_512x2048", &[]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+        let bad = [
+            Tensor::f32(vec![4, 4], vec![0.0; 16]),
+            Tensor::f32(vec![4, 4], vec![0.0; 16]),
+            Tensor::f32(vec![4], vec![0.0; 4]),
+        ];
+        let err = eng.run("compose_eager_512x2048", &bad).unwrap_err();
+        assert!(err.to_string().contains("shape"));
+        assert!(eng.run("no_such_artifact", &[]).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Shared substrates: PRNG, JSON, statistics, table rendering, property
+//! testing, and a tiny CLI argument helper.
+//!
+//! These exist because the build is fully offline against the vendored
+//! crate set (xla + its deps only) — no rand/serde/clap/proptest. Each
+//! module is scoped to exactly what the stack needs and carries its own
+//! unit tests.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Minimal CLI flag parsing: `--key value` and `--flag` switches.
+///
+/// The main binary has a handful of subcommands with simple options; this
+/// covers them without a clap dependency.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                let next_is_value = iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.flags.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = parse("report table4 --gpu h200 --verbose --steps 100");
+        assert_eq!(a.positional, vec!["report", "table4"]);
+        assert_eq!(a.get("gpu"), Some("h200"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("gpu", "b200"), "b200");
+        assert_eq!(a.get_usize("steps", 7), 7);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("--fast");
+        assert_eq!(a.get("fast"), Some("true"));
+    }
+}

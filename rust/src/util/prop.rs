@@ -1,0 +1,152 @@
+//! Miniature property-testing harness (the vendored crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! Scope: seeded random-case generation with failure reporting that prints
+//! the case index + seed so any failure is reproducible by re-running the
+//! same test binary. Shrinking is intentionally out of scope — cases are
+//! generated from compact generators, so the failing input is printed
+//! whole instead.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries do not receive the workspace's
+//! // rpath link flags, so they cannot locate libxla_extension's
+//! // libstdc++ at runtime; the same example runs as a unit test below.)
+//! use dorafactors::util::prop::{check, prop_assert};
+//! check("add commutes", 200, |g| {
+//!     let (a, b) = (g.i64_in(-100, 100), g.i64_in(-100, 100));
+//!     prop_assert(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handle wrapping the PRNG.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_normal_vec(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        self.rng.normal_vec_f32(n, sigma)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Pick one of the given values.
+    pub fn pick<T: Clone>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.below(xs.len() as u64) as usize].clone()
+    }
+}
+
+/// Property outcome: Ok(()) or a message describing the counterexample.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are within tolerance.
+pub fn prop_close(a: f64, b: f64, tol: f64, ctx: &str) -> PropResult {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if diff <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: |{a} - {b}| = {diff} > {tol}*{scale}"))
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (test failure) on the first
+/// counterexample, printing the case index and the base seed.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    check_seeded(name, cases, 0xD0_5E_ED, &mut prop)
+}
+
+/// As `check` but with an explicit base seed (used by tests that need
+/// distinct corpora).
+pub fn check_seeded<F>(name: &str, cases: usize, seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut g = Gen { rng: root.fork(case as u64), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (base seed {seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_context() {
+        check("fails", 10, |g| {
+            let x = g.i64_in(0, 100);
+            prop_assert(x < 90, format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 300, |g| {
+            let a = g.usize_in(3, 7);
+            let b = g.f64_in(-1.0, 1.0);
+            prop_assert((3..=7).contains(&a), format!("a={a}"))?;
+            prop_assert((-1.0..1.0).contains(&b), format!("b={b}"))
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerates() {
+        assert!(prop_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(prop_close(1.0, 1.1, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Plain-text table rendering for the report generator: every paper table
+//! is re-emitted as an aligned ASCII/markdown table so EXPERIMENTS.md can
+//! be assembled directly from `dorafactors report` output.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An aligned text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: std::iter::once(Align::Left)
+                .chain(std::iter::repeat(Align::Right))
+                .take(header.len())
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override column alignments (default: first left, rest right).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as a GitHub-flavoured markdown table (with title header).
+    pub fn to_markdown(&self) -> String {
+        let widths = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&render_row(&self.header, &widths, &self.aligns));
+        out.push('|');
+        for (w, a) in widths.iter().zip(&self.aligns) {
+            match a {
+                Align::Left => out.push_str(&format!(" :{} |", "-".repeat(w.max(&2) - 1))),
+                Align::Right => out.push_str(&format!(" {}: |", "-".repeat(w.max(&2) - 1))),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths, &self.aligns));
+        }
+        out
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.chars().count());
+            }
+        }
+        widths
+    }
+}
+
+fn render_row(cells: &[String], widths: &[usize], aligns: &[Align]) -> String {
+    let mut out = String::from("|");
+    for ((cell, w), a) in cells.iter().zip(widths).zip(aligns) {
+        let pad = w - cell.chars().count();
+        match a {
+            Align::Left => out.push_str(&format!(" {}{} |", cell, " ".repeat(pad))),
+            Align::Right => out.push_str(&format!(" {}{} |", " ".repeat(pad), cell)),
+        }
+    }
+    out.push('\n');
+    out
+}
+
+/// Format a speedup ratio like the paper: "1.74x".
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format bytes with binary units.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit + 1 < UNITS.len() {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
+/// Format seconds adaptively (ns/us/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["Model", "Speedup"]);
+        t.row(vec!["Qwen3-VL-8B".into(), "1.47x".into()]);
+        t.row(vec!["Mistral".into(), "1.87x".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| Qwen3-VL-8B |"));
+        // all data rows same width
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_speedup(1.7346), "1.73x");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(256 * 1024 * 1024), "256.0 MiB");
+        assert_eq!(fmt_secs(0.25), "250.00 ms");
+        assert_eq!(fmt_secs(2.5e-5), "25.00 us");
+    }
+}
