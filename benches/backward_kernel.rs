@@ -1,21 +1,25 @@
 //! REAL-measurement bench: fused vs eager compose backward on CPU
 //! (Figure 8 / Table 9 backward column's mechanism), plus the d_mag
-//! deterministic reduction.
+//! deterministic reduction — driven through the kernel-backend layer's
+//! `ComposeKernel` trait, with the KernelAgent two-stage fused-dmag path
+//! (`backward_with_dmag`) and the parallel-tiled backend alongside.
 
 use dorafactors::bench::{shapes, timing};
-use dorafactors::dora::compose_cpu;
+use dorafactors::kernels::{ComposeKernel, EagerCpu, FusedCpu, ParallelTiledCpu};
+use dorafactors::numerics::Dtype;
+use dorafactors::util::rng::Rng;
 use dorafactors::util::stats;
 use dorafactors::util::table::{fmt_secs, fmt_speedup, Table};
-use dorafactors::util::rng::Rng;
 
 fn main() {
     let cfg = timing::BenchCfg { warmup: 3, trials: 30, time_cap_s: 15.0 };
     let mut t = Table::new(
         "compose backward (REAL CPU): eager 2-kernel vs fused dual-output \
-vs KernelAgent two-stage (fused dmag)",
-        &["rows x d_out", "eager+dmag", "fused+dmag", "KA fused-dmag", "speedup", "KA speedup"],
+vs KernelAgent two-stage (fused dmag) vs parallel-tiled",
+        &["rows x d_out", "eager+dmag", "fused+dmag", "KA fused-dmag", "par-tiled", "speedup", "KA speedup"],
     );
     let mut speedups = Vec::new();
+    let dt = Dtype::F32;
     for act in shapes::cpu_act_shapes() {
         let mut rng = Rng::new(act.d_out as u64);
         let d_delta = rng.normal_vec_f32(act.elems(), 1.0);
@@ -24,22 +28,29 @@ vs KernelAgent two-stage (fused dmag)",
             .map(|_| 1.0 + rng.normal() as f32 * 0.002)
             .collect();
 
-        // Full backward = pair kernel + the separate d_mag reduction
-        // (the paper's shipped design), vs KernelAgent's fully fused
-        // two-stage variant (§7).
-        let eager = timing::bench("eager", cfg, || {
-            std::hint::black_box(compose_cpu::compose_backward_eager(&d_delta, &g, 2.0, act));
-            std::hint::black_box(compose_cpu::dmag_reduction(&d_delta, &inner, act));
-        });
-        let fused = timing::bench("fused", cfg, || {
-            std::hint::black_box(compose_cpu::compose_backward_fused(&d_delta, &g, 2.0, act));
-            std::hint::black_box(compose_cpu::dmag_reduction(&d_delta, &inner, act));
-        });
         let mut dl = vec![0f32; act.elems()];
         let mut db = vec![0f32; act.elems()];
+
+        // Full backward = pair kernel + the separate d_mag reduction
+        // (the paper's shipped design), vs KernelAgent's fully fused
+        // two-stage variant (§7), all through the backend trait.
+        let eager = timing::bench("eager", cfg, || {
+            EagerCpu.backward(&d_delta, &g, 2.0, act, dt, &mut dl, &mut db);
+            std::hint::black_box(EagerCpu.dmag(&d_delta, &inner, act));
+        });
+        let fused = timing::bench("fused", cfg, || {
+            FusedCpu.backward(&d_delta, &g, 2.0, act, dt, &mut dl, &mut db);
+            std::hint::black_box(FusedCpu.dmag(&d_delta, &inner, act));
+        });
         let ka = timing::bench("ka", cfg, || {
-            std::hint::black_box(compose_cpu::compose_backward_fused_dmag(
-                &d_delta, &inner, &g, 2.0, act, &mut dl, &mut db,
+            std::hint::black_box(FusedCpu.backward_with_dmag(
+                &d_delta, &inner, &g, 2.0, act, dt, &mut dl, &mut db,
+            ));
+        });
+        let tiled_backend = ParallelTiledCpu::new(4);
+        let tiled = timing::bench("tiled", cfg, || {
+            std::hint::black_box(tiled_backend.backward_with_dmag(
+                &d_delta, &inner, &g, 2.0, act, dt, &mut dl, &mut db,
             ));
         });
         let speedup = eager.median_s / fused.median_s;
@@ -49,6 +60,7 @@ vs KernelAgent two-stage (fused dmag)",
             fmt_secs(eager.median_s),
             fmt_secs(fused.median_s),
             fmt_secs(ka.median_s),
+            fmt_secs(tiled.median_s),
             fmt_speedup(speedup),
             fmt_speedup(eager.median_s / ka.median_s),
         ]);

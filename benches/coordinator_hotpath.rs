@@ -45,6 +45,24 @@ fn main() {
         "dispatch exceeds 1 us/module"
     );
 
+    // Registry dispatch: tier decision + backend handle (Arc clone) — the
+    // kernel-backend layer's hot-path surface.
+    let m = timing::bench("select_kernel", cfg, || {
+        for (_, shape, count) in &inv {
+            for _ in 0..*count {
+                std::hint::black_box(dispatch::select_kernel(
+                    &env,
+                    &ComposeCtx::training(ActShape::new(4096, shape.d_out)),
+                ));
+            }
+        }
+    });
+    t.row(vec![
+        format!("select_kernel x{n_mod} modules"),
+        fmt_secs(m.median_s),
+        format!("{:.1} ns/module", m.median_s / n_mod as f64 * 1e9),
+    ]);
+
     // Allocator replay: one full model's norm event streams.
     let shape = ModuleShape::new(4096, 4096, 384);
     let events = mem_events::norm_events(shape, Config::Eager, Dtype::Bf16, 256 << 20);

@@ -1,6 +1,8 @@
-//! REAL-measurement bench: the three weight-norm engines on CPU, with
-//! measured transient memory (Figure 10's latency tradeoff + Table 1/7's
-//! measured-memory methodology, at CPU-feasible scales).
+//! REAL-measurement bench: the weight-norm engines on CPU, with measured
+//! transient memory (Figure 10's latency tradeoff + Table 1/7's
+//! measured-memory methodology, at CPU-feasible scales). The factored
+//! engines run through the kernel-backend layer's `NormEngine` trait
+//! (sequential + parallel-tiled backends).
 //!
 //! Expected shape of the results (the paper's claims):
 //! * factored uses orders of magnitude less transient memory;
@@ -9,14 +11,19 @@
 
 use dorafactors::bench::{shapes, timing};
 use dorafactors::dora::norm_cpu::{self, AllocTracker};
-use dorafactors::util::table::{fmt_bytes, fmt_secs, Table};
+use dorafactors::kernels::{FusedCpu, NormEngine, ParallelTiledCpu};
+use dorafactors::numerics::Dtype;
 use dorafactors::util::rng::Rng;
+use dorafactors::util::table::{fmt_bytes, fmt_secs, Table};
 
 fn main() {
     let cfg = timing::BenchCfg { warmup: 1, trials: 10, time_cap_s: 20.0 };
+    let dt = Dtype::F32;
+    let seq_engine: &dyn NormEngine = &FusedCpu;
+    let par_engine = ParallelTiledCpu::new(4);
     let mut t = Table::new(
         "weight-norm engines (REAL CPU): latency + measured transient peak",
-        &["shape", "r", "peft", "dense", "factored", "peft mem", "dense mem", "fact mem", "mem x"],
+        &["shape", "r", "peft", "dense", "factored", "par-tiled", "peft mem", "dense mem", "fact mem", "mem x"],
     );
     for m in shapes::cpu_norm_shapes() {
         let mut rng = Rng::new(m.rank as u64);
@@ -24,6 +31,7 @@ fn main() {
         let a = rng.normal_vec_f32(m.rank * m.d_in, 0.1);
         let b = rng.normal_vec_f32(m.d_out * m.rank, 0.1);
         let s = 1.5f32;
+        let budget = norm_cpu::DEFAULT_CHUNK_BUDGET;
 
         let mut tp = AllocTracker::new();
         let peft = timing::bench("peft", cfg, || {
@@ -42,11 +50,14 @@ fn main() {
         let mut tf = AllocTracker::new();
         let fact = timing::bench("factored", cfg, || {
             let mut tr = AllocTracker::new();
-            std::hint::black_box(norm_cpu::factored_norm(
-                &w, &a, &b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tr,
-            ));
+            std::hint::black_box(seq_engine.weight_norm(&w, &a, &b, s, m, budget, dt, &mut tr));
         });
-        norm_cpu::factored_norm(&w, &a, &b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tf);
+        seq_engine.weight_norm(&w, &a, &b, s, m, budget, dt, &mut tf);
+
+        let par = timing::bench("par-tiled", cfg, || {
+            let mut tr = AllocTracker::new();
+            std::hint::black_box(par_engine.weight_norm(&w, &a, &b, s, m, budget, dt, &mut tr));
+        });
 
         t.row(vec![
             format!("{}x{}", m.d_out, m.d_in),
@@ -54,6 +65,7 @@ fn main() {
             fmt_secs(peft.median_s),
             fmt_secs(dense.median_s),
             fmt_secs(fact.median_s),
+            fmt_secs(par.median_s),
             fmt_bytes(tp.peak()),
             fmt_bytes(td.peak()),
             fmt_bytes(tf.peak()),

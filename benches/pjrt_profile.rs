@@ -3,7 +3,12 @@ use dorafactors::util::rng::Rng;
 use std::time::Instant;
 
 fn main() {
-    let engine = Engine::load(&manifest::default_dir()).unwrap();
+    let dir = manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(artifacts missing — run `make artifacts` to enable the PJRT profile bench)");
+        return;
+    }
+    let engine = Engine::load(&dir).unwrap();
     let (rows, d_out) = (512usize, 2048usize);
     let mut rng = Rng::new(1);
     let inputs = [

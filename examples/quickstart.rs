@@ -92,13 +92,16 @@ fn main() -> Result<()> {
     let spec = models::find("Qwen3-VL-8B").unwrap();
     println!("\ndispatch (training, bs=1 x seq=4096, r=384) for {}:", spec.name);
     for (proj, shape, count) in spec.inventory(384) {
-        let tier = dispatch::select_tier(&env, &ComposeCtx::training(ActShape::new(4096, shape.d_out)));
+        // The kernel-registry dispatch surface: tier + runnable backend.
+        let choice =
+            dispatch::select_kernel(&env, &ComposeCtx::training(ActShape::new(4096, shape.d_out)));
         println!(
-            "  {:10} [{}x{}] x{count}: {}",
+            "  {:10} [{}x{}] x{count}: {} via {}",
             proj.name(),
             shape.d_out,
             shape.d_in,
-            tier.name()
+            choice.tier.name(),
+            choice.backend.name()
         );
     }
     let stats = dispatch::model_tier_stats(&env, spec, 384, 4096);

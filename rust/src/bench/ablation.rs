@@ -26,13 +26,17 @@ fn factorial_time(
     fused_compose: bool,
 ) -> f64 {
     let rows = wl.rows();
+    let env = crate::dispatch::DispatchEnv::default();
     let mut t = 0.0;
     for (_, shape, count) in spec.inventory(wl.rank) {
         let act = ActShape::new(rows, shape.d_out);
         // Norm engine per `norm_cfg`; compose per `fused_compose` with
-        // the real dispatch crossover applied.
-        let above = crate::dispatch::above_crossover(act);
-        let use_fused = fused_compose && above;
+        // the real dispatch decision applied through the kernel registry.
+        let choice = crate::dispatch::select_kernel(
+            &env,
+            &crate::dispatch::ComposeCtx::training(act),
+        );
+        let use_fused = fused_compose && choice.is_fused();
         let norm = gpu_cost::weight_norm(dev, shape, wl.dtype, norm_cfg);
         let base = gpu_cost::base_matmul(dev, shape, rows, wl.dtype);
         let lora = gpu_cost::lora_matmuls(dev, shape, rows, wl.dtype);

@@ -562,6 +562,68 @@ pub fn gdist_and_dispatch() -> String {
     out
 }
 
+/// Kernel-backend registry: the unified dispatch surface (backends, their
+/// execution strategy, and the tier -> backend mapping over the standard
+/// shape sweep) plus a live cross-backend parity check.
+pub fn kernel_backends() -> String {
+    use crate::dispatch::{ComposeCtx, DispatchEnv};
+    use crate::kernels::{registry, ComposeKernel};
+    use crate::util::rng::Rng;
+
+    let reg = registry();
+    let mut t = Table::new(
+        "Kernel registry — compose/norm backends behind the dispatch surface",
+        &["Backend", "Kind", "Workers", "f32 parity", "bf16 parity"],
+    );
+    // Live parity check vs the fused reference on an uneven shape.
+    let act = ActShape::new(37, 129);
+    let mut rng = Rng::new(17);
+    let base = rng.normal_vec_f32(act.elems(), 1.0);
+    let lora = rng.normal_vec_f32(act.elems(), 0.3);
+    let g: Vec<f32> = (0..act.d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect();
+    let parity = |be: &dyn ComposeKernel, dt: Dtype| -> &'static str {
+        let q = |v: &[f32]| v.iter().map(|&x| dt.quantize(x)).collect::<Vec<f32>>();
+        let (bq, lq, gq) = (q(&base), q(&lora), q(&g));
+        let reference =
+            reg.compose(crate::kernels::BackendKind::Fused).forward_alloc(&bq, &lq, &gq, 2.0, act, dt);
+        let got = be.forward_alloc(&bq, &lq, &gq, 2.0, act, dt);
+        if reference
+            .iter()
+            .zip(&got)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+        {
+            "bitwise"
+        } else {
+            "DIVERGED"
+        }
+    };
+    for be in reg.compose_backends() {
+        t.row(vec![
+            be.name().into(),
+            format!("{:?}", be.kind()),
+            be.parallelism().to_string(),
+            parity(be.as_ref(), Dtype::F32).into(),
+            parity(be.as_ref(), Dtype::Bf16).into(),
+        ]);
+    }
+
+    let env = DispatchEnv::default();
+    let mut map = Table::new(
+        "Dispatch mapping (training ctx): tier and backend per shape",
+        &["rows x d_out", "Working set", "Tier", "Backend"],
+    );
+    for act in shapes::cpu_act_shapes() {
+        let choice = crate::dispatch::select_kernel(&env, &ComposeCtx::training(act));
+        map.row(vec![
+            format!("{}x{}", act.rows, act.d_out),
+            fmt_bytes(crate::kernels::compose_working_set_bytes(act)),
+            choice.tier.name().into(),
+            choice.backend.name().into(),
+        ]);
+    }
+    format!("{}\n{}", t.to_markdown(), map.to_markdown())
+}
+
 /// All report units in order, for `report all` / EXPERIMENTS.md.
 pub fn all() -> String {
     let sections: Vec<(&str, String)> = vec![
@@ -583,6 +645,7 @@ pub fn all() -> String {
         ("fig11", fig11()),
         ("fig13-15", fig13_15()),
         ("gdist+dispatch", gdist_and_dispatch()),
+        ("kernels", kernel_backends()),
         ("ablation", crate::bench::ablation::ablation()),
     ];
     let mut out = String::new();
@@ -614,6 +677,7 @@ pub fn by_name(id: &str) -> Option<String> {
         "fig11" => fig11(),
         "fig13" | "fig14" | "fig15" => fig13_15(),
         "gdist" | "dispatch" => gdist_and_dispatch(),
+        "kernels" | "backends" => kernel_backends(),
         "ablation" => crate::bench::ablation::ablation(),
         _ => return None,
     })
@@ -623,7 +687,8 @@ pub fn by_name(id: &str) -> Option<String> {
 pub const REPORT_IDS: &[&str] = &[
     "all", "table1", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
     "table13", "table14", "tableG", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-    "fig9", "fig10", "fig11", "fig13", "fig14", "fig15", "gdist", "dispatch", "ablation",
+    "fig9", "fig10", "fig11", "fig13", "fig14", "fig15", "gdist", "dispatch", "kernels",
+    "ablation",
 ];
 
 #[cfg(test)]
@@ -660,6 +725,16 @@ mod tests {
             let _ = line;
         }
         assert!(t.contains("53%") || t.contains("52%") || t.contains("54%"), "{t}");
+    }
+
+    #[test]
+    fn kernel_backend_unit_lists_backends_and_parity_holds() {
+        let t = kernel_backends();
+        for name in ["eager-cpu", "fused-cpu", "parallel-tiled-cpu"] {
+            assert!(t.contains(name), "missing backend {name}: {t}");
+        }
+        assert!(!t.contains("DIVERGED"), "backend parity violated: {t}");
+        assert!(t.contains("tier3-eager"), "mapping table missing tiers: {t}");
     }
 
     #[test]

@@ -14,3 +14,75 @@ pub mod trainer;
 
 pub use server::{Client, Reply, Server, ServerCfg, ServerMetrics};
 pub use trainer::{StepRecord, Trainer, TrainerCfg};
+
+use crate::dispatch::{ComposeCtx, DispatchEnv};
+use crate::dora::config::ActShape;
+use crate::kernels::KernelChoice;
+use crate::runtime::ConfigInfo;
+
+/// Which compose backend the unified kernel layer selects for a model
+/// config's full-batch activation shape (`[train_batch * seq, d_model]`).
+///
+/// The trainer and server record this at startup so operational logs and
+/// metrics name the actual hot path (tier + backend) instead of leaving
+/// the dispatch decision implicit in env vars.
+pub fn compose_plan(info: &ConfigInfo, training: bool) -> KernelChoice {
+    compose_plan_with(info, training, &DispatchEnv::from_env())
+}
+
+/// [`compose_plan`] with an explicit environment (no env-var reads of its
+/// own, though it resolves backends through the process-wide registry;
+/// the env-reading wrapper above is what the trainer/server call at
+/// startup).
+pub fn compose_plan_with(info: &ConfigInfo, training: bool, env: &DispatchEnv) -> KernelChoice {
+    let act = ActShape::new(info.train_batch * info.seq, info.d_model);
+    let ctx = if training { ComposeCtx::training(act) } else { ComposeCtx::inference(act) };
+    crate::kernels::registry().select(env, &ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Tier;
+
+    fn info(train_batch: usize, seq: usize, d_model: usize) -> ConfigInfo {
+        ConfigInfo {
+            name: "test".into(),
+            vocab: 256,
+            d_model,
+            n_layers: 2,
+            seq,
+            rank: 8,
+            scale: 2.0,
+            n_params: 0,
+            train_batch,
+            chunk_steps: 4,
+            frozen: vec![],
+            trainable: vec![],
+        }
+    }
+
+    // Tests use the explicit-env variant: another test in this binary
+    // mutates the DORA_* process environment, so `from_env` would race.
+    #[test]
+    fn plan_routes_large_training_config_to_tier1() {
+        // rows = 4 * 4096 = 16384, d_model = 4096: above the crossover.
+        let c = compose_plan_with(&info(4, 4096, 4096), true, &DispatchEnv::default());
+        assert_eq!(c.tier, Tier::FusedBackward);
+        assert!(c.is_fused());
+    }
+
+    #[test]
+    fn plan_routes_tiny_config_to_eager() {
+        // The `tiny` scale: sub-crossover in training -> Tier 3.
+        let c = compose_plan_with(&info(2, 64, 128), true, &DispatchEnv::default());
+        assert_eq!(c.tier, Tier::Eager);
+        assert_eq!(c.backend.kind(), crate::kernels::BackendKind::Eager);
+    }
+
+    #[test]
+    fn plan_inference_is_tier2() {
+        let c = compose_plan_with(&info(2, 64, 128), false, &DispatchEnv::default());
+        assert_eq!(c.tier, Tier::FusedForward);
+    }
+}

@@ -59,6 +59,9 @@ pub struct ServerMetrics {
     pub batches: u64,
     pub latencies_us: Vec<f64>,
     pub occupancies: Vec<f64>,
+    /// Compose backend the kernel registry selects for this config's
+    /// inference shape (Tier-2 path), recorded at startup.
+    pub compose_backend: String,
 }
 
 impl ServerMetrics {
@@ -149,7 +152,10 @@ impl Server {
         let artifact = format!("infer_{}_fused", cfg.config);
         let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
         let stop = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let metrics = Arc::new(Mutex::new(ServerMetrics {
+            compose_backend: super::compose_plan(&info, false).backend.name().to_string(),
+            ..ServerMetrics::default()
+        }));
 
         let bs = info.train_batch;
         let seq = info.seq;

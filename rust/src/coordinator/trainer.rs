@@ -74,6 +74,10 @@ pub struct Trainer {
     pub wall_seconds: f64,
     /// Held-out eval block, fixed at construction.
     eval_tokens: Tensor,
+    /// Compose backend the kernel registry selects for this config's
+    /// training shape (recorded at construction for operational logs).
+    pub compose_backend: &'static str,
+    pub compose_tier: crate::dispatch::Tier,
 }
 
 impl Trainer {
@@ -109,6 +113,7 @@ impl Trainer {
             vec![eval_bs, info.seq + 1],
             corpus.block(1, eval_bs, info.seq + 1),
         );
+        let plan = super::compose_plan(&info, true);
         Ok(Trainer {
             engine,
             cfg,
@@ -123,6 +128,8 @@ impl Trainer {
             eval_history: Vec::new(),
             wall_seconds: 0.0,
             eval_tokens,
+            compose_backend: plan.backend.name(),
+            compose_tier: plan.tier,
         })
     }
 

@@ -19,8 +19,16 @@
 //! All paths use the canonical evaluation order (`s*lora` first, then
 //! `g*(.)`) so eager and fused agree bitwise in f32 (§3.1 "bitwise parity
 //! across all PyTorch composition paths").
+//!
+//! Since the kernel-backend refactor these free functions are thin f32
+//! wrappers over the shared dtype-generic cores in [`crate::kernels`] —
+//! the same loops the `EagerCpu` / `FusedCpu` / `ParallelTiledCpu`
+//! registry backends run, monomorphized with identity rounding, so f32
+//! results are bitwise unchanged. New call sites should go through
+//! [`crate::kernels::KernelRegistry`] instead.
 
 use crate::dora::config::ActShape;
+use crate::kernels::generic::{self, F32};
 
 /// Eager compose: the 4-kernel chain with real temporaries.
 ///
@@ -102,29 +110,18 @@ pub fn compose_eager_into(
     temps: &mut EagerTemps,
     delta: &mut [f32],
 ) {
-    let d = act.d_out;
-    let n = act.elems();
-    debug_assert_eq!(temps.t1.len(), n);
-    // Pass 1: t1 = s * lora.
-    for (t, &l) in temps.t1.iter_mut().zip(lora) {
-        *t = s * l;
-    }
-    // Pass 2: t2 = g * t1.
-    for (t2row, t1row) in temps.t2.chunks_exact_mut(d).zip(temps.t1.chunks_exact(d)) {
-        for j in 0..d {
-            t2row[j] = g[j] * t1row[j];
-        }
-    }
-    // Pass 3: t3 = (g - 1) * base.
-    for (t3row, brow) in temps.t3.chunks_exact_mut(d).zip(base.chunks_exact(d)) {
-        for j in 0..d {
-            t3row[j] = (g[j] - 1.0) * brow[j];
-        }
-    }
-    // Pass 4: delta = t3 + t2.
-    for ((o, &a), &b) in delta.iter_mut().zip(&temps.t3).zip(&temps.t2) {
-        *o = a + b;
-    }
+    debug_assert_eq!(temps.t1.len(), act.elems());
+    generic::eager_chain::<F32>(
+        base,
+        lora,
+        g,
+        s,
+        act.d_out,
+        &mut temps.t1,
+        &mut temps.t2,
+        &mut temps.t3,
+        delta,
+    );
 }
 
 /// Fused compose writing into a caller-provided buffer (the hot-path form:
@@ -137,20 +134,8 @@ pub fn compose_fused_into(
     act: ActShape,
     delta: &mut [f32],
 ) {
-    let d = act.d_out;
     debug_assert_eq!(delta.len(), act.elems());
-    for row in 0..act.rows {
-        let o = row * d;
-        let (b, l, out) = (&base[o..o + d], &lora[o..o + d], &mut delta[o..o + d]);
-        for j in 0..d {
-            // Canonical order: s*lora first, then g*(.) — matches the
-            // eager chain exactly, so f32 results are bitwise identical.
-            let t1 = s * l[j];
-            let t2 = g[j] * t1;
-            let t3 = (g[j] - 1.0) * b[j];
-            out[j] = t3 + t2;
-        }
-    }
+    generic::forward_rows::<F32>(base, lora, g, s, act.d_out, delta);
 }
 
 /// Tier-1 dual-output compose into caller buffers — one pass, two outputs.
@@ -163,21 +148,7 @@ pub fn compose_fused_dual_into(
     delta: &mut [f32],
     inner: &mut [f32],
 ) {
-    let d = act.d_out;
-    for (((orow, irow), brow), lrow) in delta
-        .chunks_exact_mut(d)
-        .zip(inner.chunks_exact_mut(d))
-        .zip(base.chunks_exact(d))
-        .zip(lora.chunks_exact(d))
-    {
-        for j in 0..d {
-            let sl = s * lrow[j];
-            let t2 = g[j] * sl;
-            let t3 = (g[j] - 1.0) * brow[j];
-            orow[j] = t3 + t2;
-            irow[j] = sl + brow[j];
-        }
-    }
+    generic::forward_dual_rows::<F32>(base, lora, g, s, act.d_out, delta, inner);
 }
 
 /// Tier-1 dual-output compose: (delta, inner = s*lora + base) in one pass.
@@ -203,21 +174,9 @@ pub fn compose_backward_eager(
     act: ActShape,
 ) -> (Vec<f32>, Vec<f32>) {
     let n = act.elems();
-    let d = act.d_out;
     let mut d_lora = vec![0f32; n];
-    for row in 0..act.rows {
-        let o = row * d;
-        for j in 0..d {
-            d_lora[o + j] = g[j] * (s * d_delta[o + j]);
-        }
-    }
     let mut d_base = vec![0f32; n];
-    for row in 0..act.rows {
-        let o = row * d;
-        for j in 0..d {
-            d_base[o + j] = (g[j] - 1.0) * d_delta[o + j];
-        }
-    }
+    generic::backward_eager_rows::<F32>(d_delta, g, s, act.d_out, &mut d_lora, &mut d_base);
     (d_lora, d_base)
 }
 
@@ -229,17 +188,9 @@ pub fn compose_backward_fused(
     act: ActShape,
 ) -> (Vec<f32>, Vec<f32>) {
     let n = act.elems();
-    let d = act.d_out;
     let mut d_lora = vec![0f32; n];
     let mut d_base = vec![0f32; n];
-    for row in 0..act.rows {
-        let o = row * d;
-        for j in 0..d {
-            let dd = d_delta[o + j];
-            d_lora[o + j] = g[j] * (s * dd);
-            d_base[o + j] = (g[j] - 1.0) * dd;
-        }
-    }
+    generic::backward_rows::<F32>(d_delta, g, s, act.d_out, &mut d_lora, &mut d_base);
     (d_lora, d_base)
 }
 
@@ -260,48 +211,23 @@ pub fn compose_backward_fused_dmag(
     d_lora: &mut [f32],
     d_base: &mut [f32],
 ) -> Vec<f32> {
-    let d = act.d_out;
-    // Stage 1: blocks of rows accumulate private f64 partials.
-    const ROWS_PER_BLOCK: usize = 32;
-    let n_blocks = act.rows.div_ceil(ROWS_PER_BLOCK);
-    let mut partials = vec![0f64; n_blocks * d];
-    for blk in 0..n_blocks {
-        let r0 = blk * ROWS_PER_BLOCK;
-        let r1 = (r0 + ROWS_PER_BLOCK).min(act.rows);
-        let part = &mut partials[blk * d..(blk + 1) * d];
-        for row in r0..r1 {
-            let o = row * d;
-            for j in 0..d {
-                let dd = d_delta[o + j];
-                d_lora[o + j] = g[j] * (s * dd);
-                d_base[o + j] = (g[j] - 1.0) * dd;
-                part[j] += dd as f64 * inner[o + j] as f64;
-            }
-        }
-    }
-    // Stage 2: reduce the block partials in fixed order.
-    let mut d_g = vec![0f64; d];
-    for blk in 0..n_blocks {
-        let part = &partials[blk * d..(blk + 1) * d];
-        for j in 0..d {
-            d_g[j] += part[j];
-        }
-    }
-    d_g.into_iter().map(|x| x as f32).collect()
+    use crate::kernels::ComposeKernel;
+    crate::kernels::FusedCpu.backward_with_dmag(
+        d_delta,
+        inner,
+        g,
+        s,
+        act,
+        crate::numerics::half::Dtype::F32,
+        d_lora,
+        d_base,
+    )
 }
 
 /// d_mag direction gradient: deterministic row reduction of
 /// d_delta * inner (never atomics; §3.2).
 pub fn dmag_reduction(d_delta: &[f32], inner: &[f32], act: ActShape) -> Vec<f32> {
-    let d = act.d_out;
-    let mut d_g = vec![0f64; d]; // f64 accumulator: deterministic AND accurate
-    for row in 0..act.rows {
-        let o = row * d;
-        for j in 0..d {
-            d_g[j] += d_delta[o + j] as f64 * inner[o + j] as f64;
-        }
-    }
-    d_g.into_iter().map(|x| x as f32).collect()
+    generic::dmag(d_delta, inner, act.rows, act.d_out)
 }
 
 /// Scalar reference (textbook form, fp64): the correctness oracle for the

@@ -20,7 +20,7 @@
 //! allocator (`memsim`), including gradient checkpointing's double
 //! allocation of norm temporaries (§1).
 
-use crate::dispatch::{self, ComposeCtx, DispatchEnv, Tier};
+use crate::dispatch::{self, ComposeCtx, DispatchEnv};
 use crate::dora::config::{ActShape, Config};
 use crate::dora::{gpu_cost, mem_events};
 use crate::gpusim::device::Device;
@@ -59,7 +59,9 @@ impl Workload {
     }
 }
 
-/// Compose path actually executed for a module, per config + dispatch.
+/// Compose path actually executed for a module, per config + dispatch —
+/// resolved through the kernel registry so the model plan and the runtime
+/// share one dispatch surface.
 fn compose_is_fused(config: Config, act: ActShape, training: bool) -> bool {
     if !config.fused_compose() {
         return false;
@@ -70,7 +72,7 @@ fn compose_is_fused(config: Config, act: ActShape, training: bool) -> bool {
     } else {
         ComposeCtx::inference(act)
     };
-    dispatch::select_tier(&env, &ctx) != Tier::Eager
+    dispatch::select_kernel(&env, &ctx).is_fused()
 }
 
 /// Config-independent per-micro-step work: attention + embedding/loss.

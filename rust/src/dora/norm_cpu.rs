@@ -65,18 +65,6 @@ fn drop_vec(tracker: &mut AllocTracker, v: Vec<f32>) {
     drop(v);
 }
 
-/// NaN-propagating clamp-then-sqrt: `f32::max` in Rust returns the
-/// non-NaN operand, which would silently collapse NaNs to zero — the
-/// opposite of the paper's clamp_min semantics (Appendix C.3).
-#[inline]
-fn sqrt_clamp_min0(total: f32) -> f32 {
-    if total.is_nan() {
-        f32::NAN
-    } else {
-        total.max(0.0).sqrt()
-    }
-}
-
 /// Naive dense matmul C[m,n] = A[m,k] @ B[k,n] (row-major, blocked on k
 /// for cache behaviour). Used by the dense baselines; correctness matters
 /// more than speed here — the factored path is the optimized one.
@@ -233,6 +221,11 @@ pub fn chunk_size(m: ModuleShape, budget: u64) -> usize {
 /// Algorithm 1: factored row-wise norm. fp32 accumulation (f32 here, with
 /// the Gram/cross contractions in f32 — matching the paper's discipline;
 /// the chunk working set is [d_out, cs] + U [d_out, r] + G [r, r]).
+///
+/// Thin f32 wrapper over the shared dtype-generic core
+/// (`kernels::norm::factored_norm_seq`) — the same loops the registry's
+/// `NormEngine` backends run, so results and tracked allocations are
+/// unchanged. New call sites should go through the registry.
 pub fn factored_norm(
     w: &[f32],
     a: &[f32],
@@ -242,106 +235,7 @@ pub fn factored_norm(
     budget: u64,
     tracker: &mut AllocTracker,
 ) -> Vec<f32> {
-    let ModuleShape { d_out, d_in, rank: r } = m;
-    let cs = chunk_size(m, budget);
-
-    let mut base_sq = vec_f32(tracker, d_out);
-    // Scale-is-zero fast path (Appendix B): skip cross/ba and never
-    // allocate U or G.
-    if s == 0.0 {
-        for i in 0..d_out {
-            let row = &w[i * d_in..(i + 1) * d_in];
-            base_sq[i] = row.iter().map(|&x| (x * x) as f64).sum::<f64>() as f32;
-        }
-        let out = base_sq.iter().map(|&x| sqrt_clamp_min0(x)).collect();
-        drop_vec(tracker, base_sq);
-        return out;
-    }
-
-    let mut cross = vec_f32(tracker, d_out);
-    let mut gram = vec_f32(tracker, r * r);
-    // U_c chunk buffer [d_out, r], reused across chunks (never two alive).
-    let mut u_c = vec_f32(tracker, d_out * r);
-
-    let mut start = 0;
-    while start < d_in {
-        let stop = (start + cs).min(d_in);
-        let width = stop - start;
-        // base_sq += rowwise sum of W_c^2 (reads W in place: no copy — the
-        // fp32-cast copy of the paper only exists for bf16 storage).
-        for i in 0..d_out {
-            let row = &w[i * d_in + start..i * d_in + stop];
-            let mut acc = 0f64;
-            for &x in row {
-                acc += (x as f64) * (x as f64);
-            }
-            base_sq[i] += acc as f32;
-        }
-        // G += A_c @ A_c^T  [r, r]
-        for i in 0..r {
-            let ai = &a[i * d_in + start..i * d_in + stop];
-            for j in i..r {
-                let aj = &a[j * d_in + start..j * d_in + stop];
-                let mut acc = 0f32;
-                for t in 0..width {
-                    acc += ai[t] * aj[t];
-                }
-                gram[i * r + j] += acc;
-                if i != j {
-                    gram[j * r + i] += acc;
-                }
-            }
-        }
-        // U_c = W_c @ A_c^T  [d_out, r]; cross += sum(B * U_c, dim=1).
-        for i in 0..d_out {
-            let wrow = &w[i * d_in + start..i * d_in + stop];
-            for l in 0..r {
-                let arow = &a[l * d_in + start..l * d_in + stop];
-                let mut acc = 0f32;
-                for t in 0..width {
-                    acc += wrow[t] * arow[t];
-                }
-                u_c[i * r + l] = acc;
-            }
-            let brow = &b[i * r..(i + 1) * r];
-            let mut cacc = 0f32;
-            for l in 0..r {
-                cacc += brow[l] * u_c[i * r + l];
-            }
-            cross[i] += cacc;
-        }
-        start = stop;
-    }
-    drop_vec(tracker, u_c);
-
-    // ba_sq = (B @ G * B) . 1  [d_out]
-    let mut ba_sq = vec_f32(tracker, d_out);
-    for i in 0..d_out {
-        let brow = &b[i * r..(i + 1) * r];
-        let mut acc = 0f32;
-        for l in 0..r {
-            let mut bg = 0f32;
-            for t in 0..r {
-                bg += brow[t] * gram[t * r + l];
-            }
-            acc += bg * brow[l];
-        }
-        ba_sq[i] = acc;
-    }
-    drop_vec(tracker, gram);
-
-    // Assembly (Eq. 5): two_s / s2 precomputed in f64, rounded once.
-    let two_s = (2.0 * s as f64) as f32;
-    let s2 = (s as f64 * s as f64) as f32;
-    let mut out = vec![0f32; d_out];
-    for i in 0..d_out {
-        let total = base_sq[i] + two_s * cross[i] + s2 * ba_sq[i];
-        out[i] = sqrt_clamp_min0(total);
-    }
-    drop_vec(tracker, ba_sq);
-    drop_vec(tracker, cross);
-    drop_vec(tracker, base_sq);
-    out
+    crate::kernels::norm::factored_norm_seq::<crate::kernels::F32>(w, a, b, s, m, budget, tracker)
 }
 
 /// Magnitude division g = m / max(w_norm, eps) — Eq. 6, shared stage.

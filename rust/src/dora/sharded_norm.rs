@@ -21,6 +21,8 @@
 
 use crate::dora::config::ModuleShape;
 use crate::dora::norm_cpu::{chunk_size, AllocTracker};
+use crate::kernels::norm::{accumulate_columns, ba_sq_row, sqrt_clamp_min0};
+use crate::kernels::F32;
 
 /// One worker's shard of the weight + A factor (d_in-sharded, like FSDP
 /// parameter flattening along the input dimension).
@@ -101,48 +103,27 @@ pub fn worker_partials(
     let mut u_c = vec![0f32; d_out * r];
     tracker.alloc((d_out * r * 4) as u64);
 
+    // Algorithm 1's chunk accumulator over THIS shard's columns — the
+    // same core the sequential and parallel-tiled norm engines run, with
+    // the shard width as the row stride.
     let mut start = 0;
     while start < width {
         let stop = (start + cs).min(width);
-        for i in 0..d_out {
-            let row = &shard.w[i * width + start..i * width + stop];
-            let mut acc = 0f64;
-            for &x in row {
-                acc += (x as f64) * (x as f64);
-            }
-            p.base_sq[i] += acc as f32;
-        }
-        for i in 0..r {
-            let ai = &shard.a[i * width + start..i * width + stop];
-            for j in i..r {
-                let aj = &shard.a[j * width + start..j * width + stop];
-                let mut acc = 0f32;
-                for t in 0..ai.len() {
-                    acc += ai[t] * aj[t];
-                }
-                p.gram[i * r + j] += acc;
-                if i != j {
-                    p.gram[j * r + i] += acc;
-                }
-            }
-        }
-        for i in 0..d_out {
-            let wrow = &shard.w[i * width + start..i * width + stop];
-            for l in 0..r {
-                let arow = &shard.a[l * width + start..l * width + stop];
-                let mut acc = 0f32;
-                for t in 0..wrow.len() {
-                    acc += wrow[t] * arow[t];
-                }
-                u_c[i * r + l] = acc;
-            }
-            let brow = &b[i * r..(i + 1) * r];
-            let mut cacc = 0f32;
-            for l in 0..r {
-                cacc += brow[l] * u_c[i * r + l];
-            }
-            p.cross[i] += cacc;
-        }
+        accumulate_columns::<F32>(
+            &shard.w,
+            &shard.a,
+            b,
+            d_out,
+            r,
+            width,
+            width,
+            start,
+            stop,
+            &mut p.base_sq,
+            &mut p.cross,
+            &mut p.gram,
+            &mut u_c,
+        );
         start = stop;
     }
     tracker.free((d_out * r * 4) as u64);
@@ -202,17 +183,9 @@ pub fn sharded_factored_norm(
     let s2 = (s as f64 * s as f64) as f32;
     let mut out = vec![0f32; d_out];
     for i in 0..d_out {
-        let brow = &b[i * r..(i + 1) * r];
-        let mut ba = 0f32;
-        for l in 0..r {
-            let mut bg = 0f32;
-            for t in 0..r {
-                bg += brow[t] * total.gram[t * r + l];
-            }
-            ba += bg * brow[l];
-        }
+        let ba = ba_sq_row::<F32>(&b[i * r..(i + 1) * r], &total.gram, r);
         let tot = total.base_sq[i] + two_s * total.cross[i] + s2 * ba;
-        out[i] = if tot.is_nan() { f32::NAN } else { tot.max(0.0).sqrt() };
+        out[i] = sqrt_clamp_min0(tot);
     }
     out
 }

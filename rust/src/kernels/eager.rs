@@ -1,0 +1,139 @@
+//! `EagerCpu`: the op-by-op composition path as a registry backend.
+//!
+//! Forward is the 4-pass chain with materialized temporaries (allocated
+//! per call — the PyTorch-eager allocation story); backward is the
+//! 2-kernel pair plus the separate d_mag reduction. This backend is the
+//! Tier-3 fallback and the correctness baseline the fused backends are
+//! verified against.
+
+use crate::dora::config::{ActShape, ModuleShape};
+use crate::dora::norm_cpu::AllocTracker;
+use crate::kernels::generic::{self, with_elem};
+use crate::kernels::{BackendKind, ComposeKernel, NormEngine};
+use crate::numerics::half::Dtype;
+
+/// The eager (multi-pass) CPU backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EagerCpu;
+
+impl ComposeKernel for EagerCpu {
+    fn name(&self) -> &'static str {
+        "eager-cpu"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Eager
+    }
+
+    fn forward(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+    ) {
+        let n = act.elems();
+        let mut t1 = vec![0f32; n];
+        let mut t2 = vec![0f32; n];
+        let mut t3 = vec![0f32; n];
+        with_elem!(dt, E, {
+            generic::eager_chain::<E>(base, lora, g, s, act.d_out, &mut t1, &mut t2, &mut t3, delta)
+        });
+    }
+
+    fn forward_dual(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+        inner: &mut [f32],
+    ) {
+        let n = act.elems();
+        let mut t1 = vec![0f32; n];
+        let mut t2 = vec![0f32; n];
+        let mut t3 = vec![0f32; n];
+        with_elem!(dt, E, {
+            generic::eager_chain::<E>(
+                base,
+                lora,
+                g,
+                s,
+                act.d_out,
+                &mut t1,
+                &mut t2,
+                &mut t3,
+                delta,
+            );
+            // Extra pass for inner = s*lora + base, reusing the t1 = s*lora
+            // temporary (one more kernel in the eager chain).
+            for ((o, &sl), &b) in inner.iter_mut().zip(t1.iter()).zip(base.iter()) {
+                *o = E::q(sl + b);
+            }
+        });
+    }
+
+    fn backward(
+        &self,
+        d_delta: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) {
+        with_elem!(dt, E, {
+            generic::backward_eager_rows::<E>(d_delta, g, s, act.d_out, d_lora, d_base)
+        });
+    }
+}
+
+impl NormEngine for EagerCpu {
+    fn name(&self) -> &'static str {
+        "eager-cpu"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Eager
+    }
+
+    /// The op-by-op baseline: dense `B@A` materialization
+    /// (`norm_cpu::dense_ba_norm`) — the eager path the factored engines
+    /// (Fused / ParallelTiled kinds) replace, kept in the registry so
+    /// dense-vs-factored memory comparisons run through one surface.
+    /// The chunk `budget` does not apply to the dense path. Half
+    /// dtypes read storage through a tracked fp32-cast copy (the copy
+    /// the paper notes only exists for bf16 storage).
+    fn weight_norm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        _budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32> {
+        if dt == Dtype::F32 {
+            return crate::dora::norm_cpu::dense_ba_norm(w, a, b, s, m, tracker);
+        }
+        let cast = |v: &[f32], tracker: &mut AllocTracker| -> Vec<f32> {
+            tracker.alloc((v.len() * 4) as u64);
+            v.iter().map(|&x| dt.quantize(x)).collect()
+        };
+        let wq = cast(w, tracker);
+        let aq = cast(a, tracker);
+        let bq = cast(b, tracker);
+        let out = crate::dora::norm_cpu::dense_ba_norm(&wq, &aq, &bq, s, m, tracker);
+        tracker.free(((wq.len() + aq.len() + bq.len()) * 4) as u64);
+        out
+    }
+}

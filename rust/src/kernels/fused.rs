@@ -1,0 +1,131 @@
+//! `FusedCpu`: the single-pass composition path as a registry backend.
+//!
+//! One pass for the forward (Tier 2), one pass with two outputs for the
+//! Tier-1 dual forward and for the backward pair, and the KernelAgent
+//! two-stage fused-d_mag backward (paper §7) that folds the d_mag partial
+//! reduction into the backward pass.
+
+use crate::dora::config::{ActShape, ModuleShape};
+use crate::dora::norm_cpu::AllocTracker;
+use crate::kernels::generic::{self, with_elem, DMAG_ROWS_PER_BLOCK};
+use crate::kernels::norm;
+use crate::kernels::{BackendKind, ComposeKernel, NormEngine};
+use crate::numerics::half::Dtype;
+
+/// The fused (single-pass) CPU backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FusedCpu;
+
+impl ComposeKernel for FusedCpu {
+    fn name(&self) -> &'static str {
+        "fused-cpu"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Fused
+    }
+
+    fn forward(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+    ) {
+        with_elem!(dt, E, generic::forward_rows::<E>(base, lora, g, s, act.d_out, delta));
+    }
+
+    fn forward_dual(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+        inner: &mut [f32],
+    ) {
+        with_elem!(dt, E, {
+            generic::forward_dual_rows::<E>(base, lora, g, s, act.d_out, delta, inner)
+        });
+    }
+
+    fn backward(
+        &self,
+        d_delta: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) {
+        with_elem!(dt, E, {
+            generic::backward_rows::<E>(d_delta, g, s, act.d_out, d_lora, d_base)
+        });
+    }
+
+    fn backward_with_dmag(
+        &self,
+        d_delta: &[f32],
+        inner: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) -> Vec<f32> {
+        // Two-stage deterministic fusion: blocks of rows accumulate
+        // private f64 partials; stage 2 reduces in fixed block order.
+        let d = act.d_out;
+        let block = DMAG_ROWS_PER_BLOCK;
+        let n_blocks = act.rows.div_ceil(block);
+        let mut partials = vec![0f64; n_blocks * d];
+        with_elem!(dt, E, {
+            for blk in 0..n_blocks {
+                let r0 = blk * block;
+                let r1 = (r0 + block).min(act.rows);
+                generic::backward_dmag_block::<E>(
+                    &d_delta[r0 * d..r1 * d],
+                    &inner[r0 * d..r1 * d],
+                    g,
+                    s,
+                    d,
+                    &mut d_lora[r0 * d..r1 * d],
+                    &mut d_base[r0 * d..r1 * d],
+                    &mut partials[blk * d..(blk + 1) * d],
+                );
+            }
+        });
+        generic::dmag_reduce_partials(&partials, n_blocks, d)
+    }
+}
+
+impl NormEngine for FusedCpu {
+    fn name(&self) -> &'static str {
+        "fused-cpu"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Fused
+    }
+
+    fn weight_norm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32> {
+        with_elem!(dt, E, norm::factored_norm_seq::<E>(w, a, b, s, m, budget, tracker))
+    }
+}

@@ -1,0 +1,289 @@
+//! Dtype-generic element abstraction + the shared compose loop cores.
+//!
+//! Every backend (eager, fused, parallel-tiled) executes the SAME
+//! per-element arithmetic, monomorphized over an [`Elem`] marker that
+//! injects the storage dtype's rounding after each operation:
+//!
+//! * [`F32`]      — identity rounding: the loops compile to exactly the
+//!   arithmetic the flat f32 kernels always ran (bitwise-preserving).
+//! * [`SoftBf16`] / [`SoftF16`] — software round-to-nearest-even after
+//!   every op (`numerics::half`), so the paper's near-unity cancellation
+//!   regime (§3.1) is exercisable end-to-end in the precision the paper
+//!   ships, without vendoring a half-float crate.
+//!
+//! Because all backends share these cores, backend parity is *structural*:
+//! eager vs fused vs parallel-tiled differ only in pass structure and
+//! scheduling, never in per-element evaluation order — which is what makes
+//! the §3.1 "bitwise parity across composition paths" claim hold on CPU
+//! in f32 and bf16 alike.
+
+use crate::numerics::half::{round_bf16, round_f16, Dtype};
+
+/// Compile-time dtype marker: quantize an f32 intermediate to the storage
+/// precision. `q` is the identity for f32, so the f32 instantiations are
+/// exactly the historical flat kernels.
+pub trait Elem: Send + Sync + 'static {
+    const DTYPE: Dtype;
+    fn q(x: f32) -> f32;
+}
+
+/// Native f32 storage (no rounding).
+pub enum F32 {}
+
+/// Software-emulated bfloat16 storage (RNE after every op).
+pub enum SoftBf16 {}
+
+/// Software-emulated IEEE fp16 storage (RNE after every op).
+pub enum SoftF16 {}
+
+impl Elem for F32 {
+    const DTYPE: Dtype = Dtype::F32;
+    #[inline(always)]
+    fn q(x: f32) -> f32 {
+        x
+    }
+}
+
+impl Elem for SoftBf16 {
+    const DTYPE: Dtype = Dtype::Bf16;
+    #[inline(always)]
+    fn q(x: f32) -> f32 {
+        round_bf16(x)
+    }
+}
+
+impl Elem for SoftF16 {
+    const DTYPE: Dtype = Dtype::F16;
+    #[inline(always)]
+    fn q(x: f32) -> f32 {
+        round_f16(x)
+    }
+}
+
+/// Dispatch a runtime [`Dtype`] to a monomorphized `Elem` instantiation.
+macro_rules! with_elem {
+    ($dt:expr, $E:ident, $body:expr) => {
+        match $dt {
+            $crate::numerics::half::Dtype::F32 => {
+                type $E = $crate::kernels::generic::F32;
+                $body
+            }
+            $crate::numerics::half::Dtype::Bf16 => {
+                type $E = $crate::kernels::generic::SoftBf16;
+                $body
+            }
+            $crate::numerics::half::Dtype::F16 => {
+                type $E = $crate::kernels::generic::SoftF16;
+                $body
+            }
+        }
+    };
+}
+pub(crate) use with_elem;
+
+// ---------------------------------------------------------------------------
+// Fused (single-pass) cores. All operate on whole rows: callers hand in any
+// contiguous row range, which is how the tiled backend reuses them.
+// ---------------------------------------------------------------------------
+
+/// Single-pass compose over `out.len() / d` rows:
+/// `delta = (g-1)*base + g*(s*lora)` in the canonical order (`s*lora`
+/// first, then `g*(.)` — §3.1).
+#[inline]
+pub(crate) fn forward_rows<E: Elem>(
+    base: &[f32],
+    lora: &[f32],
+    g: &[f32],
+    s: f32,
+    d: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(base.len(), out.len());
+    debug_assert_eq!(lora.len(), out.len());
+    for ((orow, brow), lrow) in out
+        .chunks_exact_mut(d)
+        .zip(base.chunks_exact(d))
+        .zip(lora.chunks_exact(d))
+    {
+        for j in 0..d {
+            let t1 = E::q(s * lrow[j]);
+            let t2 = E::q(g[j] * t1);
+            let t3 = E::q(E::q(g[j] - 1.0) * brow[j]);
+            orow[j] = E::q(t3 + t2);
+        }
+    }
+}
+
+/// Tier-1 dual-output compose: one pass, two outputs
+/// (`delta` + `inner = s*lora + base`, saved for the backward).
+#[inline]
+pub(crate) fn forward_dual_rows<E: Elem>(
+    base: &[f32],
+    lora: &[f32],
+    g: &[f32],
+    s: f32,
+    d: usize,
+    delta: &mut [f32],
+    inner: &mut [f32],
+) {
+    for (((orow, irow), brow), lrow) in delta
+        .chunks_exact_mut(d)
+        .zip(inner.chunks_exact_mut(d))
+        .zip(base.chunks_exact(d))
+        .zip(lora.chunks_exact(d))
+    {
+        for j in 0..d {
+            let sl = E::q(s * lrow[j]);
+            let t2 = E::q(g[j] * sl);
+            let t3 = E::q(E::q(g[j] - 1.0) * brow[j]);
+            orow[j] = E::q(t3 + t2);
+            irow[j] = E::q(sl + brow[j]);
+        }
+    }
+}
+
+/// Fused backward: one pass over `d_delta`, two outputs.
+#[inline]
+pub(crate) fn backward_rows<E: Elem>(
+    d_delta: &[f32],
+    g: &[f32],
+    s: f32,
+    d: usize,
+    d_lora: &mut [f32],
+    d_base: &mut [f32],
+) {
+    for ((dlrow, dbrow), ddrow) in d_lora
+        .chunks_exact_mut(d)
+        .zip(d_base.chunks_exact_mut(d))
+        .zip(d_delta.chunks_exact(d))
+    {
+        for j in 0..d {
+            let dd = ddrow[j];
+            dlrow[j] = E::q(g[j] * E::q(s * dd));
+            dbrow[j] = E::q(E::q(g[j] - 1.0) * dd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eager (multi-pass) cores: the op-by-op chain with materialized
+// temporaries, mirroring the separate CUDA kernels of the eager path.
+// ---------------------------------------------------------------------------
+
+/// The 4-pass eager chain into preallocated temporaries. Bitwise identical
+/// to [`forward_rows`] per dtype (same per-element op sequence).
+pub(crate) fn eager_chain<E: Elem>(
+    base: &[f32],
+    lora: &[f32],
+    g: &[f32],
+    s: f32,
+    d: usize,
+    t1: &mut [f32],
+    t2: &mut [f32],
+    t3: &mut [f32],
+    delta: &mut [f32],
+) {
+    // Pass 1: t1 = s * lora.
+    for (t, &l) in t1.iter_mut().zip(lora) {
+        *t = E::q(s * l);
+    }
+    // Pass 2: t2 = g * t1 (g broadcast along rows).
+    for (t2row, t1row) in t2.chunks_exact_mut(d).zip(t1.chunks_exact(d)) {
+        for j in 0..d {
+            t2row[j] = E::q(g[j] * t1row[j]);
+        }
+    }
+    // Pass 3: t3 = (g - 1) * base.
+    for (t3row, brow) in t3.chunks_exact_mut(d).zip(base.chunks_exact(d)) {
+        for j in 0..d {
+            t3row[j] = E::q(E::q(g[j] - 1.0) * brow[j]);
+        }
+    }
+    // Pass 4: delta = t3 + t2.
+    for ((o, &x), &y) in delta.iter_mut().zip(t3.iter()).zip(t2.iter()) {
+        *o = E::q(x + y);
+    }
+}
+
+/// Eager backward: two separate passes (two kernels).
+pub(crate) fn backward_eager_rows<E: Elem>(
+    d_delta: &[f32],
+    g: &[f32],
+    s: f32,
+    d: usize,
+    d_lora: &mut [f32],
+    d_base: &mut [f32],
+) {
+    for (dlrow, ddrow) in d_lora.chunks_exact_mut(d).zip(d_delta.chunks_exact(d)) {
+        for j in 0..d {
+            dlrow[j] = E::q(g[j] * E::q(s * ddrow[j]));
+        }
+    }
+    for (dbrow, ddrow) in d_base.chunks_exact_mut(d).zip(d_delta.chunks_exact(d)) {
+        for j in 0..d {
+            dbrow[j] = E::q(E::q(g[j] - 1.0) * ddrow[j]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// d_mag reduction cores (dtype-independent: deterministic f64 accumulation
+// in fixed order, §3.2 — never atomics).
+// ---------------------------------------------------------------------------
+
+/// Row-block size of the two-stage d_mag reduction (stage-1 partials are
+/// private per block; stage 2 reduces blocks in fixed order).
+pub(crate) const DMAG_ROWS_PER_BLOCK: usize = 32;
+
+/// Sequential deterministic d_mag: `d_g[j] = sum_rows d_delta * inner`.
+pub(crate) fn dmag(d_delta: &[f32], inner: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut d_g = vec![0f64; d];
+    for row in 0..rows {
+        let o = row * d;
+        for j in 0..d {
+            d_g[j] += d_delta[o + j] as f64 * inner[o + j] as f64;
+        }
+    }
+    d_g.into_iter().map(|x| x as f32).collect()
+}
+
+/// Stage 1 of the fused-dmag backward for one row block: writes d_lora and
+/// d_base for the block and accumulates the block's f64 d_mag partials.
+#[inline]
+pub(crate) fn backward_dmag_block<E: Elem>(
+    d_delta: &[f32],
+    inner: &[f32],
+    g: &[f32],
+    s: f32,
+    d: usize,
+    d_lora: &mut [f32],
+    d_base: &mut [f32],
+    part: &mut [f64],
+) {
+    debug_assert_eq!(part.len(), d);
+    for (((dlrow, dbrow), ddrow), irow) in d_lora
+        .chunks_exact_mut(d)
+        .zip(d_base.chunks_exact_mut(d))
+        .zip(d_delta.chunks_exact(d))
+        .zip(inner.chunks_exact(d))
+    {
+        for j in 0..d {
+            let dd = ddrow[j];
+            dlrow[j] = E::q(g[j] * E::q(s * dd));
+            dbrow[j] = E::q(E::q(g[j] - 1.0) * dd);
+            part[j] += dd as f64 * irow[j] as f64;
+        }
+    }
+}
+
+/// Stage 2: reduce per-block partials in fixed block order.
+pub(crate) fn dmag_reduce_partials(partials: &[f64], n_blocks: usize, d: usize) -> Vec<f32> {
+    let mut d_g = vec![0f64; d];
+    for blk in 0..n_blocks {
+        let part = &partials[blk * d..(blk + 1) * d];
+        for j in 0..d {
+            d_g[j] += part[j];
+        }
+    }
+    d_g.into_iter().map(|x| x as f32).collect()
+}

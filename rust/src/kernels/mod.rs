@@ -1,0 +1,558 @@
+//! Unified kernel-backend layer: one dispatch surface over the
+//! compose/norm hot paths.
+//!
+//! The flat f32 free functions (`dora::compose_cpu`, `dora::norm_cpu`)
+//! grew call sites in the dispatcher, the coordinator, the benches, and
+//! the report generator, which made every new execution strategy (threads,
+//! bf16, future PJRT/GPU offload, EDoRA-style variant kernels) an
+//! every-caller change. This module is the extensible replacement:
+//!
+//! * [`ComposeKernel`] / [`NormEngine`] — the backend traits (forward,
+//!   dual-output, backward, deterministic d_mag; weight norm with
+//!   [`AllocTracker`] accounting), dtype-generic over f32 and the
+//!   software half formats via [`Dtype`].
+//! * [`EagerCpu`], [`FusedCpu`], [`ParallelTiledCpu`] — the concrete
+//!   backends: the 4-pass chain, the single-pass fused kernels, and
+//!   row-tiled fused kernels on a scoped thread pool.
+//! * [`KernelRegistry`] — owns the available backends; `select` combines
+//!   the three-tier dispatch decision (`dispatch::select_tier`) with a
+//!   backend choice, returning a [`KernelChoice`] handle instead of a
+//!   bare enum.
+//!
+//! The flat functions survive as thin wrappers over the same generic
+//! cores, so their f32 results are bitwise unchanged.
+//!
+//! [`AllocTracker`]: crate::dora::norm_cpu::AllocTracker
+
+pub mod eager;
+pub mod fused;
+pub(crate) mod generic;
+pub(crate) mod norm;
+pub mod tiled;
+
+use std::sync::{Arc, OnceLock};
+
+use crate::dispatch::{self, ComposeCtx, DispatchEnv, Tier};
+use crate::dora::config::{ActShape, ModuleShape};
+use crate::dora::norm_cpu::AllocTracker;
+use crate::numerics::half::Dtype;
+
+pub use eager::EagerCpu;
+pub use fused::FusedCpu;
+pub use generic::{Elem, SoftBf16, SoftF16, F32};
+pub use tiled::{ParallelTiledCpu, DEFAULT_TILE_ROWS};
+
+/// Execution strategy of a backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Op-by-op multi-pass chain (Tier-3 fallback, correctness baseline).
+    Eager,
+    /// Single-pass fused kernels.
+    Fused,
+    /// Fused kernels over row-tiles on a scoped thread pool.
+    ParallelTiled,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Eager => "eager",
+            BackendKind::Fused => "fused",
+            BackendKind::ParallelTiled => "parallel-tiled",
+        }
+    }
+}
+
+/// A compose backend: the three kernel entry points of the paper's design
+/// (forward, Tier-1 dual-output forward, backward) plus the deterministic
+/// d_mag reduction. `dt` selects the storage precision; intermediates are
+/// rounded to it after every op (identity for [`Dtype::F32`]).
+#[allow(clippy::too_many_arguments)]
+pub trait ComposeKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn kind(&self) -> BackendKind;
+
+    /// Worker threads this backend uses (1 for sequential backends).
+    fn parallelism(&self) -> usize {
+        1
+    }
+
+    /// `delta = (g-1)*base + g*(s*lora)`, canonical order (§3.1).
+    fn forward(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+    );
+
+    /// Tier-1 dual output: `delta` plus `inner = s*lora + base`.
+    fn forward_dual(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+        inner: &mut [f32],
+    );
+
+    /// Backward pair: `d_lora = g*(s*d_delta)`, `d_base = (g-1)*d_delta`.
+    fn backward(
+        &self,
+        d_delta: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    );
+
+    /// Deterministic d_mag direction gradient (f64 row reduction in fixed
+    /// order — never atomics, §3.2).
+    fn dmag(&self, d_delta: &[f32], inner: &[f32], act: ActShape) -> Vec<f32> {
+        generic::dmag(d_delta, inner, act.rows, act.d_out)
+    }
+
+    /// Backward with the d_mag reduction folded in (KernelAgent two-stage
+    /// strategy, §7). Default: separate backward + reduction passes.
+    fn backward_with_dmag(
+        &self,
+        d_delta: &[f32],
+        inner: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) -> Vec<f32> {
+        self.backward(d_delta, g, s, act, dt, d_lora, d_base);
+        self.dmag(d_delta, inner, act)
+    }
+
+    /// Allocating convenience wrapper around [`ComposeKernel::forward`].
+    fn forward_alloc(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+    ) -> Vec<f32> {
+        let mut delta = vec![0f32; act.elems()];
+        self.forward(base, lora, g, s, act, dt, &mut delta);
+        delta
+    }
+}
+
+/// A weight-norm backend: row-wise `||W + s*B@A||` (Algorithm 1) with
+/// exact transient-allocation accounting through an [`AllocTracker`].
+#[allow(clippy::too_many_arguments)]
+pub trait NormEngine: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn kind(&self) -> BackendKind;
+
+    fn weight_norm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32>;
+}
+
+/// Approximate last-level-cache size used for the parallel-backend
+/// crossover: below this working set a single core is already
+/// memory-latency-bound and thread fan-out only adds overhead.
+pub const LLC_BYTES: u64 = 32 << 20;
+
+/// Bytes the fused compose streams touch (3 activation-sized f32 arrays).
+pub fn compose_working_set_bytes(act: ActShape) -> u64 {
+    3 * act.elems() as u64 * 4
+}
+
+/// The dispatch result: the selected tier plus a runnable backend handle.
+#[derive(Clone)]
+pub struct KernelChoice {
+    pub tier: Tier,
+    pub backend: Arc<dyn ComposeKernel>,
+}
+
+impl KernelChoice {
+    /// Did dispatch pick a fused tier (1 or 2)?
+    pub fn is_fused(&self) -> bool {
+        self.tier != Tier::Eager
+    }
+}
+
+/// Owns the available backends and maps dispatch decisions onto them.
+pub struct KernelRegistry {
+    compose: Vec<Arc<dyn ComposeKernel>>,
+    norms: Vec<Arc<dyn NormEngine>>,
+}
+
+impl KernelRegistry {
+    /// The standard CPU backend set; `threads` sizes the parallel backend
+    /// (0 = all cores).
+    pub fn with_defaults(threads: usize) -> KernelRegistry {
+        let eager = Arc::new(EagerCpu);
+        let fused = Arc::new(FusedCpu);
+        let tiled = Arc::new(ParallelTiledCpu::new(threads));
+        KernelRegistry {
+            compose: vec![
+                eager.clone() as Arc<dyn ComposeKernel>,
+                fused.clone() as Arc<dyn ComposeKernel>,
+                tiled as Arc<dyn ComposeKernel>,
+            ],
+            norms: vec![
+                eager as Arc<dyn NormEngine>,
+                fused as Arc<dyn NormEngine>,
+                Arc::new(ParallelTiledCpu::new(threads)) as Arc<dyn NormEngine>,
+            ],
+        }
+    }
+
+    pub fn compose_backends(&self) -> &[Arc<dyn ComposeKernel>] {
+        &self.compose
+    }
+
+    pub fn norm_engines(&self) -> &[Arc<dyn NormEngine>] {
+        &self.norms
+    }
+
+    /// Backend handle by kind (the registry always carries all kinds).
+    pub fn compose(&self, kind: BackendKind) -> Arc<dyn ComposeKernel> {
+        self.compose
+            .iter()
+            .find(|b| b.kind() == kind)
+            .expect("registry carries every BackendKind")
+            .clone()
+    }
+
+    pub fn norm(&self, kind: BackendKind) -> Arc<dyn NormEngine> {
+        self.norms
+            .iter()
+            .find(|b| b.kind() == kind)
+            .expect("registry carries every BackendKind")
+            .clone()
+    }
+
+    /// The dispatch surface: combine the three-tier decision (paper §4,
+    /// Figure 2) with a backend choice. Fused tiers run the parallel
+    /// backend when BOTH the caller's env and the registered backend
+    /// actually have threads (so selection never names a hot path the
+    /// backend won't execute) and the working set exceeds LLC; Tier 3
+    /// runs the eager chain.
+    pub fn select(&self, env: &DispatchEnv, ctx: &ComposeCtx) -> KernelChoice {
+        let tier = dispatch::select_tier(env, ctx);
+        let kind = match tier {
+            Tier::Eager => BackendKind::Eager,
+            Tier::FusedForward | Tier::FusedBackward => {
+                let tiled_workers = self.compose(BackendKind::ParallelTiled).parallelism();
+                if env.threads > 1
+                    && tiled_workers > 1
+                    && compose_working_set_bytes(ctx.act) > LLC_BYTES
+                {
+                    BackendKind::ParallelTiled
+                } else {
+                    BackendKind::Fused
+                }
+            }
+        };
+        KernelChoice { tier, backend: self.compose(kind) }
+    }
+}
+
+static REGISTRY: OnceLock<KernelRegistry> = OnceLock::new();
+
+/// The process-wide registry, initialized once from the environment
+/// (`DORA_THREADS` sizes the parallel backend).
+pub fn registry() -> &'static KernelRegistry {
+    REGISTRY.get_or_init(|| KernelRegistry::with_defaults(DispatchEnv::from_env().threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn backends() -> Vec<Box<dyn ComposeKernel>> {
+        vec![
+            Box::new(EagerCpu),
+            Box::new(FusedCpu),
+            // Tiny tiles + more workers than tiles: exercises uneven
+            // tails and the worker-clamp path.
+            Box::new(ParallelTiledCpu::with_tile(4, 3)),
+        ]
+    }
+
+    fn inputs(seed: u64, act: ActShape, dt: Dtype) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let q = |v: Vec<f32>| v.into_iter().map(|x| dt.quantize(x)).collect::<Vec<f32>>();
+        let base = q(rng.normal_vec_f32(act.elems(), 1.0));
+        let lora = q(rng.normal_vec_f32(act.elems(), 0.3));
+        let g: Vec<f32> = (0..act.d_out)
+            .map(|_| dt.quantize(1.0 + rng.normal() as f32 * 0.002))
+            .collect();
+        (base, lora, g)
+    }
+
+    /// Signed integer key over the bf16 bit pattern: adjacent
+    /// representable values differ by exactly 1.
+    fn bf16_key(x: f32) -> i64 {
+        let h = (x.to_bits() >> 16) as i64;
+        if h & 0x8000 != 0 {
+            -(h & 0x7FFF)
+        } else {
+            h
+        }
+    }
+
+    fn assert_close_ulp(dt: Dtype, a: f32, b: f32, ctx: &str) -> Result<(), String> {
+        match dt {
+            Dtype::F32 => prop_assert(
+                a.to_bits() == b.to_bits(),
+                format!("{ctx}: f32 not bitwise: {a} vs {b}"),
+            ),
+            _ => prop_assert(
+                (bf16_key(a) - bf16_key(b)).abs() <= 1,
+                format!("{ctx}: more than 1 ULP apart: {a} vs {b}"),
+            ),
+        }
+    }
+
+    #[test]
+    fn property_backend_parity_forward_f32_and_bf16() {
+        // Satellite criterion: eager, fused, and parallel-tiled compose
+        // agree bitwise in f32 and within 1 ULP in bf16 across randomized
+        // shapes, including dims not divisible by the tile size.
+        check("backend parity fwd", 40, |gen| {
+            let dt = gen.pick(&[Dtype::F32, Dtype::Bf16]);
+            let act = ActShape::new(gen.usize_in(1, 40), gen.usize_in(1, 97));
+            let (base, lora, g) = inputs(gen.case as u64, act, dt);
+            let s = dt.quantize(gen.f64_in(0.1, 3.0) as f32);
+            let all = backends();
+            let reference = all[0].forward_alloc(&base, &lora, &g, s, act, dt);
+            for be in &all[1..] {
+                let got = be.forward_alloc(&base, &lora, &g, s, act, dt);
+                for i in 0..act.elems() {
+                    assert_close_ulp(
+                        dt,
+                        reference[i],
+                        got[i],
+                        &format!("{} elem {i} ({act:?})", be.name()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_backend_parity_dual_and_backward() {
+        check("backend parity dual+bwd", 30, |gen| {
+            let dt = gen.pick(&[Dtype::F32, Dtype::Bf16]);
+            let act = ActShape::new(gen.usize_in(1, 30), gen.usize_in(1, 65));
+            let (base, lora, g) = inputs(100 + gen.case as u64, act, dt);
+            let s = dt.quantize(gen.f64_in(0.1, 3.0) as f32);
+            let n = act.elems();
+            let all = backends();
+            let mut rd = vec![0f32; n];
+            let mut ri = vec![0f32; n];
+            all[0].forward_dual(&base, &lora, &g, s, act, dt, &mut rd, &mut ri);
+            let (mut rl, mut rb) = (vec![0f32; n], vec![0f32; n]);
+            all[0].backward(&base, &g, s, act, dt, &mut rl, &mut rb);
+            let r_dmag = all[0].dmag(&base, &lora, act);
+            for be in &all[1..] {
+                let mut dd = vec![0f32; n];
+                let mut ii = vec![0f32; n];
+                be.forward_dual(&base, &lora, &g, s, act, dt, &mut dd, &mut ii);
+                let (mut dl, mut db) = (vec![0f32; n], vec![0f32; n]);
+                be.backward(&base, &g, s, act, dt, &mut dl, &mut db);
+                let dmag = be.dmag(&base, &lora, act);
+                for i in 0..n {
+                    assert_close_ulp(dt, rd[i], dd[i], &format!("{} dual-delta {i}", be.name()))?;
+                    assert_close_ulp(dt, ri[i], ii[i], &format!("{} dual-inner {i}", be.name()))?;
+                    assert_close_ulp(dt, rl[i], dl[i], &format!("{} d_lora {i}", be.name()))?;
+                    assert_close_ulp(dt, rb[i], db[i], &format!("{} d_base {i}", be.name()))?;
+                }
+                for j in 0..act.d_out {
+                    prop_assert(
+                        r_dmag[j].to_bits() == dmag[j].to_bits(),
+                        format!("{} dmag {j}: {} vs {}", be.name(), r_dmag[j], dmag[j]),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_dmag_backward_parity_across_backends() {
+        let act = ActShape::new(100, 48); // odd 32-row-block tail
+        let dt = Dtype::F32;
+        let (d_delta, inner, g) = inputs(7, act, dt);
+        let n = act.elems();
+        let all = backends();
+        let (mut rl, mut rb) = (vec![0f32; n], vec![0f32; n]);
+        let r_dg = all[1].backward_with_dmag(&d_delta, &inner, &g, 1.7, act, dt, &mut rl, &mut rb);
+        for be in &all {
+            let (mut dl, mut db) = (vec![0f32; n], vec![0f32; n]);
+            let dg = be.backward_with_dmag(&d_delta, &inner, &g, 1.7, act, dt, &mut dl, &mut db);
+            assert_eq!(dl, rl, "{} d_lora", be.name());
+            assert_eq!(db, rb, "{} d_base", be.name());
+            for j in 0..act.d_out {
+                // Eager's default path reduces rows in row order; the
+                // two-stage paths reduce identical block partials — both
+                // f64, so they agree to f32 rounding noise.
+                assert!(
+                    (dg[j] - r_dg[j]).abs() <= 1e-4 * r_dg[j].abs().max(1.0),
+                    "{} dmag {j}: {} vs {}",
+                    be.name(),
+                    dg[j],
+                    r_dg[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_norm_engine_parity() {
+        check("norm engine parity", 20, |gen| {
+            let dt = gen.pick(&[Dtype::F32, Dtype::Bf16]);
+            let d_out = gen.usize_in(3, 33);
+            let d_in = gen.usize_in(4, 90);
+            let r = gen.usize_in(1, 9);
+            let m = ModuleShape::new(d_out, d_in, r);
+            let s = gen.f64_in(0.0, 3.0) as f32;
+            let mut rng = Rng::new(gen.case as u64 + 500);
+            let w = rng.normal_vec_f32(d_out * d_in, 0.1);
+            let a = rng.normal_vec_f32(r * d_in, 0.2);
+            let b = rng.normal_vec_f32(d_out * r, 0.2);
+            let budget = (d_out * 64 * 4) as u64; // force multiple chunks
+            let mut t1 = AllocTracker::new();
+            let seq = FusedCpu.weight_norm(&w, &a, &b, s, m, budget, dt, &mut t1);
+            let tiled_engine = ParallelTiledCpu::with_tile(3, 2);
+            let mut t2 = AllocTracker::new();
+            let tiled = tiled_engine.weight_norm(&w, &a, &b, s, m, budget, dt, &mut t2);
+            for i in 0..d_out {
+                prop_assert(
+                    seq[i].to_bits() == tiled[i].to_bits(),
+                    format!("row {i}: {} vs {} ({m:?} {dt:?})", seq[i], tiled[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eager_norm_engine_is_the_dense_baseline() {
+        // The Eager kind's NormEngine is the op-by-op dense B@A path, not
+        // a relabeled factored engine: same values and tracked peak as
+        // dense_ba_norm, with the factored engines using far smaller
+        // transients.
+        let m = ModuleShape::new(12, 30, 4);
+        let mut rng = Rng::new(21);
+        let w = rng.normal_vec_f32(m.d_out * m.d_in, 0.1);
+        let a = rng.normal_vec_f32(m.rank * m.d_in, 0.2);
+        let b = rng.normal_vec_f32(m.d_out * m.rank, 0.2);
+        let mut t1 = AllocTracker::new();
+        let via_engine = EagerCpu.weight_norm(&w, &a, &b, 1.5, m, u64::MAX, Dtype::F32, &mut t1);
+        let mut t2 = AllocTracker::new();
+        let direct = crate::dora::norm_cpu::dense_ba_norm(&w, &a, &b, 1.5, m, &mut t2);
+        assert_eq!(via_engine, direct);
+        assert_eq!(t1.peak(), t2.peak());
+        let mut t3 = AllocTracker::new();
+        let fact = FusedCpu.weight_norm(&w, &a, &b, 1.5, m, u64::MAX, Dtype::F32, &mut t3);
+        assert!(t3.peak() < t1.peak(), "factored should use less transient memory");
+        for i in 0..m.d_out {
+            assert!(
+                (fact[i] - direct[i]).abs() < 1e-3 * direct[i].abs().max(1.0),
+                "row {i}: {} vs {}",
+                fact[i],
+                direct[i]
+            );
+        }
+    }
+
+    #[test]
+    fn bf16_outputs_are_representable() {
+        // Every value a bf16 kernel emits must be exactly representable in
+        // bf16 (the quantization is applied after the final op).
+        let act = ActShape::new(9, 37);
+        let (base, lora, g) = inputs(3, act, Dtype::Bf16);
+        for be in backends() {
+            let out = be.forward_alloc(&base, &lora, &g, 1.5, act, Dtype::Bf16);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(
+                    crate::numerics::half::round_bf16(v),
+                    v,
+                    "{} elem {i} not bf16-representable",
+                    be.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn registry_selects_by_tier_and_working_set() {
+        let reg = KernelRegistry::with_defaults(8);
+        let mut env = DispatchEnv { threads: 8, ..DispatchEnv::default() };
+        // Tier 3 -> eager.
+        let small = ComposeCtx::training(ActShape::new(16, 256));
+        let c = reg.select(&env, &small);
+        assert_eq!(c.tier, Tier::Eager);
+        assert_eq!(c.backend.kind(), BackendKind::Eager);
+        // Tier 1, LLC-exceeding -> parallel tiled.
+        let big = ComposeCtx::training(ActShape::new(8192, 8192));
+        let c = reg.select(&env, &big);
+        assert_eq!(c.tier, Tier::FusedBackward);
+        assert_eq!(c.backend.kind(), BackendKind::ParallelTiled);
+        assert!(c.is_fused());
+        // Tier 2 below LLC -> fused sequential.
+        let mid = ComposeCtx::inference(ActShape::new(512, 2048));
+        let c = reg.select(&env, &mid);
+        assert_eq!(c.tier, Tier::FusedForward);
+        assert_eq!(c.backend.kind(), BackendKind::Fused);
+        // Single-threaded env never picks the parallel backend.
+        env.threads = 1;
+        let c = reg.select(&env, &big);
+        assert_eq!(c.backend.kind(), BackendKind::Fused);
+    }
+
+    #[test]
+    fn registry_carries_all_kinds_for_both_traits() {
+        let reg = KernelRegistry::with_defaults(2);
+        for kind in [BackendKind::Eager, BackendKind::Fused, BackendKind::ParallelTiled] {
+            assert_eq!(reg.compose(kind).kind(), kind);
+            assert_eq!(reg.norm(kind).kind(), kind);
+        }
+        assert_eq!(reg.compose_backends().len(), 3);
+        assert_eq!(reg.norm_engines().len(), 3);
+        assert!(reg.compose(BackendKind::ParallelTiled).parallelism() >= 2);
+    }
+
+    #[test]
+    fn parallel_tiled_matches_flat_kernels_on_large_shape() {
+        // A shape large enough that several workers genuinely run.
+        let act = ActShape::new(531, 129); // not divisible by tile or d
+        let (base, lora, g) = inputs(11, act, Dtype::F32);
+        let tiled = ParallelTiledCpu::with_tile(4, 64);
+        let got = tiled.forward_alloc(&base, &lora, &g, 2.0, act, Dtype::F32);
+        let want = crate::dora::compose_cpu::compose_fused(&base, &lora, &g, 2.0, act);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,354 @@
+//! Shared factored-norm cores (Algorithm 1) behind the [`NormEngine`]
+//! backends, plus the chunk accumulator the d_in-sharded norm reuses.
+//!
+//! Every term of Algorithm 1 is a sum over d_in column ranges, so one
+//! accumulator serves three executors:
+//!
+//! * [`factored_norm_seq`]   — the sequential chunked engine (the flat
+//!   `norm_cpu::factored_norm`, now dtype-generic);
+//! * [`factored_norm_tiled`] — d_out row-tiles on a scoped thread pool
+//!   (Gram first, then embarrassingly parallel rows — bitwise identical
+//!   to the sequential engine because per-row accumulation order is
+//!   unchanged);
+//! * `sharded_norm::worker_partials` — one worker's column shard.
+//!
+//! Accumulation discipline matches the paper: inputs are read at storage
+//! precision (`E::q` per load — the identity for f32), contractions
+//! accumulate in f32, row sum-of-squares in f64, assembly constants
+//! (`2s`, `s^2`) precomputed in f64 and rounded once.
+//!
+//! [`NormEngine`]: crate::kernels::NormEngine
+
+use crate::dora::config::ModuleShape;
+use crate::dora::norm_cpu::{chunk_size, AllocTracker};
+use crate::kernels::generic::Elem;
+
+/// NaN-propagating clamp-then-sqrt: `f32::max` in Rust returns the
+/// non-NaN operand, which would silently collapse NaNs to zero — the
+/// opposite of the paper's clamp_min semantics (Appendix C.3).
+#[inline]
+pub(crate) fn sqrt_clamp_min0(total: f32) -> f32 {
+    if total.is_nan() {
+        f32::NAN
+    } else {
+        total.max(0.0).sqrt()
+    }
+}
+
+fn vec_f32(tracker: &mut AllocTracker, n: usize) -> Vec<f32> {
+    tracker.alloc((n * 4) as u64);
+    vec![0f32; n]
+}
+
+fn drop_vec(tracker: &mut AllocTracker, v: Vec<f32>) {
+    tracker.free((v.len() * 4) as u64);
+    drop(v);
+}
+
+/// Accumulate one column range `[start, stop)` of Algorithm 1's three
+/// partial sums. `w_stride` / `a_stride` are the row strides of W and A
+/// (`d_in` for full matrices, the shard width for d_in shards). `u_c` is
+/// the reusable `[d_out, r]` chunk workspace.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accumulate_columns<E: Elem>(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    d_out: usize,
+    r: usize,
+    w_stride: usize,
+    a_stride: usize,
+    start: usize,
+    stop: usize,
+    base_sq: &mut [f32],
+    cross: &mut [f32],
+    gram: &mut [f32],
+    u_c: &mut [f32],
+) {
+    let width = stop - start;
+    // base_sq += rowwise sum of W_c^2 (f64 chunk accumulator).
+    for i in 0..d_out {
+        let row = &w[i * w_stride + start..i * w_stride + stop];
+        let mut acc = 0f64;
+        for &x in row {
+            let x = E::q(x);
+            acc += (x as f64) * (x as f64);
+        }
+        base_sq[i] += acc as f32;
+    }
+    // G += A_c @ A_c^T  [r, r]
+    for i in 0..r {
+        let ai = &a[i * a_stride + start..i * a_stride + stop];
+        for j in i..r {
+            let aj = &a[j * a_stride + start..j * a_stride + stop];
+            let mut acc = 0f32;
+            for t in 0..width {
+                acc += E::q(ai[t]) * E::q(aj[t]);
+            }
+            gram[i * r + j] += acc;
+            if i != j {
+                gram[j * r + i] += acc;
+            }
+        }
+    }
+    // U_c = W_c @ A_c^T  [d_out, r]; cross += sum(B * U_c, dim=1).
+    for i in 0..d_out {
+        let wrow = &w[i * w_stride + start..i * w_stride + stop];
+        for l in 0..r {
+            let arow = &a[l * a_stride + start..l * a_stride + stop];
+            let mut acc = 0f32;
+            for t in 0..width {
+                acc += E::q(wrow[t]) * E::q(arow[t]);
+            }
+            u_c[i * r + l] = acc;
+        }
+        let brow = &b[i * r..(i + 1) * r];
+        let mut cacc = 0f32;
+        for l in 0..r {
+            cacc += E::q(brow[l]) * u_c[i * r + l];
+        }
+        cross[i] += cacc;
+    }
+}
+
+/// `ba_sq` for one row: `(B G B^T)_ii` from the global Gram.
+#[inline]
+pub(crate) fn ba_sq_row<E: Elem>(brow: &[f32], gram: &[f32], r: usize) -> f32 {
+    let mut acc = 0f32;
+    for l in 0..r {
+        let mut bg = 0f32;
+        for t in 0..r {
+            bg += E::q(brow[t]) * gram[t * r + l];
+        }
+        acc += bg * E::q(brow[l]);
+    }
+    acc
+}
+
+/// Gram-only chunk accumulation (used by the tiled engine, which computes
+/// the shared `[r, r]` Gram before fanning rows out to threads).
+fn gram_chunk<E: Elem>(a: &[f32], r: usize, a_stride: usize, start: usize, stop: usize, gram: &mut [f32]) {
+    let width = stop - start;
+    for i in 0..r {
+        let ai = &a[i * a_stride + start..i * a_stride + stop];
+        for j in i..r {
+            let aj = &a[j * a_stride + start..j * a_stride + stop];
+            let mut acc = 0f32;
+            for t in 0..width {
+                acc += E::q(ai[t]) * E::q(aj[t]);
+            }
+            gram[i * r + j] += acc;
+            if i != j {
+                gram[j * r + i] += acc;
+            }
+        }
+    }
+}
+
+/// Algorithm 1, sequential chunked execution with exact allocation
+/// accounting — the engine behind `norm_cpu::factored_norm`.
+pub(crate) fn factored_norm_seq<E: Elem>(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    s: f32,
+    m: ModuleShape,
+    budget: u64,
+    tracker: &mut AllocTracker,
+) -> Vec<f32> {
+    let ModuleShape { d_out, d_in, rank: r } = m;
+    let cs = chunk_size(m, budget);
+
+    let mut base_sq = vec_f32(tracker, d_out);
+    // Scale-is-zero fast path (Appendix B): skip cross/ba and never
+    // allocate U or G.
+    if s == 0.0 {
+        for i in 0..d_out {
+            let row = &w[i * d_in..(i + 1) * d_in];
+            // f32 square widened to f64 — matches the historical fast
+            // path bit-for-bit (the chunked path below squares in f64;
+            // the two paths have always differed in that last ULP).
+            base_sq[i] = row
+                .iter()
+                .map(|&x| {
+                    let x = E::q(x);
+                    (x * x) as f64
+                })
+                .sum::<f64>() as f32;
+        }
+        let out = base_sq.iter().map(|&x| sqrt_clamp_min0(x)).collect();
+        drop_vec(tracker, base_sq);
+        return out;
+    }
+
+    let mut cross = vec_f32(tracker, d_out);
+    let mut gram = vec_f32(tracker, r * r);
+    // U_c chunk buffer [d_out, r], reused across chunks (never two alive).
+    let mut u_c = vec_f32(tracker, d_out * r);
+
+    let mut start = 0;
+    while start < d_in {
+        let stop = (start + cs).min(d_in);
+        accumulate_columns::<E>(
+            w, a, b, d_out, r, d_in, d_in, start, stop, &mut base_sq, &mut cross, &mut gram,
+            &mut u_c,
+        );
+        start = stop;
+    }
+    drop_vec(tracker, u_c);
+
+    // ba_sq = (B @ G * B) . 1  [d_out]
+    let mut ba_sq = vec_f32(tracker, d_out);
+    for i in 0..d_out {
+        ba_sq[i] = ba_sq_row::<E>(&b[i * r..(i + 1) * r], &gram, r);
+    }
+    drop_vec(tracker, gram);
+
+    // Assembly (Eq. 5): two_s / s2 precomputed in f64, rounded once.
+    let two_s = (2.0 * s as f64) as f32;
+    let s2 = (s as f64 * s as f64) as f32;
+    let mut out = vec![0f32; d_out];
+    for i in 0..d_out {
+        let total = base_sq[i] + two_s * cross[i] + s2 * ba_sq[i];
+        out[i] = sqrt_clamp_min0(total);
+    }
+    drop_vec(tracker, ba_sq);
+    drop_vec(tracker, cross);
+    drop_vec(tracker, base_sq);
+    out
+}
+
+/// Algorithm 1, d_out row-tiles on a scoped thread pool.
+///
+/// The shared `[r, r]` Gram is accumulated once on the calling thread
+/// (cost `r^2 * d_in`, a factor `d_out / r` below the row contractions);
+/// rows are then fully independent — each worker owns a private `[r]`
+/// workspace and walks ITS rows through the same d_in chunk schedule the
+/// sequential engine uses, so results are bitwise identical to
+/// [`factored_norm_seq`]. Tracked transients are smaller than the
+/// sequential engine's (`threads * r` instead of `d_out * r` workspace).
+pub(crate) fn factored_norm_tiled<E: Elem>(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    s: f32,
+    m: ModuleShape,
+    budget: u64,
+    threads: usize,
+    tile_rows: usize,
+    tracker: &mut AllocTracker,
+) -> Vec<f32> {
+    let ModuleShape { d_out, d_in, rank: r } = m;
+    let cs = chunk_size(m, budget);
+    let tile = tile_rows.max(1);
+    let n_threads = threads.max(1).min(d_out.div_ceil(tile)).max(1);
+
+    let mut out = vec![0f32; d_out];
+
+    // Scale-is-zero fast path: row sums only, still row-parallel. No
+    // transient allocations (rows write straight into the output), so
+    // nothing is tracked.
+    if s == 0.0 {
+        run_row_tiles(&mut out, tile, n_threads, |r0, orow| {
+            for (k, o) in orow.iter_mut().enumerate() {
+                let i = r0 + k;
+                let row = &w[i * d_in..(i + 1) * d_in];
+                // f32 square widened to f64: bitwise-matches the
+                // sequential fast path above.
+                let total = row
+                    .iter()
+                    .map(|&x| {
+                        let x = E::q(x);
+                        (x * x) as f64
+                    })
+                    .sum::<f64>() as f32;
+                *o = sqrt_clamp_min0(total);
+            }
+        });
+        return out;
+    }
+
+    // Shared Gram, same chunk schedule as the sequential engine.
+    let mut gram = vec_f32(tracker, r * r);
+    let mut start = 0;
+    while start < d_in {
+        let stop = (start + cs).min(d_in);
+        gram_chunk::<E>(a, r, d_in, start, stop, &mut gram);
+        start = stop;
+    }
+
+    let two_s = (2.0 * s as f64) as f32;
+    let s2 = (s as f64 * s as f64) as f32;
+
+    // Per-worker U-row workspace: threads * [r].
+    tracker.alloc((n_threads * r * 4) as u64);
+    let gram_ref = &gram;
+    run_row_tiles(&mut out, tile, n_threads, |r0, orow| {
+        let mut u_row = vec![0f32; r];
+        for (k, o) in orow.iter_mut().enumerate() {
+            let i = r0 + k;
+            let brow = &b[i * r..(i + 1) * r];
+            let mut base_sq = 0f32;
+            let mut cross = 0f32;
+            // Same per-row chunk schedule and accumulation order as the
+            // sequential engine -> bitwise-identical partials.
+            let mut c0 = 0;
+            while c0 < d_in {
+                let c1 = (c0 + cs).min(d_in);
+                let wrow = &w[i * d_in + c0..i * d_in + c1];
+                let mut acc = 0f64;
+                for &x in wrow {
+                    let x = E::q(x);
+                    acc += (x as f64) * (x as f64);
+                }
+                base_sq += acc as f32;
+                for (l, u) in u_row.iter_mut().enumerate() {
+                    let arow = &a[l * d_in + c0..l * d_in + c1];
+                    let mut dot = 0f32;
+                    for t in 0..wrow.len() {
+                        dot += E::q(wrow[t]) * E::q(arow[t]);
+                    }
+                    *u = dot;
+                }
+                let mut cacc = 0f32;
+                for l in 0..r {
+                    cacc += E::q(brow[l]) * u_row[l];
+                }
+                cross += cacc;
+                c0 = c1;
+            }
+            let ba = ba_sq_row::<E>(brow, gram_ref, r);
+            let total = base_sq + two_s * cross + s2 * ba;
+            *o = sqrt_clamp_min0(total);
+        }
+    });
+    tracker.free((n_threads * r * 4) as u64);
+    drop_vec(tracker, gram);
+    out
+}
+
+/// Run `job(first_row, out_tile)` over row tiles of `out` on a scoped
+/// thread pool. Tiles are handed out through a shared queue (coarse
+/// work-stealing); each tile is a disjoint `&mut` slice, so the only
+/// synchronization is the queue lock.
+fn run_row_tiles<F>(out: &mut [f32], tile: usize, n_threads: usize, job: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if n_threads <= 1 {
+        for (ti, orow) in out.chunks_mut(tile).enumerate() {
+            job(ti * tile, orow);
+        }
+        return;
+    }
+    let queue = std::sync::Mutex::new(out.chunks_mut(tile).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let item = { queue.lock().unwrap().next() };
+                let Some((ti, orow)) = item else { break };
+                job(ti * tile, orow);
+            });
+        }
+    });
+}

@@ -1,0 +1,342 @@
+//! `ParallelTiledCpu`: the fused kernels over row-tiles on a scoped
+//! thread pool — the multi-core backend for LLC-exceeding shapes.
+//!
+//! Activations are split into tiles of `tile_rows` consecutive rows; a
+//! shared queue hands tiles to `threads` scoped workers (coarse work
+//! stealing, no per-element synchronization — every tile is a disjoint
+//! `&mut` output slice). Per-element arithmetic is the shared fused core,
+//! so results are **bitwise identical** to [`FusedCpu`] in every dtype;
+//! the d_mag reduction keeps §3.2 determinism by accumulating fixed
+//! per-row-block f64 partials (block boundaries independent of the thread
+//! count) and reducing them in fixed order on the calling thread.
+//!
+//! [`FusedCpu`]: crate::kernels::FusedCpu
+
+use std::sync::Mutex;
+
+use crate::dora::config::{ActShape, ModuleShape};
+use crate::dora::norm_cpu::AllocTracker;
+use crate::kernels::generic::{self, with_elem, Elem, DMAG_ROWS_PER_BLOCK};
+use crate::kernels::norm;
+use crate::kernels::{BackendKind, ComposeKernel, NormEngine};
+use crate::numerics::half::Dtype;
+
+/// Rows per tile: sized so one tile's streams (3-4 rows-sized arrays at
+/// d_out ~ 4-8k) stay comfortably inside a core's L2 slice while keeping
+/// the queue lock cold.
+pub const DEFAULT_TILE_ROWS: usize = 128;
+
+/// The parallel row-tiled CPU backend.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelTiledCpu {
+    threads: usize,
+    tile_rows: usize,
+}
+
+impl ParallelTiledCpu {
+    /// Backend with `threads` workers (0 = all available cores) and the
+    /// default tile size.
+    pub fn new(threads: usize) -> ParallelTiledCpu {
+        Self::with_tile(threads, DEFAULT_TILE_ROWS)
+    }
+
+    /// Fully explicit construction (benches sweep both knobs).
+    pub fn with_tile(threads: usize, tile_rows: usize) -> ParallelTiledCpu {
+        let threads = if threads == 0 { crate::dispatch::default_threads() } else { threads };
+        ParallelTiledCpu { threads, tile_rows: tile_rows.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    /// Worker count actually used for `rows` (never more workers than
+    /// tiles).
+    fn workers_for(&self, rows: usize) -> usize {
+        self.threads.min(rows.div_ceil(self.tile_rows)).max(1)
+    }
+
+    fn par_forward<E: Elem>(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        d: usize,
+        rows: usize,
+        delta: &mut [f32],
+    ) {
+        let tile = self.tile_rows * d;
+        let n = self.workers_for(rows);
+        if n <= 1 {
+            generic::forward_rows::<E>(base, lora, g, s, d, delta);
+            return;
+        }
+        let queue = Mutex::new(delta.chunks_mut(tile).enumerate());
+        std::thread::scope(|scope| {
+            for _ in 0..n {
+                scope.spawn(|| loop {
+                    let item = { queue.lock().unwrap().next() };
+                    let Some((ti, out)) = item else { break };
+                    let lo = ti * tile;
+                    let hi = lo + out.len();
+                    generic::forward_rows::<E>(&base[lo..hi], &lora[lo..hi], g, s, d, out);
+                });
+            }
+        });
+    }
+
+    fn par_forward_dual<E: Elem>(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        d: usize,
+        rows: usize,
+        delta: &mut [f32],
+        inner: &mut [f32],
+    ) {
+        let tile = self.tile_rows * d;
+        let n = self.workers_for(rows);
+        if n <= 1 {
+            generic::forward_dual_rows::<E>(base, lora, g, s, d, delta, inner);
+            return;
+        }
+        let queue = Mutex::new(delta.chunks_mut(tile).zip(inner.chunks_mut(tile)).enumerate());
+        std::thread::scope(|scope| {
+            for _ in 0..n {
+                scope.spawn(|| loop {
+                    let item = { queue.lock().unwrap().next() };
+                    let Some((ti, (dout, iout))) = item else { break };
+                    let lo = ti * tile;
+                    let hi = lo + dout.len();
+                    generic::forward_dual_rows::<E>(
+                        &base[lo..hi],
+                        &lora[lo..hi],
+                        g,
+                        s,
+                        d,
+                        dout,
+                        iout,
+                    );
+                });
+            }
+        });
+    }
+
+    fn par_backward<E: Elem>(
+        &self,
+        d_delta: &[f32],
+        g: &[f32],
+        s: f32,
+        d: usize,
+        rows: usize,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) {
+        let tile = self.tile_rows * d;
+        let n = self.workers_for(rows);
+        if n <= 1 {
+            generic::backward_rows::<E>(d_delta, g, s, d, d_lora, d_base);
+            return;
+        }
+        let queue = Mutex::new(d_lora.chunks_mut(tile).zip(d_base.chunks_mut(tile)).enumerate());
+        std::thread::scope(|scope| {
+            for _ in 0..n {
+                scope.spawn(|| loop {
+                    let item = { queue.lock().unwrap().next() };
+                    let Some((ti, (dl, db))) = item else { break };
+                    let lo = ti * tile;
+                    let hi = lo + dl.len();
+                    generic::backward_rows::<E>(&d_delta[lo..hi], g, s, d, dl, db);
+                });
+            }
+        });
+    }
+
+    /// Parallel two-stage fused-d_mag backward. Stage-1 partials are per
+    /// fixed 32-row block (NOT per thread), so the reduction order — and
+    /// therefore the result — is independent of the worker count.
+    #[allow(clippy::too_many_arguments)]
+    fn par_backward_dmag<E: Elem>(
+        &self,
+        d_delta: &[f32],
+        inner: &[f32],
+        g: &[f32],
+        s: f32,
+        d: usize,
+        rows: usize,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) -> Vec<f32> {
+        let block = DMAG_ROWS_PER_BLOCK;
+        let n_blocks = rows.div_ceil(block);
+        let mut partials = vec![0f64; n_blocks * d];
+        let n = self.threads.min(n_blocks).max(1);
+        let tile = block * d;
+        if n <= 1 {
+            for blk in 0..n_blocks {
+                let r0 = blk * block;
+                let r1 = (r0 + block).min(rows);
+                generic::backward_dmag_block::<E>(
+                    &d_delta[r0 * d..r1 * d],
+                    &inner[r0 * d..r1 * d],
+                    g,
+                    s,
+                    d,
+                    &mut d_lora[r0 * d..r1 * d],
+                    &mut d_base[r0 * d..r1 * d],
+                    &mut partials[blk * d..(blk + 1) * d],
+                );
+            }
+        } else {
+            let queue = Mutex::new(
+                d_lora
+                    .chunks_mut(tile)
+                    .zip(d_base.chunks_mut(tile))
+                    .zip(partials.chunks_mut(d))
+                    .enumerate(),
+            );
+            std::thread::scope(|scope| {
+                for _ in 0..n {
+                    scope.spawn(|| loop {
+                        let item = { queue.lock().unwrap().next() };
+                        let Some((ti, ((dl, db), part))) = item else { break };
+                        let lo = ti * tile;
+                        let hi = lo + dl.len();
+                        generic::backward_dmag_block::<E>(
+                            &d_delta[lo..hi],
+                            &inner[lo..hi],
+                            g,
+                            s,
+                            d,
+                            dl,
+                            db,
+                            part,
+                        );
+                    });
+                }
+            });
+        }
+        generic::dmag_reduce_partials(&partials, n_blocks, d)
+    }
+}
+
+impl ComposeKernel for ParallelTiledCpu {
+    fn name(&self) -> &'static str {
+        "parallel-tiled-cpu"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::ParallelTiled
+    }
+
+    fn parallelism(&self) -> usize {
+        self.threads
+    }
+
+    fn forward(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+    ) {
+        with_elem!(dt, E, {
+            self.par_forward::<E>(base, lora, g, s, act.d_out, act.rows, delta)
+        });
+    }
+
+    fn forward_dual(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        delta: &mut [f32],
+        inner: &mut [f32],
+    ) {
+        with_elem!(dt, E, {
+            self.par_forward_dual::<E>(base, lora, g, s, act.d_out, act.rows, delta, inner)
+        });
+    }
+
+    fn backward(
+        &self,
+        d_delta: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) {
+        with_elem!(dt, E, {
+            self.par_backward::<E>(d_delta, g, s, act.d_out, act.rows, d_lora, d_base)
+        });
+    }
+
+    fn backward_with_dmag(
+        &self,
+        d_delta: &[f32],
+        inner: &[f32],
+        g: &[f32],
+        s: f32,
+        act: ActShape,
+        dt: Dtype,
+        d_lora: &mut [f32],
+        d_base: &mut [f32],
+    ) -> Vec<f32> {
+        with_elem!(dt, E, {
+            self.par_backward_dmag::<E>(
+                d_delta, inner, g, s, act.d_out, act.rows, d_lora, d_base,
+            )
+        })
+    }
+}
+
+impl NormEngine for ParallelTiledCpu {
+    fn name(&self) -> &'static str {
+        "parallel-tiled-cpu"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::ParallelTiled
+    }
+
+    fn weight_norm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32> {
+        with_elem!(dt, E, {
+            norm::factored_norm_tiled::<E>(
+                w,
+                a,
+                b,
+                s,
+                m,
+                budget,
+                self.threads,
+                self.tile_rows,
+                tracker,
+            )
+        })
+    }
+}

@@ -97,11 +97,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine = Engine::load(&manifest::default_dir())?;
     let mut tr = Trainer::new(engine, cfg.clone())?;
     println!(
-        "training config={} variant={} seed={} params={}",
+        "training config={} variant={} seed={} params={} compose={} ({})",
         cfg.config,
         cfg.variant,
         cfg.seed,
-        tr.config_info().n_params
+        tr.config_info().n_params,
+        tr.compose_backend,
+        tr.compose_tier.name()
     );
     while tr.step_count() < steps {
         let recs: Vec<_> = tr.run_chunk()?.to_vec();
@@ -140,12 +142,13 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     }
     let m = server.shutdown();
     println!(
-        "served {} requests in {} batches; p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}",
+        "served {} requests in {} batches; p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}, compose backend {}",
         m.completed,
         m.batches,
         m.p50_us(),
         m.p95_us(),
-        m.mean_occupancy()
+        m.mean_occupancy(),
+        m.compose_backend
     );
     Ok(())
 }

@@ -21,23 +21,34 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("expected {0}, found {1}")]
     Type(&'static str, &'static str),
-    #[error("missing key {0:?}")]
     MissingKey(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            JsonError::Unexpected(c, at) => {
+                write!(f, "unexpected character {c:?} at byte {at}")
+            }
+            JsonError::BadNumber(at) => write!(f, "invalid number at byte {at}"),
+            JsonError::BadEscape(at) => write!(f, "invalid escape at byte {at}"),
+            JsonError::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+            JsonError::Type(want, got) => write!(f, "expected {want}, found {got}"),
+            JsonError::MissingKey(key) => write!(f, "missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- accessors -------------------------------------------------------

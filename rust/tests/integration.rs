@@ -109,6 +109,37 @@ fn trainer_rejects_bad_variant() {
 }
 
 #[test]
+fn kernel_registry_backends_agree_with_flat_kernels() {
+    // Cross-layer invariant of the backend refactor: every registry
+    // backend reproduces the flat f32 kernels bitwise, and the registry's
+    // dispatch surface agrees with the bare-enum tier decision.
+    use dorafactors::dispatch::{ComposeCtx, DispatchEnv};
+    use dorafactors::dora::compose_cpu;
+    use dorafactors::kernels::registry;
+    use dorafactors::numerics::Dtype;
+    use dorafactors::util::rng::Rng;
+
+    let act = ActShape::new(61, 193);
+    let mut rng = Rng::new(99);
+    let base = rng.normal_vec_f32(act.elems(), 1.0);
+    let lora = rng.normal_vec_f32(act.elems(), 0.3);
+    let g: Vec<f32> = (0..act.d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect();
+    let want = compose_cpu::compose_fused(&base, &lora, &g, 1.7, act);
+    for be in registry().compose_backends() {
+        let got = be.forward_alloc(&base, &lora, &g, 1.7, act, Dtype::F32);
+        assert_eq!(got, want, "backend {} diverged from the flat kernels", be.name());
+    }
+    let env = DispatchEnv::default();
+    for rows in [16usize, 512, 8192] {
+        for d_out in [256usize, 2048, 8192] {
+            let ctx = ComposeCtx::training(ActShape::new(rows, d_out));
+            let choice = registry().select(&env, &ctx);
+            assert_eq!(choice.tier, dorafactors::dispatch::select_tier(&env, &ctx));
+        }
+    }
+}
+
+#[test]
 fn dispatch_stats_consistent_with_model_plan_tiers() {
     // The dispatch module and the model plan must agree on which modules
     // run fused — the §4 "71% Tier 1" statistic is shared state.
