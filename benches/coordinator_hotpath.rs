@@ -1,18 +1,24 @@
 //! REAL-measurement bench: L3 hot-path overheads — dispatch decision
-//! latency, allocator-simulator replay throughput, and PJRT executable
-//! invocation latency for the compose artifacts (eager vs fused).
+//! latency, allocator-simulator replay throughput, native-engine
+//! serve/train latency + batch occupancy, and PJRT executable invocation
+//! latency for the compose artifacts (eager vs fused).
 //!
 //! The paper's L3 target (PERFORMANCE OPTIMIZATION §L3): the coordinator
-//! must never be the bottleneck — dispatch < 1 us/module, PJRT dispatch
-//! overhead small relative to kernel time.
+//! must never be the bottleneck — dispatch < 1 us/module, engine dispatch
+//! overhead small relative to kernel time. The native rows run on every
+//! machine (no artifacts needed), so the serving stack always produces
+//! real numbers.
+
+use std::time::Duration;
 
 use dorafactors::bench::timing;
+use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::dispatch::{self, ComposeCtx, DispatchEnv};
 use dorafactors::dora::config::{ActShape, Config, ModuleShape};
 use dorafactors::dora::mem_events;
 use dorafactors::memsim::allocator::CachingAllocator;
 use dorafactors::numerics::Dtype;
-use dorafactors::runtime::{manifest, Engine, Tensor};
+use dorafactors::runtime::{manifest, BackendSpec, Engine, NativeEngine, Tensor};
 use dorafactors::util::rng::Rng;
 use dorafactors::util::table::{fmt_secs, Table};
 
@@ -76,6 +82,83 @@ fn main() {
         fmt_secs(m.median_s),
         format!("{:.0} ns/event", m.median_s / events.len() as f64 * 1e9),
     ]);
+
+    // Native engine: one full training chunk (forward + backward + AdamW
+    // for chunk_steps optimizer steps) on the tiny config.
+    {
+        let mut tr = Trainer::new(
+            NativeEngine::new(),
+            TrainerCfg {
+                config: "tiny".into(),
+                variant: "fused".into(),
+                seed: 0,
+                branching: 4,
+                eval_every: 0,
+            },
+        )
+        .expect("native trainer");
+        let chunk_steps = tr.config_info().chunk_steps;
+        let quick = timing::BenchCfg { warmup: 1, trials: 10, time_cap_s: 10.0 };
+        let m = timing::bench("native train chunk", quick, || {
+            tr.run_chunk().unwrap();
+        });
+        t.row(vec![
+            "native train chunk (tiny)".into(),
+            fmt_secs(m.median_s),
+            format!("{:.2} ms/step", m.median_s / chunk_steps as f64 * 1e3),
+        ]);
+    }
+
+    // Native engine: single-request serving round-trip (client -> batcher
+    // -> infer -> reply), and a measured batch-occupancy sweep.
+    {
+        let server = Server::start(
+            BackendSpec::Native,
+            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(1) },
+        )
+        .expect("native server");
+        let client = server.client();
+        let quick = timing::BenchCfg { warmup: 2, trials: 30, time_cap_s: 10.0 };
+        let m = timing::bench("native serve rtt", quick, || {
+            client.infer(&[1, 2, 3, 4]).unwrap();
+        });
+        t.row(vec![
+            "native serve round-trip (tiny, bs occupancy 1)".into(),
+            fmt_secs(m.median_s),
+            format!("{:.0} req/s", 1.0 / m.median_s),
+        ]);
+        drop(client);
+        let metrics = server.shutdown();
+        // Concurrent clients: measure how well batch-or-timeout packs.
+        let server = Server::start(
+            BackendSpec::Native,
+            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(20) },
+        )
+        .expect("native server");
+        let client = server.client();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..8 {
+                        c.infer(&[i as i32 + 1, 2, 3]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m2 = server.shutdown();
+        let bs_cap = NativeEngine::new().config("tiny").expect("tiny config").train_batch;
+        t.row(vec![
+            format!("native batched serve (8 clients x 8 req, {} batches)", m2.batches),
+            format!("p95 {}", fmt_secs(m2.p95_us() / 1e6)),
+            format!("mean occupancy {:.2}/{bs_cap}", m2.mean_occupancy()),
+        ]);
+        assert!(metrics.completed > 0);
+        assert!(m2.completed == 64, "completed {}", m2.completed);
+    }
 
     // PJRT invocation: compose artifacts, eager vs fused lowering.
     let dir = manifest::default_dir();

@@ -14,7 +14,7 @@ use std::fmt::Write as _;
 use anyhow::Result;
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::{manifest, Engine};
+use dorafactors::runtime::ExecBackend;
 use dorafactors::util::table::Table;
 use dorafactors::util::Args;
 
@@ -25,11 +25,12 @@ fn main() -> Result<()> {
     let config = args.get_or("config", "small").to_string();
     let csv_path = args.get("csv").map(str::to_string);
 
-    let engine = Engine::load(&manifest::default_dir())?;
-    let info = engine.manifest().config(&config)?.clone();
+    let engine = ExecBackend::auto();
+    let info = engine.config(&config)?;
     println!(
-        "== convergence study: config={config} ({} params), {steps} steps x {n_seeds} seeds x (eager, fused) ==",
-        info.n_params
+        "== convergence study: config={config} ({} params, {} backend), {steps} steps x {n_seeds} seeds x (eager, fused) ==",
+        info.n_params,
+        engine.kind_name()
     );
 
     let mut table = Table::new(

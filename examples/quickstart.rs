@@ -1,9 +1,13 @@
 //! Quickstart: the three-layer stack end to end in one page.
 //!
-//! 1. Load the AOT artifacts (built once by `make artifacts`).
-//! 2. Run one DoRA linear module through PJRT under all four
-//!    configurations and confirm they agree numerically.
-//! 3. Cross-check the XLA outputs against the Rust CPU kernels.
+//! 1. Connect the execution backend — PJRT over the AOT artifacts when
+//!    usable (`make artifacts`), the native kernel-registry engine
+//!    otherwise (a fresh checkout completes without any artifacts).
+//! 2. Run one DoRA linear module under all four configurations and
+//!    confirm they agree numerically.
+//! 3. Cross-check the engine's compose unit against the flat Rust CPU
+//!    kernels (on PJRT this is a cross-layer XLA check; on the native
+//!    engine it exercises the artifact-surface plumbing).
 //! 4. Show the three-tier dispatch decisions for a real model inventory.
 //!
 //! Run with: `cargo run --release --example quickstart`
@@ -14,13 +18,13 @@ use dorafactors::dispatch::{self, ComposeCtx, DispatchEnv};
 use dorafactors::dora::config::{ActShape, ModuleShape};
 use dorafactors::dora::{compose_cpu, norm_cpu};
 use dorafactors::models;
-use dorafactors::runtime::{manifest, Engine, Tensor};
+use dorafactors::runtime::{ExecBackend, Tensor};
 use dorafactors::util::rng::Rng;
 
 fn main() -> Result<()> {
     println!("== dorafactors quickstart ==\n");
-    let engine = Engine::load(&manifest::default_dir())?;
-    println!("PJRT platform: {}", engine.platform());
+    let engine = ExecBackend::auto();
+    println!("execution backend: {} ({})", engine.kind_name(), engine.platform());
 
     // --- one adapted module through all four configurations --------------
     let (bs, sq, d, r) = (2usize, 64usize, 256usize, 32usize);

@@ -3,6 +3,10 @@
 //! concurrent client traffic and report latency/throughput/occupancy —
 //! the paper's deployment context (§6.1) in miniature.
 //!
+//! Runs on the default execution backend: PJRT when AOT artifacts are
+//! usable, the native kernel-registry engine otherwise — so a fresh
+//! checkout with no `artifacts/` directory completes end to end.
+//!
 //! Run with:
 //!   cargo run --release --example serve -- \
 //!       [--config small] [--train-steps 20] [--clients 8] [--requests 64]
@@ -12,9 +16,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::coordinator::data::MarkovCorpus;
-use dorafactors::runtime::{manifest, Engine};
+use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::runtime::BackendSpec;
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -24,15 +28,22 @@ fn main() -> Result<()> {
     let n_clients = args.get_usize("clients", 8);
     let n_requests = args.get_usize("requests", 64);
 
-    let dir = manifest::default_dir();
-    let engine = Engine::load(&dir)?;
-    let info = engine.manifest().config(&config)?.clone();
+    let spec = BackendSpec::auto();
+    let backend = spec.connect()?;
+    let info = backend.config(&config)?;
+    println!("execution backend: {} ({})", backend.kind_name(), backend.platform());
 
     // --- phase 1: fine-tune the adapter -----------------------------------
     println!("== phase 1: training {train_steps} steps on config {config} ==");
     let mut tr = Trainer::new(
-        engine,
-        TrainerCfg { config: config.clone(), variant: "fused".into(), seed: 7, branching: 4, eval_every: 0 },
+        backend,
+        TrainerCfg {
+            config: config.clone(),
+            variant: "fused".into(),
+            seed: 7,
+            branching: 4,
+            eval_every: 0,
+        },
     )?;
     tr.train_steps(train_steps)?;
     println!(
@@ -44,7 +55,7 @@ fn main() -> Result<()> {
     // --- phase 2: serve with the adapted parameters ------------------------
     println!("\n== phase 2: serving with {n_clients} clients x {n_requests} requests ==");
     let server = Server::start_with_params(
-        &dir,
+        spec,
         ServerCfg { config: config.clone(), max_wait: Duration::from_millis(5) },
         tr.frozen().to_vec(),
         tr.trainable().to_vec(),
@@ -52,16 +63,21 @@ fn main() -> Result<()> {
     let client = server.client();
 
     let t0 = Instant::now();
-    let per_client = n_requests / n_clients.max(1);
+    // Distribute requests across clients WITHOUT dropping the remainder:
+    // client `cid` serves base + 1 extra while cid < remainder, so e.g.
+    // --requests 65 --clients 8 really serves 65, not 64.
+    let base = n_requests / n_clients.max(1);
+    let remainder = n_requests % n_clients.max(1);
     let vocab = info.vocab;
     let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let handles: Vec<_> = (0..n_clients)
         .map(|cid| {
             let c = client.clone();
             let counter = counter.clone();
+            let quota = base + usize::from(cid < remainder);
             std::thread::spawn(move || -> Result<()> {
                 let mut corpus = MarkovCorpus::new(vocab, 4, 1000 + cid as u64);
-                for _ in 0..per_client {
+                for _ in 0..quota {
                     let prompt_len = 8 + (cid % 5) * 3;
                     let prompt = corpus.sequence(prompt_len);
                     let reply = c.infer(&prompt)?;
@@ -79,8 +95,8 @@ fn main() -> Result<()> {
     let m = server.shutdown();
 
     println!(
-        "served {} requests in {} batches over {:.2} s",
-        m.completed, m.batches, wall
+        "served {} requests in {} batches over {:.2} s ({} failed)",
+        m.completed, m.batches, wall, m.failed
     );
     println!(
         "throughput: {:.1} req/s | latency p50 {:.1} ms, p95 {:.1} ms | mean batch occupancy {:.2}/{}",
@@ -90,7 +106,12 @@ fn main() -> Result<()> {
         m.mean_occupancy(),
         info.train_batch
     );
-    assert_eq!(m.completed as usize, per_client * n_clients);
+    assert_eq!(
+        m.completed as usize, n_requests,
+        "request-count shortfall: served {} of {n_requests}",
+        m.completed
+    );
+    assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), n_requests);
     println!("\nserve OK");
     Ok(())
 }

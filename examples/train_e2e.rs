@@ -1,7 +1,8 @@
 //! End-to-end training driver — proves all three layers compose on a real
 //! workload: the ~100M-parameter `e2e` transformer, DoRA-adapted on every
 //! projection, trained on a synthetic Markov corpus with the fused
-//! (Pallas + factored-norm) pipeline, entirely through AOT artifacts.
+//! (Pallas + factored-norm) pipeline — through AOT artifacts when they
+//! are available, the native kernel-registry engine otherwise.
 //!
 //! Logs the loss curve (recorded in EXPERIMENTS.md) and reports tokens/s.
 //!
@@ -15,7 +16,7 @@ use std::fmt::Write as _;
 use anyhow::Result;
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::{manifest, Engine};
+use dorafactors::runtime::ExecBackend;
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -26,12 +27,18 @@ fn main() -> Result<()> {
     let variant = args.get_or("variant", "fused").to_string();
     let csv_path = args.get("csv").map(str::to_string);
 
-    let engine = Engine::load(&manifest::default_dir())?;
-    let info = engine.manifest().config(&config)?.clone();
+    let engine = ExecBackend::auto();
+    let info = engine.config(&config)?;
     let tokens_per_step = info.train_batch * (info.seq + 1);
     println!(
-        "== e2e training: {} params, vocab {}, d_model {}, {} layers, r={}, variant={} ==",
-        info.n_params, info.vocab, info.d_model, info.n_layers, info.rank, variant
+        "== e2e training: {} params, vocab {}, d_model {}, {} layers, r={}, variant={}, backend={} ==",
+        info.n_params,
+        info.vocab,
+        info.d_model,
+        info.n_layers,
+        info.rank,
+        variant,
+        engine.kind_name()
     );
     println!(
         "{} steps x {} tokens/step = {} tokens total\n",
@@ -74,7 +81,7 @@ fn main() -> Result<()> {
     println!("\nloss: {first:.4} -> {last:.4} over {} steps", tr.step_count());
     println!("final eval loss: {final_eval:.4}");
     println!(
-        "PJRT wall time: {:.1} s ({:.2} s/step, {:.0} tok/s)",
+        "engine wall time: {:.1} s ({:.2} s/step, {:.0} tok/s)",
         tr.wall_seconds,
         tr.wall_seconds / tr.step_count() as f64,
         tr.step_count() as f64 * tokens_per_step as f64 / tr.wall_seconds

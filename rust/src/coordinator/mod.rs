@@ -1,12 +1,15 @@
-//! L3 coordinator: the deployable training/serving layer over the PJRT
-//! runtime.
+//! L3 coordinator: the deployable training/serving layer over the
+//! execution backends (PJRT artifacts or the native kernel-registry
+//! engine — see [`runtime::backend`](crate::runtime::backend) for the
+//! fallback order).
 //!
 //! * `data`    — synthetic Markov corpus (the dataset substitute).
 //! * `trainer` — training-run orchestration: seeded init, chunked
 //!   train-step execution, loss/eval tracking, eager-vs-fused convergence
 //!   comparison (paper §5.9).
 //! * `server`  — batched inference serving over the Tier-2 fused-forward
-//!   artifact (batch-or-timeout policy, latency metrics).
+//!   artifact (batch-or-timeout policy, latency metrics, malformed-output
+//!   fan-out instead of batcher panics).
 
 pub mod data;
 pub mod server;

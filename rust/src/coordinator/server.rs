@@ -4,21 +4,30 @@
 //! vLLM-router-style shape: clients submit token prompts to a bounded
 //! queue; a batcher thread groups up to `batch` requests within a
 //! `max_wait` window (batch-or-timeout policy), pads them into the fixed
-//! [bs, seq] artifact shape, executes one PJRT call, and fans the
+//! [bs, seq] artifact shape, executes one engine call, and fans the
 //! last-position logits back to per-request channels. Metrics record
 //! per-request latency and batch occupancy so the bench harness can sweep
 //! the batching policy.
+//!
+//! The server runs over any [`BackendSpec`]: PJRT over an artifacts
+//! directory, the native kernel-registry engine, or a scripted mock.
+//! Engines are reconnected *inside* the batcher thread (PJRT clients are
+//! not `Send`); everything fallible is validated synchronously on a probe
+//! connection first, so `start_with_params` fails fast instead of leaving
+//! clients to time out against a dead thread.
+//!
+//! Robustness contract: the batcher never panics on malformed engine
+//! output — a bad batch fans an `Err` to each of its requests and the
+//! loop keeps serving subsequent batches.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use std::path::{Path, PathBuf};
-
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{BackendSpec, ExecBackend, Tensor};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -56,12 +65,17 @@ pub struct Reply {
 #[derive(Debug, Default, Clone)]
 pub struct ServerMetrics {
     pub completed: u64,
+    /// Requests answered with an error (engine failure or malformed
+    /// engine output). The batcher stays up; this counts what it shed.
+    pub failed: u64,
     pub batches: u64,
     pub latencies_us: Vec<f64>,
     pub occupancies: Vec<f64>,
     /// Compose backend the kernel registry selects for this config's
     /// inference shape (Tier-2 path), recorded at startup.
     pub compose_backend: String,
+    /// Execution backend kind ("pjrt" / "native" / "mock").
+    pub exec_backend: String,
 }
 
 impl ServerMetrics {
@@ -114,31 +128,64 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the batcher thread over the given artifacts directory.
-    /// PJRT client types are not Send, so the batcher thread constructs
-    /// its OWN engine from the directory; host tensors (plain data) are
-    /// what crosses the thread boundary.
-    pub fn start(artifacts_dir: &Path, cfg: ServerCfg) -> Result<Server> {
-        // Serving needs model parameters; initialize from seed 0 by
-        // default (callers with a trained adapter use `start_with_params`).
-        let engine = Engine::load(artifacts_dir)?;
-        let info = engine.manifest().config(&cfg.config)?.clone();
-        let outs = engine.run(&format!("init_{}", cfg.config), &[Tensor::scalar_i32(0)])?;
+    /// Start with seed-0 initialized parameters (callers with a trained
+    /// adapter use [`Server::start_with_params`]). Accepts anything that
+    /// converts to a [`BackendSpec`]: an artifacts directory path (PJRT),
+    /// `BackendSpec::Native`, `BackendSpec::auto()`, or a mock.
+    pub fn start(spec: impl Into<BackendSpec>, cfg: ServerCfg) -> Result<Server> {
+        let spec = spec.into();
+        let backend = spec.connect()?;
+        let info = backend.config(&cfg.config)?;
+        let outs = backend.run(&format!("init_{}", cfg.config), &[Tensor::scalar_i32(0)])?;
         let nf = info.frozen.len();
-        Self::start_with_params(artifacts_dir, cfg, outs[..nf].to_vec(), outs[nf..].to_vec())
+        if outs.len() != nf + info.trainable.len() {
+            bail!(
+                "init_{} returned {} leaves, expected {}",
+                cfg.config,
+                outs.len(),
+                nf + info.trainable.len()
+            );
+        }
+        // Reuse the already-connected backend as the validation probe
+        // (on PJRT a fresh connect would re-load the engine and
+        // re-compile the infer executable for nothing).
+        Self::start_with_probe(spec, backend, cfg, outs[..nf].to_vec(), outs[nf..].to_vec())
+    }
+
+    /// Start the server on the default backend (PJRT artifacts when
+    /// usable, native otherwise).
+    pub fn start_auto(cfg: ServerCfg) -> Result<Server> {
+        Self::start(BackendSpec::auto(), cfg)
     }
 
     /// Start with explicit parameters (e.g. a Trainer's adapted weights).
+    ///
+    /// All startup failure modes surface synchronously here: unknown
+    /// config, parameter-count mismatch, and a missing/uncompilable
+    /// `infer_<cfg>_fused` artifact (validated on a probe connection —
+    /// previously the spawned thread died silently and clients hung).
     pub fn start_with_params(
-        artifacts_dir: &Path,
+        spec: impl Into<BackendSpec>,
         cfg: ServerCfg,
         frozen: Vec<Tensor>,
         trainable: Vec<Tensor>,
     ) -> Result<Server> {
-        // Validate config + shapes up front, on a throwaway engine, so
-        // startup errors surface synchronously.
-        let probe = Engine::load(artifacts_dir)?;
-        let info = probe.manifest().config(&cfg.config)?.clone();
+        let spec = spec.into();
+        let probe = spec.connect().context("connecting execution backend")?;
+        Self::start_with_probe(spec, probe, cfg, frozen, trainable)
+    }
+
+    /// Shared startup tail: validate on `probe` (an engine already
+    /// connected from `spec`), then spawn the batcher thread, which
+    /// reconnects from `spec` on its own thread.
+    fn start_with_probe(
+        spec: BackendSpec,
+        probe: ExecBackend,
+        cfg: ServerCfg,
+        frozen: Vec<Tensor>,
+        trainable: Vec<Tensor>,
+    ) -> Result<Server> {
+        let info = probe.config(&cfg.config)?;
         if frozen.len() != info.frozen.len() || trainable.len() != info.trainable.len() {
             bail!(
                 "param count mismatch: got {}+{}, config wants {}+{}",
@@ -148,12 +195,17 @@ impl Server {
                 info.trainable.len()
             );
         }
-        drop(probe);
         let artifact = format!("infer_{}_fused", cfg.config);
+        probe
+            .ensure_artifact(&artifact)
+            .with_context(|| format!("validating serving artifact {artifact:?}"))?;
+        drop(probe);
+
         let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(ServerMetrics {
             compose_backend: super::compose_plan(&info, false).backend.name().to_string(),
+            exec_backend: spec.kind_name().to_string(),
             ..ServerMetrics::default()
         }));
 
@@ -163,19 +215,22 @@ impl Server {
         let stop2 = stop.clone();
         let metrics2 = metrics.clone();
         let max_wait = cfg.max_wait;
-        let dir: PathBuf = artifacts_dir.to_path_buf();
 
         let join = std::thread::spawn(move || {
-            let engine = match Engine::load(&dir) {
-                Ok(e) => e,
-                Err(_) => return, // start() already validated; unreachable
-            };
-            if engine.executable(&artifact).is_err() {
-                return;
+            // PJRT clients are not Send: reconnect from the spec on this
+            // thread. The probe validated everything, so a failure here
+            // is exceptional (e.g. the artifacts dir vanished) — drain
+            // requests with the cause instead of letting clients hang.
+            match spec.connect() {
+                Ok(engine) => batcher_loop(
+                    engine, artifact, frozen, trainable, rx, stop2, metrics2, bs, seq, vocab,
+                    max_wait,
+                ),
+                Err(e) => {
+                    let msg = format!("server backend failed to start: {e:#}");
+                    drain_with_error(rx, stop2, metrics2, &msg);
+                }
             }
-            batcher_loop(
-                engine, artifact, frozen, trainable, rx, stop2, metrics2, bs, seq, vocab, max_wait,
-            );
         });
 
         Ok(Server { client_tx: tx, stop, metrics, join: Some(join), seq, vocab })
@@ -209,9 +264,76 @@ impl Drop for Server {
     }
 }
 
+/// Reply `Err(msg)` to every request until stopped (the batcher thread's
+/// unreachable-engine fallback: clients get the cause, not a hang).
+fn drain_with_error(
+    rx: Receiver<Request>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    msg: &str,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(req) => {
+                metrics.lock().unwrap().failed += 1;
+                let _ = req.reply.send(Err(anyhow::anyhow!(msg.to_string())));
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// Validate one batch's engine outputs down to the logits slice. Any
+/// mismatch (missing output, wrong dtype, wrong shape) is an `Err` the
+/// caller fans to the batch — never a panic.
+fn validate_logits<'a>(outs: &'a [Tensor], bs: usize, vocab: usize) -> Result<&'a [f32]> {
+    let first = outs
+        .first()
+        .context("engine returned no outputs for the infer artifact")?;
+    if first.shape != [bs, vocab] {
+        bail!(
+            "infer output shape {:?} != expected [{bs}, {vocab}]",
+            first.shape
+        );
+    }
+    let logits = first
+        .as_f32()
+        .context("infer output has wrong dtype (expected f32 logits)")?;
+    if logits.len() != bs * vocab {
+        bail!(
+            "infer output has {} elements, expected {}",
+            logits.len(),
+            bs * vocab
+        );
+    }
+    Ok(logits)
+}
+
+/// NaN-safe argmax over one row of logits: NaN entries are skipped (the
+/// old `partial_cmp(..).unwrap()` panicked on them and killed the batcher
+/// thread); ties keep the first index. A fully poisoned row degrades to a
+/// deterministic `(0, NaN)` reply instead of a panic.
+fn argmax(row: &[f32]) -> (i32, f32) {
+    let mut best: Option<usize> = None;
+    for (i, v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if *v <= row[b] => {}
+            _ => best = Some(i),
+        }
+    }
+    match best {
+        Some(b) => (b as i32, row[b]),
+        None => (0, f32::NAN),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn batcher_loop(
-    engine: Engine,
+    engine: ExecBackend,
     artifact: String,
     frozen: Vec<Tensor>,
     trainable: Vec<Tensor>,
@@ -261,19 +383,15 @@ fn batcher_loop(
 
         let occupancy = batch.len();
         let result = engine.run(&artifact, &inputs);
+        let checked = result.and_then(|outs| {
+            validate_logits(&outs, bs, vocab).map(|l| l.to_vec())
+        });
         let mut m = metrics.lock().unwrap();
         m.batches += 1;
-        match result {
-            Ok(outs) => {
-                let logits = outs[0].as_f32().unwrap_or(&[]);
+        match checked {
+            Ok(logits) => {
                 for (row, req) in batch.into_iter().enumerate() {
-                    let row_logits = &logits[row * vocab..(row + 1) * vocab];
-                    let (next, &logit) = row_logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, v)| (i as i32, v))
-                        .unwrap_or((0, &0.0));
+                    let (next, logit) = argmax(&logits[row * vocab..(row + 1) * vocab]);
                     let latency = req.enqueued.elapsed();
                     m.completed += 1;
                     m.latencies_us.push(latency.as_secs_f64() * 1e6);
@@ -287,7 +405,10 @@ fn batcher_loop(
                 }
             }
             Err(e) => {
+                // Fan the failure to every request in the batch; the
+                // batcher itself keeps serving.
                 let msg = format!("{e:#}");
+                m.failed += batch.len() as u64;
                 for req in batch {
                     let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
                 }
@@ -300,6 +421,7 @@ fn batcher_loop(
 mod tests {
     use super::*;
     use crate::runtime::manifest::default_dir;
+    use crate::runtime::MockExec;
 
     fn artifacts() -> Option<std::path::PathBuf> {
         let dir = default_dir();
@@ -309,6 +431,231 @@ mod tests {
     fn tiny_cfg() -> ServerCfg {
         ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) }
     }
+
+    // --- Native-engine tests: run unconditionally (no artifact gating) ---
+
+    #[test]
+    fn native_serves_single_request() {
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        let client = server.client();
+        let reply = client.infer(&[1, 2, 3, 4]).unwrap();
+        assert!(reply.next_token >= 0);
+        assert!(reply.logit.is_finite());
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.exec_backend, "native");
+    }
+
+    #[test]
+    fn native_batches_concurrent_requests() {
+        // The batch-occupancy criterion: with a wide window and 4
+        // concurrent clients, batching packs >1 request per engine call.
+        let server = Server::start(
+            BackendSpec::Native,
+            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(200) },
+        )
+        .unwrap();
+        let client = server.client();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || c.infer(&[i as i32 + 1, 2, 3]).unwrap())
+            })
+            .collect();
+        let replies: Vec<Reply> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 4);
+        assert!(m.batches < 4, "batches {}", m.batches);
+        assert!(replies.iter().any(|r| r.batch_occupancy > 1));
+        assert!(m.mean_occupancy() > 1.0, "occupancy {}", m.mean_occupancy());
+    }
+
+    #[test]
+    fn native_rejects_invalid_prompts() {
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        let client = server.client();
+        assert!(client.infer(&[]).is_err());
+        assert!(client.infer(&vec![0; 10_000]).is_err());
+        assert!(client.infer(&[-1]).is_err());
+        assert!(client.infer(&[1_000_000]).is_err());
+        drop(server);
+    }
+
+    #[test]
+    fn native_deterministic_given_params() {
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        let client = server.client();
+        let a = client.infer(&[5, 6, 7]).unwrap();
+        let b = client.infer(&[5, 6, 7]).unwrap();
+        assert_eq!(a.next_token, b.next_token);
+        drop(server);
+    }
+
+    #[test]
+    fn native_train_then_serve_handoff() {
+        use crate::coordinator::{Trainer, TrainerCfg};
+        use crate::runtime::NativeEngine;
+        let mut tr = Trainer::new(
+            NativeEngine::new(),
+            TrainerCfg {
+                config: "tiny".into(),
+                variant: "fused".into(),
+                seed: 11,
+                branching: 3,
+                eval_every: 0,
+            },
+        )
+        .unwrap();
+        tr.train_steps(4).unwrap();
+        let server = Server::start_with_params(
+            BackendSpec::Native,
+            tiny_cfg(),
+            tr.frozen().to_vec(),
+            tr.trainable().to_vec(),
+        )
+        .unwrap();
+        let r = server.client().infer(&[1, 2, 3]).unwrap();
+        assert!(r.logit.is_finite());
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn startup_validates_config_params_and_artifact() {
+        // Unknown config fails synchronously.
+        let err = Server::start(
+            BackendSpec::Native,
+            ServerCfg { config: "no_such_config".into(), ..tiny_cfg() },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no_such_config"), "{err:#}");
+        // Param-count mismatch fails synchronously.
+        let err = Server::start_with_params(BackendSpec::Native, tiny_cfg(), vec![], vec![])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("param count"), "{err:#}");
+        // A PJRT spec over a directory with no artifacts fails
+        // synchronously (this used to hang clients: the batcher thread
+        // hit its "unreachable" return).
+        let err = Server::start(
+            BackendSpec::Pjrt(std::path::PathBuf::from("/nonexistent/artifacts")),
+            tiny_cfg(),
+        )
+        .unwrap_err();
+        assert!(!format!("{err:#}").is_empty());
+    }
+
+    #[test]
+    fn malformed_engine_output_fans_errors_and_server_keeps_serving() {
+        // The batcher-robustness criterion: a wrong-shaped output batch
+        // answers every in-flight request with Err, and the NEXT batch
+        // (well-formed) succeeds — the thread survives.
+        let info = ExecBackend::native().config("tiny").unwrap();
+        let mock = MockExec::new(info.clone());
+        // Batch 1: empty output vec (the old `outs[0]` panic).
+        mock.push(Ok(vec![]));
+        // Batch 2: wrong shape (the old slice-out-of-range panic).
+        mock.push(Ok(vec![Tensor::f32(vec![1, 3], vec![0.0; 3])]));
+        // Batch 3: wrong dtype (the old `unwrap_or(&[])` silent-empty).
+        mock.push(Ok(vec![Tensor::i32(
+            vec![info.train_batch, info.vocab],
+            vec![0; info.train_batch * info.vocab],
+        )]));
+        // Batch 4+: script exhausted -> mock returns valid zero logits.
+        let dummy_frozen: Vec<Tensor> =
+            info.frozen.iter().map(|_| Tensor::f32(vec![1], vec![0.0])).collect();
+        let dummy_trainable: Vec<Tensor> =
+            info.trainable.iter().map(|_| Tensor::f32(vec![1], vec![0.0])).collect();
+        let server = Server::start_with_params(
+            mock,
+            tiny_cfg(),
+            dummy_frozen,
+            dummy_trainable,
+        )
+        .unwrap();
+        let client = server.client();
+        for expect_err in [true, true, true, false] {
+            let r = client.infer(&[1, 2, 3]);
+            if expect_err {
+                let e = format!("{:#}", r.unwrap_err());
+                assert!(
+                    e.contains("output") || e.contains("dtype") || e.contains("shape"),
+                    "unexpected error: {e}"
+                );
+            } else {
+                let reply = r.unwrap();
+                assert_eq!(reply.next_token, 0); // zero logits -> argmax 0
+            }
+        }
+        let m = server.shutdown();
+        assert_eq!(m.batches, 4);
+        assert_eq!(m.failed, 3);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn engine_error_fans_to_batch_and_serving_continues() {
+        let info = ExecBackend::native().config("tiny").unwrap();
+        let mock = MockExec::new(info.clone());
+        mock.push(Err("transient device loss".into()));
+        let dummy: Vec<Tensor> =
+            info.frozen.iter().map(|_| Tensor::f32(vec![1], vec![0.0])).collect();
+        let dummy_t: Vec<Tensor> =
+            info.trainable.iter().map(|_| Tensor::f32(vec![1], vec![0.0])).collect();
+        let server = Server::start_with_params(mock, tiny_cfg(), dummy, dummy_t).unwrap();
+        let client = server.client();
+        let e = format!("{:#}", client.infer(&[1]).unwrap_err());
+        assert!(e.contains("transient device loss"), "{e}");
+        assert!(client.infer(&[1]).is_ok());
+        let m = server.shutdown();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_the_batcher() {
+        let info = ExecBackend::native().config("tiny").unwrap();
+        let mock = MockExec::new(info.clone());
+        let mut logits = vec![f32::NAN; info.train_batch * info.vocab];
+        // One finite value in row 0: total_cmp must find it.
+        logits[3] = 1.5;
+        mock.push(Ok(vec![Tensor::f32(
+            vec![info.train_batch, info.vocab],
+            logits,
+        )]));
+        let dummy: Vec<Tensor> =
+            info.frozen.iter().map(|_| Tensor::f32(vec![1], vec![0.0])).collect();
+        let dummy_t: Vec<Tensor> =
+            info.trainable.iter().map(|_| Tensor::f32(vec![1], vec![0.0])).collect();
+        let server = Server::start_with_params(mock, tiny_cfg(), dummy, dummy_t).unwrap();
+        let reply = server.client().infer(&[1, 2]).unwrap();
+        assert_eq!(reply.next_token, 3);
+        assert_eq!(reply.logit, 1.5);
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_deterministic() {
+        assert_eq!(argmax(&[0.0, 2.0, 1.0]), (1, 2.0));
+        assert_eq!(argmax(&[f32::NAN, 1.0, f32::NAN]), (1, 1.0));
+        let (i, v) = argmax(&[f32::NAN, f32::NAN]);
+        assert_eq!(i, 0); // ties (incl. all-NaN) keep the first index
+        assert!(v.is_nan());
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), (1, -1.0));
+    }
+
+    #[test]
+    fn validate_logits_rejects_malformed_outputs() {
+        assert!(validate_logits(&[], 2, 4).is_err());
+        assert!(validate_logits(&[Tensor::f32(vec![2, 3], vec![0.0; 6])], 2, 4).is_err());
+        assert!(validate_logits(&[Tensor::i32(vec![2, 4], vec![0; 8])], 2, 4).is_err());
+        let ok = [Tensor::f32(vec![2, 4], vec![0.0; 8])];
+        assert_eq!(validate_logits(&ok, 2, 4).unwrap().len(), 8);
+    }
+
+    // --- PJRT-gated variants (skip without `make artifacts`) ---
 
     #[test]
     fn serves_single_request() {
@@ -345,18 +692,6 @@ mod tests {
         // pack more than one request per executable call.
         assert!(m.batches < 4, "batches {}", m.batches);
         assert!(replies.iter().any(|r| r.batch_occupancy > 1));
-    }
-
-    #[test]
-    fn rejects_invalid_prompts() {
-        let Some(dir) = artifacts() else { return };
-        let server = Server::start(&dir, tiny_cfg()).unwrap();
-        let client = server.client();
-        assert!(client.infer(&[]).is_err());
-        assert!(client.infer(&vec![0; 10_000]).is_err());
-        assert!(client.infer(&[-1]).is_err());
-        assert!(client.infer(&[1_000_000]).is_err());
-        drop(server);
     }
 
     #[test]

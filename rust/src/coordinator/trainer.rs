@@ -1,4 +1,4 @@
-//! Training coordinator: drives the AOT `train_<cfg>_<variant>` artifact
+//! Training coordinator: drives the `train_<cfg>_<variant>` artifact
 //! from Rust — parameter lifecycle, data feeding, loss/eval logging.
 //!
 //! Python never runs here. The coordinator:
@@ -11,6 +11,11 @@
 //!    the host round-trip amortizes over the chunk;
 //! 4. tracks per-step losses, periodic eval losses, and wall time.
 //!
+//! The trainer runs over any [`ExecBackend`]: the PJRT engine when AOT
+//! artifacts are available, the native kernel-registry engine otherwise
+//! (`Trainer::new` accepts either via `Into<ExecBackend>`; use
+//! `ExecBackend::auto()` for the fallback order).
+//!
 //! The convergence experiment (paper §5.9, Table 10 / Figure 12) runs two
 //! `Trainer`s (eager + fused variants) from the same seed and data stream
 //! and compares their loss trajectories.
@@ -20,7 +25,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::data::MarkovCorpus;
-use crate::runtime::{ConfigInfo, Engine, Tensor};
+use crate::runtime::{ConfigInfo, ExecBackend, Tensor};
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
@@ -58,7 +63,7 @@ pub struct StepRecord {
 
 /// Training run state + history.
 pub struct Trainer {
-    engine: Engine,
+    backend: ExecBackend,
     cfg: TrainerCfg,
     info: ConfigInfo,
     corpus: MarkovCorpus,
@@ -81,14 +86,16 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Initialize from the AOT init artifact.
-    pub fn new(engine: Engine, cfg: TrainerCfg) -> Result<Trainer> {
-        let info = engine.manifest().config(&cfg.config)?.clone();
+    /// Initialize from the backend's init artifact. Accepts a PJRT
+    /// `Engine`, a `NativeEngine`, or an `ExecBackend` directly.
+    pub fn new(backend: impl Into<ExecBackend>, cfg: TrainerCfg) -> Result<Trainer> {
+        let backend = backend.into();
+        let info = backend.config(&cfg.config)?;
         if !["eager", "fused"].contains(&cfg.variant.as_str()) {
             bail!("variant must be eager|fused, got {:?}", cfg.variant);
         }
         let init_name = format!("init_{}", cfg.config);
-        let outs = engine
+        let outs = backend
             .run(&init_name, &[Tensor::scalar_i32(cfg.seed as i32)])
             .with_context(|| format!("running {init_name}"))?;
         let nf = info.frozen.len();
@@ -113,9 +120,15 @@ impl Trainer {
             vec![eval_bs, info.seq + 1],
             corpus.block(1, eval_bs, info.seq + 1),
         );
-        let plan = super::compose_plan(&info, true);
+        // Operational log: the compose plan actually in effect. The
+        // native engine forces the variant's tiers (the variant IS the
+        // numeric path); PJRT records the registry's auto plan.
+        let plan = match &backend {
+            ExecBackend::Pjrt(_) => super::compose_plan(&info, true),
+            _ => crate::models::forward::variant_kernels(&cfg.variant, &info, true)?.choice,
+        };
         Ok(Trainer {
-            engine,
+            backend,
             cfg,
             info,
             corpus,
@@ -133,8 +146,19 @@ impl Trainer {
         })
     }
 
+    /// Trainer over the default execution backend (PJRT artifacts when
+    /// usable, the native engine otherwise).
+    pub fn auto(cfg: TrainerCfg) -> Result<Trainer> {
+        Self::new(ExecBackend::auto(), cfg)
+    }
+
     pub fn config_info(&self) -> &ConfigInfo {
         &self.info
+    }
+
+    /// Which execution backend this trainer runs on ("pjrt"/"native").
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend.kind_name()
     }
 
     pub fn step_count(&self) -> usize {
@@ -172,14 +196,24 @@ impl Trainer {
         inputs.push(tokens);
 
         let t0 = Instant::now();
-        let outs = self.engine.run(&self.train_artifact(), &inputs)?;
+        let outs = self.backend.run(&self.train_artifact(), &inputs)?;
         self.wall_seconds += t0.elapsed().as_secs_f64();
 
         let nt = self.trainable.len();
+        if outs.len() != 3 * nt + 2 {
+            bail!(
+                "train artifact returned {} outputs, expected {}",
+                outs.len(),
+                3 * nt + 2
+            );
+        }
         self.trainable = outs[..nt].to_vec();
         self.m1 = outs[nt..2 * nt].to_vec();
         self.m2 = outs[2 * nt..3 * nt].to_vec();
-        self.step = outs[3 * nt].as_i32()?[0];
+        self.step = *outs[3 * nt]
+            .as_i32()?
+            .first()
+            .context("train artifact returned an empty step counter")?;
         let losses = outs[3 * nt + 1].as_f32()?;
 
         let first = self.history.len();
@@ -209,8 +243,10 @@ impl Trainer {
         inputs.extend(self.frozen.iter().cloned());
         inputs.extend(self.trainable.iter().cloned());
         inputs.push(self.eval_tokens.clone());
-        let outs = self.engine.run(&name, &inputs)?;
-        outs[0].scalar_f32()
+        let outs = self.backend.run(&name, &inputs)?;
+        outs.first()
+            .context("eval artifact returned no outputs")?
+            .scalar_f32()
     }
 
     /// Mean |Δloss| between two runs' histories (Table 10's metric).
@@ -231,6 +267,7 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::runtime::manifest::default_dir;
+    use crate::runtime::{Engine, NativeEngine};
 
     fn engine() -> Option<Engine> {
         let dir = default_dir();
@@ -250,6 +287,73 @@ mod tests {
             eval_every: 0,
         }
     }
+
+    // --- Native-engine tests: run unconditionally (no artifact gating) ---
+
+    #[test]
+    fn native_init_and_one_chunk() {
+        let mut tr = Trainer::new(NativeEngine::new(), tiny("eager", 1)).unwrap();
+        assert_eq!(tr.backend_kind(), "native");
+        let recs = tr.run_chunk().unwrap().to_vec();
+        assert_eq!(recs.len(), tr.config_info().chunk_steps);
+        assert!(recs.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+        assert_eq!(tr.step_count(), tr.config_info().chunk_steps);
+    }
+
+    #[test]
+    fn native_loss_decreases_over_chunks() {
+        let mut tr = Trainer::new(NativeEngine::new(), tiny("fused", 2)).unwrap();
+        tr.train_steps(32).unwrap();
+        let first = tr.history.first().unwrap().loss;
+        let last_avg: f32 =
+            tr.history.iter().rev().take(4).map(|r| r.loss).sum::<f32>() / 4.0;
+        assert!(last_avg < first, "no learning: first {first}, last-4 avg {last_avg}");
+    }
+
+    #[test]
+    fn native_eager_fused_convergence_parity() {
+        // The §5.9 acceptance criterion on the native engine: same seed
+        // + data through both numeric paths, per-step losses within 1e-3.
+        let mut a = Trainer::new(NativeEngine::new(), tiny("eager", 3)).unwrap();
+        let mut b = Trainer::new(NativeEngine::new(), tiny("fused", 3)).unwrap();
+        a.train_steps(8).unwrap();
+        b.train_steps(8).unwrap();
+        assert_eq!(a.history.len(), b.history.len());
+        let (mean, max) = Trainer::loss_delta(&a, &b);
+        assert!(mean < 1e-3, "mean |dloss| {mean}");
+        assert!(max < 1e-3, "max |dloss| {max}");
+        // Eval agrees across paths too.
+        let ea = a.eval().unwrap();
+        let eb = b.eval().unwrap();
+        assert!((ea - eb).abs() < 1e-3, "eval {ea} vs {eb}");
+    }
+
+    #[test]
+    fn native_seeds_produce_different_runs() {
+        let mut a = Trainer::new(NativeEngine::new(), tiny("eager", 4)).unwrap();
+        let mut b = Trainer::new(NativeEngine::new(), tiny("eager", 5)).unwrap();
+        a.run_chunk().unwrap();
+        b.run_chunk().unwrap();
+        assert_ne!(a.history[0].loss, b.history[0].loss);
+    }
+
+    #[test]
+    fn native_eval_runs_and_is_deterministic() {
+        let tr = Trainer::new(NativeEngine::new(), tiny("fused", 6)).unwrap();
+        let l1 = tr.eval().unwrap();
+        let l2 = tr.eval().unwrap();
+        assert!(l1.is_finite() && l1 > 0.0);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn native_trainer_rejects_bad_config_and_variant() {
+        assert!(Trainer::new(NativeEngine::new(), tiny("nope", 0)).is_err());
+        let cfg = TrainerCfg { config: "missing".into(), ..tiny("fused", 0) };
+        assert!(Trainer::new(NativeEngine::new(), cfg).is_err());
+    }
+
+    // --- PJRT-gated variants (skip without `make artifacts`) ---
 
     #[test]
     fn init_and_one_chunk() {

@@ -249,6 +249,15 @@ impl KernelRegistry {
             .clone()
     }
 
+    /// The norm engine of the same backend family as a compose choice:
+    /// the factored engines (sequential / tiled) for the fused backends,
+    /// the dense B@A baseline for eager — so a caller driving a whole
+    /// model (e.g. the native execution engine) gets a numerically
+    /// consistent compose + norm pair from one dispatch decision.
+    pub fn norm_for(&self, choice: &KernelChoice) -> Arc<dyn NormEngine> {
+        self.norm(choice.backend.kind())
+    }
+
     /// The dispatch surface: combine the three-tier decision (paper §4,
     /// Figure 2) with a backend choice. Fused tiers run the parallel
     /// backend when BOTH the caller's env and the registered backend
@@ -543,6 +552,20 @@ mod tests {
         assert_eq!(reg.compose_backends().len(), 3);
         assert_eq!(reg.norm_engines().len(), 3);
         assert!(reg.compose(BackendKind::ParallelTiled).parallelism() >= 2);
+    }
+
+    #[test]
+    fn norm_for_matches_compose_backend_family() {
+        let reg = KernelRegistry::with_defaults(4);
+        let env = DispatchEnv { threads: 4, ..DispatchEnv::default() };
+        for ctx in [
+            ComposeCtx::training(ActShape::new(16, 256)),     // tier 3
+            ComposeCtx::inference(ActShape::new(512, 2048)),  // tier 2, sub-LLC
+            ComposeCtx::training(ActShape::new(8192, 8192)),  // tier 1, parallel
+        ] {
+            let choice = reg.select(&env, &ctx);
+            assert_eq!(reg.norm_for(&choice).kind(), choice.backend.kind());
+        }
     }
 
     #[test]

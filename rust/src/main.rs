@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 use dorafactors::bench::report;
 use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
-use dorafactors::runtime::{manifest, Engine};
+use dorafactors::runtime::{manifest, BackendSpec, Engine};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -82,6 +82,14 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("\nartifacts not available: {e:#}"),
     }
+    println!("\nnative engine configs (PJRT fallback):");
+    for (name, cfg) in dorafactors::runtime::native::builtin_configs() {
+        println!(
+            "  config {:5}  {} params, vocab {}, d_model {}, {} layers, r={}",
+            name, cfg.n_params, cfg.vocab, cfg.d_model, cfg.n_layers, cfg.rank
+        );
+    }
+    println!("selected backend: {}", BackendSpec::auto().kind_name());
     Ok(())
 }
 
@@ -94,14 +102,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 0),
     };
     let steps = args.get_usize("steps", 50);
-    let engine = Engine::load(&manifest::default_dir())?;
-    let mut tr = Trainer::new(engine, cfg.clone())?;
+    let mut tr = Trainer::auto(cfg.clone())?;
     println!(
-        "training config={} variant={} seed={} params={} compose={} ({})",
+        "training config={} variant={} seed={} params={} backend={} compose={} ({})",
         cfg.config,
         cfg.variant,
         cfg.seed,
         tr.config_info().n_params,
+        tr.backend_kind(),
         tr.compose_backend,
         tr.compose_tier.name()
     );
@@ -121,9 +129,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve_demo(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny").to_string();
     let n = args.get_usize("requests", 16);
-    let dir = manifest::default_dir();
     let server = Server::start(
-        &dir,
+        BackendSpec::auto(),
         ServerCfg { config, max_wait: Duration::from_millis(10) },
     )?;
     let client = server.client();
@@ -142,13 +149,14 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     }
     let m = server.shutdown();
     println!(
-        "served {} requests in {} batches; p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}, compose backend {}",
+        "served {} requests in {} batches; p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}, compose backend {}, exec backend {}",
         m.completed,
         m.batches,
         m.p50_us(),
         m.p95_us(),
         m.mean_occupancy(),
-        m.compose_backend
+        m.compose_backend,
+        m.exec_backend
     );
     Ok(())
 }

@@ -9,6 +9,8 @@
 //! vision towers are not adapted (PEFT's default target modules), matching
 //! the paper's setup.
 
+pub mod forward;
+
 use crate::dora::config::ModuleShape;
 
 /// One adapted projection kind within a decoder layer.

@@ -14,8 +14,16 @@
 //!
 //! Python never runs here — the engine + artifacts directory is the
 //! entire deployable unit.
+//!
+//! PJRT is one of two execution strategies: [`native`] implements the
+//! same artifact surface over the in-process kernel registry, and
+//! [`backend`] ([`ExecBackend`] / [`BackendSpec`]) is the selection
+//! layer the coordinator consumes (fallback order: PJRT when usable,
+//! else native).
 
+pub mod backend;
 pub mod manifest;
+pub mod native;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -23,7 +31,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+pub use backend::{BackendSpec, ExecBackend, MockExec};
 pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
+pub use native::NativeEngine;
 
 /// A host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone)]

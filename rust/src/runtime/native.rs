@@ -1,0 +1,613 @@
+//! Native CPU execution engine: the PJRT artifact surface, served by the
+//! in-process kernel registry instead of compiled HLO.
+//!
+//! [`NativeEngine::run`] accepts the same artifact names and I/O
+//! conventions the AOT manifest defines — `init_<cfg>`,
+//! `train_<cfg>_<variant>`, `eval_<cfg>_<variant>`, `infer_<cfg>_fused`,
+//! plus the single-module `dora_linear_<variant>` and
+//! `compose_<variant>_<rows>x<dout>` units the quickstart drives — so the
+//! coordinator (`Trainer`/`Server`) and the examples run unchanged on a
+//! machine with no `artifacts/` directory and no PJRT runtime. The model
+//! math lives in [`models::forward`](crate::models::forward); every
+//! compose/norm hot path goes through `kernels::registry().select(...)`.
+//!
+//! Configs are built in (`tiny`/`small`/`e2e`), dimensioned like the AOT
+//! manifest's but sized for a CPU testbed; the leaf naming and flatten
+//! order follow the manifest convention exactly, so parameters can be
+//! handed between a native trainer and a PJRT server (or vice versa) when
+//! the shapes line up.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dora::config::{ActShape, ModuleShape};
+use crate::dora::norm_cpu::{self, AllocTracker};
+use crate::kernels::{registry, BackendKind};
+use crate::models::forward::{self, init_leaves, variant_kernels, NativeModel};
+use crate::numerics::half::Dtype;
+use crate::runtime::{ConfigInfo, Tensor};
+
+/// The built-in native model configurations. Shapes follow the AOT
+/// manifest's tiny/small/e2e ladder, scaled to interactive CPU budgets
+/// (the `tiny` config must train in debug-mode unit tests).
+pub fn builtin_configs() -> &'static BTreeMap<String, ConfigInfo> {
+    static CONFIGS: OnceLock<BTreeMap<String, ConfigInfo>> = OnceLock::new();
+    CONFIGS.get_or_init(|| {
+        let mut m = BTreeMap::new();
+        for (name, vocab, d_model, n_layers, seq, rank, train_batch, chunk_steps) in [
+            ("tiny", 64usize, 32usize, 2usize, 16usize, 4usize, 4usize, 4usize),
+            ("small", 256, 64, 3, 32, 8, 8, 4),
+            ("e2e", 512, 128, 4, 64, 16, 8, 8),
+        ] {
+            let n_params = vocab * d_model
+                + n_layers * (d_model * d_model + rank * d_model + d_model * rank + d_model);
+            m.insert(
+                name.to_string(),
+                ConfigInfo {
+                    name: name.to_string(),
+                    vocab,
+                    d_model,
+                    n_layers,
+                    seq,
+                    rank,
+                    scale: 2.0,
+                    n_params,
+                    train_batch,
+                    chunk_steps,
+                    frozen: forward::frozen_names(n_layers),
+                    trainable: forward::trainable_names(n_layers),
+                },
+            );
+        }
+        m
+    })
+}
+
+/// Scale used by the native `dora_linear_*` units (matching the AOT
+/// lowering's `alpha/sqrt(r)` with alpha = 16).
+fn dora_linear_scale(rank: usize) -> f32 {
+    16.0 / (rank as f32).sqrt()
+}
+
+/// The native execution engine. Cheap to clone; stateless between calls
+/// (parameters cross the call boundary as host tensors, exactly like the
+/// PJRT engine's literals).
+#[derive(Clone, Default)]
+pub struct NativeEngine {
+    _priv: (),
+}
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine { _priv: () }
+    }
+
+    pub fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    pub fn config(&self, name: &str) -> Result<&'static ConfigInfo> {
+        builtin_configs()
+            .get(name)
+            .with_context(|| format!("config {name:?} not in the native engine's builtin set"))
+    }
+
+    pub fn configs(&self) -> &'static BTreeMap<String, ConfigInfo> {
+        builtin_configs()
+    }
+
+    /// Does this engine implement the named artifact?
+    pub fn supports(&self, name: &str) -> bool {
+        self.parse_artifact(name).is_ok()
+    }
+
+    fn parse_artifact(&self, name: &str) -> Result<NativeArtifact> {
+        if let Some(cfg) = name.strip_prefix("init_") {
+            return Ok(NativeArtifact::Init(self.config(cfg)?));
+        }
+        for (prefix, train) in [("train_", true), ("eval_", false)] {
+            if let Some(rest) = name.strip_prefix(prefix) {
+                let (cfg, variant) = rest
+                    .rsplit_once('_')
+                    .with_context(|| format!("artifact {name:?}: expected {prefix}<cfg>_<variant>"))?;
+                if !["eager", "fused"].contains(&variant) {
+                    bail!("artifact {name:?}: variant must be eager|fused");
+                }
+                let info = self.config(cfg)?;
+                return Ok(if train {
+                    NativeArtifact::Train(info, variant.to_string())
+                } else {
+                    NativeArtifact::Eval(info, variant.to_string())
+                });
+            }
+        }
+        if let Some(rest) = name.strip_prefix("infer_") {
+            let (cfg, variant) = rest
+                .rsplit_once('_')
+                .with_context(|| format!("artifact {name:?}: expected infer_<cfg>_<variant>"))?;
+            if !["eager", "fused"].contains(&variant) {
+                bail!("artifact {name:?}: variant must be eager|fused");
+            }
+            return Ok(NativeArtifact::Infer(self.config(cfg)?, variant.to_string()));
+        }
+        if let Some(variant) = name.strip_prefix("dora_linear_") {
+            if !["peft", "dense_ba", "eager", "fused"].contains(&variant) {
+                bail!("artifact {name:?}: unknown dora_linear variant");
+            }
+            return Ok(NativeArtifact::DoraLinear(variant.to_string()));
+        }
+        if let Some(rest) = name.strip_prefix("compose_") {
+            let (variant, shape) = rest
+                .split_once('_')
+                .with_context(|| format!("artifact {name:?}: expected compose_<variant>_<RxD>"))?;
+            if !["eager", "fused"].contains(&variant) {
+                bail!("artifact {name:?}: compose variant must be eager|fused");
+            }
+            let bad = || format!("artifact {name:?}: bad <rows>x<d_out> suffix");
+            let (rows_s, d_s) = shape.split_once('x').with_context(bad)?;
+            let rows = rows_s.parse::<usize>().ok().with_context(bad)?;
+            let d_out = d_s.parse::<usize>().ok().with_context(bad)?;
+            return Ok(NativeArtifact::Compose(variant.to_string(), rows, d_out));
+        }
+        bail!("artifact {name:?} is not implemented by the native engine")
+    }
+
+    /// Execute a native artifact with host tensors, validating the input
+    /// signature, and return the outputs — the same contract as
+    /// [`Engine::run`](crate::runtime::Engine::run).
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match self.parse_artifact(name)? {
+            NativeArtifact::Init(info) => run_init(info, name, inputs),
+            NativeArtifact::Train(info, variant) => run_train(info, &variant, name, inputs),
+            NativeArtifact::Eval(info, variant) => run_eval(info, &variant, name, inputs),
+            NativeArtifact::Infer(info, variant) => run_infer(info, &variant, name, inputs),
+            NativeArtifact::DoraLinear(variant) => run_dora_linear(&variant, name, inputs),
+            NativeArtifact::Compose(variant, rows, d_out) => {
+                run_compose(&variant, rows, d_out, name, inputs)
+            }
+        }
+    }
+}
+
+enum NativeArtifact {
+    Init(&'static ConfigInfo),
+    Train(&'static ConfigInfo, String),
+    Eval(&'static ConfigInfo, String),
+    Infer(&'static ConfigInfo, String),
+    DoraLinear(String),
+    Compose(String, usize, usize),
+}
+
+fn expect_inputs(name: &str, inputs: &[Tensor], want: usize) -> Result<()> {
+    if inputs.len() != want {
+        bail!("artifact {name:?} expects {want} inputs, got {}", inputs.len());
+    }
+    Ok(())
+}
+
+fn expect_shape(name: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()> {
+    if t.shape != shape {
+        bail!(
+            "artifact {name:?} input {what:?}: shape {:?} != expected {shape:?}",
+            t.shape
+        );
+    }
+    Ok(())
+}
+
+/// Shape AND dtype check for an f32 parameter leaf — a wrong-dtype leaf
+/// must surface as an `Err` here, never as a downstream panic.
+fn expect_f32(name: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()> {
+    expect_shape(name, what, t, shape)?;
+    t.as_f32()
+        .with_context(|| format!("artifact {name:?} input {what:?}"))?;
+    Ok(())
+}
+
+/// Check the frozen + trainable prefix of an artifact's inputs against the
+/// config's leaf shapes, returning the two slices.
+fn split_params<'a>(
+    info: &ConfigInfo,
+    name: &str,
+    inputs: &'a [Tensor],
+) -> Result<(&'a [Tensor], &'a [Tensor])> {
+    let nf = info.frozen.len();
+    let nt = info.trainable.len();
+    let frozen = &inputs[..nf];
+    let trainable = &inputs[nf..nf + nt];
+    let d = info.d_model;
+    let r = info.rank;
+    expect_f32(name, "embed", &frozen[0], &[info.vocab, d])?;
+    for l in 0..info.n_layers {
+        expect_f32(name, &info.frozen[1 + l], &frozen[1 + l], &[d, d])?;
+        expect_f32(name, &info.trainable[3 * l], &trainable[3 * l], &[r, d])?;
+        expect_f32(name, &info.trainable[3 * l + 1], &trainable[3 * l + 1], &[d, r])?;
+        expect_f32(name, &info.trainable[3 * l + 2], &trainable[3 * l + 2], &[d])?;
+    }
+    Ok((frozen, trainable))
+}
+
+fn run_init(info: &'static ConfigInfo, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_inputs(name, inputs, 1)?;
+    expect_shape(name, "seed", &inputs[0], &[])?;
+    let seed = inputs[0].as_i32().context("init seed must be i32")?[0];
+    let leaves = init_leaves(info, seed as u64);
+    let mut outs = leaves.frozen;
+    outs.extend(leaves.trainable);
+    Ok(outs)
+}
+
+/// `train_<cfg>_<variant>`: frozen + trainable + m1 + m2 + step + tokens
+/// [k, bs, seq+1] -> trainable' + m1' + m2' + step' + losses [k]. The
+/// scan-over-steps artifact contract, executed as k native steps.
+fn run_train(
+    info: &'static ConfigInfo,
+    variant: &str,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let nf = info.frozen.len();
+    let nt = info.trainable.len();
+    expect_inputs(name, inputs, nf + 3 * nt + 2)?;
+    let (frozen, trainable) = split_params(info, name, inputs)?;
+    let k = info.chunk_steps;
+    let bs = info.train_batch;
+    let seq1 = info.seq + 1;
+    let step_t = &inputs[nf + 3 * nt];
+    expect_shape(name, "step", step_t, &[])?;
+    let step0 = step_t.as_i32().context("step must be i32")?[0];
+    let tokens_t = &inputs[nf + 3 * nt + 1];
+    expect_shape(name, "tokens", tokens_t, &[k, bs, seq1])?;
+    let tokens = tokens_t.as_i32().context("tokens must be i32")?;
+    // Moments must mirror the trainable leaf shapes and dtype (the
+    // optimizer iterates them in lockstep).
+    for (which, moments) in [("m1", &inputs[nf + nt..nf + 2 * nt]), ("m2", &inputs[nf + 2 * nt..nf + 3 * nt])] {
+        for (slot, (m, t)) in moments.iter().zip(trainable).enumerate() {
+            expect_f32(name, &format!("{which}[{slot}]"), m, &t.shape)?;
+        }
+    }
+
+    let mut params = trainable.to_vec();
+    let mut m1 = inputs[nf + nt..nf + 2 * nt].to_vec();
+    let mut m2 = inputs[nf + 2 * nt..nf + 3 * nt].to_vec();
+    let kernels = variant_kernels(variant, info, true)?;
+    let mut losses = Vec::with_capacity(k);
+    for i in 0..k {
+        let block = &tokens[i * bs * seq1..(i + 1) * bs * seq1];
+        // The model is a borrowed view over `params`; grads are computed
+        // with the view alive, the update after it drops.
+        let (loss, grads) = {
+            let model = NativeModel::new(info, frozen, &params, kernels.clone())?;
+            model.loss_and_grads(block, bs)?
+        };
+        forward::adamw_step(&mut params, &mut m1, &mut m2, &grads, step0 + i as i32 + 1);
+        losses.push(loss);
+    }
+    let mut outs = params;
+    outs.extend(m1);
+    outs.extend(m2);
+    outs.push(Tensor::scalar_i32(step0 + k as i32));
+    outs.push(Tensor::f32(vec![k], losses));
+    Ok(outs)
+}
+
+/// `eval_<cfg>_<variant>`: frozen + trainable + tokens [bs, seq+1] ->
+/// scalar mean loss.
+fn run_eval(
+    info: &'static ConfigInfo,
+    variant: &str,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let nf = info.frozen.len();
+    let nt = info.trainable.len();
+    expect_inputs(name, inputs, nf + nt + 1)?;
+    let (frozen, trainable) = split_params(info, name, inputs)?;
+    let bs = info.train_batch;
+    let tokens_t = &inputs[nf + nt];
+    expect_shape(name, "tokens", tokens_t, &[bs, info.seq + 1])?;
+    let tokens = tokens_t.as_i32().context("tokens must be i32")?;
+    let kernels = variant_kernels(variant, info, false)?;
+    let model = NativeModel::new(info, frozen, trainable, kernels)?;
+    let loss = model.eval_loss(tokens, bs)?;
+    Ok(vec![Tensor::f32(vec![], vec![loss])])
+}
+
+/// `infer_<cfg>_fused`: frozen + trainable + tokens [bs, seq] ->
+/// last-position logits [bs, vocab] (the Tier-2 serving path).
+fn run_infer(
+    info: &'static ConfigInfo,
+    variant: &str,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let nf = info.frozen.len();
+    let nt = info.trainable.len();
+    expect_inputs(name, inputs, nf + nt + 1)?;
+    let (frozen, trainable) = split_params(info, name, inputs)?;
+    let bs = info.train_batch;
+    let seq = info.seq;
+    let tokens_t = &inputs[nf + nt];
+    expect_shape(name, "tokens", tokens_t, &[bs, seq])?;
+    let tokens = tokens_t.as_i32().context("tokens must be i32")?;
+    let kernels = variant_kernels(variant, info, false)?;
+    let model = NativeModel::new(info, frozen, trainable, kernels)?;
+    let logits = model.infer_logits(tokens, bs, seq)?;
+    Ok(vec![Tensor::f32(vec![bs, info.vocab], logits)])
+}
+
+/// `dora_linear_<variant>`: x [bs, sq, d] + w [d, d] + a [r, d] +
+/// b [d, r] + mag [d] -> y [bs, sq, d]. The four norm/compose
+/// configurations of the paper's §1 table, over the registry kernels.
+fn run_dora_linear(variant: &str, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    expect_inputs(name, inputs, 5)?;
+    let x_t = &inputs[0];
+    if x_t.shape.len() != 3 {
+        bail!("artifact {name:?} input \"x\": expected rank-3 [bs, sq, d], got {:?}", x_t.shape);
+    }
+    let (bs, sq, d) = (x_t.shape[0], x_t.shape[1], x_t.shape[2]);
+    let r = inputs[2].shape.first().copied().unwrap_or(0);
+    if r == 0 {
+        bail!("artifact {name:?} input \"a\": empty rank dimension");
+    }
+    expect_shape(name, "w", &inputs[1], &[d, d])?;
+    expect_shape(name, "a", &inputs[2], &[r, d])?;
+    expect_shape(name, "b", &inputs[3], &[d, r])?;
+    expect_shape(name, "mag", &inputs[4], &[d])?;
+    let x = x_t.as_f32()?;
+    let w = inputs[1].as_f32()?;
+    let a = inputs[2].as_f32()?;
+    let b = inputs[3].as_f32()?;
+    let mag = inputs[4].as_f32()?;
+
+    let s = dora_linear_scale(r);
+    let m = ModuleShape::new(d, d, r);
+    let mut tracker = AllocTracker::new();
+    let c = match variant {
+        "peft" => norm_cpu::peft_norm(w, a, b, s, m, &mut tracker),
+        "dense_ba" => norm_cpu::dense_ba_norm(w, a, b, s, m, &mut tracker),
+        _ => norm_cpu::factored_norm(w, a, b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tracker),
+    };
+    let g = norm_cpu::magnitude_divide(mag, &c, Dtype::F32.division_eps());
+
+    let rows = bs * sq;
+    let act = ActShape::new(rows, d);
+    let base = forward::matmul_nt(x, w, rows, d, d);
+    let u = forward::matmul_nt(x, a, rows, d, r);
+    let lora = forward::matmul_nt(&u, b, rows, r, d);
+    let kind = if variant == "fused" { BackendKind::Fused } else { BackendKind::Eager };
+    let kernel = registry().compose(kind);
+    let mut delta = vec![0f32; rows * d];
+    kernel.forward(&base, &lora, &g, s, act, Dtype::F32, &mut delta);
+    let y: Vec<f32> = base.iter().zip(&delta).map(|(&b0, &dl)| b0 + dl).collect();
+    Ok(vec![Tensor::f32(vec![bs, sq, d], y)])
+}
+
+/// `compose_<variant>_<rows>x<dout>`: base + lora + g -> delta, s = 2.0
+/// (the AOT compose units' baked-in scale).
+fn run_compose(
+    variant: &str,
+    rows: usize,
+    d_out: usize,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    expect_inputs(name, inputs, 3)?;
+    expect_shape(name, "base", &inputs[0], &[rows, d_out])?;
+    expect_shape(name, "lora", &inputs[1], &[rows, d_out])?;
+    expect_shape(name, "g", &inputs[2], &[d_out])?;
+    let kind = if variant == "fused" { BackendKind::Fused } else { BackendKind::Eager };
+    let kernel: Arc<dyn crate::kernels::ComposeKernel> = registry().compose(kind);
+    let act = ActShape::new(rows, d_out);
+    let delta = kernel.forward_alloc(
+        inputs[0].as_f32()?,
+        inputs[1].as_f32()?,
+        inputs[2].as_f32()?,
+        2.0,
+        act,
+        Dtype::F32,
+    );
+    Ok(vec![Tensor::f32(vec![rows, d_out], delta)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn builtin_configs_have_manifest_shape_invariants() {
+        let cfgs = builtin_configs();
+        for name in ["tiny", "small", "e2e"] {
+            let c = &cfgs[name];
+            assert_eq!(c.frozen.len(), 1 + c.n_layers, "{name}");
+            assert_eq!(c.trainable.len(), 3 * c.n_layers, "{name}");
+            // Leaf names are in flatten (sorted) order — the manifest
+            // contract the coordinator relies on.
+            let mut sorted = c.frozen.clone();
+            sorted.sort();
+            assert_eq!(sorted, c.frozen, "{name} frozen order");
+            let mut sorted = c.trainable.clone();
+            sorted.sort();
+            assert_eq!(sorted, c.trainable, "{name} trainable order");
+            assert!(c.n_params > 0);
+        }
+    }
+
+    #[test]
+    fn init_is_seeded_and_shaped() {
+        let eng = NativeEngine::new();
+        let a = eng.run("init_tiny", &[Tensor::scalar_i32(1)]).unwrap();
+        let b = eng.run("init_tiny", &[Tensor::scalar_i32(1)]).unwrap();
+        let c = eng.run("init_tiny", &[Tensor::scalar_i32(2)]).unwrap();
+        let info = eng.config("tiny").unwrap();
+        assert_eq!(a.len(), info.frozen.len() + info.trainable.len());
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+        assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn train_chunk_contract_roundtrip() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let nf = info.frozen.len();
+        let nt = info.trainable.len();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(0)]).unwrap();
+        let zeros: Vec<Tensor> = leaves[nf..]
+            .iter()
+            .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.elems()]))
+            .collect();
+        let mut corpus =
+            crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 7);
+        let k = info.chunk_steps;
+        let tokens = Tensor::i32(
+            vec![k, info.train_batch, info.seq + 1],
+            corpus.block(k, info.train_batch, info.seq + 1),
+        );
+        let mut inputs = leaves.clone();
+        inputs.extend(zeros.clone());
+        inputs.extend(zeros.clone());
+        inputs.push(Tensor::scalar_i32(0));
+        inputs.push(tokens);
+        let outs = eng.run("train_tiny_fused", &inputs).unwrap();
+        assert_eq!(outs.len(), 3 * nt + 2);
+        assert_eq!(outs[3 * nt].as_i32().unwrap()[0], k as i32);
+        let losses = outs[3 * nt + 1].as_f32().unwrap();
+        assert_eq!(losses.len(), k);
+        assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0));
+        // Parameters actually moved.
+        assert_ne!(outs[0].as_f32().unwrap(), leaves[nf].as_f32().unwrap());
+    }
+
+    #[test]
+    fn infer_contract_and_validation() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(0)]).unwrap();
+        let mut inputs = leaves.clone();
+        inputs.push(Tensor::i32(
+            vec![info.train_batch, info.seq],
+            vec![1; info.train_batch * info.seq],
+        ));
+        let outs = eng.run("infer_tiny_fused", &inputs).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![info.train_batch, info.vocab]);
+        assert!(outs[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+        // Wrong token shape errors instead of panicking.
+        let mut bad = leaves;
+        bad.push(Tensor::i32(vec![1, 3], vec![1, 2, 3]));
+        let err = eng.run("infer_tiny_fused", &bad).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_artifacts_error() {
+        let eng = NativeEngine::new();
+        assert!(eng.run("no_such_artifact", &[]).is_err());
+        assert!(eng.run("train_tiny_nope", &[]).is_err());
+        assert!(eng.run("init_unknowncfg", &[]).is_err());
+        assert!(!eng.supports("norm_dense_ba_1024x1024r64"));
+        assert!(eng.supports("init_small"));
+        assert!(eng.supports("infer_tiny_fused"));
+        assert!(eng.supports("compose_fused_512x2048"));
+        // Input-count mismatch is an error, not a panic.
+        assert!(eng.run("init_tiny", &[]).is_err());
+    }
+
+    #[test]
+    fn malformed_params_and_tokens_error_not_panic() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(0)]).unwrap();
+        // Out-of-range TARGET token (last column — past the embed-lookup
+        // range check) must be an Err, not an index panic in the loss.
+        let bs = info.train_batch;
+        let seq1 = info.seq + 1;
+        let mut toks = vec![1i32; bs * seq1];
+        toks[seq1 - 1] = info.vocab as i32 + 5; // row 0's final (target-only) slot
+        let mut inputs = leaves.clone();
+        inputs.push(Tensor::i32(vec![bs, seq1], toks));
+        let err = eng.run("eval_tiny_fused", &inputs).unwrap_err();
+        assert!(format!("{err:#}").contains("vocab"), "{err:#}");
+        // Wrong-dtype parameter leaf must be an Err, not an expect panic.
+        let mut bad = leaves.clone();
+        let a_shape = bad[info.frozen.len()].shape.clone();
+        let n: usize = a_shape.iter().product();
+        bad[info.frozen.len()] = Tensor::i32(a_shape, vec![0; n]);
+        bad.push(Tensor::i32(vec![bs, info.seq], vec![1; bs * info.seq]));
+        let err = eng.run("infer_tiny_fused", &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("i32"), "{err:#}");
+    }
+
+    #[test]
+    fn dora_linear_variants_agree() {
+        // The quickstart invariant: all four configurations compute the
+        // same function to ~1e-3.
+        let eng = NativeEngine::new();
+        let (bs, sq, d, r) = (2usize, 8usize, 32usize, 4usize);
+        let mut rng = Rng::new(42);
+        let x = rng.normal_vec_f32(bs * sq * d, 1.0);
+        let w = rng.normal_vec_f32(d * d, 0.05);
+        let a = rng.normal_vec_f32(r * d, 0.06);
+        let b = rng.normal_vec_f32(d * r, 0.06);
+        let s = dora_linear_scale(r);
+        let mut tracker = AllocTracker::new();
+        let mag = norm_cpu::factored_norm(
+            &w,
+            &a,
+            &b,
+            s,
+            ModuleShape::new(d, d, r),
+            u64::MAX,
+            &mut tracker,
+        );
+        let inputs = [
+            Tensor::f32(vec![bs, sq, d], x),
+            Tensor::f32(vec![d, d], w),
+            Tensor::f32(vec![r, d], a),
+            Tensor::f32(vec![d, r], b),
+            Tensor::f32(vec![d], mag),
+        ];
+        let mut reference: Option<Vec<f32>> = None;
+        for variant in ["peft", "dense_ba", "eager", "fused"] {
+            let y = eng.run(&format!("dora_linear_{variant}"), &inputs).unwrap();
+            let y = y[0].as_f32().unwrap().to_vec();
+            if let Some(r0) = &reference {
+                let max_diff =
+                    y.iter().zip(r0).map(|(p, q)| (p - q).abs()).fold(0f32, f32::max);
+                assert!(max_diff < 1e-3, "{variant}: max diff {max_diff}");
+            } else {
+                reference = Some(y);
+            }
+        }
+    }
+
+    #[test]
+    fn compose_units_match_flat_kernels() {
+        let eng = NativeEngine::new();
+        let (rows, d_out) = (64usize, 96usize);
+        let mut rng = Rng::new(8);
+        let base = rng.normal_vec_f32(rows * d_out, 1.0);
+        let lora = rng.normal_vec_f32(rows * d_out, 0.3);
+        let g: Vec<f32> =
+            (0..d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect();
+        let inputs = [
+            Tensor::f32(vec![rows, d_out], base.clone()),
+            Tensor::f32(vec![rows, d_out], lora.clone()),
+            Tensor::f32(vec![d_out], g.clone()),
+        ];
+        let out = eng.run(&format!("compose_fused_{rows}x{d_out}"), &inputs).unwrap();
+        let want = crate::dora::compose_cpu::compose_fused(
+            &base,
+            &lora,
+            &g,
+            2.0,
+            ActShape::new(rows, d_out),
+        );
+        assert_eq!(out[0].as_f32().unwrap(), want.as_slice());
+        let eager = eng.run(&format!("compose_eager_{rows}x{d_out}"), &inputs).unwrap();
+        assert_eq!(eager[0].as_f32().unwrap(), want.as_slice());
+    }
+}

@@ -25,13 +25,15 @@ pub fn cv(xs: &[f64]) -> f64 {
     std_dev(xs) / mean(xs)
 }
 
-/// Median (interpolated for even lengths).
+/// Median (interpolated for even lengths). NaN-safe: sorts by the IEEE
+/// total order instead of panicking (a single NaN latency sample must
+/// not take down `ServerMetrics` reporting).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -41,13 +43,15 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Percentile in [0, 100] with linear interpolation (for p50/p95/p99
-/// latency reporting in the serving coordinator).
+/// latency reporting in the serving coordinator). NaN-safe via the IEEE
+/// total order: positive NaNs sort to the top, so low/mid percentiles of
+/// a mostly-clean sample stay meaningful and nothing panics.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -113,6 +117,25 @@ mod tests {
     fn empty_inputs_are_nan() {
         assert!(mean(&[]).is_nan());
         assert!(median(&[]).is_nan());
+        assert!(percentile(&[], 50.0).is_nan());
         assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn order_stats_survive_nan_inputs() {
+        // Regression: these panicked with `partial_cmp(..).unwrap()` —
+        // one NaN latency sample killed ServerMetrics reporting.
+        let with_nan = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(median(&with_nan), 2.5); // NaN sorts above 3.0
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert!((percentile(&with_nan, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&with_nan, 100.0).is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(median(&all_nan).is_nan());
+        assert!(percentile(&all_nan, 95.0).is_nan());
+        // Negative NaN bit patterns sort low in the total order; still
+        // no panic and a deterministic result.
+        let neg_nan = [-f64::NAN, 5.0, 1.0];
+        assert_eq!(percentile(&neg_nan, 100.0), 5.0);
     }
 }
