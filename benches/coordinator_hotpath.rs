@@ -18,7 +18,9 @@ use dorafactors::dora::config::{ActShape, Config, ModuleShape};
 use dorafactors::dora::mem_events;
 use dorafactors::memsim::allocator::CachingAllocator;
 use dorafactors::numerics::Dtype;
-use dorafactors::runtime::{manifest, BackendSpec, Engine, NativeEngine, Tensor};
+use dorafactors::runtime::{
+    manifest, Adapter, BackendSpec, Engine, ExecBackend, InitReq, NativeEngine, Tensor,
+};
 use dorafactors::util::rng::Rng;
 use dorafactors::util::table::{fmt_secs, Table};
 
@@ -158,6 +160,59 @@ fn main() {
         ]);
         assert!(metrics.completed > 0);
         assert!(m2.completed == 64, "completed {}", m2.completed);
+    }
+
+    // Multi-adapter serving: the same 8x8 concurrent load, but spread
+    // round-robin over 2 and 4 hosted adapters — what per-adapter request
+    // grouping costs relative to the single-adapter row above (each
+    // distinct adapter in a collected batch is one more engine call).
+    for n_adapters in [2usize, 4] {
+        let be = ExecBackend::native();
+        let info = be.config("tiny").expect("tiny config");
+        let adapters: Vec<Adapter> = (0..n_adapters)
+            .map(|i| {
+                let init = be
+                    .init(InitReq { config: "tiny".into(), seed: i as i32 })
+                    .expect("init");
+                Adapter::new(format!("adapter-{i}"), &info, i as u64, 0, init.params)
+                    .expect("adapter")
+            })
+            .collect();
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(20) },
+            adapters,
+        )
+        .expect("multi-adapter server");
+        let client = server.client();
+        let handles: Vec<_> = (0..8)
+            .map(|cid| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for i in 0..8usize {
+                        let adapter = format!("adapter-{}", (cid + i) % n_adapters);
+                        c.infer_with(&adapter, &[cid as i32 + 1, 2, 3]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 64, "completed {}", m.completed);
+        assert_eq!(m.per_adapter.len(), n_adapters);
+        for (name, am) in &m.per_adapter {
+            assert_eq!(am.completed, 64 / n_adapters as u64, "{name}");
+        }
+        t.row(vec![
+            format!(
+                "native multi-adapter serve ({n_adapters} adapters, 8 clients x 8 req, {} engine calls)",
+                m.batches
+            ),
+            format!("p95 {}", fmt_secs(m.p95_us() / 1e6)),
+            format!("mean occupancy {:.2}", m.mean_occupancy()),
+        ]);
     }
 
     // PJRT invocation: compose artifacts, eager vs fused lowering.

@@ -18,7 +18,9 @@ use dorafactors::dispatch::{self, ComposeCtx, DispatchEnv};
 use dorafactors::dora::config::{ActShape, ModuleShape};
 use dorafactors::dora::{compose_cpu, norm_cpu};
 use dorafactors::models;
-use dorafactors::runtime::{ExecBackend, Tensor};
+use dorafactors::runtime::{
+    ComposeReq, DoraLinearReq, ExecBackend, LinearVariant, Tensor, Variant,
+};
 use dorafactors::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -38,19 +40,21 @@ fn main() -> Result<()> {
     let mut tracker = norm_cpu::AllocTracker::new();
     let m = norm_cpu::factored_norm(&w, &a, &b, s, ModuleShape::new(d, d, r), 1 << 20, &mut tracker);
 
-    let inputs = [
-        Tensor::f32(vec![bs, sq, d], x.clone()),
-        Tensor::f32(vec![d, d], w.clone()),
-        Tensor::f32(vec![r, d], a.clone()),
-        Tensor::f32(vec![d, r], b.clone()),
-        Tensor::f32(vec![d], m.clone()),
-    ];
-
+    // The typed op surface: one request struct per adapted module —
+    // shapes are named fields, not positional slots.
     let mut reference: Option<Vec<f32>> = None;
-    for variant in ["peft", "dense_ba", "eager", "fused"] {
-        let y = engine.run(&format!("dora_linear_{variant}"), &inputs)?;
-        let y = y[0].as_f32()?.to_vec();
+    for variant in LinearVariant::ALL {
+        let resp = engine.dora_linear(DoraLinearReq {
+            variant,
+            x: Tensor::f32(vec![bs, sq, d], x.clone()),
+            w: Tensor::f32(vec![d, d], w.clone()),
+            a: Tensor::f32(vec![r, d], a.clone()),
+            b: Tensor::f32(vec![d, r], b.clone()),
+            mag: Tensor::f32(vec![d], m.clone()),
+        })?;
+        let y = resp.y.as_f32()?.to_vec();
         let mean_abs: f32 = y.iter().map(|v| v.abs()).sum::<f32>() / y.len() as f32;
+        let variant = variant.as_str();
         match &reference {
             None => {
                 println!("dora_linear[{variant:9}] mean|y| = {mean_abs:.4}  (reference)");
@@ -68,27 +72,26 @@ fn main() -> Result<()> {
         }
     }
 
-    // --- cross-layer check: XLA compose artifact vs Rust CPU kernel -------
+    // --- cross-layer check: engine compose op vs Rust CPU kernel ----------
     let act = ActShape::new(512, 2048);
     let base = rng.normal_vec_f32(act.elems(), 1.0);
     let lora = rng.normal_vec_f32(act.elems(), 0.3);
     let g: Vec<f32> = (0..act.d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect();
-    let xla_out = engine.run(
-        "compose_fused_512x2048",
-        &[
-            Tensor::f32(vec![512, 2048], base.clone()),
-            Tensor::f32(vec![512, 2048], lora.clone()),
-            Tensor::f32(vec![2048], g.clone()),
-        ],
-    )?;
+    let engine_out = engine.compose(ComposeReq {
+        variant: Variant::Fused,
+        base: Tensor::f32(vec![512, 2048], base.clone()),
+        lora: Tensor::f32(vec![512, 2048], lora.clone()),
+        g: Tensor::f32(vec![2048], g.clone()),
+    })?;
     let cpu_out = compose_cpu::compose_fused(&base, &lora, &g, 2.0, act);
-    let max_diff = xla_out[0]
+    let max_diff = engine_out
+        .delta
         .as_f32()?
         .iter()
         .zip(&cpu_out)
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
-    println!("\ncompose: XLA artifact vs Rust CPU kernel max|Δ| = {max_diff:.2e}");
+    println!("\ncompose: engine op vs Rust CPU kernel max|Δ| = {max_diff:.2e}");
     assert!(max_diff < 1e-4);
 
     // --- dispatch over a real model inventory ------------------------------

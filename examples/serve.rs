@@ -1,7 +1,8 @@
-//! Serving example: train an adapter briefly, hand the adapted parameters
-//! to the batched inference server (Tier-2 fused forward), then fire
-//! concurrent client traffic and report latency/throughput/occupancy —
-//! the paper's deployment context (§6.1) in miniature.
+//! Serving example: train an adapter briefly, checkpoint it to an
+//! adapter store, then host it NEXT TO a second (fresh-init) adapter on
+//! one batched inference server — per-request adapter routing, periodic
+//! checkpoint hot-loading, and per-adapter metrics: the paper's
+//! multi-adapter deployment context (§6.1) in miniature.
 //!
 //! Runs on the default execution backend: PJRT when AOT artifacts are
 //! usable, the native kernel-registry engine otherwise — so a fresh
@@ -9,8 +10,8 @@
 //!
 //! Run with:
 //!   cargo run --release --example serve -- \
-//!       [--config small] [--train-steps 20] [--clients 8] [--requests 64]
-
+//!       [--config small] [--train-steps 20] [--clients 8] [--requests 64] \
+//!       [--store DIR]
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -18,7 +19,7 @@ use anyhow::Result;
 
 use dorafactors::coordinator::data::MarkovCorpus;
 use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
-use dorafactors::runtime::BackendSpec;
+use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, InitReq};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -27,16 +28,21 @@ fn main() -> Result<()> {
     let train_steps = args.get_usize("train-steps", 20);
     let n_clients = args.get_usize("clients", 8);
     let n_requests = args.get_usize("requests", 64);
+    let store_dir = args
+        .get("store")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join("dora_serve_example"));
+    let store = AdapterStore::open(&store_dir)?;
 
     let spec = BackendSpec::auto();
     let backend = spec.connect()?;
     let info = backend.config(&config)?;
     println!("execution backend: {} ({})", backend.kind_name(), backend.platform());
 
-    // --- phase 1: fine-tune the adapter -----------------------------------
+    // --- phase 1: fine-tune the "tuned" adapter, checkpoint as we go ------
     println!("== phase 1: training {train_steps} steps on config {config} ==");
     let mut tr = Trainer::new(
-        backend,
+        backend.clone(),
         TrainerCfg {
             config: config.clone(),
             variant: "fused".into(),
@@ -45,27 +51,38 @@ fn main() -> Result<()> {
             eval_every: 0,
         },
     )?;
+    let ckpt_every = (train_steps / 2).max(1);
+    tr.set_checkpointing(store.clone(), "tuned", ckpt_every)?;
     tr.train_steps(train_steps)?;
+    store.save(&tr.to_adapter("tuned")?)?;
     println!(
-        "trained: loss {:.4} -> {:.4}",
+        "trained: loss {:.4} -> {:.4} ({} periodic checkpoints -> {:?})",
         tr.history.first().unwrap().loss,
-        tr.history.last().unwrap().loss
+        tr.history.last().unwrap().loss,
+        tr.checkpoints_written,
+        store.dir()
     );
 
-    // --- phase 2: serve with the adapted parameters ------------------------
-    println!("\n== phase 2: serving with {n_clients} clients x {n_requests} requests ==");
-    let server = Server::start_with_params(
+    // --- phase 2: serve "tuned" alongside an untrained "base" adapter -----
+    println!("\n== phase 2: serving 2 adapters, {n_clients} clients x {n_requests} requests ==");
+    let base_init = backend.init(InitReq { config: config.clone(), seed: 1234 })?;
+    let adapters = vec![
+        store.load("tuned")?,
+        Adapter::new("base", &info, 1234, 0, base_init.params)?,
+    ];
+    let server = Server::start_with_adapters(
         spec,
         ServerCfg { config: config.clone(), max_wait: Duration::from_millis(5) },
-        tr.frozen().to_vec(),
-        tr.trainable().to_vec(),
+        adapters,
     )?;
     let client = server.client();
+    let names = ["tuned", "base"];
 
     let t0 = Instant::now();
     // Distribute requests across clients WITHOUT dropping the remainder:
     // client `cid` serves base + 1 extra while cid < remainder, so e.g.
-    // --requests 65 --clients 8 really serves 65, not 64.
+    // --requests 65 --clients 8 really serves 65, not 64. Each request
+    // alternates between the two adapters.
     let base = n_requests / n_clients.max(1);
     let remainder = n_requests % n_clients.max(1);
     let vocab = info.vocab;
@@ -77,12 +94,13 @@ fn main() -> Result<()> {
             let quota = base + usize::from(cid < remainder);
             std::thread::spawn(move || -> Result<()> {
                 let mut corpus = MarkovCorpus::new(vocab, 4, 1000 + cid as u64);
-                for _ in 0..quota {
+                for i in 0..quota {
                     let prompt_len = 8 + (cid % 5) * 3;
                     let prompt = corpus.sequence(prompt_len);
-                    let reply = c.infer(&prompt)?;
+                    let adapter = names[(cid + i) % names.len()];
+                    let reply = c.infer_with(adapter, &prompt)?;
+                    assert_eq!(reply.adapter, adapter);
                     counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let _ = reply;
                 }
                 Ok(())
             })
@@ -92,11 +110,22 @@ fn main() -> Result<()> {
         h.join().unwrap()?;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = server.shutdown();
 
+    // --- phase 3: hot-load a refreshed checkpoint while serving -----------
+    tr.train_steps(train_steps + ckpt_every)?;
+    store.save(&tr.to_adapter("tuned")?)?;
+    server.hot_load(&store, "tuned")?;
+    let refreshed = client.infer_with("tuned", &[1, 2, 3])?;
     println!(
-        "served {} requests in {} batches over {:.2} s ({} failed)",
-        m.completed, m.batches, wall, m.failed
+        "\nhot-loaded refreshed \"tuned\" checkpoint (step {}); next_token={}",
+        tr.step_count(),
+        refreshed.next_token
+    );
+
+    let m = server.shutdown();
+    println!(
+        "served {} requests in {} engine calls over {:.2} s ({} failed, {} hot-loads)",
+        m.completed, m.batches, wall, m.failed, m.hot_loads
     );
     println!(
         "throughput: {:.1} req/s | latency p50 {:.1} ms, p95 {:.1} ms | mean batch occupancy {:.2}/{}",
@@ -106,12 +135,26 @@ fn main() -> Result<()> {
         m.mean_occupancy(),
         info.train_batch
     );
+    for (name, am) in &m.per_adapter {
+        println!(
+            "  adapter {:6} completed {:4} failed {:3} engine calls {:4} p95 {:8.1} ms occupancy {:.2}",
+            name,
+            am.completed,
+            am.failed,
+            am.batches,
+            am.p95_us() / 1e3,
+            am.mean_occupancy()
+        );
+    }
     assert_eq!(
-        m.completed as usize, n_requests,
-        "request-count shortfall: served {} of {n_requests}",
-        m.completed
+        m.completed as usize,
+        n_requests + 1, // + the post-hot-load probe
+        "request-count shortfall: served {} of {}",
+        m.completed,
+        n_requests + 1
     );
     assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), n_requests);
+    assert_eq!(m.hot_loads, 1);
     println!("\nserve OK");
     Ok(())
 }

@@ -10,13 +10,18 @@
 //!   cargo run --release --example train_e2e -- \
 //!       [--config e2e] [--steps 200] [--seed 0] [--eval-every 25]
 //!       [--variant fused] [--csv losses.csv]
+//!       [--adapter NAME] [--checkpoint-every N] [--store DIR]
+//!
+//! With `--adapter NAME` the run materializes as a named adapter:
+//! periodic checkpoints land in the store (hot-loadable by a running
+//! server) and the final parameters are saved under NAME.
 
 use std::fmt::Write as _;
 
 use anyhow::Result;
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::ExecBackend;
+use dorafactors::runtime::{AdapterStore, ExecBackend};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -26,6 +31,8 @@ fn main() -> Result<()> {
     let eval_every = args.get_usize("eval-every", 25);
     let variant = args.get_or("variant", "fused").to_string();
     let csv_path = args.get("csv").map(str::to_string);
+    let adapter_name = args.get("adapter").map(str::to_string);
+    let ckpt_every = args.get_usize("checkpoint-every", 0);
 
     let engine = ExecBackend::auto();
     let info = engine.config(&config)?;
@@ -58,6 +65,25 @@ fn main() -> Result<()> {
         },
     )?;
     println!("corpus entropy floor: (branching 4 Markov chain)");
+
+    let store = match &adapter_name {
+        Some(name) => {
+            // Validate the name BEFORE training: with no periodic
+            // checkpoints the only save happens after the full run, and
+            // an invalid name would discard every step of it.
+            dorafactors::runtime::adapters::validate_name(name)?;
+            let store = AdapterStore::open_or_default(args.get("store"))?;
+            if ckpt_every > 0 {
+                tr.set_checkpointing(store.clone(), name.clone(), ckpt_every)?;
+                println!(
+                    "checkpointing adapter {name:?} every {ckpt_every} steps -> {:?}",
+                    store.dir()
+                );
+            }
+            Some(store)
+        }
+        None => None,
+    };
 
     let t0 = std::time::Instant::now();
     let mut csv = String::from("step,loss\n");
@@ -95,6 +121,14 @@ fn main() -> Result<()> {
     if let Some(path) = csv_path {
         std::fs::write(&path, csv)?;
         println!("loss curve written to {path}");
+    }
+    if let (Some(name), Some(store)) = (&adapter_name, &store) {
+        let path = store.save(&tr.to_adapter(name)?)?;
+        println!(
+            "saved adapter {name:?} at step {} -> {path:?} ({} periodic checkpoints)",
+            tr.step_count(),
+            tr.checkpoints_written
+        );
     }
     assert!(last < first, "loss did not decrease — e2e run failed");
     println!("\ntrain_e2e OK");

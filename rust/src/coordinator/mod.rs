@@ -4,18 +4,21 @@
 //! fallback order).
 //!
 //! * `data`    — synthetic Markov corpus (the dataset substitute).
-//! * `trainer` — training-run orchestration: seeded init, chunked
-//!   train-step execution, loss/eval tracking, eager-vs-fused convergence
-//!   comparison (paper §5.9).
-//! * `server`  — batched inference serving over the Tier-2 fused-forward
-//!   artifact (batch-or-timeout policy, latency metrics, malformed-output
-//!   fan-out instead of batcher panics).
+//! * `trainer` — training-run orchestration: seeded init, chunked typed
+//!   train-step execution, loss/eval tracking, periodic adapter
+//!   checkpointing, eager-vs-fused convergence comparison (paper §5.9).
+//! * `server`  — batched multi-adapter inference serving over the typed
+//!   Tier-2 infer op (batch-or-timeout policy with per-adapter request
+//!   grouping, global + per-adapter latency metrics, adapter hot-loading,
+//!   malformed-output fan-out instead of batcher panics).
 
 pub mod data;
 pub mod server;
 pub mod trainer;
 
-pub use server::{Client, Reply, Server, ServerCfg, ServerMetrics};
+pub use server::{
+    AdapterMetrics, Client, Reply, Server, ServerCfg, ServerMetrics, DEFAULT_ADAPTER,
+};
 pub use trainer::{StepRecord, Trainer, TrainerCfg};
 
 use crate::dispatch::{ComposeCtx, DispatchEnv};

@@ -14,7 +14,15 @@
 //! The trainer runs over any [`ExecBackend`]: the PJRT engine when AOT
 //! artifacts are available, the native kernel-registry engine otherwise
 //! (`Trainer::new` accepts either via `Into<ExecBackend>`; use
-//! `ExecBackend::auto()` for the fallback order).
+//! `ExecBackend::auto()` for the fallback order). All engine calls go
+//! through the typed op surface ([`TrainStepReq`]/[`EvalReq`]) — no
+//! artifact-name strings, no positional tensor packing.
+//!
+//! Training runs materialize as **named adapters**: [`Trainer::to_adapter`]
+//! snapshots the current leaves, and [`Trainer::set_checkpointing`] writes
+//! periodic checkpoints to an [`AdapterStore`] that a *running* server can
+//! hot-load ([`Server::hot_load`](super::Server::hot_load)).
+//! [`Trainer::from_adapter`] resumes from a stored checkpoint.
 //!
 //! The convergence experiment (paper §5.9, Table 10 / Figure 12) runs two
 //! `Trainer`s (eager + fused variants) from the same seed and data stream
@@ -25,7 +33,10 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::data::MarkovCorpus;
-use crate::runtime::{ConfigInfo, ExecBackend, Tensor};
+use crate::runtime::ops::{
+    AdapterParams, EvalReq, InitReq, OptState, TrainStepReq, Variant,
+};
+use crate::runtime::{Adapter, AdapterStore, ConfigInfo, ExecBackend, Tensor};
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
@@ -61,24 +72,34 @@ pub struct StepRecord {
     pub loss: f32,
 }
 
+/// Periodic checkpointing policy: write the adapter to `store` under
+/// `name` every `every_steps` optimizer steps.
+struct Checkpointing {
+    store: AdapterStore,
+    name: String,
+    every_steps: usize,
+}
+
 /// Training run state + history.
 pub struct Trainer {
     backend: ExecBackend,
     cfg: TrainerCfg,
+    variant: Variant,
     info: ConfigInfo,
     corpus: MarkovCorpus,
     /// Frozen leaves (constant across steps).
     frozen: Vec<Tensor>,
     /// Trainable leaves + AdamW moments.
     trainable: Vec<Tensor>,
-    m1: Vec<Tensor>,
-    m2: Vec<Tensor>,
-    step: i32,
+    opt: OptState,
     pub history: Vec<StepRecord>,
     pub eval_history: Vec<StepRecord>,
     pub wall_seconds: f64,
     /// Held-out eval block, fixed at construction.
     eval_tokens: Tensor,
+    ckpt: Option<Checkpointing>,
+    /// Checkpoints written by the periodic policy.
+    pub checkpoints_written: u64,
     /// Compose backend the kernel registry selects for this config's
     /// training shape (recorded at construction for operational logs).
     pub compose_backend: &'static str,
@@ -86,32 +107,59 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Initialize from the backend's init artifact. Accepts a PJRT
+    /// Initialize from the backend's typed init op. Accepts a PJRT
     /// `Engine`, a `NativeEngine`, or an `ExecBackend` directly.
     pub fn new(backend: impl Into<ExecBackend>, cfg: TrainerCfg) -> Result<Trainer> {
         let backend = backend.into();
+        // Cheap validation first: a bad variant must not cost a full
+        // parameter init (or a PJRT artifact compile) before erroring.
+        Variant::parse(&cfg.variant)?;
+        let init = backend
+            .init(InitReq { config: cfg.config.clone(), seed: cfg.seed as i32 })
+            .with_context(|| format!("initializing config {}", cfg.config))?;
+        Self::with_params(backend, cfg, init.params, 0)
+    }
+
+    /// Resume from a stored adapter checkpoint: the adapter's leaves and
+    /// step counter, fresh optimizer moments (checkpoints carry the model
+    /// state, not the AdamW state), and the configured data stream.
+    pub fn from_adapter(
+        backend: impl Into<ExecBackend>,
+        cfg: TrainerCfg,
+        adapter: &Adapter,
+    ) -> Result<Trainer> {
+        if adapter.config != cfg.config {
+            bail!(
+                "adapter {:?} targets config {:?}, trainer is configured for {:?}",
+                adapter.name,
+                adapter.config,
+                cfg.config
+            );
+        }
+        Self::with_params(backend.into(), cfg, adapter.params.clone(), adapter.step)
+    }
+
+    /// Shared construction tail over explicit parameters.
+    fn with_params(
+        backend: ExecBackend,
+        cfg: TrainerCfg,
+        params: AdapterParams,
+        step: i32,
+    ) -> Result<Trainer> {
+        let variant = Variant::parse(&cfg.variant)?;
         let info = backend.config(&cfg.config)?;
-        if !["eager", "fused"].contains(&cfg.variant.as_str()) {
-            bail!("variant must be eager|fused, got {:?}", cfg.variant);
+        if !params.matches(&info) {
+            bail!(
+                "config {}: got {}+{} leaves, expected {}+{}",
+                info.name,
+                params.frozen.len(),
+                params.trainable.len(),
+                info.frozen.len(),
+                info.trainable.len()
+            );
         }
-        let init_name = format!("init_{}", cfg.config);
-        let outs = backend
-            .run(&init_name, &[Tensor::scalar_i32(cfg.seed as i32)])
-            .with_context(|| format!("running {init_name}"))?;
-        let nf = info.frozen.len();
-        let nt = info.trainable.len();
-        if outs.len() != nf + nt {
-            bail!("init returned {} leaves, expected {}", outs.len(), nf + nt);
-        }
-        let frozen = outs[..nf].to_vec();
-        let trainable = outs[nf..].to_vec();
-        let zeros = |ts: &[Tensor]| -> Vec<Tensor> {
-            ts.iter()
-                .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.elems()]))
-                .collect()
-        };
-        let m1 = zeros(&trainable);
-        let m2 = zeros(&trainable);
+        let mut opt = OptState::zeros_like(&params.trainable);
+        opt.step = step;
         // Data stream: seeded identically across variants so eager/fused
         // see the same batches (the §5.9 controlled setup).
         let mut corpus = MarkovCorpus::new(info.vocab, cfg.branching, cfg.seed ^ 0xDA7A);
@@ -120,27 +168,35 @@ impl Trainer {
             vec![eval_bs, info.seq + 1],
             corpus.block(1, eval_bs, info.seq + 1),
         );
+        // Resuming from step N: fast-forward the stream past the chunks
+        // the original run already consumed, so a resumed run continues
+        // on fresh data exactly where an uninterrupted run would be
+        // (chunks are the consumption granularity).
+        for _ in 0..(step.max(0) as usize / info.chunk_steps) {
+            let _ = corpus.block(info.chunk_steps, info.train_batch, info.seq + 1);
+        }
         // Operational log: the compose plan actually in effect. The
         // native engine forces the variant's tiers (the variant IS the
         // numeric path); PJRT records the registry's auto plan.
         let plan = match &backend {
             ExecBackend::Pjrt(_) => super::compose_plan(&info, true),
-            _ => crate::models::forward::variant_kernels(&cfg.variant, &info, true)?.choice,
+            _ => crate::models::forward::kernels_for(variant, &info, true)?.choice,
         };
         Ok(Trainer {
             backend,
             cfg,
+            variant,
             info,
             corpus,
-            frozen,
-            trainable,
-            m1,
-            m2,
-            step: 0,
+            frozen: params.frozen,
+            trainable: params.trainable,
+            opt,
             history: Vec::new(),
             eval_history: Vec::new(),
             wall_seconds: 0.0,
             eval_tokens,
+            ckpt: None,
+            checkpoints_written: 0,
             compose_backend: plan.backend.name(),
             compose_tier: plan.tier,
         })
@@ -162,7 +218,7 @@ impl Trainer {
     }
 
     pub fn step_count(&self) -> usize {
-        self.step as usize
+        self.opt.step as usize
     }
 
     /// Borrow the current trainable leaves (for the serving handoff).
@@ -174,8 +230,35 @@ impl Trainer {
         &self.frozen
     }
 
-    fn train_artifact(&self) -> String {
-        format!("train_{}_{}", self.cfg.config, self.cfg.variant)
+    /// Snapshot the current parameters as a named adapter (the trainer →
+    /// store → server unit of exchange).
+    pub fn to_adapter(&self, name: &str) -> Result<Adapter> {
+        Adapter::new(
+            name,
+            &self.info,
+            self.cfg.seed,
+            self.opt.step,
+            AdapterParams { frozen: self.frozen.clone(), trainable: self.trainable.clone() },
+        )
+    }
+
+    /// Write the adapter to `store` under `name` every `every_steps`
+    /// optimizer steps (checked at chunk boundaries — the chunk is the
+    /// engine-call granularity). A running server hot-loads these with
+    /// [`Server::hot_load`](super::Server::hot_load).
+    pub fn set_checkpointing(
+        &mut self,
+        store: AdapterStore,
+        name: impl Into<String>,
+        every_steps: usize,
+    ) -> Result<()> {
+        if every_steps == 0 {
+            bail!("checkpoint interval must be > 0 steps");
+        }
+        let name = name.into();
+        crate::runtime::adapters::validate_name(&name)?;
+        self.ckpt = Some(Checkpointing { store, name, every_steps });
+        Ok(())
     }
 
     /// Run one chunk (`chunk_steps` optimizer steps in-graph).
@@ -185,68 +268,69 @@ impl Trainer {
         let seq1 = self.info.seq + 1;
         let tokens = Tensor::i32(vec![k, bs, seq1], self.corpus.block(k, bs, seq1));
 
-        let mut inputs = Vec::with_capacity(
-            self.frozen.len() + 3 * self.trainable.len() + 2,
-        );
-        inputs.extend(self.frozen.iter().cloned());
-        inputs.extend(self.trainable.iter().cloned());
-        inputs.extend(self.m1.iter().cloned());
-        inputs.extend(self.m2.iter().cloned());
-        inputs.push(Tensor::scalar_i32(self.step));
-        inputs.push(tokens);
-
+        let prev_step = self.opt.step;
+        let req = TrainStepReq {
+            config: self.cfg.config.clone(),
+            variant: self.variant,
+            params: std::sync::Arc::new(AdapterParams {
+                frozen: self.frozen.clone(),
+                trainable: self.trainable.clone(),
+            }),
+            opt: self.opt.clone(),
+            tokens,
+        };
         let t0 = Instant::now();
-        let outs = self.backend.run(&self.train_artifact(), &inputs)?;
+        let resp = self.backend.train_step(req)?;
         self.wall_seconds += t0.elapsed().as_secs_f64();
 
-        let nt = self.trainable.len();
-        if outs.len() != 3 * nt + 2 {
-            bail!(
-                "train artifact returned {} outputs, expected {}",
-                outs.len(),
-                3 * nt + 2
-            );
-        }
-        self.trainable = outs[..nt].to_vec();
-        self.m1 = outs[nt..2 * nt].to_vec();
-        self.m2 = outs[2 * nt..3 * nt].to_vec();
-        self.step = *outs[3 * nt]
-            .as_i32()?
-            .first()
-            .context("train artifact returned an empty step counter")?;
-        let losses = outs[3 * nt + 1].as_f32()?;
+        self.trainable = resp.trainable;
+        self.opt = resp.opt;
+        let losses = resp.losses;
 
         let first = self.history.len();
-        let base_step = self.step as usize - losses.len();
+        let base_step = self.opt.step as usize - losses.len();
         for (i, &loss) in losses.iter().enumerate() {
             self.history.push(StepRecord { step: base_step + i + 1, loss });
         }
-        if self.cfg.eval_every > 0 && self.step as usize % self.cfg.eval_every == 0 {
+        if self.cfg.eval_every > 0 && self.opt.step as usize % self.cfg.eval_every == 0 {
             let loss = self.eval()?;
-            self.eval_history.push(StepRecord { step: self.step as usize, loss });
+            self.eval_history.push(StepRecord { step: self.opt.step as usize, loss });
+        }
+        // Periodic checkpoint: fire when this chunk crossed an interval
+        // boundary.
+        if let Some(c) = &self.ckpt {
+            let every = c.every_steps as i32;
+            if self.opt.step / every > prev_step / every {
+                let adapter = self.to_adapter(&c.name)?;
+                c.store
+                    .save(&adapter)
+                    .with_context(|| format!("checkpointing adapter {:?}", c.name))?;
+                self.checkpoints_written += 1;
+            }
         }
         Ok(&self.history[first..])
     }
 
     /// Train until at least `steps` optimizer steps have run.
     pub fn train_steps(&mut self, steps: usize) -> Result<()> {
-        while (self.step as usize) < steps {
+        while (self.opt.step as usize) < steps {
             self.run_chunk()?;
         }
         Ok(())
     }
 
-    /// Held-out eval loss via the eval artifact.
+    /// Held-out eval loss via the typed eval op.
     pub fn eval(&self) -> Result<f32> {
-        let name = format!("eval_{}_{}", self.cfg.config, self.cfg.variant);
-        let mut inputs: Vec<Tensor> = Vec::new();
-        inputs.extend(self.frozen.iter().cloned());
-        inputs.extend(self.trainable.iter().cloned());
-        inputs.push(self.eval_tokens.clone());
-        let outs = self.backend.run(&name, &inputs)?;
-        outs.first()
-            .context("eval artifact returned no outputs")?
-            .scalar_f32()
+        let resp = self.backend.eval(EvalReq {
+            config: self.cfg.config.clone(),
+            variant: self.variant,
+            params: std::sync::Arc::new(AdapterParams {
+                frozen: self.frozen.clone(),
+                trainable: self.trainable.clone(),
+            }),
+            tokens: self.eval_tokens.clone(),
+        })?;
+        Ok(resp.loss)
     }
 
     /// Mean |Δloss| between two runs' histories (Table 10's metric).
@@ -351,6 +435,64 @@ mod tests {
         assert!(Trainer::new(NativeEngine::new(), tiny("nope", 0)).is_err());
         let cfg = TrainerCfg { config: "missing".into(), ..tiny("fused", 0) };
         assert!(Trainer::new(NativeEngine::new(), cfg).is_err());
+    }
+
+    #[test]
+    fn periodic_checkpoints_write_and_resume() {
+        use crate::runtime::AdapterStore;
+        let dir = std::env::temp_dir()
+            .join(format!("dora_trainer_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = AdapterStore::open(&dir).unwrap();
+
+        let mut tr = Trainer::new(NativeEngine::new(), tiny("fused", 17)).unwrap();
+        tr.set_checkpointing(store.clone(), "job-a", 4).unwrap();
+        assert!(tr.set_checkpointing(store.clone(), "bad name!", 4).is_err());
+        assert!(tr.set_checkpointing(store.clone(), "x", 0).is_err());
+        tr.train_steps(8).unwrap(); // tiny chunk = 4 steps -> 2 checkpoints
+        assert_eq!(tr.checkpoints_written, 2);
+
+        let stored = store.load("job-a").unwrap();
+        assert_eq!(stored.config, "tiny");
+        assert_eq!(stored.step, 8);
+        // The stored leaves are the trainer's current leaves, bitwise.
+        for (a, b) in stored.params.trainable.iter().zip(tr.trainable()) {
+            assert!(a.bitwise_eq(b));
+        }
+
+        // Resume: picks up leaves + step, trains further.
+        let mut resumed =
+            Trainer::from_adapter(NativeEngine::new(), tiny("fused", 17), &stored).unwrap();
+        assert_eq!(resumed.step_count(), 8);
+        resumed.train_steps(12).unwrap();
+        assert_eq!(resumed.step_count(), 12);
+        // Config mismatch is rejected.
+        let cfg = TrainerCfg { config: "small".into(), ..tiny("fused", 17) };
+        assert!(Trainer::from_adapter(NativeEngine::new(), cfg, &stored).is_err());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_fast_forwards_the_data_stream() {
+        // A resumed run must NOT replay the corpus blocks the original
+        // run already consumed. Same leaves + same kernels + different
+        // data => different first-chunk losses; a resume that restarted
+        // the stream would reproduce the fresh run's losses exactly.
+        let fresh = Trainer::new(NativeEngine::new(), tiny("fused", 23)).unwrap();
+        let mut adapter = fresh.to_adapter("ff").unwrap();
+        let k = fresh.config_info().chunk_steps;
+        adapter.step = k as i32; // pretend one chunk was already trained
+        let mut from_start = Trainer::new(NativeEngine::new(), tiny("fused", 23)).unwrap();
+        let mut resumed =
+            Trainer::from_adapter(NativeEngine::new(), tiny("fused", 23), &adapter).unwrap();
+        from_start.run_chunk().unwrap();
+        resumed.run_chunk().unwrap();
+        assert_eq!(resumed.step_count(), 2 * k);
+        assert_ne!(
+            from_start.history[0].loss, resumed.history[0].loss,
+            "resumed run replayed the original run's first data block"
+        );
     }
 
     // --- PJRT-gated variants (skip without `make artifacts`) ---

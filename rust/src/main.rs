@@ -5,17 +5,20 @@
 //!   info               manifest + device + config summary
 //!   train              run a training job against the AOT artifacts
 //!   serve-demo         start the batched server and fire demo traffic
+//!   adapters list      list checkpoints in the adapter store
+//!   adapters train     train a NAMED adapter with periodic checkpoints
+//!   adapters serve     serve one or more named adapters from the store
 //!
 //! The heavier end-to-end drivers (quickstart, convergence study, the
 //! ~100M e2e training run, serving load test) live in `examples/`.
 
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use dorafactors::bench::report;
 use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
-use dorafactors::runtime::{manifest, BackendSpec, Engine};
+use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, Engine};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -25,19 +28,199 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(),
         Some("train") => cmd_train(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
+        Some("adapters") => cmd_adapters(&args),
         _ => {
             eprintln!(
-                "usage: dorafactors <report|info|train|serve-demo> [--flags]\n\
+                "usage: dorafactors <report|info|train|serve-demo|adapters> [--flags]\n\
                  \n\
-                 report <id>   one of: {}\n\
-                 train         --config tiny|small|e2e --variant eager|fused \
+                 report <id>     one of: {}\n\
+                 train           --config tiny|small|e2e --variant eager|fused \
                  --steps N --seed S [--eval-every N]\n\
-                 serve-demo    --config tiny|small --requests N",
+                 serve-demo      --config tiny|small --requests N\n\
+                 adapters list   [--store DIR]\n\
+                 adapters train  --adapter NAME [--config tiny] [--steps N] \
+                 [--seed S] [--checkpoint-every N] [--store DIR] [--resume]\n\
+                 adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR]",
                 report::REPORT_IDS.join(" ")
             );
             std::process::exit(2);
         }
     }
+}
+
+fn store_from(args: &Args) -> Result<AdapterStore> {
+    AdapterStore::open_or_default(args.get("store"))
+}
+
+fn cmd_adapters(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("list") => cmd_adapters_list(args),
+        Some("train") => cmd_adapters_train(args),
+        Some("serve") => cmd_adapters_serve(args),
+        other => bail!("unknown adapters subcommand {other:?}; try list|train|serve"),
+    }
+}
+
+fn cmd_adapters_list(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let listed = store.list()?;
+    if listed.is_empty() {
+        println!("no adapters in {:?}", store.dir());
+        return Ok(());
+    }
+    println!("{:20} {:8} {:>6} {:>8} {:>12}", "name", "config", "rank", "step", "bytes");
+    for a in listed {
+        println!(
+            "{:20} {:8} {:>6} {:>8} {:>12}",
+            a.name, a.config, a.rank, a.step, a.file_bytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_adapters_train(args: &Args) -> Result<()> {
+    let name = args
+        .get("adapter")
+        .context("adapters train needs --adapter NAME")?
+        .to_string();
+    // Validate the name BEFORE training: with no periodic checkpoints
+    // the first save happens after the full run, and an invalid name
+    // would discard every step of it.
+    dorafactors::runtime::adapters::validate_name(&name)?;
+    let store = store_from(args)?;
+    let mut cfg = TrainerCfg {
+        config: args.get_or("config", "tiny").to_string(),
+        variant: args.get_or("variant", "fused").to_string(),
+        seed: args.get_u64("seed", 0),
+        branching: args.get_usize("branching", 4),
+        eval_every: args.get_usize("eval-every", 0),
+    };
+    let steps = args.get_usize("steps", 50);
+    let ckpt_every = args.get_usize("checkpoint-every", 0);
+
+    let mut tr = if args.has("resume") {
+        // A missing checkpoint under --resume is an error, not a silent
+        // fresh start — a typoed name/store must not masquerade as a
+        // continued run.
+        if !store.exists(&name) {
+            bail!(
+                "--resume: adapter {name:?} not found in {:?}; drop --resume to train from scratch",
+                store.dir()
+            );
+        }
+        let adapter = store.load(&name)?;
+        println!(
+            "resuming adapter {name:?} from step {} (seed {} from the checkpoint)",
+            adapter.step, adapter.seed
+        );
+        // The stored seed wins: the resumed run must continue the
+        // original data stream, and the re-saved checkpoint must keep
+        // its seed provenance. An explicit --seed that disagrees is an
+        // error, not a silent switch.
+        if args.get("seed").is_some() && cfg.seed != adapter.seed {
+            bail!(
+                "--seed {} conflicts with checkpoint seed {}; drop --seed to resume",
+                cfg.seed,
+                adapter.seed
+            );
+        }
+        cfg.seed = adapter.seed;
+        Trainer::from_adapter(BackendSpec::auto().connect()?, cfg.clone(), &adapter)?
+    } else {
+        Trainer::auto(cfg.clone())?
+    };
+    if ckpt_every > 0 {
+        tr.set_checkpointing(store.clone(), name.clone(), ckpt_every)?;
+    }
+    println!(
+        "training adapter {name:?}: config={} variant={} seed={} backend={} store={:?}",
+        cfg.config,
+        cfg.variant,
+        cfg.seed,
+        tr.backend_kind(),
+        store.dir()
+    );
+    while tr.step_count() < steps {
+        let recs: Vec<_> = tr.run_chunk()?.to_vec();
+        let last = recs.last().unwrap();
+        println!(
+            "step {:5}  loss {:.4}  ({:.2} s wall, {} checkpoints)",
+            last.step, last.loss, tr.wall_seconds, tr.checkpoints_written
+        );
+    }
+    let path = store.save(&tr.to_adapter(&name)?)?;
+    println!(
+        "saved adapter {name:?} at step {} -> {path:?} ({} periodic checkpoints)",
+        tr.step_count(),
+        tr.checkpoints_written
+    );
+    Ok(())
+}
+
+fn cmd_adapters_serve(args: &Args) -> Result<()> {
+    let names: Vec<String> = args
+        .get("adapter")
+        .context("adapters serve needs --adapter NAME[,NAME...]")?
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let store = store_from(args)?;
+    let n = args.get_usize("requests", 16);
+    let adapters = names
+        .iter()
+        .map(|name| store.load(name))
+        .collect::<Result<Vec<_>>>()?;
+    let config = adapters[0].config.clone();
+    let server = Server::start_with_adapters(
+        BackendSpec::auto(),
+        ServerCfg {
+            config: config.clone(),
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 10)),
+        },
+        adapters,
+    )?;
+    println!(
+        "serving {} adapter(s) {:?} on config {config} ({} requests round-robin)",
+        names.len(),
+        server.adapter_names(),
+        n
+    );
+    let client = server.client();
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let c = client.clone();
+            let adapter = names[i % names.len()].clone();
+            std::thread::spawn(move || c.infer_with(&adapter, &[(i % 7 + 1) as i32, 2, 3, 4]))
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap()?;
+        println!(
+            "adapter={:12} next_token={:4}  latency={:7.1?}  occupancy={}",
+            r.adapter, r.next_token, r.latency, r.batch_occupancy
+        );
+    }
+    let m = server.shutdown();
+    println!(
+        "served {} requests in {} engine calls; p50 {:.0} us, p95 {:.0} us, exec backend {}",
+        m.completed,
+        m.batches,
+        m.p50_us(),
+        m.p95_us(),
+        m.exec_backend
+    );
+    for (name, am) in &m.per_adapter {
+        println!(
+            "  adapter {:12} completed {:4} failed {:3} batches {:4} p95 {:8.0} us occupancy {:.2}",
+            name,
+            am.completed,
+            am.failed,
+            am.batches,
+            am.p95_us(),
+            am.mean_occupancy()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_report(args: &Args) -> Result<()> {

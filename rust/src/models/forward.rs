@@ -66,23 +66,36 @@ impl VariantKernels {
     }
 }
 
-/// Resolve the kernel handles for a variant through the registry's real
-/// dispatch surface. "fused" forces the fused tiers on (the variant IS
-/// the §5.9 fused numeric path, independent of the crossover); "eager"
-/// uses the global kill switch — both are the documented `DORA_*`
-/// override semantics, applied to an explicit env instead of process
-/// state.
-pub fn variant_kernels(variant: &str, info: &ConfigInfo, training: bool) -> Result<VariantKernels> {
+/// Resolve the kernel handles for a typed [`Variant`] through the
+/// registry's real dispatch surface. `Fused` forces the fused tiers on
+/// (the variant IS the §5.9 fused numeric path, independent of the
+/// crossover); `Eager` uses the global kill switch — both are the
+/// documented `DORA_*` override semantics, applied to an explicit env
+/// instead of process state.
+pub fn kernels_for(
+    variant: crate::runtime::ops::Variant,
+    info: &ConfigInfo,
+    training: bool,
+) -> Result<VariantKernels> {
+    use crate::runtime::ops::Variant;
     let act = ActShape::new(info.train_batch * info.seq, info.d_model);
     let ctx = if training { ComposeCtx::training(act) } else { ComposeCtx::inference(act) };
     let env = match variant {
-        "fused" => DispatchEnv { fused_backward: Override::ForceOn, ..DispatchEnv::default() },
-        "eager" => DispatchEnv { fused_enabled: false, ..DispatchEnv::default() },
-        other => bail!("variant must be eager|fused, got {other:?}"),
+        Variant::Fused => {
+            DispatchEnv { fused_backward: Override::ForceOn, ..DispatchEnv::default() }
+        }
+        Variant::Eager => DispatchEnv { fused_enabled: false, ..DispatchEnv::default() },
     };
     let choice = registry().select(&env, &ctx);
     let norm = registry().norm_for(&choice);
     Ok(VariantKernels { choice, norm })
+}
+
+/// String-named wrapper over [`kernels_for`] (the pre-typed-API surface;
+/// callers with a parsed [`Variant`](crate::runtime::ops::Variant) should
+/// use `kernels_for` directly).
+pub fn variant_kernels(variant: &str, info: &ConfigInfo, training: bool) -> Result<VariantKernels> {
+    kernels_for(crate::runtime::ops::Variant::parse(variant)?, info, training)
 }
 
 /// Frozen + trainable leaves of one native model, as host tensors in the

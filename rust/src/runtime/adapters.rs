@@ -1,0 +1,629 @@
+//! Named DoRA adapters and their on-disk checkpoint store.
+//!
+//! The paper's cost story is hundreds of adapted modules per base model;
+//! the serving story that follows is *many adapters per server*. An
+//! [`Adapter`] is one named, self-describing unit: the config it was
+//! trained against, its `ConfigInfo`-derived rank/scale, the init/data
+//! seed, the optimizer step it was checkpointed at, and the parameter
+//! leaves themselves. An [`AdapterStore`] persists adapters as versioned
+//! binary checkpoints with integrity checks and guarantees a
+//! **bitwise-identical** round trip (raw little-endian leaf payloads —
+//! no float formatting anywhere near the parameters).
+//!
+//! Checkpoint format (version 1):
+//!
+//! ```text
+//! [0..8)    magic  b"DORACKPT"
+//! [8..12)   format version, u32 LE
+//! [12..16)  header length H, u32 LE
+//! [16..16+H) header JSON: name/config/rank/scale/seed/step +
+//!            per-leaf {name, shape, dtype} for frozen and trainable
+//! [..]      payload: leaf data, frozen then trainable, raw LE bytes
+//! [-8..]    FNV-1a 64 checksum over every preceding byte, u64 LE
+//! ```
+//!
+//! Writes go through a same-directory temp file + rename, so a crashed
+//! writer never leaves a half checkpoint under the adapter's name — the
+//! hot-swap protocol (server reloads a named adapter while serving)
+//! relies on this.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::ops::AdapterParams;
+use crate::runtime::{ConfigInfo, Tensor, TensorData};
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 8] = b"DORACKPT";
+pub const FORMAT_VERSION: u32 = 1;
+const CKPT_EXT: &str = "ckpt";
+
+/// One named adapter: identity + provenance + parameter leaves.
+#[derive(Debug, Clone)]
+pub struct Adapter {
+    /// Store key (validated: `[A-Za-z0-9_-]{1,64}`).
+    pub name: String,
+    /// Model config the leaves are shaped for ("tiny"/"small"/"e2e").
+    pub config: String,
+    /// Adapter rank (from the config at creation).
+    pub rank: usize,
+    /// Compose scale `s` (from the config at creation).
+    pub scale: f64,
+    /// Parameter-init + data seed the adapter was trained from.
+    pub seed: u64,
+    /// Optimizer step the leaves were captured at.
+    pub step: i32,
+    /// Frozen + trainable leaves, manifest flatten order.
+    pub params: AdapterParams,
+}
+
+impl Adapter {
+    /// Build an adapter from a config and its parameter leaves,
+    /// validating the name and the leaf counts.
+    pub fn new(
+        name: impl Into<String>,
+        info: &ConfigInfo,
+        seed: u64,
+        step: i32,
+        params: AdapterParams,
+    ) -> Result<Adapter> {
+        let name = name.into();
+        validate_name(&name)?;
+        if !params.matches(info) {
+            bail!(
+                "adapter {name:?}: got {}+{} leaves, config {} wants {}+{}",
+                params.frozen.len(),
+                params.trainable.len(),
+                info.name,
+                info.frozen.len(),
+                info.trainable.len()
+            );
+        }
+        Ok(Adapter {
+            name,
+            config: info.name.clone(),
+            rank: info.rank,
+            scale: info.scale,
+            seed,
+            step,
+            params,
+        })
+    }
+
+    /// Total parameter elements across all leaves.
+    pub fn n_elems(&self) -> usize {
+        self.params
+            .frozen
+            .iter()
+            .chain(&self.params.trainable)
+            .map(Tensor::elems)
+            .sum()
+    }
+
+    // ---- binary encoding ---------------------------------------------------
+
+    /// Serialize to the versioned checkpoint format.
+    pub fn encode(&self) -> Vec<u8> {
+        let leaf_meta = |ts: &[Tensor]| {
+            Json::Arr(
+                ts.iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("dtype", Json::Str(t.dtype_str().to_string())),
+                            (
+                                "shape",
+                                Json::Arr(
+                                    t.shape.iter().map(|&d| Json::Num(d as f64)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let header = Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("config", Json::Str(self.config.clone())),
+            ("rank", Json::Num(self.rank as f64)),
+            ("scale", Json::Num(self.scale)),
+            // Stored as a string: u64 seeds above 2^53 would lose bits
+            // through the JSON f64 number model.
+            ("seed", Json::Str(self.seed.to_string())),
+            ("step", Json::Num(self.step as f64)),
+            ("frozen", leaf_meta(&self.params.frozen)),
+            ("trainable", leaf_meta(&self.params.trainable)),
+        ])
+        .to_string();
+
+        let mut out = Vec::with_capacity(16 + header.len() + 4 * self.n_elems() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for t in self.params.frozen.iter().chain(&self.params.trainable) {
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Deserialize and verify a checkpoint. Every integrity failure
+    /// (bad magic, unknown version, truncation, checksum mismatch,
+    /// header/payload disagreement) is a contextful `Err`.
+    pub fn decode(bytes: &[u8]) -> Result<Adapter> {
+        let (header, payload_off) = decode_header(bytes)?;
+        if bytes.len() < payload_off + 8 {
+            bail!("checkpoint truncated: {} bytes, payload starts at {payload_off}", bytes.len());
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            bail!("checkpoint checksum mismatch: stored {stored:#018x}, computed {computed:#018x}");
+        }
+
+        let mut pos = payload_off;
+        let payload_end = bytes.len() - 8;
+        let mut read_leaves = |metas: &[Json]| -> Result<Vec<Tensor>> {
+            let mut out = Vec::with_capacity(metas.len());
+            for meta in metas {
+                let shape = meta.get("shape")?.as_shape()?;
+                let dtype = meta.get("dtype")?.as_str()?.to_string();
+                let elems: usize = shape.iter().product();
+                let nbytes = 4 * elems;
+                if pos + nbytes > payload_end {
+                    bail!("checkpoint payload truncated at leaf with shape {shape:?}");
+                }
+                let raw = &bytes[pos..pos + nbytes];
+                pos += nbytes;
+                let t = match dtype.as_str() {
+                    "f32" => Tensor::f32(
+                        shape,
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    ),
+                    "i32" => Tensor::i32(
+                        shape,
+                        raw.chunks_exact(4)
+                            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    ),
+                    other => bail!("checkpoint leaf has unknown dtype {other:?}"),
+                };
+                out.push(t);
+            }
+            Ok(out)
+        };
+        let frozen = read_leaves(header.get("frozen")?.as_arr()?)?;
+        let trainable = read_leaves(header.get("trainable")?.as_arr()?)?;
+        if pos != payload_end {
+            bail!(
+                "checkpoint payload has {} trailing bytes after the last leaf",
+                payload_end - pos
+            );
+        }
+
+        let name = header.get("name")?.as_str()?.to_string();
+        validate_name(&name)?;
+        let seed_s = header.get("seed")?.as_str()?;
+        let seed = seed_s
+            .parse::<u64>()
+            .with_context(|| format!("checkpoint seed {seed_s:?} is not a u64"))?;
+        Ok(Adapter {
+            name,
+            config: header.get("config")?.as_str()?.to_string(),
+            rank: header.get("rank")?.as_usize()?,
+            scale: header.get("scale")?.as_f64()?,
+            seed,
+            step: header.get("step")?.as_i64()? as i32,
+            params: AdapterParams { frozen, trainable },
+        })
+    }
+}
+
+/// Parse + validate the fixed-size prefix and the JSON header; returns
+/// the header value and the payload offset.
+fn decode_header(bytes: &[u8]) -> Result<(Json, usize)> {
+    if bytes.len() < 16 {
+        bail!("checkpoint too short ({} bytes) for the fixed header", bytes.len());
+    }
+    if &bytes[..8] != MAGIC {
+        bail!("not a DoRA checkpoint (bad magic)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        bail!("checkpoint format version {version} (this build reads {FORMAT_VERSION})");
+    }
+    let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if bytes.len() < 16 + hlen {
+        bail!(
+            "checkpoint truncated inside the header ({} of {hlen} header bytes)",
+            bytes.len().saturating_sub(16)
+        );
+    }
+    let text = std::str::from_utf8(&bytes[16..16 + hlen]).context("checkpoint header utf-8")?;
+    let header = json::parse(text).context("parsing checkpoint header")?;
+    Ok((header, 16 + hlen))
+}
+
+/// FNV-1a 64-bit — the checkpoint integrity hash (not cryptographic;
+/// guards against truncation and bit rot, not adversaries).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Adapter names become file names: restrict to a safe charset so a name
+/// can never traverse out of the store directory.
+pub fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 64 {
+        bail!("adapter name must be 1..=64 chars, got {:?}", name.len());
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        bail!("adapter name {name:?} may only contain [A-Za-z0-9_-]");
+    }
+    Ok(())
+}
+
+/// Header-level summary of a stored checkpoint (no payload decode).
+#[derive(Debug, Clone)]
+pub struct AdapterSummary {
+    pub name: String,
+    pub config: String,
+    pub rank: usize,
+    pub step: i32,
+    pub file_bytes: u64,
+}
+
+/// A directory of named adapter checkpoints.
+#[derive(Debug, Clone)]
+pub struct AdapterStore {
+    dir: PathBuf,
+}
+
+impl AdapterStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<AdapterStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating adapter store directory {dir:?}"))?;
+        Ok(AdapterStore { dir })
+    }
+
+    /// Open an explicit directory when one was given (e.g. a `--store`
+    /// flag), the default store otherwise — the one resolution rule for
+    /// every CLI/example call site.
+    pub fn open_or_default(dir: Option<&str>) -> Result<AdapterStore> {
+        match dir {
+            Some(dir) => Self::open(dir),
+            None => Self::open(Self::default_dir()),
+        }
+    }
+
+    /// Default store directory: `$DORA_ADAPTERS` or `<repo>/adapters`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("DORA_ADAPTERS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("adapters")
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Checkpoint path for a (validated) adapter name.
+    pub fn path_for(&self, name: &str) -> Result<PathBuf> {
+        validate_name(name)?;
+        Ok(self.dir.join(format!("{name}.{CKPT_EXT}")))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.path_for(name).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    /// Persist an adapter under its name (atomic: temp file + rename, so
+    /// a concurrent hot-loader never observes a partial checkpoint). The
+    /// temp name carries a process-wide counter as well as the pid, so
+    /// two threads saving the same adapter concurrently (checkpointing
+    /// trainer + explicit save) never share a temp file.
+    pub fn save(&self, adapter: &Adapter) -> Result<PathBuf> {
+        static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = self.path_for(&adapter.name)?;
+        let tmp = self.dir.join(format!(
+            "{}.{CKPT_EXT}.tmp{}-{seq}",
+            adapter.name,
+            std::process::id()
+        ));
+        let bytes = adapter.encode();
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::from(e)
+                .context(format!("renaming {tmp:?} into place")));
+        }
+        Ok(path)
+    }
+
+    /// Load and integrity-check a named adapter.
+    pub fn load(&self, name: &str) -> Result<Adapter> {
+        let path = self.path_for(name)?;
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading adapter checkpoint {path:?}"))?;
+        let adapter =
+            Adapter::decode(&bytes).with_context(|| format!("decoding {path:?}"))?;
+        if adapter.name != name {
+            bail!(
+                "checkpoint {path:?} is named {:?} inside, expected {name:?}",
+                adapter.name
+            );
+        }
+        Ok(adapter)
+    }
+
+    /// Delete a named checkpoint.
+    pub fn remove(&self, name: &str) -> Result<()> {
+        let path = self.path_for(name)?;
+        std::fs::remove_file(&path).with_context(|| format!("removing {path:?}"))
+    }
+
+    /// Header-level summaries of every checkpoint in the store, sorted
+    /// by name. Only the fixed prefix + JSON header are read from each
+    /// file — never the leaf payload, so listing a store of multi-MB
+    /// checkpoints stays cheap. Unreadable/foreign files are skipped,
+    /// not fatal.
+    pub fn list(&self) -> Result<Vec<AdapterSummary>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing adapter store {:?}", self.dir))?;
+        for entry in entries {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(CKPT_EXT) {
+                continue;
+            }
+            let Ok(file_bytes) = entry.metadata().map(|m| m.len()) else { continue };
+            let Ok(header_bytes) = read_header_bytes(&path, file_bytes) else { continue };
+            let Ok((header, _)) = decode_header(&header_bytes) else { continue };
+            let field_str = |k: &str| {
+                header.get(k).ok().and_then(|v| v.as_str().ok().map(String::from))
+            };
+            let (Some(name), Some(config)) = (field_str("name"), field_str("config")) else {
+                continue;
+            };
+            out.push(AdapterSummary {
+                name,
+                config,
+                rank: header
+                    .get("rank")
+                    .ok()
+                    .and_then(|v| v.as_usize().ok())
+                    .unwrap_or(0),
+                step: header
+                    .get("step")
+                    .ok()
+                    .and_then(|v| v.as_i64().ok())
+                    .unwrap_or(0) as i32,
+                file_bytes,
+            });
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(out)
+    }
+}
+
+/// Read just the fixed prefix + JSON header of a checkpoint file (the
+/// `list()` fast path — payloads are never touched).
+fn read_header_bytes(path: &Path, file_bytes: u64) -> Result<Vec<u8>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut prefix = [0u8; 16];
+    f.read_exact(&mut prefix)?;
+    // Sanity-check magic before trusting anything else.
+    if &prefix[..8] != MAGIC {
+        bail!("bad magic");
+    }
+    let hlen = u32::from_le_bytes(prefix[12..16].try_into().unwrap()) as u64;
+    // A corrupt length field must not drive the allocation: the header
+    // can never extend past the file itself, so a lying field makes the
+    // file "unreadable, skipped", not a multi-GiB resize.
+    if 16 + hlen > file_bytes {
+        bail!("header length {hlen} exceeds file size {file_bytes}");
+    }
+    let mut buf = prefix.to_vec();
+    buf.resize(16 + hlen as usize, 0);
+    f.read_exact(&mut buf[16..])?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    /// Per-test scratch store (unique dir, removed on drop).
+    struct TestStore {
+        store: AdapterStore,
+        dir: PathBuf,
+    }
+
+    impl TestStore {
+        fn new(tag: &str) -> TestStore {
+            let dir = std::env::temp_dir()
+                .join(format!("dora_adapter_store_{}_{tag}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            TestStore { store: AdapterStore::open(&dir).unwrap(), dir }
+        }
+    }
+
+    impl Drop for TestStore {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+
+    fn tiny_adapter(name: &str, seed: i32) -> Adapter {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let leaves = eng
+            .run("init_tiny", &[crate::runtime::Tensor::scalar_i32(seed)])
+            .unwrap();
+        let params = AdapterParams::from_flat(info, leaves).unwrap();
+        Adapter::new(name, info, seed as u64, 0, params).unwrap()
+    }
+
+    fn assert_bitwise_eq(a: &Adapter, b: &Adapter) {
+        assert_eq!(a.params.frozen.len(), b.params.frozen.len());
+        assert_eq!(a.params.trainable.len(), b.params.trainable.len());
+        for (x, y) in a
+            .params
+            .frozen
+            .iter()
+            .chain(&a.params.trainable)
+            .zip(b.params.frozen.iter().chain(&b.params.trainable))
+        {
+            assert!(x.bitwise_eq(y), "leaf differs: {:?} vs {:?}", x.shape, y.shape);
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_identical() {
+        let ts = TestStore::new("roundtrip");
+        let mut adapter = tiny_adapter("round-trip_1", 7);
+        // Plant awkward values: subnormal, negative zero, exact bit
+        // patterns that any text formatting would mangle.
+        if let crate::runtime::TensorData::F32(v) = &mut adapter.params.trainable[0].data {
+            v[0] = f32::from_bits(0x0000_0001); // smallest subnormal
+            v[1] = -0.0;
+            v[2] = 0.1 + 0.2;
+        }
+        adapter.step = 12;
+        let path = ts.store.save(&adapter).unwrap();
+        assert!(path.exists());
+        let back = ts.store.load("round-trip_1").unwrap();
+        assert_eq!(back.name, adapter.name);
+        assert_eq!(back.config, "tiny");
+        assert_eq!(back.rank, adapter.rank);
+        assert_eq!(back.scale, adapter.scale);
+        assert_eq!(back.seed, adapter.seed);
+        assert_eq!(back.step, 12);
+        assert_bitwise_eq(&adapter, &back);
+        // Save → load → save produces identical bytes (stable encoding).
+        assert_eq!(adapter.encode(), back.encode());
+    }
+
+    #[test]
+    fn integrity_checks_catch_corruption() {
+        let adapter = tiny_adapter("victim", 1);
+        let good = adapter.encode();
+        assert!(Adapter::decode(&good).is_ok());
+
+        // Flipped payload byte -> checksum mismatch.
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        let err = Adapter::decode(&flipped).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+        // Truncation.
+        let err = Adapter::decode(&good[..good.len() - 16]).unwrap_err();
+        assert!(!format!("{err:#}").is_empty());
+        assert!(Adapter::decode(&good[..4]).is_err());
+
+        // Bad magic.
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let err = Adapter::decode(&bad_magic).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        // Unknown future version.
+        let mut bad_version = good.clone();
+        bad_version[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Adapter::decode(&bad_version).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn names_are_path_safe() {
+        assert!(validate_name("default").is_ok());
+        assert!(validate_name("user-7_v2").is_ok());
+        assert!(validate_name("").is_err());
+        assert!(validate_name("../evil").is_err());
+        assert!(validate_name("a/b").is_err());
+        assert!(validate_name("dot.dot").is_err());
+        assert!(validate_name(&"x".repeat(65)).is_err());
+        let ts = TestStore::new("names");
+        assert!(ts.store.path_for("../evil").is_err());
+        assert!(!ts.store.exists("../evil"));
+    }
+
+    #[test]
+    fn list_summarizes_and_skips_foreign_files() {
+        let ts = TestStore::new("list");
+        ts.store.save(&tiny_adapter("beta", 2)).unwrap();
+        let mut trained = tiny_adapter("alpha", 1);
+        trained.step = 20;
+        ts.store.save(&trained).unwrap();
+        // Foreign/garbage files are skipped.
+        std::fs::write(ts.dir.join("notes.txt"), b"hello").unwrap();
+        std::fs::write(ts.dir.join("garbage.ckpt"), b"not a checkpoint").unwrap();
+        let listed = ts.store.list().unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].name, "alpha");
+        assert_eq!(listed[0].step, 20);
+        assert_eq!(listed[1].name, "beta");
+        assert_eq!(listed[1].config, "tiny");
+        assert!(listed[0].file_bytes > 0);
+    }
+
+    #[test]
+    fn save_overwrites_and_remove_removes() {
+        let ts = TestStore::new("overwrite");
+        let a0 = tiny_adapter("live", 3);
+        ts.store.save(&a0).unwrap();
+        let mut a1 = tiny_adapter("live", 3);
+        a1.step = 44;
+        ts.store.save(&a1).unwrap();
+        assert_eq!(ts.store.load("live").unwrap().step, 44);
+        // No temp droppings.
+        let stray: Vec<_> = std::fs::read_dir(&ts.dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "temp files left behind: {stray:?}");
+        ts.store.remove("live").unwrap();
+        assert!(!ts.store.exists("live"));
+        assert!(ts.store.load("live").is_err());
+    }
+
+    #[test]
+    fn adapter_new_validates_counts() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let err = Adapter::new("x", info, 0, 0, AdapterParams::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("leaves"), "{err:#}");
+    }
+}

@@ -21,7 +21,12 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::runtime::native::NativeEngine;
+use crate::runtime::ops::{
+    ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq,
+    EvalResp, InferReq, InferResp, InitReq, InitResp, TrainStepReq, TrainStepResp,
+};
 use crate::runtime::{manifest, ConfigInfo, Engine, Tensor};
+use crate::util::lock_unpoisoned;
 
 /// A connected execution engine.
 #[derive(Clone)]
@@ -98,12 +103,99 @@ impl ExecBackend {
         }
     }
 
-    /// Execute an artifact with host tensors.
+    /// Execute an artifact with host tensors (the string-name surface;
+    /// typed call sites use [`ExecBackend::execute`] or the per-op
+    /// wrappers below).
     pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         match self {
             ExecBackend::Pjrt(e) => e.run(name, inputs),
             ExecBackend::Native(e) => e.run(name, inputs),
             ExecBackend::Mock(m) => m.run(name, inputs),
+        }
+    }
+
+    /// Execute a typed op. The native engine takes the op directly; PJRT
+    /// and mock backends go through the artifact-name compatibility shim
+    /// (`op.artifact_name()` + positional pack/unpack) — so a typed call
+    /// site runs identically against compiled HLO, the native kernels,
+    /// or a scripted mock.
+    pub fn execute(&self, op: &EngineOp) -> Result<EngineOut> {
+        if let ExecBackend::Native(e) = self {
+            return e.execute(op);
+        }
+        let name = op.artifact_name()?;
+        let outs = self.run(&name, &op.pack_inputs())?;
+        self.unpack(op, outs)
+    }
+
+    /// Typed-response construction for the shim path.
+    fn unpack(&self, op: &EngineOp, outs: Vec<Tensor>) -> Result<EngineOut> {
+        Ok(match op {
+            EngineOp::Init(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::Init(InitResp::unpack(&info, outs)?)
+            }
+            EngineOp::TrainStep(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::TrainStep(TrainStepResp::unpack(&info, outs)?)
+            }
+            EngineOp::Eval(_) => EngineOut::Eval(EvalResp::unpack(outs)?),
+            EngineOp::Infer(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::Infer(InferResp::unpack(info.train_batch, info.vocab, outs)?)
+            }
+            EngineOp::DoraLinear(_) => EngineOut::DoraLinear(DoraLinearResp::unpack(outs)?),
+            EngineOp::Compose(_) => EngineOut::Compose(ComposeResp::unpack(outs)?),
+        })
+    }
+
+    /// Seeded in-graph parameter init.
+    pub fn init(&self, req: InitReq) -> Result<InitResp> {
+        match self.execute(&EngineOp::Init(req))? {
+            EngineOut::Init(r) => Ok(r),
+            other => bail!("engine returned {other:?} for an init op"),
+        }
+    }
+
+    /// One chunk of optimizer steps.
+    pub fn train_step(&self, req: TrainStepReq) -> Result<TrainStepResp> {
+        match self.execute(&EngineOp::TrainStep(req))? {
+            EngineOut::TrainStep(r) => Ok(r),
+            other => bail!("engine returned {other:?} for a train op"),
+        }
+    }
+
+    /// Held-out eval loss.
+    pub fn eval(&self, req: EvalReq) -> Result<EvalResp> {
+        match self.execute(&EngineOp::Eval(req))? {
+            EngineOut::Eval(r) => Ok(r),
+            other => bail!("engine returned {other:?} for an eval op"),
+        }
+    }
+
+    /// Last-position logits (the serving path). The response is fully
+    /// validated — shape, dtype, element count — so callers never panic
+    /// on malformed engine output.
+    pub fn infer(&self, req: InferReq) -> Result<InferResp> {
+        match self.execute(&EngineOp::Infer(req))? {
+            EngineOut::Infer(r) => Ok(r),
+            other => bail!("engine returned {other:?} for an infer op"),
+        }
+    }
+
+    /// One DoRA-adapted linear module.
+    pub fn dora_linear(&self, req: DoraLinearReq) -> Result<DoraLinearResp> {
+        match self.execute(&EngineOp::DoraLinear(req))? {
+            EngineOut::DoraLinear(r) => Ok(r),
+            other => bail!("engine returned {other:?} for a dora_linear op"),
+        }
+    }
+
+    /// One compose unit.
+    pub fn compose(&self, req: ComposeReq) -> Result<ComposeResp> {
+        match self.execute(&EngineOp::Compose(req))? {
+            EngineOut::Compose(r) => Ok(r),
+            other => bail!("engine returned {other:?} for a compose op"),
         }
     }
 }
@@ -141,9 +233,17 @@ pub enum BackendSpec {
 impl BackendSpec {
     /// The fallback order over the default artifacts directory.
     pub fn auto() -> BackendSpec {
-        let dir = manifest::default_dir();
-        if pjrt_usable(&dir) {
-            BackendSpec::Pjrt(dir)
+        Self::auto_for(&manifest::default_dir())
+    }
+
+    /// The fallback order over an explicit artifacts directory: PJRT
+    /// when the directory has a manifest AND the linked `xla` backend
+    /// can parse HLO, native otherwise. (Separated from [`Self::auto`]
+    /// so the selection policy is testable without mutating the
+    /// process-wide `DORA_ARTIFACTS` environment.)
+    pub fn auto_for(dir: &Path) -> BackendSpec {
+        if pjrt_usable(dir) {
+            BackendSpec::Pjrt(dir.to_path_buf())
         } else {
             BackendSpec::Native
         }
@@ -229,7 +329,7 @@ impl MockExec {
 
     /// Append a scripted result (FIFO across all clones).
     pub fn push(&self, result: MockResult) {
-        self.script.lock().unwrap().push_back(result);
+        lock_unpoisoned(&self.script).push_back(result);
     }
 
     pub fn config_info(&self) -> &ConfigInfo {
@@ -237,7 +337,7 @@ impl MockExec {
     }
 
     fn run(&self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if let Some(scripted) = self.script.lock().unwrap().pop_front() {
+        if let Some(scripted) = lock_unpoisoned(&self.script).pop_front() {
             return scripted.map_err(|msg| anyhow::anyhow!(msg));
         }
         if name.starts_with("infer_") {
@@ -278,6 +378,98 @@ mod tests {
         assert!(be.ensure_artifact("infer_tiny_fused").is_ok());
         assert!(be.ensure_artifact("no_such_artifact").is_err());
         assert_eq!(be.platform(), "native-cpu");
+    }
+
+    #[test]
+    fn fallback_order_selects_native_when_pjrt_unusable() {
+        // No manifest at all -> native.
+        let spec = BackendSpec::auto_for(Path::new("/nonexistent/artifacts"));
+        assert_eq!(spec.kind_name(), "native");
+        assert_eq!(spec.connect().unwrap().kind_name(), "native");
+        // A directory that exists but has no manifest -> native too.
+        let empty = std::env::temp_dir()
+            .join(format!("dora_backend_test_{}", std::process::id()));
+        std::fs::create_dir_all(&empty).unwrap();
+        assert_eq!(BackendSpec::auto_for(&empty).kind_name(), "native");
+        // A directory with a manifest the xla stub can't execute ->
+        // native as well (the pjrt_usable probe, not mere existence,
+        // gates the PJRT branch).
+        std::fs::write(
+            empty.join("manifest.json"),
+            r#"{"artifacts": {}, "configs": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(BackendSpec::auto_for(&empty).kind_name(), "native");
+        let _ = std::fs::remove_dir_all(&empty);
+    }
+
+    #[test]
+    fn explicit_pjrt_spec_fails_to_connect_without_artifacts() {
+        // An explicit (non-auto) PJRT spec keeps its kind — and surfaces
+        // a connect error instead of silently degrading.
+        let spec = BackendSpec::Pjrt(PathBuf::from("/nonexistent/artifacts"));
+        assert_eq!(spec.kind_name(), "pjrt");
+        assert!(spec.connect().is_err());
+        let from_path: BackendSpec = Path::new("/also/nonexistent").into();
+        assert_eq!(from_path.kind_name(), "pjrt");
+    }
+
+    #[test]
+    fn mock_scripted_failures_surface_through_spec_and_kind() {
+        let info = ExecBackend::native().config("tiny").unwrap();
+        let mock = MockExec::new(info.clone());
+        mock.push(Err("scripted device loss".into()));
+        let spec: BackendSpec = mock.into();
+        assert_eq!(spec.kind_name(), "mock");
+        let be = spec.connect().unwrap();
+        assert_eq!(be.kind_name(), "mock");
+        // Scripted failure pops first...
+        let err = be.run("infer_tiny_fused", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("scripted device loss"), "{err:#}");
+        // ...then the exhausted script falls back to zero logits for
+        // infer and errors for everything else.
+        assert!(be.run("infer_tiny_fused", &[]).is_ok());
+        assert!(be.run("train_tiny_fused", &[]).is_err());
+    }
+
+    #[test]
+    fn typed_ops_run_against_native_and_mock() {
+        use crate::runtime::ops::{InferReq, InitReq, Variant};
+        let be = ExecBackend::native();
+        let info = be.config("tiny").unwrap();
+        let init = be.init(InitReq { config: "tiny".into(), seed: 0 }).unwrap();
+        assert_eq!(init.params.frozen.len(), info.frozen.len());
+        let tokens = Tensor::i32(
+            vec![info.train_batch, info.seq],
+            vec![1; info.train_batch * info.seq],
+        );
+        let params = std::sync::Arc::new(init.params);
+        let resp = be
+            .infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params: params.clone(),
+                tokens: tokens.clone(),
+            })
+            .unwrap();
+        assert_eq!(resp.logits.shape, vec![info.train_batch, info.vocab]);
+
+        // The same typed call through a mock resolves via the name shim.
+        let mock = MockExec::new(info.clone());
+        mock.push(Ok(vec![Tensor::f32(
+            vec![info.train_batch, info.vocab],
+            vec![0.25; info.train_batch * info.vocab],
+        )]));
+        let be: ExecBackend = mock.into();
+        let resp = be
+            .infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params,
+                tokens,
+            })
+            .unwrap();
+        assert_eq!(resp.logits.as_f32().unwrap()[0], 0.25);
     }
 
     #[test]

@@ -21,9 +21,11 @@
 //! layer the coordinator consumes (fallback order: PJRT when usable,
 //! else native).
 
+pub mod adapters;
 pub mod backend;
 pub mod manifest;
 pub mod native;
+pub mod ops;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -31,9 +33,15 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+pub use adapters::{Adapter, AdapterStore, AdapterSummary};
 pub use backend::{BackendSpec, ExecBackend, MockExec};
 pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
 pub use native::NativeEngine;
+pub use ops::{
+    AdapterParams, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
+    EvalReq, EvalResp, InferReq, InferResp, InitReq, InitResp, LinearVariant, OptState,
+    TrainStepReq, TrainStepResp, Variant,
+};
 
 /// A host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone)]
@@ -72,6 +80,31 @@ impl Tensor {
 
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    /// Element dtype name ("f32" / "i32") — the checkpoint header tag.
+    pub fn dtype_str(&self) -> &'static str {
+        match &self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+
+    /// Exact bit-level equality: same shape, same dtype, and every
+    /// element's bit pattern identical (distinguishes -0.0 from 0.0 and
+    /// compares NaNs by payload — the checkpoint round-trip guarantee).
+    pub fn bitwise_eq(&self, other: &Tensor) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        match (&self.data, &other.data) {
+            (TensorData::F32(a), TensorData::F32(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (TensorData::I32(a), TensorData::I32(b)) => a == b,
+            _ => false,
+        }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -175,7 +208,7 @@ impl Engine {
 
     /// Get (compiling and caching on first use) an artifact's executable.
     pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.inner.cache.lock().unwrap().get(name) {
+        if let Some(exe) = crate::util::lock_unpoisoned(&self.inner.cache).get(name) {
             return Ok(exe.clone());
         }
         let art = self.inner.manifest.artifact(name)?;
@@ -190,7 +223,7 @@ impl Engine {
                 .compile(&comp)
                 .with_context(|| format!("compiling artifact {name:?}"))?,
         );
-        self.inner.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        crate::util::lock_unpoisoned(&self.inner.cache).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -248,6 +281,20 @@ mod tests {
         } else {
             None
         }
+    }
+
+    #[test]
+    fn tensor_bitwise_eq_is_exact() {
+        let a = Tensor::f32(vec![2], vec![0.0, 1.0]);
+        assert!(a.bitwise_eq(&a.clone()));
+        // -0.0 == 0.0 numerically but NOT bitwise.
+        let neg = Tensor::f32(vec![2], vec![-0.0, 1.0]);
+        assert!(!a.bitwise_eq(&neg));
+        // Shape and dtype mismatches.
+        assert!(!a.bitwise_eq(&Tensor::f32(vec![1, 2], vec![0.0, 1.0])));
+        assert!(!a.bitwise_eq(&Tensor::i32(vec![2], vec![0, 1])));
+        assert_eq!(a.dtype_str(), "f32");
+        assert_eq!(Tensor::scalar_i32(3).dtype_str(), "i32");
     }
 
     #[test]

@@ -1,15 +1,21 @@
-//! Native CPU execution engine: the PJRT artifact surface, served by the
+//! Native CPU execution engine: the typed-op surface, served by the
 //! in-process kernel registry instead of compiled HLO.
 //!
-//! [`NativeEngine::run`] accepts the same artifact names and I/O
-//! conventions the AOT manifest defines — `init_<cfg>`,
-//! `train_<cfg>_<variant>`, `eval_<cfg>_<variant>`, `infer_<cfg>_fused`,
-//! plus the single-module `dora_linear_<variant>` and
-//! `compose_<variant>_<rows>x<dout>` units the quickstart drives — so the
-//! coordinator (`Trainer`/`Server`) and the examples run unchanged on a
-//! machine with no `artifacts/` directory and no PJRT runtime. The model
-//! math lives in [`models::forward`](crate::models::forward); every
-//! compose/norm hot path goes through `kernels::registry().select(...)`.
+//! [`NativeEngine::execute`] is the primary entrypoint: it takes a typed
+//! [`EngineOp`] (Init / TrainStep / Eval / Infer / DoraLinear / Compose)
+//! and returns the matching typed [`EngineOut`] — no artifact-name
+//! parsing, no positional tensor packing. The model math lives in
+//! [`models::forward`](crate::models::forward); every compose/norm hot
+//! path goes through `kernels::registry().select(...)`.
+//!
+//! [`NativeEngine::run`] remains as the string-name compatibility shim:
+//! it accepts the same artifact names and I/O conventions the AOT
+//! manifest defines — `init_<cfg>`, `train_<cfg>_<variant>`,
+//! `eval_<cfg>_<variant>`, `infer_<cfg>_<variant>`, plus the
+//! single-module `dora_linear_<variant>` and
+//! `compose_<variant>_<rows>x<dout>` units — parses them into typed ops,
+//! and flattens the typed response back to the positional output list.
+//! PJRT artifact naming therefore still resolves against this engine.
 //!
 //! Configs are built in (`tiny`/`small`/`e2e`), dimensioned like the AOT
 //! manifest's but sized for a CPU testbed; the leaf naming and flatten
@@ -25,8 +31,13 @@ use anyhow::{bail, Context, Result};
 use crate::dora::config::{ActShape, ModuleShape};
 use crate::dora::norm_cpu::{self, AllocTracker};
 use crate::kernels::{registry, BackendKind};
-use crate::models::forward::{self, init_leaves, variant_kernels, NativeModel};
+use crate::models::forward::{self, init_leaves, kernels_for, NativeModel};
 use crate::numerics::half::Dtype;
+use crate::runtime::ops::{
+    AdapterParams, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
+    EvalReq, EvalResp, InferReq, InferResp, InitReq, InitResp, LinearVariant, OptState,
+    TrainStepReq, TrainStepResp, Variant,
+};
 use crate::runtime::{ConfigInfo, Tensor};
 
 /// The built-in native model configurations. Shapes follow the AOT
@@ -65,7 +76,7 @@ pub fn builtin_configs() -> &'static BTreeMap<String, ConfigInfo> {
     })
 }
 
-/// Scale used by the native `dora_linear_*` units (matching the AOT
+/// Scale used by the native `dora_linear` ops (matching the AOT
 /// lowering's `alpha/sqrt(r)` with alpha = 16).
 fn dora_linear_scale(rank: usize) -> f32 {
     16.0 / (rank as f32).sqrt()
@@ -98,28 +109,52 @@ impl NativeEngine {
         builtin_configs()
     }
 
-    /// Does this engine implement the named artifact?
+    /// Execute a typed op — the primary native entrypoint. Inputs are
+    /// validated (an `Err`, never a panic) before any model math runs.
+    pub fn execute(&self, op: &EngineOp) -> Result<EngineOut> {
+        match op {
+            EngineOp::Init(r) => run_init(self.config(&r.config)?, r).map(EngineOut::Init),
+            EngineOp::TrainStep(r) => {
+                run_train(self.config(&r.config)?, r).map(EngineOut::TrainStep)
+            }
+            EngineOp::Eval(r) => run_eval(self.config(&r.config)?, r).map(EngineOut::Eval),
+            EngineOp::Infer(r) => run_infer(self.config(&r.config)?, r).map(EngineOut::Infer),
+            EngineOp::DoraLinear(r) => run_dora_linear(r).map(EngineOut::DoraLinear),
+            EngineOp::Compose(r) => run_compose(r).map(EngineOut::Compose),
+        }
+    }
+
+    /// Does this engine implement the named artifact? (Shim-level probe:
+    /// checks the name grammar and config, not the input tensors.)
     pub fn supports(&self, name: &str) -> bool {
         self.parse_artifact(name).is_ok()
     }
 
-    fn parse_artifact(&self, name: &str) -> Result<NativeArtifact> {
+    /// Execute an artifact by manifest name with positional host tensors
+    /// — the string-name compatibility shim over [`Self::execute`], the
+    /// same contract as [`Engine::run`](crate::runtime::Engine::run).
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let op = self.op_from_artifact(name, inputs)?;
+        Ok(self.execute(&op)?.into_tensors())
+    }
+
+    /// Parse an artifact name into its op descriptor (no tensors yet).
+    fn parse_artifact(&self, name: &str) -> Result<ArtifactKind> {
         if let Some(cfg) = name.strip_prefix("init_") {
-            return Ok(NativeArtifact::Init(self.config(cfg)?));
+            return Ok(ArtifactKind::Init(self.config(cfg)?));
         }
         for (prefix, train) in [("train_", true), ("eval_", false)] {
             if let Some(rest) = name.strip_prefix(prefix) {
-                let (cfg, variant) = rest
-                    .rsplit_once('_')
-                    .with_context(|| format!("artifact {name:?}: expected {prefix}<cfg>_<variant>"))?;
-                if !["eager", "fused"].contains(&variant) {
-                    bail!("artifact {name:?}: variant must be eager|fused");
-                }
+                let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
+                    format!("artifact {name:?}: expected {prefix}<cfg>_<variant>")
+                })?;
+                let variant = Variant::parse(variant)
+                    .with_context(|| format!("artifact {name:?}"))?;
                 let info = self.config(cfg)?;
                 return Ok(if train {
-                    NativeArtifact::Train(info, variant.to_string())
+                    ArtifactKind::Train(info, variant)
                 } else {
-                    NativeArtifact::Eval(info, variant.to_string())
+                    ArtifactKind::Eval(info, variant)
                 });
             }
         }
@@ -127,70 +162,146 @@ impl NativeEngine {
             let (cfg, variant) = rest
                 .rsplit_once('_')
                 .with_context(|| format!("artifact {name:?}: expected infer_<cfg>_<variant>"))?;
-            if !["eager", "fused"].contains(&variant) {
-                bail!("artifact {name:?}: variant must be eager|fused");
-            }
-            return Ok(NativeArtifact::Infer(self.config(cfg)?, variant.to_string()));
+            let variant =
+                Variant::parse(variant).with_context(|| format!("artifact {name:?}"))?;
+            return Ok(ArtifactKind::Infer(self.config(cfg)?, variant));
         }
         if let Some(variant) = name.strip_prefix("dora_linear_") {
-            if !["peft", "dense_ba", "eager", "fused"].contains(&variant) {
-                bail!("artifact {name:?}: unknown dora_linear variant");
-            }
-            return Ok(NativeArtifact::DoraLinear(variant.to_string()));
+            let variant = LinearVariant::parse(variant)
+                .with_context(|| format!("artifact {name:?}"))?;
+            return Ok(ArtifactKind::DoraLinear(variant));
         }
         if let Some(rest) = name.strip_prefix("compose_") {
             let (variant, shape) = rest
                 .split_once('_')
                 .with_context(|| format!("artifact {name:?}: expected compose_<variant>_<RxD>"))?;
-            if !["eager", "fused"].contains(&variant) {
-                bail!("artifact {name:?}: compose variant must be eager|fused");
-            }
+            let variant =
+                Variant::parse(variant).with_context(|| format!("artifact {name:?}"))?;
             let bad = || format!("artifact {name:?}: bad <rows>x<d_out> suffix");
             let (rows_s, d_s) = shape.split_once('x').with_context(bad)?;
             let rows = rows_s.parse::<usize>().ok().with_context(bad)?;
             let d_out = d_s.parse::<usize>().ok().with_context(bad)?;
-            return Ok(NativeArtifact::Compose(variant.to_string(), rows, d_out));
+            return Ok(ArtifactKind::Compose(variant, rows, d_out));
         }
         bail!("artifact {name:?} is not implemented by the native engine")
     }
 
-    /// Execute a native artifact with host tensors, validating the input
-    /// signature, and return the outputs — the same contract as
-    /// [`Engine::run`](crate::runtime::Engine::run).
-    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    /// Build a typed op from an artifact name plus positional inputs —
+    /// the inbound half of the compatibility shim. Input counts are
+    /// checked here; shapes/dtypes are checked by `execute`.
+    fn op_from_artifact(&self, name: &str, inputs: &[Tensor]) -> Result<EngineOp> {
         match self.parse_artifact(name)? {
-            NativeArtifact::Init(info) => run_init(info, name, inputs),
-            NativeArtifact::Train(info, variant) => run_train(info, &variant, name, inputs),
-            NativeArtifact::Eval(info, variant) => run_eval(info, &variant, name, inputs),
-            NativeArtifact::Infer(info, variant) => run_infer(info, &variant, name, inputs),
-            NativeArtifact::DoraLinear(variant) => run_dora_linear(&variant, name, inputs),
-            NativeArtifact::Compose(variant, rows, d_out) => {
-                run_compose(&variant, rows, d_out, name, inputs)
+            ArtifactKind::Init(info) => {
+                expect_inputs(name, inputs, 1)?;
+                expect_shape(name, "seed", &inputs[0], &[])?;
+                let seed = inputs[0].as_i32().context("init seed must be i32")?[0];
+                Ok(EngineOp::Init(InitReq { config: info.name.clone(), seed }))
+            }
+            ArtifactKind::Train(info, variant) => {
+                let nf = info.frozen.len();
+                let nt = info.trainable.len();
+                expect_inputs(name, inputs, nf + 3 * nt + 2)?;
+                let step_t = &inputs[nf + 3 * nt];
+                expect_shape(name, "step", step_t, &[])?;
+                let step = step_t.as_i32().context("step must be i32")?[0];
+                Ok(EngineOp::TrainStep(TrainStepReq {
+                    config: info.name.clone(),
+                    variant,
+                    params: Arc::new(AdapterParams {
+                        frozen: inputs[..nf].to_vec(),
+                        trainable: inputs[nf..nf + nt].to_vec(),
+                    }),
+                    opt: OptState {
+                        m1: inputs[nf + nt..nf + 2 * nt].to_vec(),
+                        m2: inputs[nf + 2 * nt..nf + 3 * nt].to_vec(),
+                        step,
+                    },
+                    tokens: inputs[nf + 3 * nt + 1].clone(),
+                }))
+            }
+            ArtifactKind::Eval(info, variant) => {
+                let (params, tokens) = split_params_tokens(info, name, inputs)?;
+                Ok(EngineOp::Eval(EvalReq {
+                    config: info.name.clone(),
+                    variant,
+                    params,
+                    tokens,
+                }))
+            }
+            ArtifactKind::Infer(info, variant) => {
+                let (params, tokens) = split_params_tokens(info, name, inputs)?;
+                Ok(EngineOp::Infer(InferReq {
+                    config: info.name.clone(),
+                    variant,
+                    params,
+                    tokens,
+                }))
+            }
+            ArtifactKind::DoraLinear(variant) => {
+                expect_inputs(name, inputs, 5)?;
+                Ok(EngineOp::DoraLinear(DoraLinearReq {
+                    variant,
+                    x: inputs[0].clone(),
+                    w: inputs[1].clone(),
+                    a: inputs[2].clone(),
+                    b: inputs[3].clone(),
+                    mag: inputs[4].clone(),
+                }))
+            }
+            ArtifactKind::Compose(variant, rows, d_out) => {
+                expect_inputs(name, inputs, 3)?;
+                expect_shape(name, "base", &inputs[0], &[rows, d_out])?;
+                Ok(EngineOp::Compose(ComposeReq {
+                    variant,
+                    base: inputs[0].clone(),
+                    lora: inputs[1].clone(),
+                    g: inputs[2].clone(),
+                }))
             }
         }
     }
 }
 
-enum NativeArtifact {
+/// Parsed artifact-name descriptor (the shim's grammar).
+enum ArtifactKind {
     Init(&'static ConfigInfo),
-    Train(&'static ConfigInfo, String),
-    Eval(&'static ConfigInfo, String),
-    Infer(&'static ConfigInfo, String),
-    DoraLinear(String),
-    Compose(String, usize, usize),
+    Train(&'static ConfigInfo, Variant),
+    Eval(&'static ConfigInfo, Variant),
+    Infer(&'static ConfigInfo, Variant),
+    DoraLinear(LinearVariant),
+    Compose(Variant, usize, usize),
 }
 
-fn expect_inputs(name: &str, inputs: &[Tensor], want: usize) -> Result<()> {
+/// Split `frozen + trainable + tokens` positional inputs (the eval/infer
+/// artifact layout) into typed parts.
+fn split_params_tokens(
+    info: &ConfigInfo,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<(Arc<AdapterParams>, Tensor)> {
+    let nf = info.frozen.len();
+    let nt = info.trainable.len();
+    expect_inputs(name, inputs, nf + nt + 1)?;
+    Ok((
+        Arc::new(AdapterParams {
+            frozen: inputs[..nf].to_vec(),
+            trainable: inputs[nf..nf + nt].to_vec(),
+        }),
+        inputs[nf + nt].clone(),
+    ))
+}
+
+fn expect_inputs(label: &str, inputs: &[Tensor], want: usize) -> Result<()> {
     if inputs.len() != want {
-        bail!("artifact {name:?} expects {want} inputs, got {}", inputs.len());
+        bail!("op {label:?} expects {want} inputs, got {}", inputs.len());
     }
     Ok(())
 }
 
-fn expect_shape(name: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()> {
+fn expect_shape(label: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()> {
     if t.shape != shape {
         bail!(
-            "artifact {name:?} input {what:?}: shape {:?} != expected {shape:?}",
+            "op {label:?} input {what:?}: shape {:?} != expected {shape:?}",
             t.shape
         );
     }
@@ -199,176 +310,162 @@ fn expect_shape(name: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<(
 
 /// Shape AND dtype check for an f32 parameter leaf — a wrong-dtype leaf
 /// must surface as an `Err` here, never as a downstream panic.
-fn expect_f32(name: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()> {
-    expect_shape(name, what, t, shape)?;
+fn expect_f32(label: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()> {
+    expect_shape(label, what, t, shape)?;
     t.as_f32()
-        .with_context(|| format!("artifact {name:?} input {what:?}"))?;
+        .with_context(|| format!("op {label:?} input {what:?}"))?;
     Ok(())
 }
 
-/// Check the frozen + trainable prefix of an artifact's inputs against the
-/// config's leaf shapes, returning the two slices.
-fn split_params<'a>(
-    info: &ConfigInfo,
-    name: &str,
-    inputs: &'a [Tensor],
-) -> Result<(&'a [Tensor], &'a [Tensor])> {
-    let nf = info.frozen.len();
-    let nt = info.trainable.len();
-    let frozen = &inputs[..nf];
-    let trainable = &inputs[nf..nf + nt];
+/// Validate an adapter's leaf set against the config's shapes: counts,
+/// per-leaf shape, and f32 dtype.
+fn validate_params(info: &ConfigInfo, label: &str, params: &AdapterParams) -> Result<()> {
+    if !params.matches(info) {
+        bail!(
+            "op {label:?}: param count mismatch — got {}+{}, config {} wants {}+{}",
+            params.frozen.len(),
+            params.trainable.len(),
+            info.name,
+            info.frozen.len(),
+            info.trainable.len()
+        );
+    }
     let d = info.d_model;
     let r = info.rank;
-    expect_f32(name, "embed", &frozen[0], &[info.vocab, d])?;
+    expect_f32(label, "embed", &params.frozen[0], &[info.vocab, d])?;
     for l in 0..info.n_layers {
-        expect_f32(name, &info.frozen[1 + l], &frozen[1 + l], &[d, d])?;
-        expect_f32(name, &info.trainable[3 * l], &trainable[3 * l], &[r, d])?;
-        expect_f32(name, &info.trainable[3 * l + 1], &trainable[3 * l + 1], &[d, r])?;
-        expect_f32(name, &info.trainable[3 * l + 2], &trainable[3 * l + 2], &[d])?;
+        expect_f32(label, &info.frozen[1 + l], &params.frozen[1 + l], &[d, d])?;
+        expect_f32(label, &info.trainable[3 * l], &params.trainable[3 * l], &[r, d])?;
+        expect_f32(label, &info.trainable[3 * l + 1], &params.trainable[3 * l + 1], &[d, r])?;
+        expect_f32(label, &info.trainable[3 * l + 2], &params.trainable[3 * l + 2], &[d])?;
     }
-    Ok((frozen, trainable))
+    Ok(())
 }
 
-fn run_init(info: &'static ConfigInfo, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-    expect_inputs(name, inputs, 1)?;
-    expect_shape(name, "seed", &inputs[0], &[])?;
-    let seed = inputs[0].as_i32().context("init seed must be i32")?[0];
-    let leaves = init_leaves(info, seed as u64);
-    let mut outs = leaves.frozen;
-    outs.extend(leaves.trainable);
-    Ok(outs)
+fn run_init(info: &'static ConfigInfo, req: &InitReq) -> Result<InitResp> {
+    let leaves = init_leaves(info, req.seed as u64);
+    Ok(InitResp {
+        params: AdapterParams { frozen: leaves.frozen, trainable: leaves.trainable },
+    })
 }
 
-/// `train_<cfg>_<variant>`: frozen + trainable + m1 + m2 + step + tokens
-/// [k, bs, seq+1] -> trainable' + m1' + m2' + step' + losses [k]. The
-/// scan-over-steps artifact contract, executed as k native steps.
-fn run_train(
-    info: &'static ConfigInfo,
-    variant: &str,
-    name: &str,
-    inputs: &[Tensor],
-) -> Result<Vec<Tensor>> {
-    let nf = info.frozen.len();
-    let nt = info.trainable.len();
-    expect_inputs(name, inputs, nf + 3 * nt + 2)?;
-    let (frozen, trainable) = split_params(info, name, inputs)?;
+/// TrainStep: `chunk_steps` optimizer steps over one packed token block
+/// `[k, bs, seq+1]` — the scan-over-steps contract, executed as k native
+/// steps.
+fn run_train(info: &'static ConfigInfo, req: &TrainStepReq) -> Result<TrainStepResp> {
+    let label = format!("train_{}_{}", info.name, req.variant.as_str());
+    validate_params(info, &label, &req.params)?;
     let k = info.chunk_steps;
     let bs = info.train_batch;
     let seq1 = info.seq + 1;
-    let step_t = &inputs[nf + 3 * nt];
-    expect_shape(name, "step", step_t, &[])?;
-    let step0 = step_t.as_i32().context("step must be i32")?[0];
-    let tokens_t = &inputs[nf + 3 * nt + 1];
-    expect_shape(name, "tokens", tokens_t, &[k, bs, seq1])?;
-    let tokens = tokens_t.as_i32().context("tokens must be i32")?;
+    expect_shape(&label, "tokens", &req.tokens, &[k, bs, seq1])?;
+    let tokens = req.tokens.as_i32().context("tokens must be i32")?;
+    let trainable = &req.params.trainable;
     // Moments must mirror the trainable leaf shapes and dtype (the
     // optimizer iterates them in lockstep).
-    for (which, moments) in [("m1", &inputs[nf + nt..nf + 2 * nt]), ("m2", &inputs[nf + 2 * nt..nf + 3 * nt])] {
+    let nt = trainable.len();
+    for (which, moments) in [("m1", &req.opt.m1), ("m2", &req.opt.m2)] {
+        if moments.len() != nt {
+            bail!("op {label:?}: {which} has {} leaves, expected {nt}", moments.len());
+        }
         for (slot, (m, t)) in moments.iter().zip(trainable).enumerate() {
-            expect_f32(name, &format!("{which}[{slot}]"), m, &t.shape)?;
+            expect_f32(&label, &format!("{which}[{slot}]"), m, &t.shape)?;
         }
     }
 
+    // A negative step would hand adamw_step a t <= 0 bias-correction
+    // exponent (1 - beta^0 = 0 divides by zero) and silently NaN-poison
+    // every parameter — reject it like any other malformed input.
+    let step0 = req.opt.step;
+    if step0 < 0 {
+        bail!("op {label:?}: step counter {step0} is negative");
+    }
     let mut params = trainable.to_vec();
-    let mut m1 = inputs[nf + nt..nf + 2 * nt].to_vec();
-    let mut m2 = inputs[nf + 2 * nt..nf + 3 * nt].to_vec();
-    let kernels = variant_kernels(variant, info, true)?;
+    let mut m1 = req.opt.m1.clone();
+    let mut m2 = req.opt.m2.clone();
+    let kernels = kernels_for(req.variant, info, true)?;
     let mut losses = Vec::with_capacity(k);
     for i in 0..k {
         let block = &tokens[i * bs * seq1..(i + 1) * bs * seq1];
         // The model is a borrowed view over `params`; grads are computed
         // with the view alive, the update after it drops.
         let (loss, grads) = {
-            let model = NativeModel::new(info, frozen, &params, kernels.clone())?;
+            let model = NativeModel::new(info, &req.params.frozen, &params, kernels.clone())?;
             model.loss_and_grads(block, bs)?
         };
         forward::adamw_step(&mut params, &mut m1, &mut m2, &grads, step0 + i as i32 + 1);
         losses.push(loss);
     }
-    let mut outs = params;
-    outs.extend(m1);
-    outs.extend(m2);
-    outs.push(Tensor::scalar_i32(step0 + k as i32));
-    outs.push(Tensor::f32(vec![k], losses));
-    Ok(outs)
+    Ok(TrainStepResp {
+        trainable: params,
+        opt: OptState { m1, m2, step: step0 + k as i32 },
+        losses,
+    })
 }
 
-/// `eval_<cfg>_<variant>`: frozen + trainable + tokens [bs, seq+1] ->
-/// scalar mean loss.
-fn run_eval(
-    info: &'static ConfigInfo,
-    variant: &str,
-    name: &str,
-    inputs: &[Tensor],
-) -> Result<Vec<Tensor>> {
-    let nf = info.frozen.len();
-    let nt = info.trainable.len();
-    expect_inputs(name, inputs, nf + nt + 1)?;
-    let (frozen, trainable) = split_params(info, name, inputs)?;
+/// Eval: mean loss over one held-out token block `[bs, seq+1]`.
+fn run_eval(info: &'static ConfigInfo, req: &EvalReq) -> Result<EvalResp> {
+    let label = format!("eval_{}_{}", info.name, req.variant.as_str());
+    validate_params(info, &label, &req.params)?;
     let bs = info.train_batch;
-    let tokens_t = &inputs[nf + nt];
-    expect_shape(name, "tokens", tokens_t, &[bs, info.seq + 1])?;
-    let tokens = tokens_t.as_i32().context("tokens must be i32")?;
-    let kernels = variant_kernels(variant, info, false)?;
-    let model = NativeModel::new(info, frozen, trainable, kernels)?;
+    expect_shape(&label, "tokens", &req.tokens, &[bs, info.seq + 1])?;
+    let tokens = req.tokens.as_i32().context("tokens must be i32")?;
+    let kernels = kernels_for(req.variant, info, false)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
     let loss = model.eval_loss(tokens, bs)?;
-    Ok(vec![Tensor::f32(vec![], vec![loss])])
+    Ok(EvalResp { loss })
 }
 
-/// `infer_<cfg>_fused`: frozen + trainable + tokens [bs, seq] ->
-/// last-position logits [bs, vocab] (the Tier-2 serving path).
-fn run_infer(
-    info: &'static ConfigInfo,
-    variant: &str,
-    name: &str,
-    inputs: &[Tensor],
-) -> Result<Vec<Tensor>> {
-    let nf = info.frozen.len();
-    let nt = info.trainable.len();
-    expect_inputs(name, inputs, nf + nt + 1)?;
-    let (frozen, trainable) = split_params(info, name, inputs)?;
+/// Infer: last-position logits `[bs, vocab]` for a token batch
+/// `[bs, seq]` (the Tier-2 serving path).
+fn run_infer(info: &'static ConfigInfo, req: &InferReq) -> Result<InferResp> {
+    let label = format!("infer_{}_{}", info.name, req.variant.as_str());
+    validate_params(info, &label, &req.params)?;
     let bs = info.train_batch;
     let seq = info.seq;
-    let tokens_t = &inputs[nf + nt];
-    expect_shape(name, "tokens", tokens_t, &[bs, seq])?;
-    let tokens = tokens_t.as_i32().context("tokens must be i32")?;
-    let kernels = variant_kernels(variant, info, false)?;
-    let model = NativeModel::new(info, frozen, trainable, kernels)?;
+    expect_shape(&label, "tokens", &req.tokens, &[bs, seq])?;
+    let tokens = req.tokens.as_i32().context("tokens must be i32")?;
+    let kernels = kernels_for(req.variant, info, false)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
     let logits = model.infer_logits(tokens, bs, seq)?;
-    Ok(vec![Tensor::f32(vec![bs, info.vocab], logits)])
+    Ok(InferResp { logits: Tensor::f32(vec![bs, info.vocab], logits) })
 }
 
-/// `dora_linear_<variant>`: x [bs, sq, d] + w [d, d] + a [r, d] +
-/// b [d, r] + mag [d] -> y [bs, sq, d]. The four norm/compose
-/// configurations of the paper's §1 table, over the registry kernels.
-fn run_dora_linear(variant: &str, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-    expect_inputs(name, inputs, 5)?;
-    let x_t = &inputs[0];
-    if x_t.shape.len() != 3 {
-        bail!("artifact {name:?} input \"x\": expected rank-3 [bs, sq, d], got {:?}", x_t.shape);
+/// DoraLinear: x [bs, sq, d] + w [d, d] + a [r, d] + b [d, r] + mag [d]
+/// -> y [bs, sq, d]. The four norm/compose configurations of the paper's
+/// §1 table, over the registry kernels.
+fn run_dora_linear(req: &DoraLinearReq) -> Result<DoraLinearResp> {
+    let label = format!("dora_linear_{}", req.variant.as_str());
+    if req.x.shape.len() != 3 {
+        bail!(
+            "op {label:?} input \"x\": expected rank-3 [bs, sq, d], got {:?}",
+            req.x.shape
+        );
     }
-    let (bs, sq, d) = (x_t.shape[0], x_t.shape[1], x_t.shape[2]);
-    let r = inputs[2].shape.first().copied().unwrap_or(0);
+    let (bs, sq, d) = (req.x.shape[0], req.x.shape[1], req.x.shape[2]);
+    let r = req.a.shape.first().copied().unwrap_or(0);
     if r == 0 {
-        bail!("artifact {name:?} input \"a\": empty rank dimension");
+        bail!("op {label:?} input \"a\": empty rank dimension");
     }
-    expect_shape(name, "w", &inputs[1], &[d, d])?;
-    expect_shape(name, "a", &inputs[2], &[r, d])?;
-    expect_shape(name, "b", &inputs[3], &[d, r])?;
-    expect_shape(name, "mag", &inputs[4], &[d])?;
-    let x = x_t.as_f32()?;
-    let w = inputs[1].as_f32()?;
-    let a = inputs[2].as_f32()?;
-    let b = inputs[3].as_f32()?;
-    let mag = inputs[4].as_f32()?;
+    expect_shape(&label, "w", &req.w, &[d, d])?;
+    expect_shape(&label, "a", &req.a, &[r, d])?;
+    expect_shape(&label, "b", &req.b, &[d, r])?;
+    expect_shape(&label, "mag", &req.mag, &[d])?;
+    let x = req.x.as_f32()?;
+    let w = req.w.as_f32()?;
+    let a = req.a.as_f32()?;
+    let b = req.b.as_f32()?;
+    let mag = req.mag.as_f32()?;
 
     let s = dora_linear_scale(r);
     let m = ModuleShape::new(d, d, r);
     let mut tracker = AllocTracker::new();
-    let c = match variant {
-        "peft" => norm_cpu::peft_norm(w, a, b, s, m, &mut tracker),
-        "dense_ba" => norm_cpu::dense_ba_norm(w, a, b, s, m, &mut tracker),
-        _ => norm_cpu::factored_norm(w, a, b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tracker),
+    let c = match req.variant {
+        LinearVariant::Peft => norm_cpu::peft_norm(w, a, b, s, m, &mut tracker),
+        LinearVariant::DenseBa => norm_cpu::dense_ba_norm(w, a, b, s, m, &mut tracker),
+        LinearVariant::Eager | LinearVariant::Fused => {
+            norm_cpu::factored_norm(w, a, b, s, m, norm_cpu::DEFAULT_CHUNK_BUDGET, &mut tracker)
+        }
     };
     let g = norm_cpu::magnitude_divide(mag, &c, Dtype::F32.division_eps());
 
@@ -377,39 +474,45 @@ fn run_dora_linear(variant: &str, name: &str, inputs: &[Tensor]) -> Result<Vec<T
     let base = forward::matmul_nt(x, w, rows, d, d);
     let u = forward::matmul_nt(x, a, rows, d, r);
     let lora = forward::matmul_nt(&u, b, rows, r, d);
-    let kind = if variant == "fused" { BackendKind::Fused } else { BackendKind::Eager };
+    let kind = match req.variant {
+        LinearVariant::Fused => BackendKind::Fused,
+        _ => BackendKind::Eager,
+    };
     let kernel = registry().compose(kind);
     let mut delta = vec![0f32; rows * d];
     kernel.forward(&base, &lora, &g, s, act, Dtype::F32, &mut delta);
     let y: Vec<f32> = base.iter().zip(&delta).map(|(&b0, &dl)| b0 + dl).collect();
-    Ok(vec![Tensor::f32(vec![bs, sq, d], y)])
+    Ok(DoraLinearResp { y: Tensor::f32(vec![bs, sq, d], y) })
 }
 
-/// `compose_<variant>_<rows>x<dout>`: base + lora + g -> delta, s = 2.0
-/// (the AOT compose units' baked-in scale).
-fn run_compose(
-    variant: &str,
-    rows: usize,
-    d_out: usize,
-    name: &str,
-    inputs: &[Tensor],
-) -> Result<Vec<Tensor>> {
-    expect_inputs(name, inputs, 3)?;
-    expect_shape(name, "base", &inputs[0], &[rows, d_out])?;
-    expect_shape(name, "lora", &inputs[1], &[rows, d_out])?;
-    expect_shape(name, "g", &inputs[2], &[d_out])?;
-    let kind = if variant == "fused" { BackendKind::Fused } else { BackendKind::Eager };
+/// Compose: base + lora + g -> delta, s = 2.0 (the AOT compose units'
+/// baked-in scale).
+fn run_compose(req: &ComposeReq) -> Result<ComposeResp> {
+    let label = format!("compose_{}", req.variant.as_str());
+    if req.base.shape.len() != 2 {
+        bail!(
+            "op {label:?} input \"base\": expected rank-2 [rows, d_out], got {:?}",
+            req.base.shape
+        );
+    }
+    let (rows, d_out) = (req.base.shape[0], req.base.shape[1]);
+    expect_shape(&label, "lora", &req.lora, &[rows, d_out])?;
+    expect_shape(&label, "g", &req.g, &[d_out])?;
+    let kind = match req.variant {
+        Variant::Fused => BackendKind::Fused,
+        Variant::Eager => BackendKind::Eager,
+    };
     let kernel: Arc<dyn crate::kernels::ComposeKernel> = registry().compose(kind);
     let act = ActShape::new(rows, d_out);
     let delta = kernel.forward_alloc(
-        inputs[0].as_f32()?,
-        inputs[1].as_f32()?,
-        inputs[2].as_f32()?,
+        req.base.as_f32()?,
+        req.lora.as_f32()?,
+        req.g.as_f32()?,
         2.0,
         act,
         Dtype::F32,
     );
-    Ok(vec![Tensor::f32(vec![rows, d_out], delta)])
+    Ok(ComposeResp { delta: Tensor::f32(vec![rows, d_out], delta) })
 }
 
 #[cfg(test)]
@@ -449,6 +552,30 @@ mod tests {
     }
 
     #[test]
+    fn typed_init_matches_string_shim() {
+        let eng = NativeEngine::new();
+        let via_shim = eng.run("init_tiny", &[Tensor::scalar_i32(3)]).unwrap();
+        let via_typed = match eng
+            .execute(&EngineOp::Init(InitReq { config: "tiny".into(), seed: 3 }))
+            .unwrap()
+        {
+            EngineOut::Init(r) => r,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        let info = eng.config("tiny").unwrap();
+        assert_eq!(via_typed.params.frozen.len(), info.frozen.len());
+        assert_eq!(
+            via_typed.params.frozen[0].as_f32().unwrap(),
+            via_shim[0].as_f32().unwrap()
+        );
+        let nf = info.frozen.len();
+        assert_eq!(
+            via_typed.params.trainable[0].as_f32().unwrap(),
+            via_shim[nf].as_f32().unwrap()
+        );
+    }
+
+    #[test]
     fn train_chunk_contract_roundtrip() {
         let eng = NativeEngine::new();
         let info = eng.config("tiny").unwrap();
@@ -479,6 +606,57 @@ mod tests {
         assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0));
         // Parameters actually moved.
         assert_ne!(outs[0].as_f32().unwrap(), leaves[nf].as_f32().unwrap());
+    }
+
+    #[test]
+    fn typed_train_step_matches_string_shim() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let nf = info.frozen.len();
+        let nt = info.trainable.len();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(5)]).unwrap();
+        let params = AdapterParams {
+            frozen: leaves[..nf].to_vec(),
+            trainable: leaves[nf..].to_vec(),
+        };
+        let opt = OptState::zeros_like(&params.trainable);
+        let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 9);
+        let k = info.chunk_steps;
+        let tokens = Tensor::i32(
+            vec![k, info.train_batch, info.seq + 1],
+            corpus.block(k, info.train_batch, info.seq + 1),
+        );
+        // Typed path.
+        let resp = match eng
+            .execute(&EngineOp::TrainStep(TrainStepReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params: Arc::new(params.clone()),
+                opt: opt.clone(),
+                tokens: tokens.clone(),
+            }))
+            .unwrap()
+        {
+            EngineOut::TrainStep(r) => r,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        // String-shim path with the identical inputs.
+        let mut inputs = leaves.clone();
+        inputs.extend(opt.m1.iter().cloned());
+        inputs.extend(opt.m2.iter().cloned());
+        inputs.push(Tensor::scalar_i32(0));
+        inputs.push(tokens);
+        let outs = eng.run("train_tiny_fused", &inputs).unwrap();
+        assert_eq!(resp.opt.step, k as i32);
+        assert_eq!(resp.losses.len(), k);
+        for (i, t) in resp.trainable.iter().enumerate() {
+            assert_eq!(t.as_f32().unwrap(), outs[i].as_f32().unwrap(), "leaf {i}");
+        }
+        assert_eq!(
+            resp.losses.as_slice(),
+            outs[3 * nt + 1].as_f32().unwrap(),
+            "losses"
+        );
     }
 
     #[test]
@@ -539,6 +717,16 @@ mod tests {
         bad.push(Tensor::i32(vec![bs, info.seq], vec![1; bs * info.seq]));
         let err = eng.run("infer_tiny_fused", &bad).unwrap_err();
         assert!(format!("{err:#}").contains("i32"), "{err:#}");
+        // Typed path: param-count mismatch is an Err too.
+        let err = eng
+            .execute(&EngineOp::Infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params: Arc::new(AdapterParams::default()),
+                tokens: Tensor::i32(vec![bs, info.seq], vec![1; bs * info.seq]),
+            }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("param count"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! Typed execution ops: the session-level request/response surface over
+//! the execution backends.
+//!
+//! Historically the runtime was driven through stringly-typed artifact
+//! names (`"train_tiny_fused"`) with hand-packed positional tensor lists
+//! — every call site had to know the flatten order (frozen + trainable +
+//! m1 + m2 + step + tokens) by heart, and a packing mistake surfaced as a
+//! shape error deep inside the engine. This module replaces that surface
+//! with an [`EngineOp`] enum of typed requests and typed responses:
+//!
+//! * [`InitReq`] / [`InitResp`] — seeded in-graph parameter init.
+//! * [`TrainStepReq`] / [`TrainStepResp`] — one chunk of optimizer steps.
+//! * [`EvalReq`] / [`EvalResp`] — held-out mean loss.
+//! * [`InferReq`] / [`InferResp`] — last-position logits (serving).
+//! * [`DoraLinearReq`] / [`DoraLinearResp`] — one adapted module.
+//! * [`ComposeReq`] / [`ComposeResp`] — one compose unit.
+//!
+//! The PJRT engine still speaks artifact names and positional literals,
+//! so every op renders to its artifact name ([`EngineOp::artifact_name`])
+//! and packs/unpacks the positional convention ([`EngineOp::pack_inputs`]
+//! and the per-response `unpack`) — a thin compatibility shim that keeps
+//! AOT manifest naming resolvable while every call site above the
+//! backend layer is typed.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ConfigInfo, Tensor};
+
+/// Numeric-path variant of the train/eval/infer ops (the paper's §5.9
+/// eager-vs-fused axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Variant {
+    Eager,
+    #[default]
+    Fused,
+}
+
+impl Variant {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Variant::Eager => "eager",
+            Variant::Fused => "fused",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Variant> {
+        match s {
+            "eager" => Ok(Variant::Eager),
+            "fused" => Ok(Variant::Fused),
+            other => bail!("variant must be eager|fused, got {other:?}"),
+        }
+    }
+}
+
+/// The four single-module configurations of the paper's §1 table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinearVariant {
+    Peft,
+    DenseBa,
+    Eager,
+    Fused,
+}
+
+impl LinearVariant {
+    pub const ALL: [LinearVariant; 4] = [
+        LinearVariant::Peft,
+        LinearVariant::DenseBa,
+        LinearVariant::Eager,
+        LinearVariant::Fused,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LinearVariant::Peft => "peft",
+            LinearVariant::DenseBa => "dense_ba",
+            LinearVariant::Eager => "eager",
+            LinearVariant::Fused => "fused",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LinearVariant> {
+        match s {
+            "peft" => Ok(LinearVariant::Peft),
+            "dense_ba" => Ok(LinearVariant::DenseBa),
+            "eager" => Ok(LinearVariant::Eager),
+            "fused" => Ok(LinearVariant::Fused),
+            other => bail!("dora_linear variant must be peft|dense_ba|eager|fused, got {other:?}"),
+        }
+    }
+}
+
+/// One adapter's parameter leaves, in the manifest's flatten order.
+#[derive(Debug, Clone, Default)]
+pub struct AdapterParams {
+    pub frozen: Vec<Tensor>,
+    pub trainable: Vec<Tensor>,
+}
+
+impl AdapterParams {
+    /// Split a flat init-order leaf list (frozen then trainable).
+    pub fn from_flat(info: &ConfigInfo, mut leaves: Vec<Tensor>) -> Result<AdapterParams> {
+        let nf = info.frozen.len();
+        let nt = info.trainable.len();
+        if leaves.len() != nf + nt {
+            bail!(
+                "config {}: got {} leaves, expected {} frozen + {} trainable",
+                info.name,
+                leaves.len(),
+                nf,
+                nt
+            );
+        }
+        let trainable = leaves.split_off(nf);
+        Ok(AdapterParams { frozen: leaves, trainable })
+    }
+
+    /// Leaf counts match the config's?
+    pub fn matches(&self, info: &ConfigInfo) -> bool {
+        self.frozen.len() == info.frozen.len() && self.trainable.len() == info.trainable.len()
+    }
+}
+
+/// AdamW optimizer state: first/second moments mirroring the trainable
+/// leaves, plus the step counter.
+#[derive(Debug, Clone, Default)]
+pub struct OptState {
+    pub m1: Vec<Tensor>,
+    pub m2: Vec<Tensor>,
+    pub step: i32,
+}
+
+impl OptState {
+    /// Fresh (zeroed) state for a trainable leaf set.
+    pub fn zeros_like(trainable: &[Tensor]) -> OptState {
+        let zeros = |ts: &[Tensor]| -> Vec<Tensor> {
+            ts.iter()
+                .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.elems()]))
+                .collect()
+        };
+        OptState { m1: zeros(trainable), m2: zeros(trainable), step: 0 }
+    }
+}
+
+/// Seeded in-graph parameter init for a named config.
+#[derive(Debug, Clone)]
+pub struct InitReq {
+    pub config: String,
+    pub seed: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct InitResp {
+    pub params: AdapterParams,
+}
+
+impl InitResp {
+    pub fn unpack(info: &ConfigInfo, outs: Vec<Tensor>) -> Result<InitResp> {
+        Ok(InitResp { params: AdapterParams::from_flat(info, outs)? })
+    }
+}
+
+/// One chunk of `chunk_steps` optimizer steps (the scan-over-steps
+/// artifact contract). `tokens` is `[chunk_steps, train_batch, seq+1]`.
+///
+/// Parameters ride behind an `Arc` in every op that carries them: a
+/// caller holding a parameter snapshot (the multi-adapter server's slot
+/// table) builds the request with a refcount bump, not a whole-model
+/// copy.
+#[derive(Debug, Clone)]
+pub struct TrainStepReq {
+    pub config: String,
+    pub variant: Variant,
+    pub params: Arc<AdapterParams>,
+    pub opt: OptState,
+    pub tokens: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainStepResp {
+    pub trainable: Vec<Tensor>,
+    pub opt: OptState,
+    pub losses: Vec<f32>,
+}
+
+impl TrainStepResp {
+    pub fn unpack(info: &ConfigInfo, outs: Vec<Tensor>) -> Result<TrainStepResp> {
+        let nt = info.trainable.len();
+        if outs.len() != 3 * nt + 2 {
+            bail!("train op returned {} outputs, expected {}", outs.len(), 3 * nt + 2);
+        }
+        let step = *outs[3 * nt]
+            .as_i32()
+            .context("train op step counter")?
+            .first()
+            .context("train op returned an empty step counter")?;
+        let losses = outs[3 * nt + 1].as_f32().context("train op losses")?.to_vec();
+        Ok(TrainStepResp {
+            trainable: outs[..nt].to_vec(),
+            opt: OptState {
+                m1: outs[nt..2 * nt].to_vec(),
+                m2: outs[2 * nt..3 * nt].to_vec(),
+                step,
+            },
+            losses,
+        })
+    }
+}
+
+/// Held-out eval loss. `tokens` is `[train_batch, seq+1]`.
+#[derive(Debug, Clone)]
+pub struct EvalReq {
+    pub config: String,
+    pub variant: Variant,
+    pub params: Arc<AdapterParams>,
+    pub tokens: Tensor,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResp {
+    pub loss: f32,
+}
+
+impl EvalResp {
+    pub fn unpack(outs: Vec<Tensor>) -> Result<EvalResp> {
+        let loss = outs
+            .first()
+            .context("eval op returned no outputs")?
+            .scalar_f32()
+            .context("eval op loss")?;
+        Ok(EvalResp { loss })
+    }
+}
+
+/// Last-position logits for a token batch (the Tier-2 serving path).
+/// `tokens` is `[train_batch, seq]`.
+#[derive(Debug, Clone)]
+pub struct InferReq {
+    pub config: String,
+    pub variant: Variant,
+    pub params: Arc<AdapterParams>,
+    pub tokens: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct InferResp {
+    /// `[train_batch, vocab]` f32 logits.
+    pub logits: Tensor,
+}
+
+impl InferResp {
+    /// Validate engine outputs down to a well-formed logits tensor. Any
+    /// mismatch (missing output, wrong shape, wrong dtype) is an `Err`
+    /// the serving batcher fans to its batch — never a panic.
+    pub fn unpack(bs: usize, vocab: usize, mut outs: Vec<Tensor>) -> Result<InferResp> {
+        if outs.is_empty() {
+            bail!("engine returned no outputs for the infer op");
+        }
+        let first = outs.swap_remove(0);
+        if first.shape != [bs, vocab] {
+            bail!("infer output shape {:?} != expected [{bs}, {vocab}]", first.shape);
+        }
+        let logits = first
+            .as_f32()
+            .context("infer output has wrong dtype (expected f32 logits)")?;
+        if logits.len() != bs * vocab {
+            bail!("infer output has {} elements, expected {}", logits.len(), bs * vocab);
+        }
+        Ok(InferResp { logits: first })
+    }
+}
+
+/// One DoRA-adapted linear module: `y = base + compose(base, lora, g, s)`
+/// with `g` derived from the supplied magnitude vector.
+#[derive(Debug, Clone)]
+pub struct DoraLinearReq {
+    pub variant: LinearVariant,
+    /// `[bs, sq, d]` activations.
+    pub x: Tensor,
+    /// `[d, d]` frozen projection.
+    pub w: Tensor,
+    /// `[r, d]` adapter down-projection.
+    pub a: Tensor,
+    /// `[d, r]` adapter up-projection.
+    pub b: Tensor,
+    /// `[d]` magnitude vector.
+    pub mag: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct DoraLinearResp {
+    /// `[bs, sq, d]` module output.
+    pub y: Tensor,
+}
+
+impl DoraLinearResp {
+    pub fn unpack(mut outs: Vec<Tensor>) -> Result<DoraLinearResp> {
+        if outs.is_empty() {
+            bail!("engine returned no outputs for the dora_linear op");
+        }
+        Ok(DoraLinearResp { y: outs.swap_remove(0) })
+    }
+}
+
+/// One compose unit: `delta = g * (base + s*lora) - base` over the fixed
+/// AOT scale. `base`/`lora` are `[rows, d_out]`, `g` is `[d_out]`.
+#[derive(Debug, Clone)]
+pub struct ComposeReq {
+    pub variant: Variant,
+    pub base: Tensor,
+    pub lora: Tensor,
+    pub g: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct ComposeResp {
+    /// `[rows, d_out]` delta.
+    pub delta: Tensor,
+}
+
+impl ComposeResp {
+    pub fn unpack(mut outs: Vec<Tensor>) -> Result<ComposeResp> {
+        if outs.is_empty() {
+            bail!("engine returned no outputs for the compose op");
+        }
+        Ok(ComposeResp { delta: outs.swap_remove(0) })
+    }
+}
+
+/// A typed execution op: the request side of one engine call.
+#[derive(Debug, Clone)]
+pub enum EngineOp {
+    Init(InitReq),
+    TrainStep(TrainStepReq),
+    Eval(EvalReq),
+    Infer(InferReq),
+    DoraLinear(DoraLinearReq),
+    Compose(ComposeReq),
+}
+
+/// The typed response matching an [`EngineOp`] variant.
+#[derive(Debug, Clone)]
+pub enum EngineOut {
+    Init(InitResp),
+    TrainStep(TrainStepResp),
+    Eval(EvalResp),
+    Infer(InferResp),
+    DoraLinear(DoraLinearResp),
+    Compose(ComposeResp),
+}
+
+impl EngineOp {
+    /// Render the op to its AOT artifact name — the compatibility shim
+    /// that keeps PJRT manifest naming resolvable from the typed surface.
+    pub fn artifact_name(&self) -> Result<String> {
+        Ok(match self {
+            EngineOp::Init(r) => format!("init_{}", r.config),
+            EngineOp::TrainStep(r) => format!("train_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::Eval(r) => format!("eval_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::Infer(r) => format!("infer_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::DoraLinear(r) => format!("dora_linear_{}", r.variant.as_str()),
+            EngineOp::Compose(r) => {
+                if r.base.shape.len() != 2 {
+                    bail!(
+                        "compose op base must be rank-2 [rows, d_out], got {:?}",
+                        r.base.shape
+                    );
+                }
+                format!(
+                    "compose_{}_{}x{}",
+                    r.variant.as_str(),
+                    r.base.shape[0],
+                    r.base.shape[1]
+                )
+            }
+        })
+    }
+
+    /// Pack the request into the artifact's positional tensor list (the
+    /// PJRT literal convention).
+    pub fn pack_inputs(&self) -> Vec<Tensor> {
+        match self {
+            EngineOp::Init(r) => vec![Tensor::scalar_i32(r.seed)],
+            EngineOp::TrainStep(r) => {
+                let mut v = Vec::with_capacity(
+                    r.params.frozen.len() + 3 * r.params.trainable.len() + 2,
+                );
+                v.extend(r.params.frozen.iter().cloned());
+                v.extend(r.params.trainable.iter().cloned());
+                v.extend(r.opt.m1.iter().cloned());
+                v.extend(r.opt.m2.iter().cloned());
+                v.push(Tensor::scalar_i32(r.opt.step));
+                v.push(r.tokens.clone());
+                v
+            }
+            EngineOp::Eval(r) => {
+                let mut v = Vec::with_capacity(
+                    r.params.frozen.len() + r.params.trainable.len() + 1,
+                );
+                v.extend(r.params.frozen.iter().cloned());
+                v.extend(r.params.trainable.iter().cloned());
+                v.push(r.tokens.clone());
+                v
+            }
+            EngineOp::Infer(r) => {
+                let mut v = Vec::with_capacity(
+                    r.params.frozen.len() + r.params.trainable.len() + 1,
+                );
+                v.extend(r.params.frozen.iter().cloned());
+                v.extend(r.params.trainable.iter().cloned());
+                v.push(r.tokens.clone());
+                v
+            }
+            EngineOp::DoraLinear(r) => vec![
+                r.x.clone(),
+                r.w.clone(),
+                r.a.clone(),
+                r.b.clone(),
+                r.mag.clone(),
+            ],
+            EngineOp::Compose(r) => vec![r.base.clone(), r.lora.clone(), r.g.clone()],
+        }
+    }
+
+    /// Short op kind name for logs/errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineOp::Init(_) => "init",
+            EngineOp::TrainStep(_) => "train",
+            EngineOp::Eval(_) => "eval",
+            EngineOp::Infer(_) => "infer",
+            EngineOp::DoraLinear(_) => "dora_linear",
+            EngineOp::Compose(_) => "compose",
+        }
+    }
+}
+
+impl EngineOut {
+    /// Flatten a typed response back into the artifact's positional
+    /// output list (the string-name shim's return convention).
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        match self {
+            EngineOut::Init(r) => {
+                let mut v = r.params.frozen;
+                v.extend(r.params.trainable);
+                v
+            }
+            EngineOut::TrainStep(r) => {
+                let mut v = r.trainable;
+                v.extend(r.opt.m1);
+                v.extend(r.opt.m2);
+                v.push(Tensor::scalar_i32(r.opt.step));
+                let k = r.losses.len();
+                v.push(Tensor::f32(vec![k], r.losses));
+                v
+            }
+            EngineOut::Eval(r) => vec![Tensor::f32(vec![], vec![r.loss])],
+            EngineOut::Infer(r) => vec![r.logits],
+            EngineOut::DoraLinear(r) => vec![r.y],
+            EngineOut::Compose(r) => vec![r.delta],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_roundtrip_and_rejects() {
+        assert_eq!(Variant::parse("eager").unwrap(), Variant::Eager);
+        assert_eq!(Variant::parse("fused").unwrap(), Variant::Fused);
+        assert!(Variant::parse("nope").is_err());
+        for v in [Variant::Eager, Variant::Fused] {
+            assert_eq!(Variant::parse(v.as_str()).unwrap(), v);
+        }
+        for v in LinearVariant::ALL {
+            assert_eq!(LinearVariant::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(LinearVariant::parse("norm").is_err());
+    }
+
+    #[test]
+    fn artifact_names_render_the_manifest_convention() {
+        let init = EngineOp::Init(InitReq { config: "tiny".into(), seed: 0 });
+        assert_eq!(init.artifact_name().unwrap(), "init_tiny");
+        let compose = EngineOp::Compose(ComposeReq {
+            variant: Variant::Fused,
+            base: Tensor::f32(vec![512, 2048], vec![0.0; 512 * 2048]),
+            lora: Tensor::f32(vec![512, 2048], vec![0.0; 512 * 2048]),
+            g: Tensor::f32(vec![2048], vec![1.0; 2048]),
+        });
+        assert_eq!(compose.artifact_name().unwrap(), "compose_fused_512x2048");
+        let bad = EngineOp::Compose(ComposeReq {
+            variant: Variant::Eager,
+            base: Tensor::f32(vec![8], vec![0.0; 8]),
+            lora: Tensor::f32(vec![8], vec![0.0; 8]),
+            g: Tensor::f32(vec![8], vec![1.0; 8]),
+        });
+        assert!(bad.artifact_name().is_err());
+        let lin = EngineOp::DoraLinear(DoraLinearReq {
+            variant: LinearVariant::DenseBa,
+            x: Tensor::f32(vec![1, 1, 1], vec![0.0]),
+            w: Tensor::f32(vec![1, 1], vec![0.0]),
+            a: Tensor::f32(vec![1, 1], vec![0.0]),
+            b: Tensor::f32(vec![1, 1], vec![0.0]),
+            mag: Tensor::f32(vec![1], vec![0.0]),
+        });
+        assert_eq!(lin.artifact_name().unwrap(), "dora_linear_dense_ba");
+    }
+
+    #[test]
+    fn infer_unpack_rejects_malformed_outputs() {
+        assert!(InferResp::unpack(2, 4, vec![]).is_err());
+        assert!(
+            InferResp::unpack(2, 4, vec![Tensor::f32(vec![2, 3], vec![0.0; 6])]).is_err()
+        );
+        assert!(InferResp::unpack(2, 4, vec![Tensor::i32(vec![2, 4], vec![0; 8])]).is_err());
+        let ok = InferResp::unpack(2, 4, vec![Tensor::f32(vec![2, 4], vec![0.5; 8])]).unwrap();
+        assert_eq!(ok.logits.shape, vec![2, 4]);
+    }
+
+    #[test]
+    fn opt_state_zeros_mirror_trainable_shapes() {
+        let trainable = vec![
+            Tensor::f32(vec![2, 3], vec![1.0; 6]),
+            Tensor::f32(vec![4], vec![1.0; 4]),
+        ];
+        let opt = OptState::zeros_like(&trainable);
+        assert_eq!(opt.step, 0);
+        assert_eq!(opt.m1.len(), 2);
+        assert_eq!(opt.m1[0].shape, vec![2, 3]);
+        assert_eq!(opt.m2[1].shape, vec![4]);
+        assert!(opt.m1[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn train_pack_order_matches_the_artifact_contract() {
+        let t = |n: usize| Tensor::f32(vec![n], vec![0.0; n]);
+        let req = TrainStepReq {
+            config: "tiny".into(),
+            variant: Variant::Fused,
+            params: Arc::new(AdapterParams { frozen: vec![t(1), t(2)], trainable: vec![t(3)] }),
+            opt: OptState { m1: vec![t(3)], m2: vec![t(3)], step: 7 },
+            tokens: Tensor::i32(vec![1, 1, 2], vec![0, 1]),
+        };
+        let op = EngineOp::TrainStep(req);
+        assert_eq!(op.artifact_name().unwrap(), "train_tiny_fused");
+        let packed = op.pack_inputs();
+        // frozen(2) + trainable(1) + m1(1) + m2(1) + step + tokens = 7.
+        assert_eq!(packed.len(), 7);
+        assert_eq!(packed[5].as_i32().unwrap(), &[7]);
+        assert_eq!(packed[6].shape, vec![1, 1, 2]);
+    }
+}

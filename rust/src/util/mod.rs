@@ -12,6 +12,18 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+/// Lock a mutex, recovering the inner data if a previous holder panicked.
+///
+/// The serving metrics and adapter-store maps are plain telemetry/state:
+/// a panicking worker must not convert every later `metrics()` call into
+/// a second panic (the default `.lock().unwrap()` behavior on a poisoned
+/// mutex). Poisoning exists to flag possibly-inconsistent invariants;
+/// every use site here updates self-contained counters/maps, so
+/// recovering the data is always safe.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Minimal CLI flag parsing: `--key value` and `--flag` switches.
 ///
 /// The main binary has a handful of subcommands with simple options; this
@@ -109,5 +121,21 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = parse("--fast");
         assert_eq!(a.get("fast"), Some("true"));
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_panicking_holder() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(41u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        // The data is still reachable — and writable — through the helper.
+        *super::lock_unpoisoned(&m) += 1;
+        assert_eq!(*super::lock_unpoisoned(&m), 42);
     }
 }

@@ -14,11 +14,41 @@ use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::dora::config::ActShape;
 use dorafactors::numerics::stability;
 use dorafactors::numerics::Dtype;
-use dorafactors::runtime::{manifest, BackendSpec, Engine, ExecBackend, NativeEngine, Tensor};
+use dorafactors::runtime::{
+    manifest, AdapterStore, BackendSpec, Engine, ExecBackend, NativeEngine, Tensor,
+};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = manifest::default_dir();
     dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Unique scratch directory for an adapter-store test, removed on drop.
+struct ScratchDir(std::path::PathBuf);
+
+impl ScratchDir {
+    fn new(tag: &str) -> ScratchDir {
+        let dir = std::env::temp_dir()
+            .join(format!("dora_integration_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ScratchDir(dir)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn tiny_trainer_cfg(seed: u64) -> TrainerCfg {
+    TrainerCfg {
+        config: "tiny".into(),
+        variant: "fused".into(),
+        seed,
+        branching: 3,
+        eval_every: 0,
+    }
 }
 
 // --- Native-engine integration: unconditional ---------------------------
@@ -149,6 +179,132 @@ fn auto_backend_runs_the_quickstart_artifact_surface() {
             reference = Some(y);
         }
     }
+}
+
+#[test]
+fn checkpoint_roundtrip_is_bitwise_identical_after_training() {
+    // Acceptance criterion: save -> load -> leaves bitwise equal, on a
+    // REAL trained adapter (not just init noise).
+    let scratch = ScratchDir::new("ckpt_roundtrip");
+    let store = AdapterStore::open(&scratch.0).unwrap();
+    let mut tr = Trainer::new(NativeEngine::new(), tiny_trainer_cfg(31)).unwrap();
+    tr.train_steps(8).unwrap();
+    let adapter = tr.to_adapter("trained").unwrap();
+    store.save(&adapter).unwrap();
+    let back = store.load("trained").unwrap();
+    assert_eq!(back.config, "tiny");
+    assert_eq!(back.step, 8);
+    assert_eq!(back.seed, 31);
+    assert_eq!(
+        adapter.params.frozen.len() + adapter.params.trainable.len(),
+        back.params.frozen.len() + back.params.trainable.len()
+    );
+    for (a, b) in adapter
+        .params
+        .frozen
+        .iter()
+        .chain(&adapter.params.trainable)
+        .zip(back.params.frozen.iter().chain(&back.params.trainable))
+    {
+        assert!(a.bitwise_eq(b), "leaf {:?} changed across the round trip", a.shape);
+    }
+}
+
+#[test]
+fn multi_adapter_server_matches_single_adapter_logits() {
+    // Acceptance criterion: a server hosting 2 adapters returns, for the
+    // same prompt, exactly the logits each single-adapter server returns
+    // — routing must not mix parameters — with per-adapter metrics.
+    let mut tr_a = Trainer::new(NativeEngine::new(), tiny_trainer_cfg(41)).unwrap();
+    tr_a.train_steps(8).unwrap();
+    let mut tr_b = Trainer::new(NativeEngine::new(), tiny_trainer_cfg(42)).unwrap();
+    tr_b.train_steps(8).unwrap();
+    let adapter_a = tr_a.to_adapter("job-a").unwrap();
+    let adapter_b = tr_b.to_adapter("job-b").unwrap();
+    let cfg = || ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) };
+    let prompt = [3, 1, 4, 1, 5];
+
+    // Single-adapter reference paths.
+    let single = |adapter: &dorafactors::runtime::Adapter| {
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            cfg(),
+            vec![adapter.clone()],
+        )
+        .unwrap();
+        let reply = server.client().infer(&prompt).unwrap();
+        server.shutdown();
+        reply
+    };
+    let ref_a = single(&adapter_a);
+    let ref_b = single(&adapter_b);
+    assert_ne!(ref_a.logits, ref_b.logits, "distinct adapters, distinct logits");
+
+    // Multi-adapter path.
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        cfg(),
+        vec![adapter_a, adapter_b],
+    )
+    .unwrap();
+    let client = server.client();
+    let got_a = client.infer_with("job-a", &prompt).unwrap();
+    let got_b = client.infer_with("job-b", &prompt).unwrap();
+    assert_eq!(got_a.logits, ref_a.logits, "job-a logits diverge from single-adapter path");
+    assert_eq!(got_b.logits, ref_b.logits, "job-b logits diverge from single-adapter path");
+    assert_eq!(got_a.adapter, "job-a");
+    assert_eq!(got_b.adapter, "job-b");
+    let m = server.shutdown();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.per_adapter["job-a"].completed, 1);
+    assert_eq!(m.per_adapter["job-b"].completed, 1);
+    assert_eq!(m.per_adapter["job-a"].failed, 0);
+}
+
+#[test]
+fn trainer_checkpoints_hot_load_into_a_running_server() {
+    // The full hot-swap protocol: trainer writes periodic checkpoints to
+    // the store, a RUNNING server reloads the name mid-serve, and the
+    // served logits change to the refreshed weights.
+    let scratch = ScratchDir::new("hot_swap");
+    let store = AdapterStore::open(&scratch.0).unwrap();
+    let mut tr = Trainer::new(NativeEngine::new(), tiny_trainer_cfg(51)).unwrap();
+    tr.set_checkpointing(store.clone(), "live", 4).unwrap();
+    tr.train_steps(4).unwrap();
+    assert_eq!(tr.checkpoints_written, 1);
+
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) },
+        vec![store.load("live").unwrap()],
+    )
+    .unwrap();
+    let client = server.client();
+    let before = client.infer_with("live", &[2, 7, 1]).unwrap();
+
+    // Train on; the next interval boundary writes checkpoint #2.
+    tr.train_steps(8).unwrap();
+    assert!(tr.checkpoints_written >= 2);
+    server.hot_load(&store, "live").unwrap();
+    let after = client.infer_with("live", &[2, 7, 1]).unwrap();
+    assert_ne!(before.logits, after.logits, "hot-load served stale weights");
+
+    // The refreshed weights match a cold server started from the same
+    // checkpoint.
+    let cold = Server::start_with_adapters(
+        BackendSpec::Native,
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) },
+        vec![store.load("live").unwrap()],
+    )
+    .unwrap();
+    let cold_reply = cold.client().infer_with("live", &[2, 7, 1]).unwrap();
+    assert_eq!(after.logits, cold_reply.logits);
+    cold.shutdown();
+
+    let m = server.shutdown();
+    assert_eq!(m.hot_loads, 1);
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.per_adapter["live"].completed, 2);
 }
 
 #[test]
