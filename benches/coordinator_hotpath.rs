@@ -12,7 +12,7 @@
 use std::time::Duration;
 
 use dorafactors::bench::timing;
-use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::coordinator::{FastPath, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::dispatch::{self, ComposeCtx, DispatchEnv};
 use dorafactors::dora::config::{ActShape, Config, ModuleShape};
 use dorafactors::dora::mem_events;
@@ -116,7 +116,12 @@ fn main() {
     {
         let server = Server::start(
             BackendSpec::Native,
-            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(1) },
+            ServerCfg {
+                config: "tiny".into(),
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                fast_path: FastPath::Composed,
+            },
         )
         .expect("native server");
         let client = server.client();
@@ -134,7 +139,12 @@ fn main() {
         // Concurrent clients: measure how well batch-or-timeout packs.
         let server = Server::start(
             BackendSpec::Native,
-            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(20) },
+            ServerCfg {
+                config: "tiny".into(),
+                max_wait: Duration::from_millis(20),
+                workers: 1,
+                fast_path: FastPath::Composed,
+            },
         )
         .expect("native server");
         let client = server.client();
@@ -180,7 +190,12 @@ fn main() {
             .collect();
         let server = Server::start_with_adapters(
             BackendSpec::Native,
-            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(20) },
+            ServerCfg {
+                config: "tiny".into(),
+                max_wait: Duration::from_millis(20),
+                workers: 1,
+                fast_path: FastPath::Composed,
+            },
             adapters,
         )
         .expect("multi-adapter server");
@@ -212,6 +227,123 @@ fn main() {
             ),
             format!("p95 {}", fmt_secs(m.p95_us() / 1e6)),
             format!("mean occupancy {:.2}", m.mean_occupancy()),
+        ]);
+    }
+
+    // Serving pool × fast path: pool sizes {1, 2, 4} × {merged, composed}
+    // on the bench's default serving shape (the `small` config). The
+    // single-request rows isolate per-request latency (max_wait = 0, no
+    // batching window); the concurrent rows drive 2 adapters from 4
+    // clients so pool > 1 actually overlaps engine calls. Acceptance
+    // criterion checked below: merged beats composed at pool size 1.
+    let mut pool_medians: Vec<((usize, &str), f64)> = Vec::new();
+    for pool in [1usize, 2, 4] {
+        for fast_path in [FastPath::Merged, FastPath::Composed] {
+            let server = Server::start(
+                BackendSpec::Native,
+                ServerCfg {
+                    config: "small".into(),
+                    max_wait: Duration::ZERO,
+                    workers: pool,
+                    fast_path,
+                },
+            )
+            .expect("pool server");
+            let client = server.client();
+            let quick = timing::BenchCfg { warmup: 3, trials: 40, time_cap_s: 10.0 };
+            let m = timing::bench("pool serve rtt", quick, || {
+                client.infer(&[1, 2, 3, 4]).unwrap();
+            });
+            drop(client);
+            let sm = server.shutdown();
+            assert_eq!(sm.fast_path, fast_path.as_str(), "requested path not effective");
+            if fast_path == FastPath::Merged {
+                assert!(sm.merged_batches > 0, "merged path never executed");
+            } else {
+                assert_eq!(sm.merged_batches, 0);
+            }
+            pool_medians.push(((pool, fast_path.as_str()), m.median_s));
+            t.row(vec![
+                format!("native pool serve (small, pool={pool}, path={})", sm.fast_path),
+                fmt_secs(m.median_s),
+                format!("{:.0} req/s", 1.0 / m.median_s),
+            ]);
+        }
+    }
+    let median_of = |pool: usize, path: &str| -> f64 {
+        pool_medians
+            .iter()
+            .find(|((p, fp), _)| *p == pool && *fp == path)
+            .map(|(_, v)| *v)
+            .expect("pool median recorded")
+    };
+    let (merged1, composed1) = (median_of(1, "merged"), median_of(1, "composed"));
+    assert!(
+        merged1 < composed1,
+        "merged fast path not faster at pool=1: merged {merged1:.3e}s vs composed {composed1:.3e}s"
+    );
+    t.row(vec![
+        "merged speedup at pool=1".into(),
+        format!("{:.2}x", composed1 / merged1),
+        "merged vs composed per-request".into(),
+    ]);
+
+    // Pool scaling under concurrent multi-adapter load: 4 clients × 2
+    // adapters hammering the pool (merged path), per pool size.
+    for pool in [1usize, 2, 4] {
+        let be = ExecBackend::native();
+        let info = be.config("small").expect("small config");
+        let adapters: Vec<Adapter> = (0..2)
+            .map(|i| {
+                let init = be
+                    .init(InitReq { config: "small".into(), seed: 100 + i as i32 })
+                    .expect("init");
+                Adapter::new(format!("pool-adapter-{i}"), &info, i as u64, 0, init.params)
+                    .expect("adapter")
+            })
+            .collect();
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            ServerCfg {
+                config: "small".into(),
+                max_wait: Duration::from_millis(2),
+                workers: pool,
+                fast_path: FastPath::Merged,
+            },
+            adapters,
+        )
+        .expect("pool server");
+        let client = server.client();
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|cid| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for i in 0..16usize {
+                        let adapter = format!("pool-adapter-{}", (cid + i) % 2);
+                        c.infer_with(&adapter, &[cid as i32 + 1, 2, 3]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 64, "completed {}", m.completed);
+        assert_eq!(
+            m.per_worker.iter().map(|w| w.batches).sum::<u64>(),
+            m.batches,
+            "per-worker batches don't sum"
+        );
+        t.row(vec![
+            format!(
+                "native pool serve concurrent (small, pool={pool}, 2 adapters, {} engine calls)",
+                m.batches
+            ),
+            format!("{:.0} req/s", m.completed as f64 / wall),
+            format!("p95 {}", fmt_secs(m.p95_us() / 1e6)),
         ]);
     }
 

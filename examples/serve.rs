@@ -11,6 +11,7 @@
 //! Run with:
 //!   cargo run --release --example serve -- \
 //!       [--config small] [--train-steps 20] [--clients 8] [--requests 64] \
+//!       [--workers 0 (= all cores)] [--fast-path merged|composed] \
 //!       [--store DIR]
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,7 +19,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use dorafactors::coordinator::data::MarkovCorpus;
-use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::coordinator::{FastPath, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, InitReq};
 use dorafactors::util::Args;
 
@@ -28,6 +29,8 @@ fn main() -> Result<()> {
     let train_steps = args.get_usize("train-steps", 20);
     let n_clients = args.get_usize("clients", 8);
     let n_requests = args.get_usize("requests", 64);
+    let workers = args.get_usize("workers", 0);
+    let fast_path = FastPath::parse(args.get_or("fast-path", "merged"))?;
     let store_dir = args
         .get("store")
         .map(std::path::PathBuf::from)
@@ -72,9 +75,19 @@ fn main() -> Result<()> {
     ];
     let server = Server::start_with_adapters(
         spec,
-        ServerCfg { config: config.clone(), max_wait: Duration::from_millis(5) },
+        ServerCfg {
+            config: config.clone(),
+            max_wait: Duration::from_millis(5),
+            workers,
+            fast_path,
+        },
         adapters,
     )?;
+    println!(
+        "serving pool: {} workers, {} fast path",
+        server.metrics().workers,
+        server.fast_path().as_str()
+    );
     let client = server.client();
     let names = ["tuned", "base"];
 
@@ -124,8 +137,9 @@ fn main() -> Result<()> {
 
     let m = server.shutdown();
     println!(
-        "served {} requests in {} engine calls over {:.2} s ({} failed, {} hot-loads)",
-        m.completed, m.batches, wall, m.failed, m.hot_loads
+        "served {} requests in {} engine calls over {:.2} s ({} failed, {} hot-loads, \
+         {} merged / {} composed batches)",
+        m.completed, m.batches, wall, m.failed, m.hot_loads, m.merged_batches, m.composed_batches
     );
     println!(
         "throughput: {:.1} req/s | latency p50 {:.1} ms, p95 {:.1} ms | mean batch occupancy {:.2}/{}",
@@ -144,6 +158,12 @@ fn main() -> Result<()> {
             am.batches,
             am.p95_us() / 1e3,
             am.mean_occupancy()
+        );
+    }
+    for (i, w) in m.per_worker.iter().enumerate() {
+        println!(
+            "  worker {:3} engine calls {:5} completed {:5} failed {:3}",
+            i, w.batches, w.completed, w.failed
         );
     }
     assert_eq!(

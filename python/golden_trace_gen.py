@@ -1,0 +1,560 @@
+#!/usr/bin/env python3
+"""Bit-exact replica of the native tiny/fused training path — the golden
+fixture generator.
+
+Reimplements, operation for operation and in the same floating-point
+rounding order, the Rust chain behind
+``Trainer::new(NativeEngine, tiny/fused) -> train_steps(52)``:
+
+* ``util::rng`` — xoshiro256++ with splitmix64 seeding, Box-Muller
+  normals (f64 ``ln``/``sqrt``/``sin``/``cos`` through the same libm).
+* ``coordinator::data::MarkovCorpus`` — structure + sampling streams.
+* ``models::forward::init_leaves`` — seeded leaves, magnitudes from the
+  factored norm.
+* ``kernels::norm::factored_norm_seq`` (f32, single chunk at the tiny
+  shape) and ``norm_cpu::magnitude_divide``.
+* ``kernels::generic::forward_dual_rows`` / ``backward_dmag_block`` /
+  ``dmag_reduce_partials`` (the FusedCpu compose path).
+* ``models::forward`` matmuls (sequential f32 accumulation, matched
+  loop order), tanh residual (glibc ``tanhf`` via ctypes — the exact
+  function ``f32::tanh`` calls), f64 log-sum-exp cross-entropy, and
+  AdamW with the ``__powisf2`` square-and-multiply bias correction.
+
+Every f32 op is rounded exactly where the Rust code rounds (NumPy f32
+arithmetic is IEEE round-to-nearest, matching rustc's non-fast-math
+codegen), and every f64 libm call goes through the same glibc the Rust
+binary links. The only caveat: running this against a DIFFERENT libc
+version than the one `cargo test` uses may drift by ULPs in
+``tanhf``/``exp``/``log`` — regenerate the fixture with
+``DORA_GOLDEN_REGEN=1 cargo test --test golden_trace`` in that case.
+
+Usage:  python3 python/golden_trace_gen.py [--check]
+Writes: rust/tests/golden/golden_trace_tiny_fused.json
+"""
+
+import ctypes
+import ctypes.util
+import json
+import math
+import os
+import sys
+
+import numpy as np
+
+F32 = np.float32
+M64 = (1 << 64) - 1
+
+_libm = ctypes.CDLL(ctypes.util.find_library("m") or "libm.so.6")
+_tanhf = _libm.tanhf
+_tanhf.restype = ctypes.c_float
+_tanhf.argtypes = [ctypes.c_float]
+
+
+def tanhf32(arr):
+    """Elementwise glibc tanhf over an f32 array (what f32::tanh calls)."""
+    flat = arr.ravel()
+    out = np.empty_like(flat)
+    for i in range(flat.shape[0]):
+        out[i] = _tanhf(ctypes.c_float(float(flat[i])))
+    return out.reshape(arr.shape)
+
+
+# --------------------------------------------------------------------------
+# util::rng — xoshiro256++ / splitmix64 / Box-Muller
+# --------------------------------------------------------------------------
+
+F64_MIN_POSITIVE = 2.2250738585072014e-308
+INV_2_53 = 1.0 / float(1 << 53)
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & M64
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.cached = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return float(self.next_u64() >> 11) * INV_2_53
+
+    def below(self, n):
+        threshold = ((1 << 64) - n) % n
+        while True:
+            x = self.next_u64()
+            m = x * n
+            lo = m & M64
+            if lo >= n or lo >= threshold:
+                return m >> 64
+
+    def normal(self):
+        if self.cached is not None:
+            v = self.cached
+            self.cached = None
+            return v
+        while True:
+            u1 = self.next_f64()
+            if u1 <= F64_MIN_POSITIVE:
+                continue
+            u2 = self.next_f64()
+            r = math.sqrt(-2.0 * math.log(u1))
+            theta = (2.0 * math.pi) * u2
+            self.cached = r * math.sin(theta)
+            return r * math.cos(theta)
+
+    def normal_vec_f32(self, n, sigma):
+        sigma = F32(sigma)
+        out = np.empty(n, dtype=F32)
+        for i in range(n):
+            out[i] = F32(F32(self.normal()) * sigma)
+        return out
+
+
+# --------------------------------------------------------------------------
+# coordinator::data::MarkovCorpus
+# --------------------------------------------------------------------------
+
+
+class MarkovCorpus:
+    def __init__(self, vocab, branching, seed):
+        structure = Rng((seed ^ 0x5EED5EED) & M64)
+        self.succ = [
+            [structure.below(vocab) for _ in range(branching)] for _ in range(vocab)
+        ]
+        self.rng = Rng(seed & M64)
+        self.vocab = vocab
+
+    def sequence(self, length):
+        out = []
+        state = self.rng.below(self.vocab)
+        for _ in range(length):
+            out.append(state)
+            s = self.succ[state]
+            state = s[self.rng.below(len(s))]
+        return out
+
+    def block(self, k, bs, length):
+        out = []
+        for _ in range(k * bs):
+            out.extend(self.sequence(length))
+        return np.asarray(out, dtype=np.int64)
+
+
+# --------------------------------------------------------------------------
+# Matmuls: sequential f32 accumulation in the Rust loop order. Each k-step
+# does one f32 multiply and one f32 add per output element, exactly like
+# the scalar loops (vectorized over the output, sequential over k).
+# --------------------------------------------------------------------------
+
+
+def matmul_nt(a, b):
+    """C[m,n] = A[m,k] @ B[n,k]^T, acc += a[i,p]*b[j,p] sequential in p."""
+    m, k = a.shape
+    n = b.shape[0]
+    c = np.zeros((m, n), dtype=F32)
+    for p in range(k):
+        c += a[:, p : p + 1] * b[:, p][None, :]
+    return c
+
+
+def matmul_nn(a, b):
+    """C[m,n] = A[m,k] @ B[k,n], i-k-j order: += a[i,kk]*b[kk,j] seq in kk."""
+    m, k = a.shape
+    n = b.shape[1]
+    c = np.zeros((m, n), dtype=F32)
+    for kk in range(k):
+        c += a[:, kk : kk + 1] * b[kk, :][None, :]
+    return c
+
+
+def matmul_tn(a, b):
+    """C[n1,n2] = A[rows,n1]^T @ B[rows,n2], += a[i,p]*b[i,q] seq in i."""
+    rows, n1 = a.shape
+    c = np.zeros((n1, b.shape[1]), dtype=F32)
+    for i in range(rows):
+        c += a[i][:, None] * b[i][None, :]
+    return c
+
+
+# --------------------------------------------------------------------------
+# kernels::norm::factored_norm_seq (f32 instantiation, single chunk — the
+# tiny shape never splits at either the u64::MAX or 256 MB budget) and
+# norm_cpu::magnitude_divide.
+# --------------------------------------------------------------------------
+
+DIVISION_EPS_F32 = F32(1e-12)
+
+
+def factored_norm(w, a, b, s):
+    """w [d_out, d_in], a [r, d_in], b [d_out, r]; s f32. One chunk."""
+    d_out, d_in = w.shape
+    r = a.shape[0]
+    s64 = float(F32(s))
+    # base_sq: f64 row accumulation (sequential in column), rounded once.
+    acc64 = np.zeros(d_out, dtype=np.float64)
+    w64 = w.astype(np.float64)
+    for t in range(d_in):
+        acc64 += w64[:, t] * w64[:, t]
+    base_sq = F32(0.0) + acc64.astype(F32)
+    # gram = A @ A^T, f32 sequential over columns.
+    gram = np.zeros((r, r), dtype=F32)
+    for t in range(d_in):
+        gram += a[:, t][:, None] * a[:, t][None, :]
+    # u_c = W @ A^T (f32 seq over columns); cross = sum(B * u_c, dim=1)
+    # (f32 seq over rank).
+    u_c = np.zeros((d_out, r), dtype=F32)
+    for t in range(d_in):
+        u_c += w[:, t : t + 1] * a[:, t][None, :]
+    cacc = np.zeros(d_out, dtype=F32)
+    for l in range(r):
+        cacc += b[:, l] * u_c[:, l]
+    cross = F32(0.0) + cacc
+    # ba_sq row: bg = B @ G (seq over rank), acc = sum(bg * B) (seq).
+    bg = np.zeros((d_out, r), dtype=F32)
+    for t in range(r):
+        bg += b[:, t : t + 1] * gram[t, :][None, :]
+    ba = np.zeros(d_out, dtype=F32)
+    for l in range(r):
+        ba += bg[:, l] * b[:, l]
+    two_s = F32(2.0 * s64)
+    s2 = F32(s64 * s64)
+    total = base_sq + two_s * cross + s2 * ba
+    return np.sqrt(np.maximum(total, F32(0.0)))
+
+
+def magnitude_divide(mag, c):
+    return mag / np.maximum(c, DIVISION_EPS_F32)
+
+
+# --------------------------------------------------------------------------
+# models::forward — init, forward/backward, AdamW
+# --------------------------------------------------------------------------
+
+VOCAB, D, N_LAYERS, SEQ, RANK, BS, CHUNK = 64, 32, 2, 16, 4, 4, 4
+SCALE = F32(2.0)
+LR = F32(1e-2)
+BETA1 = F32(0.9)
+BETA2 = F32(0.999)
+ADAM_EPS = F32(1e-8)
+WEIGHT_DECAY = F32(0.0)
+
+
+def init_leaves(seed):
+    rng = Rng((seed ^ 0x1A17) & M64)
+    sigma = F32(F32(1.0) / F32(np.sqrt(F32(D))))
+    embed = rng.normal_vec_f32(VOCAB * D, sigma).reshape(VOCAB, D)
+    frozen = [embed]
+    trainable = []
+    for _ in range(N_LAYERS):
+        w = rng.normal_vec_f32(D * D, sigma).reshape(D, D)
+        a = rng.normal_vec_f32(RANK * D, sigma).reshape(RANK, D)
+        b = np.zeros((D, RANK), dtype=F32)
+        mag = factored_norm(w, a, b, SCALE)
+        frozen.append(w)
+        trainable.extend([a, b, mag])
+    return frozen, trainable
+
+
+def layer_g(w, a, b, mag):
+    c = factored_norm(w, a, b, SCALE)
+    return magnitude_divide(mag, c), c
+
+
+def xent_forward_backward(logits, targets):
+    """f64 log-sum-exp over f32-subtracted shifts, matching the Rust loop."""
+    rows, vocab = logits.shape
+    inv = F32(F32(1.0) / F32(rows))
+    d = np.zeros((rows, vocab), dtype=F32)
+    loss = 0.0
+    for i in range(rows):
+        zrow = logits[i]
+        mx = F32(np.max(zrow))  # f32 max fold (no NaNs on this path)
+        shift32 = zrow - mx  # f32 subtraction, then widened per element
+        exps = [math.exp(float(x)) for x in shift32]
+        total = 0.0
+        for e in exps:  # sequential f64 accumulation in column order
+            total += e
+        lse = math.log(total) + float(mx)
+        t = int(targets[i])
+        loss += lse - float(zrow[t])
+        for j in range(vocab):
+            d[i, j] = F32(F32(exps[j] / total) * inv)
+        d[i, t] = F32(d[i, t] - inv)
+    return F32(loss / float(rows)), d
+
+
+def forward_backward(frozen, trainable, tokens_block):
+    """One training step's loss + grads for a [bs, seq+1] token block."""
+    block = tokens_block.reshape(BS, SEQ + 1)
+    inputs = block[:, :SEQ].reshape(-1)
+    targets = block[:, 1:].reshape(-1)
+    embed = frozen[0]
+    rows = inputs.shape[0]
+
+    h = embed[inputs].copy()
+    layers = []
+    for l in range(N_LAYERS):
+        w = frozen[1 + l]
+        a, b, mag = trainable[3 * l], trainable[3 * l + 1], trainable[3 * l + 2]
+        base = matmul_nt(h, w)
+        u = matmul_nt(h, a)
+        lora = matmul_nt(u, b)
+        g, c = layer_g(w, a, b, mag)
+        # forward_dual_rows: sl = s*l; t2 = g*sl; t3 = (g-1)*base;
+        # delta = t3 + t2; inner = sl + base.
+        sl = SCALE * lora
+        t2 = g[None, :] * sl
+        t3 = (g - F32(1.0))[None, :] * base
+        delta = t3 + t2
+        inner = sl + base
+        t = tanhf32(base + delta)
+        h_next = h + t
+        layers.append(dict(h=h, u=u, inner=inner, t=t, g=g, c=c))
+        h = h_next
+    logits = matmul_nt(h, embed)
+    loss, d_logits = xent_forward_backward(logits, targets)
+
+    # Backward.
+    dh = matmul_nn(d_logits, embed)
+    grads_rev = []
+    for l in range(N_LAYERS - 1, -1, -1):
+        tr = layers[l]
+        w = frozen[1 + l]
+        a, b = trainable[3 * l], trainable[3 * l + 1]
+        dy = dh * (F32(1.0) - tr["t"] * tr["t"])
+        # FusedCpu backward_with_dmag: 32-row blocks, f64 partials per
+        # block reduced in fixed block order.
+        sdd = SCALE * dy
+        d_lora = tr["g"][None, :] * sdd
+        d_base = (tr["g"] - F32(1.0))[None, :] * dy
+        block_rows = 32
+        n_blocks = (rows + block_rows - 1) // block_rows
+        dg64 = np.zeros(D, dtype=np.float64)
+        dy64 = dy.astype(np.float64)
+        inner64 = tr["inner"].astype(np.float64)
+        for blk in range(n_blocks):
+            part = np.zeros(D, dtype=np.float64)
+            for row in range(blk * block_rows, min((blk + 1) * block_rows, rows)):
+                part += dy64[row] * inner64[row]
+            dg64 += part
+        dg = dg64.astype(F32)
+        d_base = d_base + dy
+        dmag = dg / np.maximum(tr["c"], DIVISION_EPS_F32)
+        db = matmul_tn(d_lora, tr["u"])
+        du = matmul_nn(d_lora, b)
+        da = matmul_tn(du, tr["h"])
+        dh_w = matmul_nn(d_base, w)
+        dh_a = matmul_nn(du, a)
+        dh = dh + (dh_w + dh_a)
+        grads_rev.append([da, db, dmag])
+    grads = []
+    for layer_grads in reversed(grads_rev):
+        grads.extend(layer_grads)
+    return loss, grads
+
+
+def powi_f32(a, n):
+    """compiler-rt __powisf2: LSB-first square-and-multiply, f32 rounding."""
+    r = F32(1.0)
+    a = F32(a)
+    while True:
+        if n & 1:
+            r = F32(r * a)
+        n //= 2
+        if n == 0:
+            break
+        a = F32(a * a)
+    return r
+
+
+def adamw_step(params, m1, m2, grads, t):
+    bc1 = F32(F32(1.0) - powi_f32(BETA1, t))
+    bc2 = F32(F32(1.0) - powi_f32(BETA2, t))
+    c1 = F32(F32(1.0) - BETA1)
+    c2 = F32(F32(1.0) - BETA2)
+    for i in range(len(params)):
+        g = grads[i]
+        m1[i] = BETA1 * m1[i] + c1 * g
+        m2[i] = BETA2 * m2[i] + (c2 * g) * g
+        mhat = m1[i] / bc1
+        vhat = m2[i] / bc2
+        params[i] = params[i] - LR * (
+            mhat / (np.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * params[i]
+        )
+
+
+def run_golden(seed=7, branching=3, steps=52):
+    frozen, trainable = init_leaves(seed)
+    m1 = [np.zeros_like(t) for t in trainable]
+    m2 = [np.zeros_like(t) for t in trainable]
+    corpus = MarkovCorpus(VOCAB, branching, (seed ^ 0xDA7A) & M64)
+    # Trainer construction draws the held-out eval block FIRST.
+    _eval_tokens = corpus.block(1, BS, SEQ + 1)
+    losses = []
+    step = 0
+    while step < steps:
+        tokens = corpus.block(CHUNK, BS, SEQ + 1).reshape(CHUNK, BS * (SEQ + 1))
+        for i in range(CHUNK):
+            loss, grads = forward_backward(frozen, trainable, tokens[i])
+            adamw_step(trainable, m1, m2, grads, step + i + 1)
+            losses.append(float(loss))
+        step += CHUNK
+    return losses
+
+
+# --------------------------------------------------------------------------
+# Independent f64 shadow (loose): catches LOGIC errors in the replica —
+# the bit-exact run and a straight float64 run must track each other.
+# --------------------------------------------------------------------------
+
+
+def run_shadow_f64(seed=7, branching=3, steps=52):
+    frozen, trainable = init_leaves(seed)
+    frozen = [x.astype(np.float64) for x in frozen]
+    trainable = [x.astype(np.float64) for x in trainable]
+    m1 = [np.zeros_like(t) for t in trainable]
+    m2 = [np.zeros_like(t) for t in trainable]
+    corpus = MarkovCorpus(VOCAB, branching, (seed ^ 0xDA7A) & M64)
+    _ = corpus.block(1, BS, SEQ + 1)
+    s, lr, b1, b2, eps = 2.0, 1e-2, 0.9, 0.999, float(F32(1e-8))
+    losses = []
+    step = 0
+    while step < steps:
+        blocks = corpus.block(CHUNK, BS, SEQ + 1).reshape(CHUNK, BS, SEQ + 1)
+        for i in range(CHUNK):
+            inputs = blocks[i][:, :SEQ].reshape(-1)
+            targets = blocks[i][:, 1:].reshape(-1)
+            embed = frozen[0]
+            h = embed[inputs].copy()
+            layers = []
+            for l in range(N_LAYERS):
+                w = frozen[1 + l]
+                a, b, mag = (
+                    trainable[3 * l],
+                    trainable[3 * l + 1],
+                    trainable[3 * l + 2],
+                )
+                c = np.linalg.norm(w + s * (b @ a), axis=1)
+                g = mag / np.maximum(c, 1e-12)
+                base = h @ w.T
+                u = h @ a.T
+                lora = u @ b.T
+                inner = s * lora + base
+                y = g[None, :] * inner
+                t = np.tanh(y)
+                layers.append((h, u, inner, t, g, c))
+                h = h + t
+            logits = h @ embed.T
+            zs = logits - logits.max(axis=1, keepdims=True)
+            ez = np.exp(zs)
+            p = ez / ez.sum(axis=1, keepdims=True)
+            n = targets.shape[0]
+            loss = float(
+                np.mean(np.log(ez.sum(axis=1)) - zs[np.arange(n), targets])
+            )
+            d = p.copy()
+            d[np.arange(n), targets] -= 1.0
+            d /= n
+            dh = d @ embed
+            grads_rev = []
+            for l in range(N_LAYERS - 1, -1, -1):
+                h_in, u, inner, t, g, c = layers[l]
+                w = frozen[1 + l]
+                a, b = trainable[3 * l], trainable[3 * l + 1]
+                dy = dh * (1.0 - t * t)
+                dg = (dy * inner).sum(axis=0)
+                d_inner = dy * g[None, :]
+                d_lora = s * d_inner
+                d_base = d_inner - dy  # (g-1)*dy == g*dy - dy
+                d_base = d_base + dy  # + skip term => g*dy
+                dmag = dg / np.maximum(c, 1e-12)
+                db = d_lora.T @ u
+                du = d_lora @ b
+                da = du.T @ h_in
+                dh = dh + d_base @ w + du @ a
+                grads_rev.append([da, db, dmag])
+            grads = []
+            for lg in reversed(grads_rev):
+                grads.extend(lg)
+            tstep = step + i + 1
+            for j in range(len(trainable)):
+                gj = grads[j]
+                m1[j] = b1 * m1[j] + (1 - b1) * gj
+                m2[j] = b2 * m2[j] + (1 - b2) * gj * gj
+                mhat = m1[j] / (1 - b1**tstep)
+                vhat = m2[j] / (1 - b2**tstep)
+                trainable[j] = trainable[j] - lr * mhat / (np.sqrt(vhat) + eps)
+            losses.append(loss)
+        step += CHUNK
+    return losses
+
+
+def main():
+    losses = run_golden()
+    print(f"bit-exact f32 run: first {losses[0]:.6f}, last {losses[-1]:.6f}")
+    assert len(losses) == 52
+    assert losses[0] > losses[-1], "no learning in the golden run"
+    # ln(64) start, entropy floor ~ln(3) target band.
+    assert 3.8 < losses[0] < 4.5, losses[0]
+
+    shadow = run_shadow_f64()
+    print(f"f64 shadow run:    first {shadow[0]:.6f}, last {shadow[-1]:.6f}")
+    worst = max(abs(a - b) for a, b in zip(losses, shadow))
+    print(f"max |f32 - f64| over 52 steps: {worst:.3e}")
+    # Pure-precision divergence stays small over 52 tiny steps; a LOGIC
+    # error in either implementation blows this up immediately.
+    assert worst < 2e-2, f"replica logic divergence: {worst}"
+
+    if "--check" in sys.argv:
+        return
+
+    out = {
+        "branching": 3,
+        "config": "tiny",
+        "losses": losses,
+        "seed": 7,
+        "tolerance": 1e-6,
+        "variant": "fused",
+    }
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust",
+        "tests",
+        "golden",
+        "golden_trace_tiny_fused.json",
+    )
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,17 +7,20 @@
 //! * `trainer` — training-run orchestration: seeded init, chunked typed
 //!   train-step execution, loss/eval tracking, periodic adapter
 //!   checkpointing, eager-vs-fused convergence comparison (paper §5.9).
-//! * `server`  — batched multi-adapter inference serving over the typed
-//!   Tier-2 infer op (batch-or-timeout policy with per-adapter request
-//!   grouping, global + per-adapter latency metrics, adapter hot-loading,
-//!   malformed-output fan-out instead of batcher panics).
+//! * `server`  — batched multi-adapter inference serving over a pool of
+//!   worker engines (batch-or-timeout policy with per-adapter request
+//!   grouping and affinity routing, a precomputed merged-weight fast
+//!   path with composed fallback, global + per-adapter + per-worker
+//!   metrics, adapter hot-loading, malformed-output fan-out instead of
+//!   batcher panics).
 
 pub mod data;
 pub mod server;
 pub mod trainer;
 
 pub use server::{
-    AdapterMetrics, Client, Reply, Server, ServerCfg, ServerMetrics, DEFAULT_ADAPTER,
+    AdapterMetrics, Client, FastPath, Reply, Server, ServerCfg, ServerMetrics, WorkerMetrics,
+    DEFAULT_ADAPTER,
 };
 pub use trainer::{StepRecord, Trainer, TrainerCfg};
 

@@ -1,32 +1,50 @@
-//! Serving coordinator: batched inference over the typed infer op
-//! (Tier-2 fused forward), hosting **many named adapters** at once.
+//! Serving coordinator: batched inference over the typed infer ops,
+//! hosting **many named adapters** across a **pool of worker engines**.
 //!
 //! vLLM-router-style shape: clients submit token prompts — optionally
 //! routed to a named adapter ([`Client::infer_with`]) — to a bounded
 //! queue; a batcher thread collects up to `batch` requests within a
 //! `max_wait` window (batch-or-timeout policy), groups them **by
-//! adapter**, pads each group into the fixed [bs, seq] shape, executes
-//! one typed [`InferReq`] per group, and fans the last-position logits
-//! back to per-request channels. Metrics record per-request latency and
-//! batch occupancy globally and per adapter, so the bench harness can
-//! sweep both the batching policy and the adapter mix.
+//! adapter**, and dispatches each group as a job to an
+//! [`EnginePool`](crate::runtime::EnginePool) worker chosen by adapter
+//! affinity — so batches for different adapters execute concurrently on
+//! different engines instead of serializing behind one engine lock. The
+//! worker pads its group into the fixed [bs, seq] shape, executes one
+//! typed infer per group, and fans the last-position logits back to
+//! per-request channels. Metrics record per-request latency and batch
+//! occupancy globally, per adapter, and per worker.
 //!
-//! Adapters live behind a shared map; [`Server::load_adapter`] /
-//! [`Server::hot_load`] swap or add a named adapter **while serving**
-//! (the hot-swap protocol: a trainer checkpoints to an
-//! [`AdapterStore`](crate::runtime::AdapterStore), the server reloads the
-//! name, in-flight batches keep the parameters they already snapshotted).
+//! Two inference paths serve a group ([`FastPath`], policy in
+//! [`ServerCfg`], effective path in [`ServerMetrics`]):
+//!
+//! * **Merged** (default): the adapter's precomputed
+//!   [`MergedParams`] — `W' = m ⊙ (W + s·B·A) / rownorm(W + s·B·A)`,
+//!   built ONCE at [`Server::load_adapter`] / [`Server::hot_load`] time
+//!   via the factored-norm kernels — turn steady-state inference into
+//!   one plain matmul per layer. Falls back per adapter to Composed when
+//!   the merge is impossible (malformed leaves) and globally when the
+//!   backend has no merged artifact (PJRT manifests).
+//! * **Composed**: the full DoRA composition per request (norm + four
+//!   kernels), exactly the Tier-2 path training validates against.
+//!
+//! Invalidation protocol: an adapter's table slot holds ONE immutable
+//! entry (`Arc<{params, merged}>`) — the merged weights are built before
+//! the slot swap, and [`Server::load_adapter`] replaces the whole entry
+//! atomically under the table lock. A group job snapshots the entry once,
+//! so it either serves the old parameters+merge or the new
+//! parameters+merge, never a torn mix; in-flight batches keep the
+//! snapshot they already took.
 //!
 //! The server runs over any [`BackendSpec`]: PJRT over an artifacts
 //! directory, the native kernel-registry engine, or a scripted mock.
-//! Engines are reconnected *inside* the batcher thread (PJRT clients are
+//! Pool workers reconnect the spec on their own threads (PJRT clients are
 //! not `Send`); everything fallible is validated synchronously on a probe
-//! connection first, so startup fails fast instead of leaving clients to
-//! time out against a dead thread.
+//! connection plus the pool's startup handshake, so startup fails fast
+//! instead of leaving clients to time out against a dead thread.
 //!
-//! Robustness contract: the batcher never panics on malformed engine
+//! Robustness contract: a worker never panics on malformed engine
 //! output — a bad group fans an `Err` to each of its requests and the
-//! loop keeps serving; and no metrics mutex is ever `unwrap()`ed, so a
+//! pool keeps serving; and no metrics mutex is ever `unwrap()`ed, so a
 //! panicking worker cannot poison later `metrics()` calls into panics.
 
 use std::collections::BTreeMap;
@@ -37,13 +55,45 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::ops::{AdapterParams, InferReq, InitReq, Variant};
-use crate::runtime::{Adapter, AdapterStore, BackendSpec, ConfigInfo, ExecBackend, Tensor};
+use crate::models::forward;
+use crate::runtime::ops::{AdapterParams, InferMergedReq, InferReq, InitReq, MergedParams, Variant};
+use crate::runtime::{
+    Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, Tensor,
+};
 use crate::util::lock_unpoisoned;
 
 /// The adapter name single-adapter entrypoints register under, and the
 /// route [`Client::infer`] takes when the caller names no adapter.
 pub const DEFAULT_ADAPTER: &str = "default";
+
+/// Which inference path serves steady-state requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FastPath {
+    /// Precomputed merged weights (one matmul per layer). Per-adapter
+    /// best-effort: adapters whose merge fails serve Composed, and
+    /// backends without the merged artifact serve Composed globally.
+    #[default]
+    Merged,
+    /// The full DoRA composition on every request.
+    Composed,
+}
+
+impl FastPath {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FastPath::Merged => "merged",
+            FastPath::Composed => "composed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FastPath> {
+        match s {
+            "merged" => Ok(FastPath::Merged),
+            "composed" => Ok(FastPath::Composed),
+            other => bail!("fast path must be merged|composed, got {other:?}"),
+        }
+    }
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -52,11 +102,23 @@ pub struct ServerCfg {
     pub config: String,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
+    /// Worker engines in the serving pool. 0 = auto: available
+    /// parallelism, capped at the number of initially loaded adapters
+    /// (affinity routing can't use more workers than adapters).
+    pub workers: usize,
+    /// Requested inference fast path (the effective path is recorded in
+    /// [`ServerMetrics::fast_path`]).
+    pub fast_path: FastPath,
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        ServerCfg { config: "small".into(), max_wait: Duration::from_millis(20) }
+        ServerCfg {
+            config: "small".into(),
+            max_wait: Duration::from_millis(20),
+            workers: 0,
+            fast_path: FastPath::Merged,
+        }
     }
 }
 
@@ -91,6 +153,10 @@ pub struct AdapterMetrics {
     pub failed: u64,
     /// Engine calls executed for this adapter.
     pub batches: u64,
+    /// Engine calls served from the merged fast path.
+    pub merged_batches: u64,
+    /// Engine calls served from the composed path.
+    pub composed_batches: u64,
     pub latencies_us: Vec<f64>,
     pub occupancies: Vec<f64>,
 }
@@ -109,22 +175,44 @@ impl AdapterMetrics {
     }
 }
 
-/// Aggregated serving metrics (global plus per-adapter).
+/// Per-worker serving counters (indexed by pool worker).
+#[derive(Debug, Default, Clone)]
+pub struct WorkerMetrics {
+    /// Engine calls this worker executed.
+    pub batches: u64,
+    pub completed: u64,
+    pub failed: u64,
+}
+
+/// Aggregated serving metrics (global plus per-adapter and per-worker).
 #[derive(Debug, Default, Clone)]
 pub struct ServerMetrics {
     pub completed: u64,
     /// Requests answered with an error (engine failure, malformed engine
-    /// output, or unknown adapter). The batcher stays up; this counts
-    /// what it shed.
+    /// output, or unknown adapter). The pool stays up; this counts what
+    /// it shed.
     pub failed: u64,
     /// Engine calls executed (one per adapter group per collected batch).
     pub batches: u64,
+    /// Engine calls served from the merged fast path.
+    pub merged_batches: u64,
+    /// Engine calls served from the composed path.
+    pub composed_batches: u64,
     pub latencies_us: Vec<f64>,
     pub occupancies: Vec<f64>,
     /// Per-adapter breakdown of the same counters.
     pub per_adapter: BTreeMap<String, AdapterMetrics>,
+    /// Per-worker breakdown (length = pool size).
+    pub per_worker: Vec<WorkerMetrics>,
     /// Adapters loaded or replaced while the server was running.
     pub hot_loads: u64,
+    /// Adapters that requested the merged path but fell back to composed
+    /// (merge failed on their leaves).
+    pub merge_fallbacks: u64,
+    /// Worker engines in the serving pool.
+    pub workers: usize,
+    /// Effective fast path ("merged" / "composed").
+    pub fast_path: String,
     /// Compose backend the kernel registry selects for this config's
     /// inference shape (Tier-2 path), recorded at startup.
     pub compose_backend: String,
@@ -146,10 +234,19 @@ impl ServerMetrics {
     }
 }
 
-/// The shared adapter table: name -> parameter snapshot. Slots hold
-/// `Arc`s so the batcher snapshots a group's parameters with two
-/// refcount bumps, never a deep copy under the lock.
-type SharedAdapters = Arc<Mutex<BTreeMap<String, Arc<AdapterParams>>>>;
+/// One adapter's serving state: the parameter snapshot plus (when the
+/// merged fast path is active and the merge succeeded) the precomputed
+/// merged weights. Immutable once built — hot-loads swap the whole entry.
+struct AdapterEntry {
+    params: Arc<AdapterParams>,
+    merged: Option<Arc<MergedParams>>,
+}
+
+/// The shared adapter table: name -> entry snapshot. Slots hold `Arc`s so
+/// a worker snapshots a group's entry with one refcount bump, never a
+/// deep copy under the lock — and a concurrent hot-load can never expose
+/// a half-updated (torn) parameter/merge pair.
+type SharedAdapters = Arc<Mutex<BTreeMap<String, Arc<AdapterEntry>>>>;
 
 /// Handle for submitting requests; cheap to clone across client threads.
 #[derive(Clone)]
@@ -175,7 +272,7 @@ impl Client {
         if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
             bail!("token {t} outside vocab 0..{}", self.vocab);
         }
-        // Fail fast on an unknown adapter (the batcher re-checks, so a
+        // Fail fast on an unknown adapter (the worker re-checks, so a
         // concurrent unload between here and execution is still safe).
         if !lock_unpoisoned(&self.adapters).contains_key(adapter) {
             bail!("adapter {adapter:?} is not loaded on this server");
@@ -198,7 +295,8 @@ impl Client {
     }
 }
 
-/// The running server: owns the batcher thread and the adapter table.
+/// The running server: owns the batcher thread (which owns the engine
+/// pool) and the adapter table.
 pub struct Server {
     client_tx: Sender<Request>,
     stop: Arc<AtomicBool>,
@@ -207,6 +305,8 @@ pub struct Server {
     join: Option<std::thread::JoinHandle<()>>,
     info: ConfigInfo,
     default_adapter: String,
+    /// Effective fast path (policy after backend-support resolution).
+    fast_path: FastPath,
 }
 
 impl Server {
@@ -288,13 +388,15 @@ impl Server {
     }
 
     /// Shared startup tail: validate on `probe` (an engine already
-    /// connected from `spec`), then spawn the batcher thread, which
-    /// reconnects from `spec` on its own thread.
+    /// connected from `spec`), resolve the effective fast path, build the
+    /// adapter entries (merging up front), start the worker pool, then
+    /// spawn the batcher thread.
     ///
     /// All startup failure modes surface synchronously here: unknown
-    /// config, per-adapter parameter-count mismatch, and a
-    /// missing/uncompilable `infer_<cfg>_fused` artifact (previously the
-    /// spawned thread died silently and clients hung).
+    /// config, per-adapter parameter mismatch, a missing/uncompilable
+    /// `infer_<cfg>_fused` artifact, and a pool worker that cannot
+    /// connect (previously a spawned thread died silently and clients
+    /// hung).
     fn start_with_probe(
         spec: BackendSpec,
         probe: ExecBackend,
@@ -304,50 +406,79 @@ impl Server {
         let info = probe.config(&cfg.config)?;
         let default_adapter =
             adapters.first().map(|(n, _)| n.clone()).context("no adapters to serve")?;
-        let mut table = BTreeMap::new();
-        for (name, params) in adapters {
-            validate_adapter_params(&info, &name, &params)?;
-            if table.insert(name.clone(), Arc::new(params)).is_some() {
-                bail!("duplicate adapter name {name:?}");
-            }
-        }
         let artifact = format!("infer_{}_fused", cfg.config);
         probe
             .ensure_artifact(&artifact)
             .with_context(|| format!("validating serving artifact {artifact:?}"))?;
+        // The merged policy engages only when the backend implements the
+        // merged artifact (native and mock do; PJRT manifests don't).
+        let fast_path = match cfg.fast_path {
+            FastPath::Merged
+                if probe
+                    .ensure_artifact(&format!("infer_merged_{}", cfg.config))
+                    .is_ok() =>
+            {
+                FastPath::Merged
+            }
+            _ => FastPath::Composed,
+        };
         drop(probe);
+
+        let mut merge_fallbacks = 0u64;
+        let mut table = BTreeMap::new();
+        for (name, params) in adapters {
+            validate_adapter_params(&info, &name, &params)?;
+            let entry = build_entry(&info, &name, params, fast_path, &mut merge_fallbacks);
+            if table.insert(name.clone(), Arc::new(entry)).is_some() {
+                bail!("duplicate adapter name {name:?}");
+            }
+        }
+
+        // The worker pool connects one engine per worker on its own
+        // threads; a connect failure fails startup here, synchronously.
+        // Auto sizing (workers = 0) caps at the initially loaded adapter
+        // count: affinity routing can never use more workers than
+        // adapters, so extra engines would only sit idle (hot-loaded
+        // additional adapters share the pool; pass an explicit count to
+        // provision for them up front).
+        let workers = if cfg.workers == 0 {
+            crate::dispatch::default_threads().min(table.len().max(1))
+        } else {
+            cfg.workers
+        };
+        let pool = EnginePool::start(&spec, workers).context("starting serving pool")?;
 
         let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(ServerMetrics {
             compose_backend: super::compose_plan(&info, false).backend.name().to_string(),
             exec_backend: spec.kind_name().to_string(),
+            workers: pool.size(),
+            fast_path: fast_path.as_str().to_string(),
+            merge_fallbacks,
+            per_worker: vec![WorkerMetrics::default(); pool.size()],
             ..ServerMetrics::default()
         }));
         let adapters: SharedAdapters = Arc::new(Mutex::new(table));
 
-        let batcher = Batcher {
+        let ctx = Arc::new(GroupCtx {
             config: cfg.config.clone(),
             adapters: adapters.clone(),
             metrics: metrics.clone(),
-            stop: stop.clone(),
             bs: info.train_batch,
             seq: info.seq,
             vocab: info.vocab,
+        });
+        let batcher = Batcher {
+            ctx: ctx.clone(),
+            stop: stop.clone(),
             max_wait: cfg.max_wait,
+            pool,
         };
         let join = std::thread::spawn(move || {
-            // PJRT clients are not Send: reconnect from the spec on this
-            // thread. The probe validated everything, so a failure here
-            // is exceptional (e.g. the artifacts dir vanished) — drain
-            // requests with the cause instead of letting clients hang.
-            match spec.connect() {
-                Ok(engine) => batcher.run(engine, rx),
-                Err(e) => {
-                    let msg = format!("server backend failed to start: {e:#}");
-                    batcher.drain_with_error(rx, &msg);
-                }
-            }
+            batcher.run(rx);
+            // Dropping the batcher drops the pool: queued jobs drain and
+            // every in-flight reply is fanned before this thread exits.
         });
 
         Ok(Server {
@@ -358,6 +489,7 @@ impl Server {
             join: Some(join),
             info,
             default_adapter,
+            fast_path,
         })
     }
 
@@ -381,15 +513,28 @@ impl Server {
         &self.default_adapter
     }
 
-    /// Load or replace a named adapter **while serving**. Validates the
-    /// leaf set against the server's config; in-flight batches keep the
-    /// parameter snapshot they already took, subsequent batches see the
-    /// new weights.
+    /// The effective fast path this server resolved at startup.
+    pub fn fast_path(&self) -> FastPath {
+        self.fast_path
+    }
+
+    /// Load or replace a named adapter **while serving**. FULLY validates
+    /// the leaf set against the server's config (counts, per-leaf shapes,
+    /// dtypes — a wrong-shaped hot-load is rejected here, synchronously,
+    /// not discovered per request at the engine) and (under the merged
+    /// policy) precomputes the merged weights BEFORE the slot swap; the
+    /// table then exchanges the whole entry atomically, so in-flight
+    /// batches keep the snapshot they already took and no request can
+    /// ever see new parameters with stale merged weights (or vice versa).
     pub fn load_adapter(&self, name: &str, params: AdapterParams) -> Result<()> {
         crate::runtime::adapters::validate_name(name)?;
-        validate_adapter_params(&self.info, name, &params)?;
-        lock_unpoisoned(&self.adapters).insert(name.to_string(), Arc::new(params));
-        lock_unpoisoned(&self.metrics).hot_loads += 1;
+        params.validate(&self.info, name)?;
+        let mut fallbacks = 0u64;
+        let entry = build_entry(&self.info, name, params, self.fast_path, &mut fallbacks);
+        lock_unpoisoned(&self.adapters).insert(name.to_string(), Arc::new(entry));
+        let mut m = lock_unpoisoned(&self.metrics);
+        m.hot_loads += 1;
+        m.merge_fallbacks += fallbacks;
         Ok(())
     }
 
@@ -411,7 +556,7 @@ impl Server {
         lock_unpoisoned(&self.metrics).clone()
     }
 
-    /// Stop the batcher and join.
+    /// Stop the batcher (and its pool) and join.
     pub fn shutdown(mut self) -> ServerMetrics {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
@@ -430,7 +575,39 @@ impl Drop for Server {
     }
 }
 
-/// Leaf-count check for one adapter against the server config.
+/// Build one adapter's serving entry. The merge is best-effort under the
+/// merged policy: an adapter whose leaves cannot merge (e.g. a scripted
+/// mock's placeholder tensors) serves the composed path instead, counted
+/// in `fallbacks` — serving availability beats path preference.
+fn build_entry(
+    info: &ConfigInfo,
+    name: &str,
+    params: AdapterParams,
+    fast_path: FastPath,
+    fallbacks: &mut u64,
+) -> AdapterEntry {
+    let merged = match fast_path {
+        FastPath::Composed => None,
+        FastPath::Merged => match forward::merge_adapter_params(info, &params) {
+            Ok(m) => Some(Arc::new(m)),
+            Err(e) => {
+                eprintln!(
+                    "server: adapter {name:?}: merged fast path unavailable ({e:#}); \
+                     serving composed"
+                );
+                *fallbacks += 1;
+                None
+            }
+        },
+    };
+    AdapterEntry { params: Arc::new(params), merged }
+}
+
+/// Leaf-count check for one adapter against the server config. Startup
+/// deliberately validates counts only: scripted mock backends register
+/// placeholder leaves the engine never reads (the robustness tests rely
+/// on it). The hot-load path ([`Server::load_adapter`]) is strict — it
+/// runs the full [`AdapterParams::validate`].
 fn validate_adapter_params(info: &ConfigInfo, name: &str, params: &AdapterParams) -> Result<()> {
     if !params.matches(info) {
         bail!(
@@ -466,39 +643,29 @@ fn argmax(row: &[f32]) -> (i32, f32) {
     }
 }
 
-/// The batcher thread's state (bundled so spawning stays readable).
-struct Batcher {
+/// State a group-serving job needs, shared between the batcher and every
+/// pool worker.
+struct GroupCtx {
     config: String,
     adapters: SharedAdapters,
     metrics: Arc<Mutex<ServerMetrics>>,
-    stop: Arc<AtomicBool>,
     bs: usize,
     seq: usize,
     vocab: usize,
+}
+
+/// The batcher thread's state: collects and groups requests, then
+/// dispatches each adapter group to the pool.
+struct Batcher {
+    ctx: Arc<GroupCtx>,
+    stop: Arc<AtomicBool>,
     max_wait: Duration,
+    pool: EnginePool,
 }
 
 impl Batcher {
-    /// Reply `Err(msg)` to every request until stopped (the batcher
-    /// thread's unreachable-engine fallback: clients get the cause, not
-    /// a hang).
-    fn drain_with_error(&self, rx: Receiver<Request>, msg: &str) {
-        while !self.stop.load(Ordering::SeqCst) {
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(req) => {
-                    let mut m = lock_unpoisoned(&self.metrics);
-                    m.failed += 1;
-                    m.per_adapter.entry(req.adapter.clone()).or_default().failed += 1;
-                    drop(m);
-                    let _ = req.reply.send(Err(anyhow::anyhow!(msg.to_string())));
-                }
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-    }
-
-    fn run(&self, engine: ExecBackend, rx: Receiver<Request>) {
+    fn run(&self, rx: Receiver<Request>) {
+        let bs = self.ctx.bs;
         while !self.stop.load(Ordering::SeqCst) {
             // Collect up to `bs` requests, waiting at most `max_wait`
             // after the first arrival (batch-or-timeout).
@@ -509,7 +676,7 @@ impl Batcher {
             };
             let mut batch = vec![first];
             let deadline = Instant::now() + self.max_wait;
-            while batch.len() < self.bs {
+            while batch.len() < bs {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -521,108 +688,161 @@ impl Batcher {
                 }
             }
 
-            // Group the collected batch by adapter: one engine call per
-            // adapter present, each against that adapter's parameters.
+            // Group the collected batch by adapter and hand each group to
+            // its affinity worker: one engine call per adapter present,
+            // groups for different adapters executing concurrently. Same
+            // adapter -> same worker -> per-adapter FIFO is preserved.
             let mut groups: BTreeMap<String, Vec<Request>> = BTreeMap::new();
             for req in batch {
                 groups.entry(req.adapter.clone()).or_default().push(req);
             }
             for (adapter, group) in groups {
-                self.serve_group(&engine, &adapter, group);
+                let ctx = self.ctx.clone();
+                let key = adapter.clone();
+                self.pool.submit(
+                    &key,
+                    Box::new(move |worker, engine| {
+                        serve_group(&ctx, engine, worker, &adapter, group);
+                    }),
+                );
             }
         }
     }
+}
 
-    /// Execute one adapter's request group as a single engine call and
-    /// fan the results (or the error) back to every request in it.
-    fn serve_group(&self, engine: &ExecBackend, adapter: &str, group: Vec<Request>) {
-        let (bs, seq, vocab) = (self.bs, self.seq, self.vocab);
-        // Snapshot the adapter's parameters (two Arc bumps under the
-        // lock; a concurrent hot-load swaps the slot without touching
-        // this snapshot).
-        let params = lock_unpoisoned(&self.adapters).get(adapter).cloned();
-        let Some(params) = params else {
-            let mut m = lock_unpoisoned(&self.metrics);
-            m.failed += group.len() as u64;
-            m.per_adapter.entry(adapter.to_string()).or_default().failed +=
-                group.len() as u64;
-            drop(m);
-            for req in group {
-                let _ = req
-                    .reply
-                    .send(Err(anyhow::anyhow!("adapter {adapter:?} is not loaded")));
-            }
-            return;
-        };
-
-        // Pad into the fixed [bs, seq] shape: left-pad each prompt with
-        // token 0, unused rows are zeros (their outputs are discarded).
-        let mut tokens = vec![0i32; bs * seq];
-        for (row, req) in group.iter().enumerate() {
-            let p = &req.prompt;
-            let start = seq - p.len();
-            tokens[row * seq + start..(row + 1) * seq].copy_from_slice(p);
+/// Execute one adapter's request group as a single engine call (merged
+/// fast path when the entry carries merged weights, composed otherwise)
+/// and fan the results (or the error) back to every request in it. Runs
+/// on a pool worker's thread.
+fn serve_group(
+    ctx: &GroupCtx,
+    engine: &ExecBackend,
+    worker: usize,
+    adapter: &str,
+    group: Vec<Request>,
+) {
+    let (bs, seq, vocab) = (ctx.bs, ctx.seq, ctx.vocab);
+    // Snapshot the adapter's entry (one Arc bump under the lock; a
+    // concurrent hot-load swaps the slot without touching this
+    // snapshot — parameters and merged weights stay consistent).
+    let entry = lock_unpoisoned(&ctx.adapters).get(adapter).cloned();
+    let Some(entry) = entry else {
+        let n = group.len() as u64;
+        let mut m = lock_unpoisoned(&ctx.metrics);
+        m.failed += n;
+        m.per_adapter.entry(adapter.to_string()).or_default().failed += n;
+        if let Some(w) = m.per_worker.get_mut(worker) {
+            w.failed += n;
         }
+        drop(m);
+        for req in group {
+            let _ = req
+                .reply
+                .send(Err(anyhow::anyhow!("adapter {adapter:?} is not loaded")));
+        }
+        return;
+    };
 
-        let occupancy = group.len();
-        // `params` is the Arc snapshot from the slot table — the request
-        // shares it, no whole-model copy on the serving hot path.
-        let result = engine.infer(InferReq {
-            config: self.config.clone(),
+    // Pad into the fixed [bs, seq] shape: left-pad each prompt with
+    // token 0, unused rows are zeros (their outputs are discarded).
+    let mut tokens = vec![0i32; bs * seq];
+    for (row, req) in group.iter().enumerate() {
+        let p = &req.prompt;
+        let start = seq - p.len();
+        tokens[row * seq + start..(row + 1) * seq].copy_from_slice(p);
+    }
+    let tokens = Tensor::i32(vec![bs, seq], tokens);
+
+    let occupancy = group.len();
+    // Fast path: the entry's precomputed merged weights, when present;
+    // the full composition otherwise. Both are Arc snapshots — no
+    // whole-model copy on the serving hot path.
+    let used_merged = entry.merged.is_some();
+    let result = match &entry.merged {
+        Some(merged) => engine.infer_merged(InferMergedReq {
+            config: ctx.config.clone(),
+            params: merged.clone(),
+            tokens,
+        }),
+        None => engine.infer(InferReq {
+            config: ctx.config.clone(),
             variant: Variant::Fused,
-            params,
-            tokens: Tensor::i32(vec![bs, seq], tokens),
-        });
+            params: entry.params.clone(),
+            tokens,
+        }),
+    };
 
-        // Fan results out first, then record metrics under ONE short
-        // lock acquisition (no per-request map lookups while holding the
-        // mutex — `metrics()` callers never wait on the reply fan-out).
-        match result {
-            Ok(resp) => {
-                // `infer` validated shape/dtype/len; indexing is safe.
-                let logits = resp.logits.as_f32().expect("validated f32 logits");
-                let mut lats_us = Vec::with_capacity(occupancy);
-                for (row, req) in group.into_iter().enumerate() {
-                    let row_logits = &logits[row * vocab..(row + 1) * vocab];
-                    let (next, logit) = argmax(row_logits);
-                    let latency = req.enqueued.elapsed();
-                    lats_us.push(latency.as_secs_f64() * 1e6);
-                    let _ = req.reply.send(Ok(Reply {
-                        next_token: next,
-                        logit,
-                        logits: row_logits.to_vec(),
-                        adapter: adapter.to_string(),
-                        latency,
-                        batch_occupancy: occupancy,
-                    }));
-                }
-                let n = lats_us.len();
-                let mut m = lock_unpoisoned(&self.metrics);
-                m.batches += 1;
-                m.completed += n as u64;
-                m.latencies_us.extend_from_slice(&lats_us);
-                m.occupancies.extend(std::iter::repeat(occupancy as f64).take(n));
-                let am = m.per_adapter.entry(adapter.to_string()).or_default();
-                am.batches += 1;
-                am.completed += n as u64;
-                am.latencies_us.extend_from_slice(&lats_us);
-                am.occupancies.extend(std::iter::repeat(occupancy as f64).take(n));
+    // Fan results out first, then record metrics under ONE short lock
+    // acquisition (no per-request map lookups while holding the mutex —
+    // `metrics()` callers never wait on the reply fan-out).
+    match result {
+        Ok(resp) => {
+            // `infer` validated shape/dtype/len; indexing is safe.
+            let logits = resp.logits.as_f32().expect("validated f32 logits");
+            let mut lats_us = Vec::with_capacity(occupancy);
+            for (row, req) in group.into_iter().enumerate() {
+                let row_logits = &logits[row * vocab..(row + 1) * vocab];
+                let (next, logit) = argmax(row_logits);
+                let latency = req.enqueued.elapsed();
+                lats_us.push(latency.as_secs_f64() * 1e6);
+                let _ = req.reply.send(Ok(Reply {
+                    next_token: next,
+                    logit,
+                    logits: row_logits.to_vec(),
+                    adapter: adapter.to_string(),
+                    latency,
+                    batch_occupancy: occupancy,
+                }));
             }
-            Err(e) => {
-                // Fan the failure to every request in the group; the
-                // batcher itself keeps serving.
-                let msg = format!("{e:#}");
-                let n = group.len() as u64;
-                for req in group {
-                    let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
-                }
-                let mut m = lock_unpoisoned(&self.metrics);
-                m.batches += 1;
-                m.failed += n;
-                let am = m.per_adapter.entry(adapter.to_string()).or_default();
-                am.batches += 1;
-                am.failed += n;
+            let n = lats_us.len();
+            let mut m = lock_unpoisoned(&ctx.metrics);
+            m.batches += 1;
+            m.completed += n as u64;
+            if used_merged {
+                m.merged_batches += 1;
+            } else {
+                m.composed_batches += 1;
             }
+            m.latencies_us.extend_from_slice(&lats_us);
+            m.occupancies.extend(std::iter::repeat(occupancy as f64).take(n));
+            if let Some(w) = m.per_worker.get_mut(worker) {
+                w.batches += 1;
+                w.completed += n as u64;
+            }
+            let am = m.per_adapter.entry(adapter.to_string()).or_default();
+            am.batches += 1;
+            am.completed += n as u64;
+            if used_merged {
+                am.merged_batches += 1;
+            } else {
+                am.composed_batches += 1;
+            }
+            am.latencies_us.extend_from_slice(&lats_us);
+            am.occupancies.extend(std::iter::repeat(occupancy as f64).take(n));
+        }
+        Err(e) => {
+            // Fan the failure to every request in the group; the pool
+            // itself keeps serving.
+            let msg = format!("{e:#}");
+            let n = group.len() as u64;
+            for req in group {
+                let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+            }
+            let mut m = lock_unpoisoned(&ctx.metrics);
+            m.batches += 1;
+            m.failed += n;
+            if used_merged {
+                m.merged_batches += 1;
+            } else {
+                m.composed_batches += 1;
+            }
+            if let Some(w) = m.per_worker.get_mut(worker) {
+                w.batches += 1;
+                w.failed += n;
+            }
+            let am = m.per_adapter.entry(adapter.to_string()).or_default();
+            am.batches += 1;
+            am.failed += n;
         }
     }
 }
@@ -639,7 +859,12 @@ mod tests {
     }
 
     fn tiny_cfg() -> ServerCfg {
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) }
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(5),
+            workers: 1,
+            fast_path: FastPath::Merged,
+        }
     }
 
     fn tiny_adapter(name: &str, seed: i32) -> Adapter {
@@ -654,6 +879,7 @@ mod tests {
     #[test]
     fn native_serves_single_request() {
         let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        assert_eq!(server.fast_path(), FastPath::Merged);
         let client = server.client();
         let reply = client.infer(&[1, 2, 3, 4]).unwrap();
         assert!(reply.next_token >= 0);
@@ -666,10 +892,35 @@ mod tests {
         assert_eq!(m.failed, 0);
         assert_eq!(m.batches, 1);
         assert_eq!(m.exec_backend, "native");
-        // The per-adapter breakdown mirrors the global counters.
+        assert_eq!(m.fast_path, "merged");
+        assert_eq!(m.merged_batches, 1);
+        assert_eq!(m.composed_batches, 0);
+        assert_eq!(m.merge_fallbacks, 0);
+        assert_eq!(m.workers, 1);
+        // The per-adapter and per-worker breakdowns mirror the globals.
         let am = &m.per_adapter[DEFAULT_ADAPTER];
         assert_eq!(am.completed, 1);
         assert_eq!(am.batches, 1);
+        assert_eq!(am.merged_batches, 1);
+        assert_eq!(m.per_worker.len(), 1);
+        assert_eq!(m.per_worker[0].batches, 1);
+        assert_eq!(m.per_worker[0].completed, 1);
+    }
+
+    #[test]
+    fn native_composed_policy_serves_identically_shaped_replies() {
+        let server = Server::start(
+            BackendSpec::Native,
+            ServerCfg { fast_path: FastPath::Composed, ..tiny_cfg() },
+        )
+        .unwrap();
+        assert_eq!(server.fast_path(), FastPath::Composed);
+        let reply = server.client().infer(&[1, 2, 3]).unwrap();
+        assert_eq!(reply.logits.len(), 64);
+        let m = server.shutdown();
+        assert_eq!(m.fast_path, "composed");
+        assert_eq!(m.composed_batches, 1);
+        assert_eq!(m.merged_batches, 0);
     }
 
     #[test]
@@ -678,7 +929,7 @@ mod tests {
         // concurrent clients, batching packs >1 request per engine call.
         let server = Server::start(
             BackendSpec::Native,
-            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(200) },
+            ServerCfg { max_wait: Duration::from_millis(200), ..tiny_cfg() },
         )
         .unwrap();
         let client = server.client();
@@ -717,7 +968,37 @@ mod tests {
         let a = client.infer(&[5, 6, 7]).unwrap();
         let b = client.infer(&[5, 6, 7]).unwrap();
         assert_eq!(a.next_token, b.next_token);
+        assert_eq!(a.logits, b.logits);
         drop(server);
+    }
+
+    #[test]
+    fn merged_and_composed_paths_agree_on_logits() {
+        // The fast-path parity contract at the server level: identical
+        // adapter, identical prompt, the two policies' logits agree to
+        // 1e-5 (they differ only by float reassociation in the merge).
+        let adapter = tiny_adapter("parity", 3);
+        let run = |fp: FastPath| {
+            let server = Server::start_with_adapters(
+                BackendSpec::Native,
+                ServerCfg { fast_path: fp, ..tiny_cfg() },
+                vec![adapter.clone()],
+            )
+            .unwrap();
+            let reply = server.client().infer_with("parity", &[2, 4, 6, 8]).unwrap();
+            let m = server.shutdown();
+            assert_eq!(m.fast_path, fp.as_str());
+            reply
+        };
+        let merged = run(FastPath::Merged);
+        let composed = run(FastPath::Composed);
+        assert_eq!(merged.logits.len(), composed.logits.len());
+        for (i, (&m, &c)) in merged.logits.iter().zip(&composed.logits).enumerate() {
+            assert!(
+                (m - c).abs() <= 1e-5 * c.abs().max(1.0),
+                "logit {i}: merged {m} vs composed {c}"
+            );
+        }
     }
 
     #[test]
@@ -746,6 +1027,9 @@ mod tests {
         assert!(r.logit.is_finite());
         let m = server.shutdown();
         assert_eq!(m.completed, 1);
+        // Trained leaves merge cleanly: no fallback to composed.
+        assert_eq!(m.merge_fallbacks, 0);
+        assert_eq!(m.merged_batches, 1);
     }
 
     #[test]
@@ -780,6 +1064,41 @@ mod tests {
     }
 
     #[test]
+    fn pool_spreads_adapters_across_workers() {
+        // Two adapters on a 2-worker pool: per-worker metrics show both
+        // workers executed batches (affinity routing assigns first-seen
+        // adapters round-robin).
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            ServerCfg { workers: 2, ..tiny_cfg() },
+            vec![tiny_adapter("alice", 1), tiny_adapter("bob", 2)],
+        )
+        .unwrap();
+        let client = server.client();
+        for i in 0..4 {
+            client.infer_with("alice", &[i + 1]).unwrap();
+            client.infer_with("bob", &[i + 1]).unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.workers, 2);
+        assert_eq!(m.per_worker.len(), 2);
+        assert_eq!(m.completed, 8);
+        assert!(
+            m.per_worker.iter().all(|w| w.batches > 0),
+            "a worker sat idle: {:?}",
+            m.per_worker
+        );
+        assert_eq!(
+            m.per_worker.iter().map(|w| w.batches).sum::<u64>(),
+            m.batches
+        );
+        assert_eq!(
+            m.per_worker.iter().map(|w| w.completed).sum::<u64>(),
+            m.completed
+        );
+    }
+
+    #[test]
     fn hot_load_swaps_weights_while_serving() {
         let server = Server::start_with_adapters(
             BackendSpec::Native,
@@ -803,7 +1122,8 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.hot_loads, 2);
         assert_eq!(m.completed, 3);
-        // Wrong-shaped hot load is rejected (and does not count).
+        // Hot-loaded init leaves merge cleanly under the merged policy.
+        assert_eq!(m.merge_fallbacks, 0);
         assert!(m.per_adapter.contains_key("fresh"));
     }
 
@@ -815,7 +1135,19 @@ mod tests {
             .load_adapter("empty", AdapterParams::default())
             .unwrap_err();
         assert!(format!("{err:#}").contains("param count"), "{err:#}");
-        assert_eq!(server.metrics().hot_loads, 0);
+        // Right leaf COUNT but a wrong-shaped leaf: rejected synchronously
+        // (not installed, not counted as a hot load or merge fallback).
+        let mut bad = tiny_adapter("bad", 1).params;
+        let n = bad.trainable[0].elems();
+        let mut shape = bad.trainable[0].shape.clone();
+        shape.reverse(); // [r, d] -> [d, r]
+        bad.trainable[0] = Tensor::f32(shape, vec![0.0; n]);
+        let err = server.load_adapter("bad", bad).unwrap_err();
+        assert!(format!("{err:#}").contains("shape"), "{err:#}");
+        assert!(!server.adapter_names().contains(&"bad".to_string()));
+        let m = server.metrics();
+        assert_eq!(m.hot_loads, 0);
+        assert_eq!(m.merge_fallbacks, 0);
     }
 
     #[test]
@@ -858,7 +1190,9 @@ mod tests {
     fn malformed_engine_output_fans_errors_and_server_keeps_serving() {
         // The batcher-robustness criterion: a wrong-shaped output batch
         // answers every in-flight request with Err, and the NEXT batch
-        // (well-formed) succeeds — the thread survives.
+        // (well-formed) succeeds — the worker survives. The mock's
+        // placeholder params can't merge, so this also covers the
+        // per-adapter composed fallback under the merged policy.
         let info = ExecBackend::native().config("tiny").unwrap();
         let mock = MockExec::new(info.clone());
         // Batch 1: empty output vec (the old `outs[0]` panic).
@@ -902,6 +1236,10 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.per_adapter[DEFAULT_ADAPTER].failed, 3);
         assert_eq!(m.per_adapter[DEFAULT_ADAPTER].completed, 1);
+        // Placeholder leaves couldn't merge: composed fallback recorded.
+        assert_eq!(m.merge_fallbacks, 1);
+        assert_eq!(m.composed_batches, 4);
+        assert_eq!(m.merged_batches, 0);
     }
 
     #[test]
@@ -921,6 +1259,8 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.failed, 1);
         assert_eq!(m.completed, 1);
+        assert_eq!(m.per_worker[0].failed, 1);
+        assert_eq!(m.per_worker[0].completed, 1);
     }
 
     #[test]
@@ -956,6 +1296,15 @@ mod tests {
         assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), (1, -1.0));
     }
 
+    #[test]
+    fn fast_path_parse_roundtrip() {
+        for fp in [FastPath::Merged, FastPath::Composed] {
+            assert_eq!(FastPath::parse(fp.as_str()).unwrap(), fp);
+        }
+        assert!(FastPath::parse("warp").is_err());
+        assert_eq!(FastPath::default(), FastPath::Merged);
+    }
+
     // --- PJRT-gated variants (skip without `make artifacts`) ---
 
     #[test]
@@ -969,6 +1318,8 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.completed, 1);
         assert_eq!(m.batches, 1);
+        // PJRT manifests carry no merged artifact: composed effective.
+        assert_eq!(m.fast_path, "composed");
     }
 
     #[test]
@@ -976,7 +1327,7 @@ mod tests {
         let Some(dir) = artifacts() else { return };
         let server = Server::start(
             &dir,
-            ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(100) },
+            ServerCfg { max_wait: Duration::from_millis(100), ..tiny_cfg() },
         )
         .unwrap();
         let client = server.client();

@@ -468,6 +468,115 @@ mod tests {
     }
 
     #[test]
+    fn property_factored_vs_dense_norm_parity_across_dtypes() {
+        // Satellite criterion: the factored norm engines (sequential +
+        // tiled) agree with the dense-materialized baseline in f32,
+        // soft-bf16, AND fp16 under adversarial magnitudes — rows are
+        // built as W = -s·B·A + amp·noise with amp swept down to 1e-3 of
+        // the row scale, i.e. the heavy-cancellation / near-unity
+        // rescaling regime of the paper's §3.1. Because cancellation
+        // makes the OUTPUT an invalid yardstick, tolerances are relative
+        // to the row's input scale; rows without heavy cancellation get
+        // a tight relative check on top. All three engines are also held
+        // to an exact f64 reference over the same quantized inputs.
+        check("factored vs dense norm dtypes", 36, |gen| {
+            let dt = gen.pick(&[Dtype::F32, Dtype::Bf16, Dtype::F16]);
+            let d_out = gen.usize_in(3, 20);
+            let d_in = gen.usize_in(4, 96); // > 64 exercises chunking
+            let r = gen.usize_in(1, 8);
+            let m = ModuleShape::new(d_out, d_in, r);
+            let s = gen.f64_in(0.1, 2.0) as f32;
+            let global = 10f64.powf(gen.f64_in(-1.0, 1.0)) as f32;
+            let mut rng = Rng::new(4000 + gen.case as u64);
+            let a = rng.normal_vec_f32(r * d_in, 0.3 * global);
+            let b = rng.normal_vec_f32(d_out * r, 0.3);
+            let ba = crate::dora::norm_cpu::matmul(&b, &a, d_out, r, d_in);
+            let mut w = vec![0f32; d_out * d_in];
+            for i in 0..d_out {
+                let row = &ba[i * d_in..(i + 1) * d_in];
+                let rms = (row.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+                    / d_in as f64)
+                    .sqrt()
+                    .max(1e-6) as f32;
+                // Per-row cancellation severity: the residual after the
+                // -s·BA cancellation spans 3 orders of magnitude.
+                let amp = 10f64.powf(gen.f64_in(-3.0, 0.0)) as f32;
+                for j in 0..d_in {
+                    w[i * d_in + j] =
+                        -s * row[j] + amp * rms * (rng.normal() as f32);
+                }
+            }
+
+            let budget = (d_out * 64 * 4) as u64;
+            let mut t1 = AllocTracker::new();
+            let dense = EagerCpu.weight_norm(&w, &a, &b, s, m, budget, dt, &mut t1);
+            let mut t2 = AllocTracker::new();
+            let fact = FusedCpu.weight_norm(&w, &a, &b, s, m, budget, dt, &mut t2);
+            let mut t3 = AllocTracker::new();
+            let tiled = ParallelTiledCpu::with_tile(3, 2)
+                .weight_norm(&w, &a, &b, s, m, budget, dt, &mut t3);
+
+            // Exact f64 reference over the quantized inputs (both engine
+            // families read storage through the same per-load quantize).
+            let q = |v: &[f32]| -> Vec<f64> {
+                v.iter().map(|&x| dt.quantize(x) as f64).collect()
+            };
+            let (wq, aq, bq) = (q(&w), q(&a), q(&b));
+            let sq = s as f64;
+            for i in 0..d_out {
+                let mut norm_sq = 0f64;
+                let mut w_sq = 0f64;
+                let mut ba_sq = 0f64;
+                for j in 0..d_in {
+                    let mut ba_ij = 0f64;
+                    for l in 0..r {
+                        ba_ij += bq[i * r + l] * aq[l * d_in + j];
+                    }
+                    let composed = wq[i * d_in + j] + sq * ba_ij;
+                    norm_sq += composed * composed;
+                    w_sq += wq[i * d_in + j] * wq[i * d_in + j];
+                    ba_sq += ba_ij * ba_ij;
+                }
+                let reference = norm_sq.sqrt();
+                let row_scale = (w_sq.sqrt() + sq * ba_sq.sqrt()).max(1e-6);
+                // Envelope: f32 accumulation noise amplified by the sqrt
+                // near total cancellation is O(sqrt(d_in * eps)) of the
+                // input scale.
+                let envelope = 1e-2 * row_scale;
+                for (name, got) in
+                    [("dense", dense[i]), ("factored", fact[i]), ("tiled", tiled[i])]
+                {
+                    prop_assert(
+                        (got as f64 - reference).abs() <= envelope,
+                        format!(
+                            "{name} row {i} ({dt:?}, {m:?}, s={s}): {got} vs f64 {reference} \
+                             (scale {row_scale:.3e})"
+                        ),
+                    )?;
+                }
+                // No heavy cancellation -> tight relative parity between
+                // the dense baseline and the factored engines.
+                if reference > 0.3 * row_scale {
+                    prop_assert(
+                        (dense[i] as f64 - fact[i] as f64).abs() <= 3e-4 * reference,
+                        format!(
+                            "dense vs factored row {i} ({dt:?}): {} vs {}",
+                            dense[i], fact[i]
+                        ),
+                    )?;
+                }
+                // The two factored executors stay bitwise identical in
+                // every dtype (extends the existing parity suite).
+                prop_assert(
+                    fact[i].to_bits() == tiled[i].to_bits(),
+                    format!("factored seq vs tiled row {i} ({dt:?}): {} vs {}", fact[i], tiled[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn eager_norm_engine_is_the_dense_baseline() {
         // The Eager kind's NormEngine is the op-by-op dense B@A path, not
         // a relabeled factored engine: same values and tracked peak as

@@ -17,7 +17,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use dorafactors::bench::report;
-use dorafactors::coordinator::{Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::coordinator::{FastPath, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, Engine};
 use dorafactors::util::Args;
 
@@ -36,11 +36,13 @@ fn main() -> Result<()> {
                  report <id>     one of: {}\n\
                  train           --config tiny|small|e2e --variant eager|fused \
                  --steps N --seed S [--eval-every N]\n\
-                 serve-demo      --config tiny|small --requests N\n\
+                 serve-demo      --config tiny|small --requests N \
+                 [--workers N] [--fast-path merged|composed]\n\
                  adapters list   [--store DIR]\n\
                  adapters train  --adapter NAME [--config tiny] [--steps N] \
                  [--seed S] [--checkpoint-every N] [--store DIR] [--resume]\n\
-                 adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR]",
+                 adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR] \
+                 [--workers N (0 = all cores)] [--fast-path merged|composed]",
                 report::REPORT_IDS.join(" ")
             );
             std::process::exit(2);
@@ -176,14 +178,19 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
         ServerCfg {
             config: config.clone(),
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 10)),
+            workers: args.get_usize("workers", 0),
+            fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
         },
         adapters,
     )?;
     println!(
-        "serving {} adapter(s) {:?} on config {config} ({} requests round-robin)",
+        "serving {} adapter(s) {:?} on config {config} ({} requests round-robin, \
+         {} pool workers, {} fast path)",
         names.len(),
         server.adapter_names(),
-        n
+        n,
+        server.metrics().workers,
+        server.fast_path().as_str()
     );
     let client = server.client();
     let handles: Vec<_> = (0..n)
@@ -202,9 +209,12 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
     }
     let m = server.shutdown();
     println!(
-        "served {} requests in {} engine calls; p50 {:.0} us, p95 {:.0} us, exec backend {}",
+        "served {} requests in {} engine calls ({} merged / {} composed); \
+         p50 {:.0} us, p95 {:.0} us, exec backend {}",
         m.completed,
         m.batches,
+        m.merged_batches,
+        m.composed_batches,
         m.p50_us(),
         m.p95_us(),
         m.exec_backend
@@ -218,6 +228,12 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
             am.batches,
             am.p95_us(),
             am.mean_occupancy()
+        );
+    }
+    for (i, w) in m.per_worker.iter().enumerate() {
+        println!(
+            "  worker {:3} batches {:5} completed {:5} failed {:3}",
+            i, w.batches, w.completed, w.failed
         );
     }
     Ok(())
@@ -314,7 +330,12 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 16);
     let server = Server::start(
         BackendSpec::auto(),
-        ServerCfg { config, max_wait: Duration::from_millis(10) },
+        ServerCfg {
+            config,
+            max_wait: Duration::from_millis(10),
+            workers: args.get_usize("workers", 0),
+            fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
+        },
     )?;
     let client = server.client();
     let handles: Vec<_> = (0..n)
@@ -332,9 +353,11 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     }
     let m = server.shutdown();
     println!(
-        "served {} requests in {} batches; p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}, compose backend {}, exec backend {}",
+        "served {} requests in {} batches ({} workers, {} fast path); p50 {:.0} us, p95 {:.0} us, mean occupancy {:.1}, compose backend {}, exec backend {}",
         m.completed,
         m.batches,
+        m.workers,
+        m.fast_path,
         m.p50_us(),
         m.p95_us(),
         m.mean_occupancy(),

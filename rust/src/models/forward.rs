@@ -39,8 +39,9 @@ use anyhow::{bail, Result};
 use crate::dispatch::{ComposeCtx, DispatchEnv, Override, Tier};
 use crate::dora::config::{ActShape, ModuleShape};
 use crate::dora::norm_cpu::AllocTracker;
-use crate::kernels::{registry, ComposeKernel, KernelChoice, NormEngine};
+use crate::kernels::{registry, BackendKind, ComposeKernel, KernelChoice, NormEngine};
 use crate::numerics::half::Dtype;
+use crate::runtime::ops::{AdapterParams, MergedParams};
 use crate::runtime::{ConfigInfo, Tensor};
 use crate::util::rng::Rng;
 
@@ -159,6 +160,101 @@ pub fn init_leaves(info: &ConfigInfo, seed: u64) -> Leaves {
         trainable.push(Tensor::f32(vec![d], mag));
     }
     Leaves { frozen, trainable }
+}
+
+// ---------------------------------------------------------------------------
+// Merged-weight serving representation (the PEFT-style DoRA merge).
+// ---------------------------------------------------------------------------
+
+/// Build the merged serving weights for an adapter:
+/// `W'_l = m_l ⊙ (W_l + s·B_l·A_l) / rownorm(W_l + s·B_l·A_l)` per layer.
+///
+/// The row norms come from the factored-norm kernel family
+/// (`registry().norm(Fused)`) with the default chunk budget, and the
+/// magnitude division uses the same dtype epsilon as the composed path's
+/// `layer_g`. Against the FUSED composed path (the serving variant) the
+/// merged `g` is therefore **bitwise identical** and the only
+/// merged-vs-composed difference is float reassociation; against the
+/// eager path `g` additionally differs by the dense-vs-factored norm's
+/// f32 accumulation noise. Both gaps are bounded by the 1e-5 parity
+/// property tests. Degenerate rows (`rownorm → 0`) hit the same
+/// `max(c, eps)` clamp on both paths.
+pub fn merge_adapter_params(info: &ConfigInfo, params: &AdapterParams) -> Result<MergedParams> {
+    params.validate(info, &format!("merge_{}", info.name))?;
+    let d = info.d_model;
+    let r = info.rank;
+    let s = info.scale as f32;
+    let norm = registry().norm(BackendKind::Fused);
+    let eps = Dtype::F32.division_eps();
+    let budget = DispatchEnv::default().norm_chunk_bytes;
+    let mut layers = Vec::with_capacity(info.n_layers);
+    for l in 0..info.n_layers {
+        let w = params.frozen[1 + l].as_f32()?;
+        let a = params.trainable[3 * l].as_f32()?;
+        let b = params.trainable[3 * l + 1].as_f32()?;
+        let mag = params.trainable[3 * l + 2].as_f32()?;
+        let mut tracker = AllocTracker::new();
+        let c = norm.weight_norm(
+            w,
+            a,
+            b,
+            s,
+            ModuleShape::new(d, d, r),
+            budget,
+            Dtype::F32,
+            &mut tracker,
+        );
+        let g = crate::dora::norm_cpu::magnitude_divide(mag, &c, eps);
+        let ba = matmul_nn(b, a, d, r, d);
+        let mut merged = vec![0f32; d * d];
+        for j in 0..d {
+            let gj = g[j];
+            let wrow = &w[j * d..(j + 1) * d];
+            let brow = &ba[j * d..(j + 1) * d];
+            let mrow = &mut merged[j * d..(j + 1) * d];
+            for k in 0..d {
+                mrow[k] = gj * (wrow[k] + s * brow[k]);
+            }
+        }
+        layers.push(Tensor::f32(vec![d, d], merged));
+    }
+    Ok(MergedParams { embed: params.frozen[0].clone(), layers })
+}
+
+/// Merged-weight inference: last-position logits `[bs, vocab]` for a
+/// token batch `[bs, seq]`. One plain matmul + residual tanh per layer —
+/// no norm, no compose, no LoRA matmuls on the hot path.
+pub fn merged_infer_logits(
+    info: &ConfigInfo,
+    merged: &MergedParams,
+    tokens: &[i32],
+    bs: usize,
+    seq: usize,
+) -> Result<Vec<f32>> {
+    let d = info.d_model;
+    if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= info.vocab) {
+        bail!("token {t} outside vocab 0..{}", info.vocab);
+    }
+    let e = merged.embed.as_f32()?;
+    let rows = tokens.len();
+    let mut h = vec![0f32; rows * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        let row = t as usize * d;
+        h[i * d..(i + 1) * d].copy_from_slice(&e[row..row + d]);
+    }
+    for layer in &merged.layers {
+        let wp = layer.as_f32()?;
+        let y = matmul_nt(&h, wp, rows, d, d);
+        for i in 0..rows * d {
+            h[i] += y[i].tanh();
+        }
+    }
+    let mut last = vec![0f32; bs * d];
+    for row in 0..bs {
+        let src = (row * seq + seq - 1) * d;
+        last[row * d..(row + 1) * d].copy_from_slice(&h[src..src + d]);
+    }
+    Ok(matmul_nt(&last, e, bs, d, info.vocab))
 }
 
 // ---------------------------------------------------------------------------
@@ -731,6 +827,51 @@ mod tests {
                 "leaf {leaf} idx {idx}: numerical {num} vs analytic {ana}"
             );
         }
+    }
+
+    #[test]
+    fn merged_weights_match_composed_inference_on_tiny() {
+        let info = tiny_info();
+        let leaves = init_leaves(&info, 5);
+        let mut trainable = leaves.trainable.clone();
+        // Move B off zero so the merge actually folds a LoRA delta in.
+        let mut rng = Rng::new(17);
+        for l in 0..info.n_layers {
+            set_f32(&mut trainable[3 * l + 1], |b| {
+                for x in b.iter_mut() {
+                    *x = rng.normal() as f32 * 0.08;
+                }
+            });
+        }
+        let params = AdapterParams { frozen: leaves.frozen.clone(), trainable };
+        let merged = merge_adapter_params(&info, &params).unwrap();
+        assert_eq!(merged.layers.len(), info.n_layers);
+        assert_eq!(merged.layers[0].shape, vec![info.d_model, info.d_model]);
+        // The merge is deterministic (the hot-swap protocol relies on it).
+        let again = merge_adapter_params(&info, &params).unwrap();
+        for (x, y) in merged.layers.iter().zip(&again.layers) {
+            assert!(x.bitwise_eq(y));
+        }
+
+        let bs = info.train_batch;
+        let seq = info.seq;
+        let tokens: Vec<i32> = (0..bs * seq).map(|i| (i % info.vocab) as i32).collect();
+        let kernels = kernels_for(crate::runtime::ops::Variant::Fused, &info, false).unwrap();
+        let model =
+            NativeModel::new(&info, &params.frozen, &params.trainable, kernels).unwrap();
+        let composed = model.infer_logits(&tokens, bs, seq).unwrap();
+        let fast = merged_infer_logits(&info, &merged, &tokens, bs, seq).unwrap();
+        assert_eq!(fast.len(), composed.len());
+        for (i, (&c, &m)) in composed.iter().zip(&fast).enumerate() {
+            assert!(
+                (c - m).abs() <= 1e-5 * c.abs().max(1.0),
+                "logit {i}: composed {c} vs merged {m}"
+            );
+        }
+        // Bad tokens error instead of panicking.
+        assert!(merged_infer_logits(&info, &merged, &[-1], 1, 1).is_err());
+        // Malformed params error out of the merge.
+        assert!(merge_adapter_params(&info, &AdapterParams::default()).is_err());
     }
 
     #[test]

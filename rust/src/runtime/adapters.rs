@@ -39,6 +39,44 @@ const MAGIC: &[u8; 8] = b"DORACKPT";
 pub const FORMAT_VERSION: u32 = 1;
 const CKPT_EXT: &str = "ckpt";
 
+/// Typed checkpoint-integrity failure. Every structural fault a stored
+/// checkpoint can have maps to one variant, carried inside the
+/// `anyhow` chain [`AdapterStore::load`] returns — callers that need to
+/// distinguish fault classes (retry vs quarantine vs refuse) use
+/// `err.downcast_ref::<CkptError>()` instead of string-matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptError {
+    /// The file is not a DORACKPT checkpoint at all.
+    BadMagic,
+    /// A format version this build does not read.
+    WrongVersion { found: u32 },
+    /// The file ends before the declared header/payload/checksum.
+    Truncated { expected: usize, got: usize },
+    /// The FNV-1a64 over the body disagrees with the stored checksum.
+    ChecksumMismatch { stored: u64, computed: u64 },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::BadMagic => write!(f, "not a DoRA checkpoint (bad magic)"),
+            CkptError::WrongVersion { found } => write!(
+                f,
+                "checkpoint format version {found} (this build reads {FORMAT_VERSION})"
+            ),
+            CkptError::Truncated { expected, got } => {
+                write!(f, "checkpoint truncated: {got} bytes of an expected {expected}")
+            }
+            CkptError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
 /// One named adapter: identity + provenance + parameter leaves.
 #[derive(Debug, Clone)]
 pub struct Adapter {
@@ -165,14 +203,51 @@ impl Adapter {
     /// header/payload disagreement) is a contextful `Err`.
     pub fn decode(bytes: &[u8]) -> Result<Adapter> {
         let (header, payload_off) = decode_header(bytes)?;
-        if bytes.len() < payload_off + 8 {
-            bail!("checkpoint truncated: {} bytes, payload starts at {payload_off}", bytes.len());
+        // Expected total size from the header's leaf metadata — checked
+        // BEFORE the checksum so a cut-off file reports the typed
+        // truncation fault, not a checksum mismatch.
+        // Checked arithmetic throughout: the dims come from the (possibly
+        // corrupt) header, and an overflowing product must be "unreadable
+        // checkpoint", never a debug-build panic.
+        let leaf_bytes = |key: &str| -> Result<usize> {
+            let mut total = 0usize;
+            for meta in header.get(key)?.as_arr()? {
+                let bytes = meta
+                    .get("shape")?
+                    .as_shape()?
+                    .iter()
+                    .try_fold(4usize, |acc, &d| acc.checked_mul(d))
+                    .context("checkpoint header declares an impossibly large leaf")?;
+                total = total
+                    .checked_add(bytes)
+                    .context("checkpoint header declares an impossibly large payload")?;
+            }
+            Ok(total)
+        };
+        let frozen_bytes = leaf_bytes("frozen")?;
+        let trainable_bytes = leaf_bytes("trainable")?;
+        let expected = payload_off
+            .checked_add(frozen_bytes)
+            .and_then(|n| n.checked_add(trainable_bytes))
+            .and_then(|n| n.checked_add(8))
+            .context("checkpoint header declares an impossibly large payload")?;
+        if bytes.len() < expected {
+            return Err(anyhow::Error::new(CkptError::Truncated {
+                expected,
+                got: bytes.len(),
+            }));
+        }
+        if bytes.len() > expected {
+            bail!(
+                "checkpoint has {} trailing bytes after the checksum",
+                bytes.len() - expected
+            );
         }
         let body = &bytes[..bytes.len() - 8];
         let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
         let computed = fnv1a64(body);
         if stored != computed {
-            bail!("checkpoint checksum mismatch: stored {stored:#018x}, computed {computed:#018x}");
+            return Err(anyhow::Error::new(CkptError::ChecksumMismatch { stored, computed }));
         }
 
         let mut pos = payload_off;
@@ -239,21 +314,24 @@ impl Adapter {
 /// the header value and the payload offset.
 fn decode_header(bytes: &[u8]) -> Result<(Json, usize)> {
     if bytes.len() < 16 {
-        bail!("checkpoint too short ({} bytes) for the fixed header", bytes.len());
+        return Err(anyhow::Error::new(CkptError::Truncated {
+            expected: 16,
+            got: bytes.len(),
+        }));
     }
     if &bytes[..8] != MAGIC {
-        bail!("not a DoRA checkpoint (bad magic)");
+        return Err(anyhow::Error::new(CkptError::BadMagic));
     }
     let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
     if version != FORMAT_VERSION {
-        bail!("checkpoint format version {version} (this build reads {FORMAT_VERSION})");
+        return Err(anyhow::Error::new(CkptError::WrongVersion { found: version }));
     }
     let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
     if bytes.len() < 16 + hlen {
-        bail!(
-            "checkpoint truncated inside the header ({} of {hlen} header bytes)",
-            bytes.len().saturating_sub(16)
-        );
+        return Err(anyhow::Error::new(CkptError::Truncated {
+            expected: 16 + hlen,
+            got: bytes.len(),
+        }));
     }
     let text = std::str::from_utf8(&bytes[16..16 + hlen]).context("checkpoint header utf-8")?;
     let header = json::parse(text).context("parsing checkpoint header")?;
@@ -405,8 +483,23 @@ impl AdapterStore {
                 continue;
             }
             let Ok(file_bytes) = entry.metadata().map(|m| m.len()) else { continue };
-            let Ok(header_bytes) = read_header_bytes(&path, file_bytes) else { continue };
-            let Ok((header, _)) = decode_header(&header_bytes) else { continue };
+            // Unreadable/foreign entries are skipped WITH a warning, not
+            // silently and never fatally: one corrupt checkpoint must not
+            // hide the rest of the store.
+            let header_bytes = match read_header_bytes(&path, file_bytes) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("adapter store: skipping unreadable {path:?}: {e:#}");
+                    continue;
+                }
+            };
+            let header = match decode_header(&header_bytes) {
+                Ok((header, _)) => header,
+                Err(e) => {
+                    eprintln!("adapter store: skipping unreadable {path:?}: {e:#}");
+                    continue;
+                }
+            };
             let field_str = |k: &str| {
                 header.get(k).ok().and_then(|v| v.as_str().ok().map(String::from))
             };
@@ -563,6 +656,85 @@ mod tests {
         bad_version[8..12].copy_from_slice(&99u32.to_le_bytes());
         let err = Adapter::decode(&bad_version).unwrap_err();
         assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn store_load_faults_are_typed_errors_not_panics() {
+        // Satellite criterion: truncated file, corrupted checksum, and
+        // wrong-version header each yield a TYPED error from
+        // `AdapterStore::load` — distinguishable via downcast, no panic.
+        let ts = TestStore::new("faults");
+        let good = tiny_adapter("victim", 1).encode();
+        let path = ts.store.path_for("victim").unwrap();
+
+        // Truncated mid-payload (the header parses; the payload is cut).
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        let err = ts.store.load("victim").unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<CkptError>(), Some(CkptError::Truncated { .. })),
+            "{err:#}"
+        );
+
+        // Corrupted payload byte: length intact, checksum disagrees.
+        let mut corrupt = good.clone();
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0x20;
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = ts.store.load("victim").unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CkptError>(),
+                Some(CkptError::ChecksumMismatch { .. })
+            ),
+            "{err:#}"
+        );
+
+        // Wrong format version.
+        let mut versioned = good.clone();
+        versioned[8..12].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&path, &versioned).unwrap();
+        let err = ts.store.load("victim").unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<CkptError>(),
+            Some(&CkptError::WrongVersion { found: 9 }),
+            "{err:#}"
+        );
+
+        // Not a checkpoint at all.
+        std::fs::write(&path, b"PNG... definitely not a checkpoint").unwrap();
+        let err = ts.store.load("victim").unwrap_err();
+        assert_eq!(err.downcast_ref::<CkptError>(), Some(&CkptError::BadMagic), "{err:#}");
+
+        // A missing file is an IO error, not a CkptError.
+        let err = ts.store.load("never-saved").unwrap_err();
+        assert!(err.downcast_ref::<CkptError>().is_none(), "{err:#}");
+
+        // A header declaring an impossibly large leaf (usize-overflowing
+        // shape product) is an error, never a debug-build panic.
+        let huge_header = br#"{"config":"tiny","frozen":[{"dtype":"f32","shape":[1000000000000000000,1000000000000000000]}],"name":"victim","rank":4,"scale":2,"seed":"1","step":0,"trainable":[]}"#;
+        let mut huge = Vec::new();
+        huge.extend_from_slice(b"DORACKPT");
+        huge.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        huge.extend_from_slice(&(huge_header.len() as u32).to_le_bytes());
+        huge.extend_from_slice(huge_header);
+        huge.extend_from_slice(&[0u8; 8]); // bogus checksum: unreachable
+        std::fs::write(&path, &huge).unwrap();
+        let err = ts.store.load("victim").unwrap_err();
+        assert!(format!("{err:#}").contains("impossibly large"), "{err:#}");
+    }
+
+    #[test]
+    fn list_skips_unreadable_entries_and_keeps_the_rest() {
+        let ts = TestStore::new("list_faults");
+        ts.store.save(&tiny_adapter("healthy", 4)).unwrap();
+        // A file cut inside the fixed 16-byte prefix and a garbage file:
+        // both unreadable at header level -> skipped (with a warning).
+        let good = tiny_adapter("cut", 5).encode();
+        std::fs::write(ts.dir.join("cut.ckpt"), &good[..10]).unwrap();
+        std::fs::write(ts.dir.join("junk.ckpt"), b"junk").unwrap();
+        let listed = ts.store.list().unwrap();
+        assert_eq!(listed.len(), 1, "{listed:?}");
+        assert_eq!(listed[0].name, "healthy");
     }
 
     #[test]

@@ -23,7 +23,8 @@ use anyhow::{bail, Result};
 use crate::runtime::native::NativeEngine;
 use crate::runtime::ops::{
     ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq,
-    EvalResp, InferReq, InferResp, InitReq, InitResp, TrainStepReq, TrainStepResp,
+    EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, TrainStepReq,
+    TrainStepResp,
 };
 use crate::runtime::{manifest, ConfigInfo, Engine, Tensor};
 use crate::util::lock_unpoisoned;
@@ -144,6 +145,10 @@ impl ExecBackend {
                 let info = self.config(&r.config)?;
                 EngineOut::Infer(InferResp::unpack(info.train_batch, info.vocab, outs)?)
             }
+            EngineOp::InferMerged(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::Infer(InferResp::unpack(info.train_batch, info.vocab, outs)?)
+            }
             EngineOp::DoraLinear(_) => EngineOut::DoraLinear(DoraLinearResp::unpack(outs)?),
             EngineOp::Compose(_) => EngineOut::Compose(ComposeResp::unpack(outs)?),
         })
@@ -180,6 +185,15 @@ impl ExecBackend {
         match self.execute(&EngineOp::Infer(req))? {
             EngineOut::Infer(r) => Ok(r),
             other => bail!("engine returned {other:?} for an infer op"),
+        }
+    }
+
+    /// Merged-weight logits (the serving fast path). Same validated
+    /// response contract as [`ExecBackend::infer`].
+    pub fn infer_merged(&self, req: InferMergedReq) -> Result<InferResp> {
+        match self.execute(&EngineOp::InferMerged(req))? {
+            EngineOut::Infer(r) => Ok(r),
+            other => bail!("engine returned {other:?} for an infer_merged op"),
         }
     }
 
@@ -376,6 +390,7 @@ mod tests {
         assert_eq!(info.name, "tiny");
         assert!(be.config("nonexistent").is_err());
         assert!(be.ensure_artifact("infer_tiny_fused").is_ok());
+        assert!(be.ensure_artifact("infer_merged_tiny").is_ok());
         assert!(be.ensure_artifact("no_such_artifact").is_err());
         assert_eq!(be.platform(), "native-cpu");
     }

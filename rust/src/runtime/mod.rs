@@ -26,6 +26,7 @@ pub mod backend;
 pub mod manifest;
 pub mod native;
 pub mod ops;
+pub mod pool;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -33,15 +34,16 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-pub use adapters::{Adapter, AdapterStore, AdapterSummary};
+pub use adapters::{Adapter, AdapterStore, AdapterSummary, CkptError};
 pub use backend::{BackendSpec, ExecBackend, MockExec};
 pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
 pub use native::NativeEngine;
 pub use ops::{
     AdapterParams, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
-    EvalReq, EvalResp, InferReq, InferResp, InitReq, InitResp, LinearVariant, OptState,
-    TrainStepReq, TrainStepResp, Variant,
+    EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant,
+    MergedParams, OptState, TrainStepReq, TrainStepResp, Variant,
 };
+pub use pool::{EnginePool, PoolJob};
 
 /// A host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone)]

@@ -35,8 +35,8 @@ use crate::models::forward::{self, init_leaves, kernels_for, NativeModel};
 use crate::numerics::half::Dtype;
 use crate::runtime::ops::{
     AdapterParams, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
-    EvalReq, EvalResp, InferReq, InferResp, InitReq, InitResp, LinearVariant, OptState,
-    TrainStepReq, TrainStepResp, Variant,
+    EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant,
+    MergedParams, OptState, TrainStepReq, TrainStepResp, Variant,
 };
 use crate::runtime::{ConfigInfo, Tensor};
 
@@ -119,6 +119,9 @@ impl NativeEngine {
             }
             EngineOp::Eval(r) => run_eval(self.config(&r.config)?, r).map(EngineOut::Eval),
             EngineOp::Infer(r) => run_infer(self.config(&r.config)?, r).map(EngineOut::Infer),
+            EngineOp::InferMerged(r) => {
+                run_infer_merged(self.config(&r.config)?, r).map(EngineOut::Infer)
+            }
             EngineOp::DoraLinear(r) => run_dora_linear(r).map(EngineOut::DoraLinear),
             EngineOp::Compose(r) => run_compose(r).map(EngineOut::Compose),
         }
@@ -157,6 +160,11 @@ impl NativeEngine {
                     ArtifactKind::Eval(info, variant)
                 });
             }
+        }
+        // Checked before the generic infer grammar: "infer_merged_tiny"
+        // would otherwise parse as config "merged" + variant "tiny".
+        if let Some(cfg) = name.strip_prefix("infer_merged_") {
+            return Ok(ArtifactKind::InferMerged(self.config(cfg)?));
         }
         if let Some(rest) = name.strip_prefix("infer_") {
             let (cfg, variant) = rest
@@ -237,6 +245,18 @@ impl NativeEngine {
                     tokens,
                 }))
             }
+            ArtifactKind::InferMerged(info) => {
+                let nl = info.n_layers;
+                expect_inputs(name, inputs, nl + 2)?;
+                Ok(EngineOp::InferMerged(InferMergedReq {
+                    config: info.name.clone(),
+                    params: Arc::new(MergedParams {
+                        embed: inputs[0].clone(),
+                        layers: inputs[1..1 + nl].to_vec(),
+                    }),
+                    tokens: inputs[nl + 1].clone(),
+                }))
+            }
             ArtifactKind::DoraLinear(variant) => {
                 expect_inputs(name, inputs, 5)?;
                 Ok(EngineOp::DoraLinear(DoraLinearReq {
@@ -268,6 +288,7 @@ enum ArtifactKind {
     Train(&'static ConfigInfo, Variant),
     Eval(&'static ConfigInfo, Variant),
     Infer(&'static ConfigInfo, Variant),
+    InferMerged(&'static ConfigInfo),
     DoraLinear(LinearVariant),
     Compose(Variant, usize, usize),
 }
@@ -318,26 +339,26 @@ fn expect_f32(label: &str, what: &str, t: &Tensor, shape: &[usize]) -> Result<()
 }
 
 /// Validate an adapter's leaf set against the config's shapes: counts,
-/// per-leaf shape, and f32 dtype.
+/// per-leaf shape, and f32 dtype (the shared [`AdapterParams::validate`]).
 fn validate_params(info: &ConfigInfo, label: &str, params: &AdapterParams) -> Result<()> {
-    if !params.matches(info) {
+    params.validate(info, label)
+}
+
+/// Validate a merged parameter set: embedding shape, layer count, and
+/// per-layer `[d, d]` f32 weights.
+fn validate_merged(info: &ConfigInfo, label: &str, merged: &MergedParams) -> Result<()> {
+    let d = info.d_model;
+    expect_f32(label, "embed", &merged.embed, &[info.vocab, d])?;
+    if !merged.matches(info) {
         bail!(
-            "op {label:?}: param count mismatch — got {}+{}, config {} wants {}+{}",
-            params.frozen.len(),
-            params.trainable.len(),
+            "op {label:?}: merged layer count {} != config {}'s {}",
+            merged.layers.len(),
             info.name,
-            info.frozen.len(),
-            info.trainable.len()
+            info.n_layers
         );
     }
-    let d = info.d_model;
-    let r = info.rank;
-    expect_f32(label, "embed", &params.frozen[0], &[info.vocab, d])?;
-    for l in 0..info.n_layers {
-        expect_f32(label, &info.frozen[1 + l], &params.frozen[1 + l], &[d, d])?;
-        expect_f32(label, &info.trainable[3 * l], &params.trainable[3 * l], &[r, d])?;
-        expect_f32(label, &info.trainable[3 * l + 1], &params.trainable[3 * l + 1], &[d, r])?;
-        expect_f32(label, &info.trainable[3 * l + 2], &params.trainable[3 * l + 2], &[d])?;
+    for (l, layer) in merged.layers.iter().enumerate() {
+        expect_f32(label, &format!("layers.{l}.merged"), layer, &[d, d])?;
     }
     Ok(())
 }
@@ -428,6 +449,19 @@ fn run_infer(info: &'static ConfigInfo, req: &InferReq) -> Result<InferResp> {
     let kernels = kernels_for(req.variant, info, false)?;
     let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
     let logits = model.infer_logits(tokens, bs, seq)?;
+    Ok(InferResp { logits: Tensor::f32(vec![bs, info.vocab], logits) })
+}
+
+/// InferMerged: last-position logits over precomputed merged weights —
+/// the serving fast path (one matmul per layer, no norm/compose).
+fn run_infer_merged(info: &'static ConfigInfo, req: &InferMergedReq) -> Result<InferResp> {
+    let label = format!("infer_merged_{}", info.name);
+    validate_merged(info, &label, &req.params)?;
+    let bs = info.train_batch;
+    let seq = info.seq;
+    expect_shape(&label, "tokens", &req.tokens, &[bs, seq])?;
+    let tokens = req.tokens.as_i32().context("tokens must be i32")?;
+    let logits = forward::merged_infer_logits(info, &req.params, tokens, bs, seq)?;
     Ok(InferResp { logits: Tensor::f32(vec![bs, info.vocab], logits) })
 }
 
@@ -689,6 +723,8 @@ mod tests {
         assert!(!eng.supports("norm_dense_ba_1024x1024r64"));
         assert!(eng.supports("init_small"));
         assert!(eng.supports("infer_tiny_fused"));
+        assert!(eng.supports("infer_merged_tiny"));
+        assert!(!eng.supports("infer_merged_nocfg"));
         assert!(eng.supports("compose_fused_512x2048"));
         // Input-count mismatch is an error, not a panic.
         assert!(eng.run("init_tiny", &[]).is_err());
@@ -727,6 +763,72 @@ mod tests {
             }))
             .unwrap_err();
         assert!(format!("{err:#}").contains("param count"), "{err:#}");
+    }
+
+    #[test]
+    fn infer_merged_matches_composed_infer() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(2)]).unwrap();
+        let params = AdapterParams::from_flat(info, leaves).unwrap();
+        let bs = info.train_batch;
+        let tokens = Tensor::i32(
+            vec![bs, info.seq],
+            (0..bs * info.seq).map(|i| (i % info.vocab) as i32).collect(),
+        );
+        let composed = match eng
+            .execute(&EngineOp::Infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params: Arc::new(params.clone()),
+                tokens: tokens.clone(),
+            }))
+            .unwrap()
+        {
+            EngineOut::Infer(r) => r,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        let merged = crate::models::forward::merge_adapter_params(info, &params).unwrap();
+        let fast = match eng
+            .execute(&EngineOp::InferMerged(InferMergedReq {
+                config: "tiny".into(),
+                params: Arc::new(merged.clone()),
+                tokens: tokens.clone(),
+            }))
+            .unwrap()
+        {
+            EngineOut::Infer(r) => r,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        assert_eq!(fast.logits.shape, vec![bs, info.vocab]);
+        let (c, m) = (composed.logits.as_f32().unwrap(), fast.logits.as_f32().unwrap());
+        for i in 0..c.len() {
+            assert!(
+                (c[i] - m[i]).abs() <= 1e-5 * c[i].abs().max(1.0),
+                "logit {i}: composed {} vs merged {}",
+                c[i],
+                m[i]
+            );
+        }
+        // Malformed merged params error, never panic: wrong layer count...
+        let short = MergedParams { embed: merged.embed.clone(), layers: merged.layers[..1].to_vec() };
+        let err = eng
+            .execute(&EngineOp::InferMerged(InferMergedReq {
+                config: "tiny".into(),
+                params: Arc::new(short),
+                tokens: tokens.clone(),
+            }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("layer count"), "{err:#}");
+        // ...and wrong tokens shape.
+        let err = eng
+            .execute(&EngineOp::InferMerged(InferMergedReq {
+                config: "tiny".into(),
+                params: Arc::new(merged),
+                tokens: Tensor::i32(vec![1, 2], vec![0, 1]),
+            }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("shape"), "{err:#}");
     }
 
     #[test]

@@ -120,6 +120,66 @@ impl AdapterParams {
     pub fn matches(&self, info: &ConfigInfo) -> bool {
         self.frozen.len() == info.frozen.len() && self.trainable.len() == info.trainable.len()
     }
+
+    /// Full structural validation against a config: leaf counts, per-leaf
+    /// shapes, and f32 dtype. Every mismatch is an `Err` (never a panic) —
+    /// the engines and the merged-weight builder share this check.
+    pub fn validate(&self, info: &ConfigInfo, label: &str) -> Result<()> {
+        if !self.matches(info) {
+            bail!(
+                "op {label:?}: param count mismatch — got {}+{}, config {} wants {}+{}",
+                self.frozen.len(),
+                self.trainable.len(),
+                info.name,
+                info.frozen.len(),
+                info.trainable.len()
+            );
+        }
+        let check = |what: &str, t: &Tensor, shape: &[usize]| -> Result<()> {
+            if t.shape != shape {
+                bail!(
+                    "op {label:?} input {what:?}: shape {:?} != expected {shape:?}",
+                    t.shape
+                );
+            }
+            t.as_f32()
+                .with_context(|| format!("op {label:?} input {what:?}"))?;
+            Ok(())
+        };
+        let d = info.d_model;
+        let r = info.rank;
+        check("embed", &self.frozen[0], &[info.vocab, d])?;
+        for l in 0..info.n_layers {
+            check(&info.frozen[1 + l], &self.frozen[1 + l], &[d, d])?;
+            check(&info.trainable[3 * l], &self.trainable[3 * l], &[r, d])?;
+            check(&info.trainable[3 * l + 1], &self.trainable[3 * l + 1], &[d, r])?;
+            check(&info.trainable[3 * l + 2], &self.trainable[3 * l + 2], &[d])?;
+        }
+        Ok(())
+    }
+}
+
+/// A merged-weight adapter: the serving fast path's precomputed
+/// representation. Per layer, `W' = m ⊙ (W + s·B·A) / rownorm(W + s·B·A)`
+/// (the PEFT-style DoRA merge), so steady-state inference is one plain
+/// matmul per layer — no per-request norm, no compose kernel, no LoRA
+/// matmuls. Built once by the server's adapter-load path
+/// (`Server::load_adapter` / `Server::hot_load`) via the factored-norm
+/// kernels and invalidated on swap.
+#[derive(Debug, Clone)]
+pub struct MergedParams {
+    /// `[vocab, d]` embedding (shared with the source adapter — the
+    /// embedding is not adapted).
+    pub embed: Tensor,
+    /// Per-layer `[d, d]` merged projection weights, layer order.
+    pub layers: Vec<Tensor>,
+}
+
+impl MergedParams {
+    /// Layer count matches the config's?
+    pub fn matches(&self, info: &ConfigInfo) -> bool {
+        self.layers.len() == info.n_layers
+    }
 }
 
 /// AdamW optimizer state: first/second moments mirroring the trainable
@@ -271,6 +331,17 @@ impl InferResp {
     }
 }
 
+/// Merged-weight last-position logits: the serving fast path. Same
+/// output contract as [`InferReq`] (`[train_batch, vocab]` f32 logits),
+/// but the engine runs the precomputed [`MergedParams`] — one matmul per
+/// layer instead of the full DoRA composition.
+#[derive(Debug, Clone)]
+pub struct InferMergedReq {
+    pub config: String,
+    pub params: Arc<MergedParams>,
+    pub tokens: Tensor,
+}
+
 /// One DoRA-adapted linear module: `y = base + compose(base, lora, g, s)`
 /// with `g` derived from the supplied magnitude vector.
 #[derive(Debug, Clone)]
@@ -335,6 +406,7 @@ pub enum EngineOp {
     TrainStep(TrainStepReq),
     Eval(EvalReq),
     Infer(InferReq),
+    InferMerged(InferMergedReq),
     DoraLinear(DoraLinearReq),
     Compose(ComposeReq),
 }
@@ -359,6 +431,7 @@ impl EngineOp {
             EngineOp::TrainStep(r) => format!("train_{}_{}", r.config, r.variant.as_str()),
             EngineOp::Eval(r) => format!("eval_{}_{}", r.config, r.variant.as_str()),
             EngineOp::Infer(r) => format!("infer_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::InferMerged(r) => format!("infer_merged_{}", r.config),
             EngineOp::DoraLinear(r) => format!("dora_linear_{}", r.variant.as_str()),
             EngineOp::Compose(r) => {
                 if r.base.shape.len() != 2 {
@@ -412,6 +485,13 @@ impl EngineOp {
                 v.push(r.tokens.clone());
                 v
             }
+            EngineOp::InferMerged(r) => {
+                let mut v = Vec::with_capacity(r.params.layers.len() + 2);
+                v.push(r.params.embed.clone());
+                v.extend(r.params.layers.iter().cloned());
+                v.push(r.tokens.clone());
+                v
+            }
             EngineOp::DoraLinear(r) => vec![
                 r.x.clone(),
                 r.w.clone(),
@@ -430,6 +510,7 @@ impl EngineOp {
             EngineOp::TrainStep(_) => "train",
             EngineOp::Eval(_) => "eval",
             EngineOp::Infer(_) => "infer",
+            EngineOp::InferMerged(_) => "infer_merged",
             EngineOp::DoraLinear(_) => "dora_linear",
             EngineOp::Compose(_) => "compose",
         }
@@ -508,6 +589,30 @@ mod tests {
             mag: Tensor::f32(vec![1], vec![0.0]),
         });
         assert_eq!(lin.artifact_name().unwrap(), "dora_linear_dense_ba");
+    }
+
+    #[test]
+    fn infer_merged_op_renders_and_packs() {
+        let d = 4usize;
+        let merged = MergedParams {
+            embed: Tensor::f32(vec![8, d], vec![0.0; 8 * d]),
+            layers: vec![
+                Tensor::f32(vec![d, d], vec![0.0; d * d]),
+                Tensor::f32(vec![d, d], vec![0.0; d * d]),
+            ],
+        };
+        let op = EngineOp::InferMerged(InferMergedReq {
+            config: "tiny".into(),
+            params: Arc::new(merged),
+            tokens: Tensor::i32(vec![1, 3], vec![0, 1, 2]),
+        });
+        assert_eq!(op.artifact_name().unwrap(), "infer_merged_tiny");
+        assert_eq!(op.kind(), "infer_merged");
+        let packed = op.pack_inputs();
+        // embed + 2 layers + tokens.
+        assert_eq!(packed.len(), 4);
+        assert_eq!(packed[0].shape, vec![8, d]);
+        assert_eq!(packed[3].shape, vec![1, 3]);
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Sharded execution pool: N worker engines behind per-key affinity
+//! routing — the runtime substrate of the multi-worker serving path.
+//!
+//! The serving coordinator used to funnel every batch through ONE engine
+//! behind the batcher thread, so batches for different adapters
+//! serialized even though their parameter sets are independent. An
+//! [`EnginePool`] owns `n` worker threads, each with its own connected
+//! [`ExecBackend`] (engines are reconnected per thread from a
+//! [`BackendSpec`] — PJRT clients are not `Send`), and routes jobs by an
+//! affinity key:
+//!
+//! * **Affinity** — the first time a key is seen it is assigned the next
+//!   worker round-robin; afterwards the same key always routes to the
+//!   same worker. Per-key FIFO ordering is therefore preserved (the
+//!   hot-swap protocol's "in-flight batches keep their snapshot" story
+//!   needs jobs for one adapter to never race each other), while
+//!   distinct keys spread across workers and execute concurrently.
+//! * **Startup is synchronous** — every worker handshakes its engine
+//!   connection back to `start`, so a backend that cannot connect fails
+//!   the pool (and the server) immediately instead of leaving clients to
+//!   time out against a dead thread.
+//! * **Shutdown drains** — dropping the pool closes the job channels;
+//!   workers finish their queued jobs, then exit, and `Drop` joins them.
+//!   Nothing submitted before the drop is lost.
+//!
+//! Jobs are closures over `(worker_index, &ExecBackend)` so callers (the
+//! server's batcher) can fan replies and record per-worker metrics from
+//! inside the worker thread without the pool knowing about either.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{BackendSpec, ExecBackend};
+use crate::util::lock_unpoisoned;
+
+/// One unit of pool work: runs on the routed worker's thread with that
+/// worker's engine.
+pub type PoolJob = Box<dyn FnOnce(usize, &ExecBackend) + Send + 'static>;
+
+struct Worker {
+    tx: Option<Sender<PoolJob>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    executed: Arc<AtomicU64>,
+}
+
+/// A pool of worker engines with per-key affinity routing.
+pub struct EnginePool {
+    workers: Vec<Worker>,
+    /// key -> worker index; first-seen keys take the next slot
+    /// round-robin, so k keys spread over min(k, n) distinct workers.
+    routes: Mutex<HashMap<String, usize>>,
+}
+
+impl EnginePool {
+    /// Start `workers` worker engines connected from `spec`
+    /// (0 = available parallelism). Fails fast if any worker's engine
+    /// cannot connect.
+    pub fn start(spec: &BackendSpec, workers: usize) -> Result<EnginePool> {
+        let n = if workers == 0 { crate::dispatch::default_threads() } else { workers };
+        let mut pool = EnginePool { workers: Vec::with_capacity(n), routes: Mutex::new(HashMap::new()) };
+        for idx in 0..n {
+            let (tx, rx): (Sender<PoolJob>, Receiver<PoolJob>) = mpsc::channel();
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let spec = spec.clone();
+            let executed = Arc::new(AtomicU64::new(0));
+            let counter = executed.clone();
+            let join = std::thread::spawn(move || {
+                // Connect on the worker thread (PJRT clients are not
+                // Send) and report the outcome before serving.
+                let engine = match spec.connect() {
+                    Ok(engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        engine
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    // A panicking job must not kill the worker: that
+                    // would silently blackhole every key affinitized to
+                    // it. Catch, log, keep serving (shared state is
+                    // poison-tolerant: metrics go through
+                    // `lock_unpoisoned`, engines are reconnectable
+                    // values).
+                    let caught = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| job(idx, &engine)),
+                    );
+                    if caught.is_err() {
+                        eprintln!("engine pool: worker {idx} job panicked; worker keeps serving");
+                    }
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            // A partially started pool drops through `Drop` (joining the
+            // workers already spawned) when a later worker fails.
+            ready_rx
+                .recv()
+                .context("pool worker thread died during startup")?
+                .with_context(|| format!("connecting pool worker {idx}"))?;
+            pool.workers.push(Worker { tx: Some(tx), join: Some(join), executed });
+        }
+        Ok(pool)
+    }
+
+    /// Number of worker engines.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The worker index `key` routes to (assigning one on first sight).
+    pub fn route(&self, key: &str) -> usize {
+        let mut routes = lock_unpoisoned(&self.routes);
+        let next = routes.len() % self.workers.len();
+        *routes.entry(key.to_string()).or_insert(next)
+    }
+
+    /// Submit a job under an affinity key; returns the worker index it
+    /// was routed to. Jobs for the same key execute FIFO on one worker.
+    /// Workers survive panicking jobs (caught and logged), so the only
+    /// way a send can fail is a worker killed by the runtime itself; in
+    /// that last-resort case the dropped job's reply channels close and
+    /// callers observe an error rather than a hang.
+    pub fn submit(&self, key: &str, job: PoolJob) -> usize {
+        let idx = self.route(key);
+        if let Some(tx) = self.workers[idx].tx.as_ref() {
+            if tx.send(job).is_err() {
+                eprintln!("engine pool: worker {idx} is gone; dropping a job for key {key:?}");
+            }
+        }
+        idx
+    }
+
+    /// Jobs executed per worker (snapshot).
+    pub fn executed(&self) -> Vec<u64> {
+        self.workers
+            .iter()
+            .map(|w| w.executed.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Close every job channel first, then join: workers drain their
+        // queues and exit, so nothing submitted before the drop is lost.
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn affinity_is_stable_and_spreads_keys() {
+        let pool = EnginePool::start(&BackendSpec::Native, 2).unwrap();
+        assert_eq!(pool.size(), 2);
+        let a = pool.route("alice");
+        let b = pool.route("bob");
+        assert_ne!(a, b, "two first-seen keys share a worker");
+        for _ in 0..10 {
+            assert_eq!(pool.route("alice"), a);
+            assert_eq!(pool.route("bob"), b);
+        }
+        // A third key wraps around.
+        assert!(pool.route("carol") < 2);
+    }
+
+    #[test]
+    fn jobs_run_on_their_routed_worker_and_drain_on_drop() {
+        let pool = EnginePool::start(&BackendSpec::Native, 2).unwrap();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8 {
+            let key = if i % 2 == 0 { "even" } else { "odd" };
+            let want = pool.route(key);
+            let hits = hits.clone();
+            let tx = tx.clone();
+            pool.submit(
+                key,
+                Box::new(move |worker, engine| {
+                    assert_eq!(worker, want, "job ran on the wrong worker");
+                    // The worker's engine is live and serves configs.
+                    assert!(engine.config("tiny").is_ok());
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    let _ = tx.send(i);
+                }),
+            );
+        }
+        drop(tx);
+        // Drop drains: all 8 jobs complete before the pool is gone.
+        drop(pool);
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+        assert_eq!(rx.iter().count(), 8);
+    }
+
+    #[test]
+    fn executed_counters_cover_submitted_jobs() {
+        let pool = EnginePool::start(&BackendSpec::Native, 3).unwrap();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..9 {
+            let tx = tx.clone();
+            pool.submit(
+                &format!("k{}", i % 3),
+                Box::new(move |_, _| {
+                    let _ = tx.send(());
+                }),
+            );
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 9);
+        // Counters tick after each job returns; give the workers a beat.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let per_worker = pool.executed();
+            if per_worker.iter().sum::<u64>() == 9 {
+                // 3 keys round-robin onto 3 workers -> 3 jobs each.
+                assert_eq!(per_worker, vec![3, 3, 3]);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "counters never reached 9");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let pool = EnginePool::start(&BackendSpec::Native, 1).unwrap();
+        pool.submit("k", Box::new(|_, _| panic!("job bug")));
+        // The worker must survive and serve the next job for the key.
+        let (tx, rx) = mpsc::sync_channel(1);
+        pool.submit(
+            "k",
+            Box::new(move |_, engine| {
+                assert!(engine.config("tiny").is_ok());
+                let _ = tx.send(());
+            }),
+        );
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("worker died after a panicking job");
+    }
+
+    #[test]
+    fn zero_workers_means_available_parallelism() {
+        let pool = EnginePool::start(&BackendSpec::Native, 0).unwrap();
+        assert_eq!(pool.size(), crate::dispatch::default_threads());
+    }
+
+    #[test]
+    fn unconnectable_backend_fails_start_synchronously() {
+        let spec = BackendSpec::Pjrt(std::path::PathBuf::from("/nonexistent/artifacts"));
+        let err = EnginePool::start(&spec, 2).unwrap_err();
+        assert!(!format!("{err:#}").is_empty());
+    }
+}

@@ -76,7 +76,7 @@ fn native_train_then_serve_handoff_under_concurrent_load() {
 
     let server = Server::start_with_params(
         BackendSpec::Native,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(50) },
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(50), ..ServerCfg::default() },
         tr.frozen().to_vec(),
         tr.trainable().to_vec(),
     )
@@ -221,7 +221,7 @@ fn multi_adapter_server_matches_single_adapter_logits() {
     tr_b.train_steps(8).unwrap();
     let adapter_a = tr_a.to_adapter("job-a").unwrap();
     let adapter_b = tr_b.to_adapter("job-b").unwrap();
-    let cfg = || ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) };
+    let cfg = || ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() };
     let prompt = [3, 1, 4, 1, 5];
 
     // Single-adapter reference paths.
@@ -275,7 +275,7 @@ fn trainer_checkpoints_hot_load_into_a_running_server() {
 
     let server = Server::start_with_adapters(
         BackendSpec::Native,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) },
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() },
         vec![store.load("live").unwrap()],
     )
     .unwrap();
@@ -293,7 +293,7 @@ fn trainer_checkpoints_hot_load_into_a_running_server() {
     // checkpoint.
     let cold = Server::start_with_adapters(
         BackendSpec::Native,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) },
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() },
         vec![store.load("live").unwrap()],
     )
     .unwrap();
@@ -343,7 +343,7 @@ fn train_then_serve_handoff() {
 
     let server = Server::start_with_params(
         &dir,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5) },
+        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() },
         tr.frozen().to_vec(),
         tr.trainable().to_vec(),
     )

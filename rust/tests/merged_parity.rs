@@ -1,0 +1,170 @@
+//! Merged-weight vs composed-path parity: property tests over random
+//! shapes, ranks, scales, and seeds — including degenerate rows where
+//! `rownorm(W + s·B·A)` is (near) zero. Runs unconditionally on the
+//! native model (no artifact gating): the merged fast path
+//! (`W' = m ⊙ (W + s·B·A) / rownorm(W + s·B·A)`, one matmul per layer)
+//! must reproduce the full DoRA composition's logits within 1e-5 f32.
+
+use dorafactors::models::forward::{self, NativeModel};
+use dorafactors::runtime::ops::{AdapterParams, Variant};
+use dorafactors::runtime::{ConfigInfo, Tensor, TensorData};
+use dorafactors::util::prop::{check, prop_close};
+use dorafactors::util::rng::Rng;
+
+/// A synthetic config for one random property case (not one of the
+/// engine's builtins — shapes are drawn fresh per case).
+fn prop_config(
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    seq: usize,
+    rank: usize,
+    scale: f64,
+    train_batch: usize,
+) -> ConfigInfo {
+    ConfigInfo {
+        name: "prop".into(),
+        vocab,
+        d_model,
+        n_layers,
+        seq,
+        rank,
+        scale,
+        n_params: 0,
+        train_batch,
+        chunk_steps: 1,
+        frozen: forward::frozen_names(n_layers),
+        trainable: forward::trainable_names(n_layers),
+    }
+}
+
+fn set_f32(t: &mut Tensor, f: impl FnOnce(&mut Vec<f32>)) {
+    match &mut t.data {
+        TensorData::F32(v) => f(v),
+        TensorData::I32(_) => unreachable!("parameter leaves are f32"),
+    }
+}
+
+#[test]
+fn property_merged_logits_match_composed_within_1e5() {
+    check("merged == composed logits", 24, |g| {
+        let d = g.usize_in(8, 40);
+        let r = g.usize_in(1, d.min(8));
+        let vocab = g.usize_in(12, 48);
+        let seq = g.usize_in(3, 10);
+        let n_layers = g.usize_in(1, 3);
+        let bs = g.usize_in(1, 4);
+        let scale = g.f64_in(0.25, 4.0);
+        let info = prop_config(vocab, d, n_layers, seq, r, scale, bs);
+        let seed = 1000 + g.case as u64;
+        let leaves = forward::init_leaves(&info, seed);
+        let mut trainable = leaves.trainable;
+        let mut frozen = leaves.frozen;
+        // Activate every path: B off zero, magnitudes off the unity
+        // point (g != 1), per layer.
+        let mut rng = Rng::new(seed ^ 0xB0B);
+        for l in 0..n_layers {
+            set_f32(&mut trainable[3 * l + 1], |b| {
+                for x in b.iter_mut() {
+                    *x = rng.normal() as f32 * 0.15;
+                }
+            });
+            let factor = rng.range_f64(0.5, 1.5) as f32;
+            set_f32(&mut trainable[3 * l + 2], |mag| {
+                for m in mag.iter_mut() {
+                    *m *= factor;
+                }
+            });
+        }
+        // Degenerate row: W row and B row exactly zero -> rownorm 0,
+        // the magnitude division hits its eps clamp on both paths.
+        if g.bool() {
+            let j = g.usize_in(0, d - 1);
+            set_f32(&mut frozen[1], |w| {
+                w[j * d..(j + 1) * d].fill(0.0);
+            });
+            set_f32(&mut trainable[1], |b| {
+                b[j * r..(j + 1) * r].fill(0.0);
+            });
+        }
+        // Near-degenerate row: rownorm ~ 1e-18, far below the 1e-12 eps
+        // clamp, so g explodes to ~1e12 on both paths.
+        if g.bool() {
+            let j = g.usize_in(0, d - 1);
+            set_f32(&mut frozen[1], |w| {
+                for x in &mut w[j * d..(j + 1) * d] {
+                    *x *= 1e-18;
+                }
+            });
+            set_f32(&mut trainable[1], |b| {
+                for x in &mut b[j * r..(j + 1) * r] {
+                    *x *= 1e-18;
+                }
+            });
+        }
+        let params = AdapterParams { frozen, trainable };
+        let tokens: Vec<i32> =
+            (0..bs * seq).map(|_| g.usize_in(0, vocab - 1) as i32).collect();
+
+        let kernels = forward::kernels_for(Variant::Fused, &info, false)
+            .map_err(|e| format!("kernels: {e:#}"))?;
+        let model = NativeModel::new(&info, &params.frozen, &params.trainable, kernels)
+            .map_err(|e| format!("model: {e:#}"))?;
+        let composed = model
+            .infer_logits(&tokens, bs, seq)
+            .map_err(|e| format!("composed infer: {e:#}"))?;
+        let merged = forward::merge_adapter_params(&info, &params)
+            .map_err(|e| format!("merge: {e:#}"))?;
+        let fast = forward::merged_infer_logits(&info, &merged, &tokens, bs, seq)
+            .map_err(|e| format!("merged infer: {e:#}"))?;
+
+        for i in 0..bs * vocab {
+            prop_close(
+                composed[i] as f64,
+                fast[i] as f64,
+                1e-5,
+                &format!("logit {i} (d={d} r={r} layers={n_layers} scale={scale:.3})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_merged_parity_holds_for_eager_variant_too() {
+    // The merged weights are variant-independent (the merge IS the math);
+    // the eager compose path must agree with them just as well.
+    check("merged == eager-composed logits", 10, |g| {
+        let d = g.usize_in(8, 32);
+        let r = g.usize_in(1, 6);
+        let info = prop_config(16, d, 2, 6, r, g.f64_in(0.5, 3.0), 2);
+        let seed = 7000 + g.case as u64;
+        let leaves = forward::init_leaves(&info, seed);
+        let mut trainable = leaves.trainable;
+        let mut rng = Rng::new(seed ^ 0xEA6E);
+        for l in 0..2 {
+            set_f32(&mut trainable[3 * l + 1], |b| {
+                for x in b.iter_mut() {
+                    *x = rng.normal() as f32 * 0.1;
+                }
+            });
+        }
+        let params = AdapterParams { frozen: leaves.frozen, trainable };
+        let tokens: Vec<i32> = (0..2 * 6).map(|_| g.usize_in(0, 15) as i32).collect();
+        let kernels = forward::kernels_for(Variant::Eager, &info, false)
+            .map_err(|e| format!("kernels: {e:#}"))?;
+        let model = NativeModel::new(&info, &params.frozen, &params.trainable, kernels)
+            .map_err(|e| format!("model: {e:#}"))?;
+        let composed = model
+            .infer_logits(&tokens, 2, 6)
+            .map_err(|e| format!("composed infer: {e:#}"))?;
+        let merged = forward::merge_adapter_params(&info, &params)
+            .map_err(|e| format!("merge: {e:#}"))?;
+        let fast = forward::merged_infer_logits(&info, &merged, &tokens, 2, 6)
+            .map_err(|e| format!("merged infer: {e:#}"))?;
+        for i in 0..composed.len() {
+            prop_close(composed[i] as f64, fast[i] as f64, 1e-5, &format!("logit {i}"))?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,208 @@
+//! Serving-pool integration tests: multi-worker dispatch under
+//! concurrent multi-adapter load, and the merged-weight hot-swap
+//! consistency ("torn weight") guarantee. All tests run unconditionally
+//! on the native engine — no artifact gating.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dorafactors::coordinator::{FastPath, Server, ServerCfg};
+use dorafactors::runtime::ops::AdapterParams;
+use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq};
+
+fn cfg(workers: usize, fast_path: FastPath) -> ServerCfg {
+    ServerCfg {
+        config: "tiny".into(),
+        max_wait: Duration::from_millis(2),
+        workers,
+        fast_path,
+    }
+}
+
+fn tiny_adapter(name: &str, seed: i32) -> Adapter {
+    let be = ExecBackend::native();
+    let info = be.config("tiny").unwrap();
+    let init = be.init(InitReq { config: "tiny".into(), seed }).unwrap();
+    Adapter::new(name, &info, seed as u64, 0, init.params).unwrap()
+}
+
+#[test]
+fn four_clients_two_adapters_two_workers_lose_nothing() {
+    // Satellite criterion: 4 clients × 2 adapters against a pool of 2
+    // workers — no lost or duplicated replies, and the per-adapter
+    // metric counts sum to the request count.
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 12;
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        cfg(2, FastPath::Merged),
+        vec![tiny_adapter("alice", 1), tiny_adapter("bob", 2)],
+    )
+    .unwrap();
+    let client = server.client();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|cid| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut replies = Vec::with_capacity(PER_CLIENT);
+                for i in 0..PER_CLIENT {
+                    let adapter = if (cid + i) % 2 == 0 { "alice" } else { "bob" };
+                    // Unique prompt per (client, i): a duplicated or
+                    // cross-wired reply would be detectable.
+                    let prompt = [cid as i32 + 1, i as i32 % 16, 3];
+                    let reply = c.infer_with(adapter, &prompt).unwrap();
+                    assert_eq!(reply.adapter, adapter, "reply routed to the wrong adapter");
+                    assert!(reply.logit.is_finite());
+                    replies.push(reply);
+                }
+                replies
+            })
+        })
+        .collect();
+    let all: Vec<_> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    // Exactly one reply per request: nothing lost, nothing duplicated.
+    assert_eq!(all.len(), CLIENTS * PER_CLIENT);
+
+    let m = server.shutdown();
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(m.completed, total);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.workers, 2);
+    // Per-adapter counts sum to the request count (and split evenly —
+    // every client alternates).
+    let adapter_sum: u64 = m.per_adapter.values().map(|a| a.completed).sum();
+    assert_eq!(adapter_sum, total);
+    assert_eq!(m.per_adapter["alice"].completed, total / 2);
+    assert_eq!(m.per_adapter["bob"].completed, total / 2);
+    // Per-worker counts sum to the same totals, and two first-seen
+    // adapters spread over both workers.
+    assert_eq!(m.per_worker.len(), 2);
+    assert_eq!(m.per_worker.iter().map(|w| w.completed).sum::<u64>(), total);
+    assert_eq!(m.per_worker.iter().map(|w| w.batches).sum::<u64>(), m.batches);
+    assert!(
+        m.per_worker.iter().all(|w| w.batches > 0),
+        "a pool worker sat idle: {:?}",
+        m.per_worker
+    );
+    // The merged fast path actually served the traffic.
+    assert_eq!(m.fast_path, "merged");
+    assert_eq!(m.merged_batches, m.batches);
+    assert_eq!(m.merge_fallbacks, 0);
+}
+
+/// Reference logits for one parameter set through its own single-adapter
+/// server (same engine path and padding as the server under test).
+fn reference_logits(params: &AdapterParams, prompt: &[i32]) -> Vec<f32> {
+    let server = Server::start_with_params(
+        BackendSpec::Native,
+        cfg(1, FastPath::Merged),
+        params.frozen.clone(),
+        params.trainable.clone(),
+    )
+    .unwrap();
+    let reply = server.client().infer(prompt).unwrap();
+    server.shutdown();
+    reply.logits
+}
+
+#[test]
+fn hot_load_mid_traffic_never_serves_torn_merged_weights() {
+    // Satellite criterion: a hot_load under live traffic must never
+    // expose a torn merged weight. The native engine is deterministic,
+    // so every reply's logits must be bitwise one of the two adapters'
+    // reference outputs — a half-swapped parameter/merge pair would
+    // produce a third value.
+    const PROMPT: [i32; 4] = [2, 7, 1, 8];
+    let p1 = tiny_adapter("live", 1).params;
+    let p2 = tiny_adapter("live", 2).params;
+    let ref1 = reference_logits(&p1, &PROMPT);
+    let ref2 = reference_logits(&p2, &PROMPT);
+    assert_ne!(ref1, ref2, "seeds produced identical logits");
+
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        cfg(2, FastPath::Merged),
+        vec![tiny_adapter("live", 1)],
+    )
+    .unwrap();
+    let client = server.client();
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammers: Vec<_> = (0..3)
+        .map(|_| {
+            let c = client.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    seen.push(c.infer_with("live", &PROMPT).unwrap().logits);
+                }
+                seen
+            })
+        })
+        .collect();
+
+    // Swap the adapter between the two parameter sets while the hammers
+    // run; each load rebuilds the merged weights BEFORE the slot swap.
+    const SWAPS: usize = 24;
+    for i in 0..SWAPS {
+        let params = if i % 2 == 0 { p2.clone() } else { p1.clone() };
+        server.load_adapter("live", params).unwrap();
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    stop.store(true, Ordering::SeqCst);
+
+    let mut total = 0usize;
+    for h in hammers {
+        for logits in h.join().unwrap() {
+            total += 1;
+            assert!(
+                logits == ref1 || logits == ref2,
+                "torn merged weights: reply matches neither adapter's reference"
+            );
+        }
+    }
+    assert!(total > 0, "hammer threads never completed a request");
+    let m = server.shutdown();
+    assert_eq!(m.hot_loads, SWAPS as u64);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, total as u64);
+    assert_eq!(m.merge_fallbacks, 0, "every hot-load must have merged cleanly");
+}
+
+#[test]
+fn pool_of_four_serves_more_adapters_than_workers() {
+    // More adapters than workers: routing wraps around, every request is
+    // still answered by the right adapter.
+    let adapters: Vec<Adapter> =
+        (0..6).map(|i| tiny_adapter(&format!("a{i}"), i)).collect();
+    let server =
+        Server::start_with_adapters(BackendSpec::Native, cfg(4, FastPath::Merged), adapters)
+            .unwrap();
+    let client = server.client();
+    let mut expected: Vec<(String, Vec<f32>)> = Vec::new();
+    for i in 0..6 {
+        let name = format!("a{i}");
+        let reply = client.infer_with(&name, &[1, 2, 3]).unwrap();
+        assert_eq!(reply.adapter, name);
+        expected.push((name, reply.logits));
+    }
+    // Distinct adapters produce distinct logits; repeated queries
+    // reproduce them exactly (routing is stable).
+    for (name, logits) in &expected {
+        let again = client.infer_with(name, &[1, 2, 3]).unwrap();
+        assert_eq!(&again.logits, logits, "{name} logits changed across calls");
+    }
+    for i in 0..6 {
+        for j in (i + 1)..6 {
+            assert_ne!(expected[i].1, expected[j].1, "a{i} vs a{j}");
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.workers, 4);
+    assert_eq!(m.per_worker.iter().map(|w| w.batches).sum::<u64>(), m.batches);
+}

@@ -20,6 +20,10 @@ use std::fmt;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// The typed value this link was converted from (set by the blanket
+    /// `From<E: std::error::Error>` conversion), so `downcast_ref` can
+    /// recover the original error type, like real anyhow's.
+    typed: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 /// `anyhow::Result`: defaults the error type to [`Error`].
@@ -28,12 +32,38 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Construct from any displayable message.
     pub fn msg<M: fmt::Display>(msg: M) -> Error {
-        Error { msg: msg.to_string(), source: None }
+        Error { msg: msg.to_string(), source: None, typed: None }
+    }
+
+    /// Construct from a typed std error (recoverable via
+    /// [`Error::downcast_ref`]), mirroring `anyhow::Error::new`.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error::from(e)
     }
 
     /// Wrap this error as the cause of a new, higher-level message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { msg: context.to_string(), source: Some(Box::new(self)), typed: None }
+    }
+
+    /// Walk the cause chain looking for a link converted from a value of
+    /// type `E` (mirrors `anyhow::Error::downcast_ref`).
+    pub fn downcast_ref<E: fmt::Display + fmt::Debug + Send + Sync + 'static>(
+        &self,
+    ) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(t) = e.typed.as_ref().and_then(|b| b.downcast_ref::<E>()) {
+                return Some(t);
+            }
+            cur = e.source.as_deref();
+        }
+        None
+    }
+
+    /// Is any link in the cause chain a value of type `E`?
+    pub fn is<E: fmt::Display + fmt::Debug + Send + Sync + 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// The cause chain, outermost message first.
@@ -101,9 +131,13 @@ where
         }
         let mut err: Option<Error> = None;
         for msg in msgs.into_iter().rev() {
-            err = Some(Error { msg, source: err.map(Box::new) });
+            err = Some(Error { msg, source: err.map(Box::new), typed: None });
         }
-        err.expect("at least one message")
+        let mut err = err.expect("at least one message");
+        // The outermost link corresponds to `e` itself: keep the typed
+        // value there for downcast_ref.
+        err.typed = Some(Box::new(e));
+        err
     }
 }
 
@@ -203,6 +237,32 @@ mod tests {
         assert_eq!(fails(0).unwrap_err().to_string(), "zero");
         assert_eq!(fails(-2).unwrap_err().to_string(), "negative: -2");
         assert_eq!(fails(1).unwrap_err().to_string(), "missing file");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_errors_through_context() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let e: Error = Error::new(Marker(7));
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        // Survives context wrapping (downcast walks the chain).
+        let wrapped: Result<()> = Err(e);
+        let wrapped = wrapped.context("outer").unwrap_err();
+        assert_eq!(wrapped.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(wrapped.is::<Marker>());
+        // Absent types return None; message-only errors carry no type.
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_none());
+        assert!(anyhow!("plain").downcast_ref::<Marker>().is_none());
+        // `?`-converted std errors are downcastable too.
+        let io: Error = io_err().into();
+        assert!(io.is::<std::io::Error>());
     }
 
     #[test]
