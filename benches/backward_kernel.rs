@@ -16,7 +16,15 @@ fn main() {
     let mut t = Table::new(
         "compose backward (REAL CPU): eager 2-kernel vs fused dual-output \
 vs KernelAgent two-stage (fused dmag) vs parallel-tiled",
-        &["rows x d_out", "eager+dmag", "fused+dmag", "KA fused-dmag", "par-tiled", "speedup", "KA speedup"],
+        &[
+            "rows x d_out",
+            "eager+dmag",
+            "fused+dmag",
+            "KA fused-dmag",
+            "par-tiled",
+            "speedup",
+            "KA speedup",
+        ],
     );
     let mut speedups = Vec::new();
     let dt = Dtype::F32;

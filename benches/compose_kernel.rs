@@ -159,7 +159,10 @@ fn main() {
             geo >= 1.5,
             "parallel-tiled @4 threads only {geo:.2}x over fused on LLC-exceeding shapes"
         );
-        println!("parallel-tiled @4 threads: {} geomean over fused (target >= 1.50x)", fmt_speedup(geo));
+        println!(
+            "parallel-tiled @4 threads: {} geomean over fused (target >= 1.50x)",
+            fmt_speedup(geo)
+        );
     } else {
         println!(
             "(skipping parallel-backend speedup assertion: {} cores available)",

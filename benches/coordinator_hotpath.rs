@@ -96,6 +96,8 @@ fn main() {
                 seed: 0,
                 branching: 4,
                 eval_every: 0,
+                train_workers: 0,
+                grad_accum: 1,
             },
         )
         .expect("native trainer");
@@ -109,6 +111,48 @@ fn main() {
             fmt_secs(m.median_s),
             format!("{:.2} ms/step", m.median_s / chunk_steps as f64 * 1e3),
         ]);
+    }
+
+    // Data-parallel train scaling: workers {1, 2, 4} x grad-accum {1, 4}
+    // on the tiny config. Each row is one chunk (chunk_steps optimizer
+    // steps); with accum K a step processes K micro-batches, so the
+    // tokens/s column is the comparable throughput number. The reduced
+    // gradient is bitwise-identical across worker counts (the golden
+    // trace pins it), so these rows measure pure scheduling overhead vs
+    // overlap.
+    for workers in [1usize, 2, 4] {
+        for accum in [1usize, 4] {
+            let mut tr = Trainer::with_spec(
+                &BackendSpec::Native,
+                TrainerCfg {
+                    config: "tiny".into(),
+                    variant: "fused".into(),
+                    seed: 0,
+                    branching: 4,
+                    eval_every: 0,
+                    train_workers: workers,
+                    grad_accum: accum,
+                },
+            )
+            .expect("data-parallel trainer");
+            let info = tr.config_info();
+            let chunk_steps = info.chunk_steps;
+            let tokens_per_chunk = chunk_steps * accum * info.train_batch * (info.seq + 1);
+            let quick = timing::BenchCfg { warmup: 1, trials: 8, time_cap_s: 8.0 };
+            let m = timing::bench("dp train chunk", quick, || {
+                tr.run_chunk().unwrap();
+            });
+            assert!(tr.history.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+            t.row(vec![
+                format!("dp train chunk (tiny, workers={workers}, accum={accum})"),
+                fmt_secs(m.median_s),
+                format!(
+                    "{:.2} ms/step, {:.0} tok/s",
+                    m.median_s / chunk_steps as f64 * 1e3,
+                    tokens_per_chunk as f64 / m.median_s
+                ),
+            ]);
+        }
     }
 
     // Native engine: single-request serving round-trip (client -> batcher

@@ -23,7 +23,18 @@ fn main() {
     let par_engine = ParallelTiledCpu::new(4);
     let mut t = Table::new(
         "weight-norm engines (REAL CPU): latency + measured transient peak",
-        &["shape", "r", "peft", "dense", "factored", "par-tiled", "peft mem", "dense mem", "fact mem", "mem x"],
+        &[
+            "shape",
+            "r",
+            "peft",
+            "dense",
+            "factored",
+            "par-tiled",
+            "peft mem",
+            "dense mem",
+            "fact mem",
+            "mem x",
+        ],
     );
     for m in shapes::cpu_norm_shapes() {
         let mut rng = Rng::new(m.rank as u64);

@@ -10,7 +10,15 @@ use dorafactors::util::rng::Rng;
 /// Candidate A: current collect-based fused kernel (baseline).
 /// Candidate B: into-buffer (no allocation) — the coordinator's reuse path.
 /// Candidate C: into-buffer with precomputed (g-1) vector.
-fn compose_fused_pregm1(base: &[f32], lora: &[f32], g: &[f32], gm1: &[f32], s: f32, act: ActShape, out: &mut [f32]) {
+fn compose_fused_pregm1(
+    base: &[f32],
+    lora: &[f32],
+    g: &[f32],
+    gm1: &[f32],
+    s: f32,
+    act: ActShape,
+    out: &mut [f32],
+) {
     let d = act.d_out;
     for ((orow, brow), lrow) in out
         .chunks_exact_mut(d)

@@ -51,6 +51,8 @@ fn main() -> Result<()> {
                     seed,
                     branching: 4,
                     eval_every: 0,
+                    train_workers: 0,
+                    grad_accum: 1,
                 },
             )?;
             tr.train_steps(steps)?;

@@ -38,7 +38,8 @@ fn main() -> Result<()> {
     // DoRA magnitude: start from the composed row norms so g is near 1.
     let s = 16.0 / (r as f32).sqrt();
     let mut tracker = norm_cpu::AllocTracker::new();
-    let m = norm_cpu::factored_norm(&w, &a, &b, s, ModuleShape::new(d, d, r), 1 << 20, &mut tracker);
+    let m =
+        norm_cpu::factored_norm(&w, &a, &b, s, ModuleShape::new(d, d, r), 1 << 20, &mut tracker);
 
     // The typed op surface: one request struct per adapted module —
     // shapes are named fields, not positional slots.

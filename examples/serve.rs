@@ -52,6 +52,8 @@ fn main() -> Result<()> {
             seed: 7,
             branching: 4,
             eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
         },
     )?;
     let ckpt_every = (train_steps / 2).max(1);

@@ -9,20 +9,97 @@
 //! Run with:
 //!   cargo run --release --example train_e2e -- \
 //!       [--config e2e] [--steps 200] [--seed 0] [--eval-every 25]
-//!       [--variant fused] [--csv losses.csv]
+//!       [--variant fused] [--branching 4] [--csv losses.csv]
 //!       [--adapter NAME] [--checkpoint-every N] [--store DIR]
+//!       [--train-workers N] [--grad-accum K] [--golden FIXTURE.json]
 //!
 //! With `--adapter NAME` the run materializes as a named adapter:
 //! periodic checkpoints land in the store (hot-loadable by a running
 //! server) and the final parameters are saved under NAME.
+//!
+//! With `--train-workers N` gradients are computed data-parallel over an
+//! engine pool (deterministically reduced — the trace is identical for
+//! any N); `--grad-accum K` accumulates K micro-steps per optimizer
+//! update (effective batch K x train_batch). `--golden FIXTURE.json`
+//! asserts the emitted loss prefix against a committed golden trace —
+//! the CI data-parallel smoke runs exactly that.
 
 use std::fmt::Write as _;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::{AdapterStore, ExecBackend};
+use dorafactors::runtime::{AdapterStore, BackendSpec, ExecBackend};
+use dorafactors::util::json;
 use dorafactors::util::Args;
+
+/// Assert the run's loss prefix against a committed golden fixture (the
+/// fixture may hold more steps than the run emitted — the overlap must
+/// match at the fixture's tolerance, and run metadata must agree).
+fn check_golden(path: &str, cfg: &TrainerCfg, losses: &[f32]) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let fixture = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => bail!("parsing golden fixture {path}: {e:?}"),
+    };
+    for (key, got) in [
+        ("config", cfg.config.as_str()),
+        ("variant", cfg.variant.as_str()),
+    ] {
+        let want = fixture
+            .opt(key)
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .with_context(|| format!("golden fixture {path} lacks {key:?}"))?;
+        if want != got {
+            bail!("golden fixture {path} is for {key}={want}, run has {key}={got}");
+        }
+    }
+    for (key, got) in [
+        ("seed", cfg.seed as f64),
+        ("branching", cfg.branching as f64),
+        ("grad_accum", cfg.grad_accum as f64),
+    ] {
+        if let Some(want) = fixture.opt(key).and_then(|v| v.as_f64().ok()) {
+            if want != got {
+                bail!("golden fixture {path} is for {key}={want}, run has {key}={got}");
+            }
+        }
+    }
+    let tol = fixture
+        .opt("tolerance")
+        .and_then(|v| v.as_f64().ok())
+        .with_context(|| format!("golden fixture {path} lacks \"tolerance\""))?;
+    let entries = fixture
+        .opt("losses")
+        .and_then(|v| v.as_arr().ok())
+        .with_context(|| format!("golden fixture {path} lacks \"losses\""))?;
+    let mut want = Vec::with_capacity(entries.len());
+    for (i, v) in entries.iter().enumerate() {
+        // A non-numeric entry must FAIL the check, not compare as NaN
+        // (every NaN comparison is false, which would silently pass).
+        match v.as_f64() {
+            Ok(x) if x.is_finite() => want.push(x),
+            _ => bail!("golden fixture {path}: losses[{i}] is not a finite number"),
+        }
+    }
+    let n = losses.len().min(want.len());
+    if n == 0 {
+        bail!("golden fixture {path} has no overlap with the emitted losses");
+    }
+    for i in 0..n {
+        let diff = (losses[i] as f64 - want[i]).abs();
+        if diff > tol {
+            bail!(
+                "golden trace diverged at step {}: loss {} vs fixture {} (|d| = {diff:.3e} > {tol:.1e})",
+                i + 1,
+                losses[i],
+                want[i]
+            );
+        }
+    }
+    println!("golden check OK: {n} steps within {tol:.1e} of {path}");
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -30,13 +107,33 @@ fn main() -> Result<()> {
     let steps = args.get_usize("steps", 200);
     let eval_every = args.get_usize("eval-every", 25);
     let variant = args.get_or("variant", "fused").to_string();
+    let branching = args.get_usize("branching", 4);
     let csv_path = args.get("csv").map(str::to_string);
     let adapter_name = args.get("adapter").map(str::to_string);
     let ckpt_every = args.get_usize("checkpoint-every", 0);
+    let train_workers = args.get_usize("train-workers", 0);
+    let grad_accum = args.get_usize("grad-accum", 1);
+    let golden = args.get("golden").map(str::to_string);
 
-    let engine = ExecBackend::auto();
-    let info = engine.config(&config)?;
-    let tokens_per_step = info.train_batch * (info.seq + 1);
+    let cfg = TrainerCfg {
+        config,
+        variant,
+        seed: args.get_u64("seed", 0),
+        branching,
+        eval_every,
+        train_workers,
+        grad_accum,
+    };
+    // One construction path owns every engine connection: the trainer's
+    // backend (and, data-parallel, its worker pool) — no throwaway
+    // banner-only backend.
+    let mut tr = if train_workers > 0 {
+        Trainer::with_spec(&BackendSpec::auto(), cfg.clone())?
+    } else {
+        Trainer::new(ExecBackend::auto(), cfg.clone())?
+    };
+    let info = tr.config_info().clone();
+    let tokens_per_step = grad_accum * info.train_batch * (info.seq + 1);
     println!(
         "== e2e training: {} params, vocab {}, d_model {}, {} layers, r={}, variant={}, backend={} ==",
         info.n_params,
@@ -44,27 +141,18 @@ fn main() -> Result<()> {
         info.d_model,
         info.n_layers,
         info.rank,
-        variant,
-        engine.kind_name()
+        cfg.variant,
+        tr.backend_kind()
     );
     println!(
-        "{} steps x {} tokens/step = {} tokens total\n",
+        "{} steps x {} tokens/step = {} tokens total ({} gradient workers, accum {})\n",
         steps,
         tokens_per_step,
-        steps * tokens_per_step
+        steps * tokens_per_step,
+        train_workers.max(1),
+        grad_accum
     );
-
-    let mut tr = Trainer::new(
-        engine,
-        TrainerCfg {
-            config,
-            variant,
-            seed: args.get_u64("seed", 0),
-            branching: 4,
-            eval_every,
-        },
-    )?;
-    println!("corpus entropy floor: (branching 4 Markov chain)");
+    println!("corpus entropy floor: (branching {branching} Markov chain)");
 
     let store = match &adapter_name {
         Some(name) => {
@@ -129,6 +217,10 @@ fn main() -> Result<()> {
             tr.step_count(),
             tr.checkpoints_written
         );
+    }
+    if let Some(path) = &golden {
+        let losses: Vec<f32> = tr.history.iter().map(|r| r.loss).collect();
+        check_golden(path, &cfg, &losses)?;
     }
     assert!(last < first, "loss did not decrease — e2e run failed");
     println!("\ntrain_e2e OK");

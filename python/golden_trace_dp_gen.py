@@ -1,0 +1,249 @@
+#!/usr/bin/env python3
+"""Bit-exact replica of the DATA-PARALLEL native training path — the DP
+golden fixture generator, and the drift check for the per-sample gradient
+reduction against the legacy single-engine fixture.
+
+The data-parallel trainer (``Trainer`` with ``--train-workers N``) computes
+gradients at a FIXED shard granularity — one sample (sequence) — so the
+reduced result is bitwise-identical for any worker count:
+
+* each sample's f32 gradient is computed in isolation (forward rows are
+  row-local, so batching does not change them; the backward contractions
+  run over that sample's ``seq`` rows only, with the cross-entropy
+  normalization ``1/total_rows`` of the EFFECTIVE batch);
+* the ``GradReducer`` accumulates the per-sample f32 gradients in f64,
+  in global sample order, and rounds to f32 once.
+
+Worker count only changes WHICH engine computes a sample, never the
+arithmetic, so gradients are bitwise worker-count-invariant. Relative to
+the legacy full-batch path the f32 contraction chains are split at sample
+boundaries and recombined in f64 — a few-ULP change this script bounds
+over the golden 52-step run (must stay well inside the fixture's 1e-6).
+
+This script:
+
+1. re-runs the legacy replica (``golden_trace_gen.run_golden``) and the
+   DP replica (accum=1) and reports the max loss drift vs the committed
+   ``golden_trace_tiny_fused.json`` — both must be <= 1e-6;
+2. writes ``golden_trace_tiny_fused_dp.json``: the seed-7, branching-3,
+   tiny/fused trace with ``grad_accum = 2`` (effective batch 8) that the
+   CI data-parallel smoke and ``tests/golden_trace.rs`` assert against.
+
+Usage:  python3 python/golden_trace_dp_gen.py [--check]
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import golden_trace_gen as gt
+
+F32 = np.float32
+M64 = (1 << 64) - 1
+
+VOCAB, D, N_LAYERS, SEQ, RANK, BS, CHUNK = (
+    gt.VOCAB,
+    gt.D,
+    gt.N_LAYERS,
+    gt.SEQ,
+    gt.RANK,
+    gt.BS,
+    gt.CHUNK,
+)
+SCALE = gt.SCALE
+
+
+def xent_rows(logits, targets, inv):
+    """Per-row softmax gradient with an EXPLICIT normalization constant
+    (``inv = 1/total_rows`` of the effective batch), plus the f64
+    per-row loss terms — the micro-batch-safe xent."""
+    rows, vocab = logits.shape
+    d = np.zeros((rows, vocab), dtype=F32)
+    loss_terms = np.zeros(rows, dtype=np.float64)
+    for i in range(rows):
+        zrow = logits[i]
+        mx = F32(np.max(zrow))
+        shift32 = zrow - mx
+        import math
+
+        exps = [math.exp(float(x)) for x in shift32]
+        total = 0.0
+        for e in exps:
+            total += e
+        lse = math.log(total) + float(mx)
+        t = int(targets[i])
+        loss_terms[i] = lse - float(zrow[t])
+        for j in range(vocab):
+            d[i, j] = F32(F32(exps[j] / total) * inv)
+        d[i, t] = F32(d[i, t] - inv)
+    return loss_terms, d
+
+
+def sample_grads(frozen, trainable, tokens_block, mb, total_rows):
+    """One micro-batch's per-sample f32 gradients + f64 loss sums.
+
+    Mirrors ``NativeModel::loss_and_sample_grads``: a batched forward over
+    the micro-batch (row-local, so bitwise equal to any other batching),
+    then an independent backward per sample over its ``seq`` rows.
+    """
+    block = tokens_block.reshape(mb, SEQ + 1)
+    inputs = block[:, :SEQ].reshape(-1)
+    targets = block[:, 1:].reshape(-1)
+    embed = frozen[0]
+
+    h = embed[inputs].copy()
+    layers = []
+    for l in range(N_LAYERS):
+        w = frozen[1 + l]
+        a, b, mag = trainable[3 * l], trainable[3 * l + 1], trainable[3 * l + 2]
+        base = gt.matmul_nt(h, w)
+        u = gt.matmul_nt(h, a)
+        lora = gt.matmul_nt(u, b)
+        g, c = gt.layer_g(w, a, b, mag)
+        sl = SCALE * lora
+        t2 = g[None, :] * sl
+        t3 = (g - F32(1.0))[None, :] * base
+        delta = t3 + t2
+        inner = sl + base
+        t = gt.tanhf32(base + delta)
+        h_next = h + t
+        layers.append(dict(h=h, u=u, inner=inner, t=t, g=g, c=c))
+        h = h_next
+    logits = gt.matmul_nt(h, embed)
+    inv = F32(F32(1.0) / F32(total_rows))
+    loss_terms, d_logits = xent_rows(logits, targets, inv)
+
+    per_sample = []
+    for smp in range(mb):
+        r0, r1 = smp * SEQ, (smp + 1) * SEQ
+        dh = gt.matmul_nn(d_logits[r0:r1], embed)
+        grads_rev = []
+        for l in range(N_LAYERS - 1, -1, -1):
+            tr = layers[l]
+            w = frozen[1 + l]
+            a, b = trainable[3 * l], trainable[3 * l + 1]
+            dy = dh * (F32(1.0) - tr["t"][r0:r1] * tr["t"][r0:r1])
+            sdd = SCALE * dy
+            d_lora = tr["g"][None, :] * sdd
+            d_base = (tr["g"] - F32(1.0))[None, :] * dy
+            # backward_with_dmag over the sample's SEQ rows: SEQ <= 32,
+            # so exactly one f64 block partial, cast to f32 once.
+            dg64 = np.zeros(D, dtype=np.float64)
+            dy64 = dy.astype(np.float64)
+            inner64 = tr["inner"][r0:r1].astype(np.float64)
+            for row in range(SEQ):
+                dg64 += dy64[row] * inner64[row]
+            dg = dg64.astype(F32)
+            d_base = d_base + dy
+            dmag = dg / np.maximum(tr["c"], gt.DIVISION_EPS_F32)
+            db = gt.matmul_tn(d_lora, tr["u"][r0:r1])
+            du = gt.matmul_nn(d_lora, b)
+            da = gt.matmul_tn(du, tr["h"][r0:r1])
+            dh_w = gt.matmul_nn(d_base, w)
+            dh_a = gt.matmul_nn(du, a)
+            dh = dh + (dh_w + dh_a)
+            grads_rev.append([da, db, dmag])
+        grads = []
+        for lg in reversed(grads_rev):
+            grads.extend(lg)
+        loss_sum = 0.0
+        for i in range(r0, r1):  # sequential f64, row order
+            loss_sum += loss_terms[i]
+        per_sample.append((loss_sum, grads))
+    return per_sample
+
+
+def reduce_samples(all_samples, total_rows, n_leaves):
+    """The GradReducer: f64 accumulation over per-sample f32 gradients in
+    global sample order, one final f32 rounding."""
+    acc = None
+    loss_sum = 0.0
+    for loss_s, grads in all_samples:
+        loss_sum += loss_s
+        if acc is None:
+            acc = [g.astype(np.float64) for g in grads]
+        else:
+            for j in range(n_leaves):
+                acc[j] += grads[j].astype(np.float64)
+    reduced = [a.astype(F32) for a in acc]
+    loss = F32(loss_sum / float(total_rows))
+    return loss, reduced
+
+
+def run_dp(seed=7, branching=3, steps=52, accum=1):
+    frozen, trainable = gt.init_leaves(seed)
+    m1 = [np.zeros_like(t) for t in trainable]
+    m2 = [np.zeros_like(t) for t in trainable]
+    corpus = gt.MarkovCorpus(VOCAB, branching, (seed ^ 0xDA7A) & M64)
+    _eval_tokens = corpus.block(1, BS, SEQ + 1)
+    n_leaves = len(trainable)
+    total_rows = accum * BS * SEQ
+    losses = []
+    for step in range(steps):
+        micro = corpus.block(accum, BS, SEQ + 1).reshape(accum, BS * (SEQ + 1))
+        all_samples = []
+        for k in range(accum):
+            all_samples.extend(
+                sample_grads(frozen, trainable, micro[k], BS, total_rows)
+            )
+        loss, grads = reduce_samples(all_samples, total_rows, n_leaves)
+        gt.adamw_step(trainable, m1, m2, grads, step + 1)
+        losses.append(float(loss))
+    return losses
+
+
+def fixture_path(name):
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust",
+        "tests",
+        "golden",
+        name,
+    )
+
+
+def main():
+    with open(fixture_path("golden_trace_tiny_fused.json")) as f:
+        committed = json.load(f)["losses"]
+
+    legacy = gt.run_golden()
+    drift_legacy = max(abs(a - b) for a, b in zip(legacy, committed))
+    print(f"legacy replica vs committed fixture: max |d| = {drift_legacy:.3e}")
+    assert drift_legacy <= 1e-6, drift_legacy
+
+    dp1 = run_dp(accum=1)
+    drift_dp = max(abs(a - b) for a, b in zip(dp1, committed))
+    print(f"DP (per-sample reduce, accum=1) vs fixture: max |d| = {drift_dp:.3e}")
+    assert drift_dp <= 1e-6, (
+        f"per-sample reduction drifts {drift_dp:.3e} > 1e-6 over the golden run"
+    )
+
+    dp2 = run_dp(steps=16, accum=2)
+    print(f"DP accum=2: first {dp2[0]:.6f}, last {dp2[-1]:.6f}")
+    assert dp2[0] > dp2[-1], "no learning in the DP accum=2 run"
+
+    if "--check" in sys.argv:
+        return
+
+    out = {
+        "branching": 3,
+        "config": "tiny",
+        "grad_accum": 2,
+        "losses": dp2,
+        "seed": 7,
+        "tolerance": 1e-6,
+        "train_workers": "any",
+        "variant": "fused",
+    }
+    path = fixture_path("golden_trace_tiny_fused_dp.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

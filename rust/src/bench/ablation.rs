@@ -62,7 +62,15 @@ pub fn ablation() -> String {
     let mut t = Table::new(
         "Factorial ablation (H200, bf16, r=384): norm engine x compose engine, \
          speedup vs (dense norm + eager compose)",
-        &["Model", "dense+eager", "factored+eager", "dense+fused", "factored+fused", "norm share", "compose share"],
+        &[
+            "Model",
+            "dense+eager",
+            "factored+eager",
+            "dense+fused",
+            "factored+fused",
+            "norm share",
+            "compose share",
+        ],
     );
     for spec in MODELS.iter() {
         let de = factorial_time(dev, spec, &wl, Config::DenseBA, false);

@@ -84,11 +84,30 @@ pub fn table4_5() -> String {
     let wl = Workload::default();
     let mut t4 = Table::new(
         "Table 4 — gradient-computation speedup (r=384, bf16, seq=4096, ga=8)",
-        &["Model", "vsPEFT RTX", "vsPEFT H200", "vsPEFT B200", "vsEager RTX", "vsEager H200", "vsEager B200"],
+        &[
+            "Model",
+            "vsPEFT RTX",
+            "vsPEFT H200",
+            "vsPEFT B200",
+            "vsEager RTX",
+            "vsEager H200",
+            "vsEager B200",
+        ],
     );
     let mut t5 = Table::new(
         "Table 5 — absolute gradient-computation time (s/iteration)",
-        &["Model", "Fused RTX", "Fused H200", "Fused B200", "Eager RTX", "Eager H200", "Eager B200", "PEFT RTX", "PEFT H200", "PEFT B200"],
+        &[
+            "Model",
+            "Fused RTX",
+            "Fused H200",
+            "Fused B200",
+            "Eager RTX",
+            "Eager H200",
+            "Eager B200",
+            "PEFT RTX",
+            "PEFT H200",
+            "PEFT B200",
+        ],
     );
     for spec in MODELS.iter() {
         let mut r4 = vec![spec.name.to_string()];
@@ -158,7 +177,8 @@ pub fn table7() -> String {
     );
     for m in shapes::norm_shapes() {
         let peft = peak_of_events(&mem_events::norm_events(m, Config::Peft, Dtype::F32, 256 << 20));
-        let fact = peak_of_events(&mem_events::norm_events(m, Config::Eager, Dtype::F32, 256 << 20));
+        let fact =
+            peak_of_events(&mem_events::norm_events(m, Config::Eager, Dtype::F32, 256 << 20));
         t.row(vec![
             format!("{}x{}", m.d_out, m.d_in),
             m.rank.to_string(),
@@ -429,8 +449,18 @@ pub fn fig11() -> String {
     );
     for rows in [2048usize, 4096, 8192, 16384] {
         let act = ActShape::new(rows, 4096);
-        let e = peak_of_events(&mem_events::compose_forward_events(act, Config::Eager, Dtype::Bf16, true));
-        let f = peak_of_events(&mem_events::compose_forward_events(act, Config::Fused, Dtype::Bf16, true));
+        let e = peak_of_events(&mem_events::compose_forward_events(
+            act,
+            Config::Eager,
+            Dtype::Bf16,
+            true,
+        ));
+        let f = peak_of_events(&mem_events::compose_forward_events(
+            act,
+            Config::Fused,
+            Dtype::Bf16,
+            true,
+        ));
         let b = peak_of_events(&{
             let mut ev = mem_events::compose_forward_events(act, Config::Fused, Dtype::Bf16, true);
             ev.extend(mem_events::compose_backward_events(act, Config::Fused, Dtype::Bf16));
@@ -584,8 +614,9 @@ pub fn kernel_backends() -> String {
     let parity = |be: &dyn ComposeKernel, dt: Dtype| -> &'static str {
         let q = |v: &[f32]| v.iter().map(|&x| dt.quantize(x)).collect::<Vec<f32>>();
         let (bq, lq, gq) = (q(&base), q(&lora), q(&g));
-        let reference =
-            reg.compose(crate::kernels::BackendKind::Fused).forward_alloc(&bq, &lq, &gq, 2.0, act, dt);
+        let reference = reg
+            .compose(crate::kernels::BackendKind::Fused)
+            .forward_alloc(&bq, &lq, &gq, 2.0, act, dt);
         let got = be.forward_alloc(&bq, &lq, &gq, 2.0, act, dt);
         if reference
             .iter()
@@ -721,7 +752,10 @@ mod tests {
     fn fig7_fused_near_half_peak() {
         let t = fig7();
         // Every fused row should be ~50-55% of peak.
-        for line in t.lines().filter(|l| l.contains("GB/s") == false && l.matches('|').count() >= 5) {
+        let rows = t
+            .lines()
+            .filter(|l| !l.contains("GB/s") && l.matches('|').count() >= 5);
+        for line in rows {
             let _ = line;
         }
         assert!(t.contains("53%") || t.contains("52%") || t.contains("54%"), "{t}");

@@ -1012,6 +1012,8 @@ mod tests {
                 seed: 11,
                 branching: 3,
                 eval_every: 0,
+                train_workers: 0,
+                grad_accum: 1,
             },
         )
         .unwrap();

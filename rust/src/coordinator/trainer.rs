@@ -18,6 +18,22 @@
 //! through the typed op surface ([`TrainStepReq`]/[`EvalReq`]) — no
 //! artifact-name strings, no positional tensor packing.
 //!
+//! **Data-parallel training** (`TrainerCfg::train_workers` >= 1): instead
+//! of one in-graph [`TrainStepReq`] chunk, each optimizer step splits
+//! gradient computation from the update. A [`GradReducer`] shards every
+//! batch into contiguous per-worker micro-batches, runs the
+//! `loss_and_grads` op concurrently on an [`EnginePool`] of worker
+//! engines (adapter parameters replicated behind an `Arc` per request),
+//! and reduces the per-sample gradients in fixed sample order via f64
+//! accumulators — so the reduced gradient is bitwise-identical for ANY
+//! worker count (`tests/train_parallel.rs` pins this; the committed
+//! golden trace holds at 1e-6 for workers 1/2/4). AdamW then runs ONCE
+//! centrally (`apply_update`), and the updated parameters broadcast to
+//! the workers as the next step's request `Arc`.
+//! `TrainerCfg::grad_accum = K` accumulates K reduced micro-steps into
+//! one update (effective batch `K * train_batch`); checkpoints record
+//! the workers/accum/effective-batch provenance.
+//!
 //! Training runs materialize as **named adapters**: [`Trainer::to_adapter`]
 //! snapshots the current leaves, and [`Trainer::set_checkpointing`] writes
 //! periodic checkpoints to an [`AdapterStore`] that a *running* server can
@@ -34,9 +50,13 @@ use anyhow::{bail, Context, Result};
 
 use super::data::MarkovCorpus;
 use crate::runtime::ops::{
-    AdapterParams, EvalReq, InitReq, OptState, TrainStepReq, Variant,
+    reduce_sample_grads, AdapterParams, ApplyUpdateReq, EvalReq, InitReq, OptState,
+    TrainStepReq, Variant,
 };
-use crate::runtime::{Adapter, AdapterStore, ConfigInfo, ExecBackend, Tensor};
+use crate::runtime::{
+    Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, GradReducer,
+    Tensor,
+};
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
@@ -51,6 +71,12 @@ pub struct TrainerCfg {
     pub branching: usize,
     /// Evaluate every N steps (0 = never).
     pub eval_every: usize,
+    /// Data-parallel gradient workers over an engine pool
+    /// (0 = the single-engine in-graph TrainStep path).
+    pub train_workers: usize,
+    /// Micro-steps accumulated per optimizer update (data-parallel path
+    /// only; effective batch = `grad_accum * train_batch`).
+    pub grad_accum: usize,
 }
 
 impl Default for TrainerCfg {
@@ -61,6 +87,8 @@ impl Default for TrainerCfg {
             seed: 0,
             branching: 4,
             eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
         }
     }
 }
@@ -87,16 +115,22 @@ pub struct Trainer {
     variant: Variant,
     info: ConfigInfo,
     corpus: MarkovCorpus,
-    /// Frozen leaves (constant across steps).
-    frozen: Vec<Tensor>,
-    /// Trainable leaves + AdamW moments.
-    trainable: Vec<Tensor>,
+    /// Frozen + trainable leaves behind one shared handle: engine
+    /// requests (train/eval/shard ops) clone the `Arc`, not the
+    /// parameters, and the post-step update mutates in place via
+    /// `Arc::make_mut` once the workers' request handles are dropped —
+    /// so the data-parallel "broadcast" really is a refcount bump.
+    params: std::sync::Arc<AdapterParams>,
+    /// AdamW moments + step counter.
     opt: OptState,
     pub history: Vec<StepRecord>,
     pub eval_history: Vec<StepRecord>,
     pub wall_seconds: f64,
     /// Held-out eval block, fixed at construction.
     eval_tokens: Tensor,
+    /// Worker engine pool of the data-parallel path (None = the
+    /// single-engine chunked path).
+    pool: Option<EnginePool>,
     ckpt: Option<Checkpointing>,
     /// Checkpoints written by the periodic policy.
     pub checkpoints_written: u64,
@@ -108,16 +142,77 @@ pub struct Trainer {
 
 impl Trainer {
     /// Initialize from the backend's typed init op. Accepts a PJRT
-    /// `Engine`, a `NativeEngine`, or an `ExecBackend` directly.
+    /// `Engine`, a `NativeEngine`, or an `ExecBackend` directly. For the
+    /// data-parallel path (`train_workers` >= 1) the worker pool is
+    /// derived from the backend kind; a PJRT backend cannot be
+    /// re-described from a connected engine — use [`Trainer::with_spec`].
     pub fn new(backend: impl Into<ExecBackend>, cfg: TrainerCfg) -> Result<Trainer> {
         let backend = backend.into();
         // Cheap validation first: a bad variant must not cost a full
         // parameter init (or a PJRT artifact compile) before erroring.
         Variant::parse(&cfg.variant)?;
+        let pool = Self::pool_for(&backend, &cfg)?;
         let init = backend
             .init(InitReq { config: cfg.config.clone(), seed: cfg.seed as i32 })
             .with_context(|| format!("initializing config {}", cfg.config))?;
-        Self::with_params(backend, cfg, init.params, 0)
+        Self::with_parts(backend, pool, cfg, init.params, 0)
+    }
+
+    /// Initialize over a thread-portable backend description — the
+    /// general data-parallel constructor (every pool worker reconnects
+    /// its own engine from the spec).
+    pub fn with_spec(spec: &BackendSpec, cfg: TrainerCfg) -> Result<Trainer> {
+        Variant::parse(&cfg.variant)?;
+        let backend = spec.connect()?;
+        let pool = Self::pool_for_spec(spec, &cfg)?;
+        let init = backend
+            .init(InitReq { config: cfg.config.clone(), seed: cfg.seed as i32 })
+            .with_context(|| format!("initializing config {}", cfg.config))?;
+        Self::with_parts(backend, pool, cfg, init.params, 0)
+    }
+
+    /// The one place a worker pool is built: validates the parallel
+    /// config, then starts `train_workers` engines from the description
+    /// (None when the config is single-engine). Every constructor —
+    /// spec-based or backend-based — funnels through this.
+    fn pool_for_spec(spec: &BackendSpec, cfg: &TrainerCfg) -> Result<Option<EnginePool>> {
+        Self::validate_parallel_cfg(cfg)?;
+        if cfg.train_workers == 0 {
+            return Ok(None);
+        }
+        Ok(Some(EnginePool::start(spec, cfg.train_workers)?))
+    }
+
+    /// Data-parallel sanity: accumulation needs at least one gradient
+    /// worker, and a zero accumulation factor is meaningless.
+    fn validate_parallel_cfg(cfg: &TrainerCfg) -> Result<()> {
+        if cfg.grad_accum == 0 {
+            bail!("grad_accum must be >= 1");
+        }
+        if cfg.train_workers == 0 && cfg.grad_accum > 1 {
+            bail!(
+                "gradient accumulation runs on the data-parallel path; \
+                 set train_workers >= 1 (got grad_accum {})",
+                cfg.grad_accum
+            );
+        }
+        Ok(())
+    }
+
+    /// Derive the worker pool from a connected backend's kind.
+    fn pool_for(backend: &ExecBackend, cfg: &TrainerCfg) -> Result<Option<EnginePool>> {
+        if cfg.train_workers > 0 {
+            let spec = match backend {
+                ExecBackend::Native(_) => BackendSpec::Native,
+                ExecBackend::Mock(m) => BackendSpec::Mock(m.clone()),
+                ExecBackend::Pjrt(_) => bail!(
+                    "data-parallel training needs a reconnectable backend description; \
+                     construct the trainer with Trainer::with_spec"
+                ),
+            };
+            return Self::pool_for_spec(&spec, cfg);
+        }
+        Self::pool_for_spec(&BackendSpec::Native, cfg)
     }
 
     /// Resume from a stored adapter checkpoint: the adapter's leaves and
@@ -128,6 +223,29 @@ impl Trainer {
         cfg: TrainerCfg,
         adapter: &Adapter,
     ) -> Result<Trainer> {
+        Self::check_adapter_config(&cfg, adapter)?;
+        let backend = backend.into();
+        let pool = Self::pool_for(&backend, &cfg)?;
+        Self::with_parts(backend, pool, cfg, adapter.params.clone(), adapter.step)
+    }
+
+    /// [`Self::from_adapter`] over a thread-portable backend description
+    /// — the resume counterpart of [`Self::with_spec`], so a resumed
+    /// data-parallel run constructs exactly like a fresh one (the CLI
+    /// `--resume` path uses this).
+    pub fn from_adapter_spec(
+        spec: &BackendSpec,
+        cfg: TrainerCfg,
+        adapter: &Adapter,
+    ) -> Result<Trainer> {
+        Self::check_adapter_config(&cfg, adapter)?;
+        Variant::parse(&cfg.variant)?;
+        let backend = spec.connect()?;
+        let pool = Self::pool_for_spec(spec, &cfg)?;
+        Self::with_parts(backend, pool, cfg, adapter.params.clone(), adapter.step)
+    }
+
+    fn check_adapter_config(cfg: &TrainerCfg, adapter: &Adapter) -> Result<()> {
         if adapter.config != cfg.config {
             bail!(
                 "adapter {:?} targets config {:?}, trainer is configured for {:?}",
@@ -136,12 +254,13 @@ impl Trainer {
                 cfg.config
             );
         }
-        Self::with_params(backend.into(), cfg, adapter.params.clone(), adapter.step)
+        Ok(())
     }
 
     /// Shared construction tail over explicit parameters.
-    fn with_params(
+    fn with_parts(
         backend: ExecBackend,
+        pool: Option<EnginePool>,
         cfg: TrainerCfg,
         params: AdapterParams,
         step: i32,
@@ -160,6 +279,24 @@ impl Trainer {
         }
         let mut opt = OptState::zeros_like(&params.trainable);
         opt.step = step;
+        // Data-parallel runs need the split train ops on every worker
+        // (workers reconnect from the same description as `backend`).
+        // A backend without them — e.g. a PJRT manifest whose artifacts
+        // predate the ops — must fail HERE, not mid-training after the
+        // startup cost is paid.
+        if pool.is_some() {
+            for artifact in [
+                format!("loss_and_grads_{}_{}", info.name, variant.as_str()),
+                format!("apply_update_{}", info.name),
+            ] {
+                backend.ensure_artifact(&artifact).with_context(|| {
+                    format!(
+                        "data-parallel training needs the {artifact:?} op, \
+                         which this backend does not provide"
+                    )
+                })?;
+            }
+        }
         // Data stream: seeded identically across variants so eager/fused
         // see the same batches (the §5.9 controlled setup).
         let mut corpus = MarkovCorpus::new(info.vocab, cfg.branching, cfg.seed ^ 0xDA7A);
@@ -168,12 +305,20 @@ impl Trainer {
             vec![eval_bs, info.seq + 1],
             corpus.block(1, eval_bs, info.seq + 1),
         );
-        // Resuming from step N: fast-forward the stream past the chunks
+        // Resuming from step N: fast-forward the stream past the blocks
         // the original run already consumed, so a resumed run continues
-        // on fresh data exactly where an uninterrupted run would be
-        // (chunks are the consumption granularity).
-        for _ in 0..(step.max(0) as usize / info.chunk_steps) {
-            let _ = corpus.block(info.chunk_steps, info.train_batch, info.seq + 1);
+        // on fresh data exactly where an uninterrupted run would be. The
+        // consumption granularity differs by path: the single-engine
+        // path draws one chunk per engine call, the data-parallel path
+        // draws `grad_accum` micro-batches per optimizer step.
+        if pool.is_some() {
+            for _ in 0..step.max(0) as usize {
+                let _ = corpus.block(cfg.grad_accum, info.train_batch, info.seq + 1);
+            }
+        } else {
+            for _ in 0..(step.max(0) as usize / info.chunk_steps) {
+                let _ = corpus.block(info.chunk_steps, info.train_batch, info.seq + 1);
+            }
         }
         // Operational log: the compose plan actually in effect. The
         // native engine forces the variant's tiers (the variant IS the
@@ -188,13 +333,13 @@ impl Trainer {
             variant,
             info,
             corpus,
-            frozen: params.frozen,
-            trainable: params.trainable,
+            params: std::sync::Arc::new(params),
             opt,
             history: Vec::new(),
             eval_history: Vec::new(),
             wall_seconds: 0.0,
             eval_tokens,
+            pool,
             ckpt: None,
             checkpoints_written: 0,
             compose_backend: plan.backend.name(),
@@ -203,9 +348,19 @@ impl Trainer {
     }
 
     /// Trainer over the default execution backend (PJRT artifacts when
-    /// usable, the native engine otherwise).
+    /// usable, the native engine otherwise). Data-parallel configs go
+    /// through the spec path so PJRT backends get a reconnectable pool.
     pub fn auto(cfg: TrainerCfg) -> Result<Trainer> {
-        Self::new(ExecBackend::auto(), cfg)
+        if cfg.train_workers > 0 {
+            Self::with_spec(&BackendSpec::auto(), cfg)
+        } else {
+            Self::new(ExecBackend::auto(), cfg)
+        }
+    }
+
+    /// Data-parallel gradient workers in use (0 = single-engine path).
+    pub fn train_workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.size()).unwrap_or(0)
     }
 
     pub fn config_info(&self) -> &ConfigInfo {
@@ -223,23 +378,28 @@ impl Trainer {
 
     /// Borrow the current trainable leaves (for the serving handoff).
     pub fn trainable(&self) -> &[Tensor] {
-        &self.trainable
+        &self.params.trainable
     }
 
     pub fn frozen(&self) -> &[Tensor] {
-        &self.frozen
+        &self.params.frozen
     }
 
     /// Snapshot the current parameters as a named adapter (the trainer →
-    /// store → server unit of exchange).
+    /// store → server unit of exchange). Checkpoints record the run's
+    /// effective-batch provenance: gradient workers, accumulation factor,
+    /// and the effective batch size in sequences.
     pub fn to_adapter(&self, name: &str) -> Result<Adapter> {
-        Adapter::new(
+        let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1) as u32;
+        let accum = self.cfg.grad_accum.max(1) as u32;
+        Ok(Adapter::new(
             name,
             &self.info,
             self.cfg.seed,
             self.opt.step,
-            AdapterParams { frozen: self.frozen.clone(), trainable: self.trainable.clone() },
-        )
+            (*self.params).clone(),
+        )?
+        .with_provenance(workers, accum, accum * self.info.train_batch as u32))
     }
 
     /// Write the adapter to `store` under `name` every `every_steps`
@@ -261,8 +421,14 @@ impl Trainer {
         Ok(())
     }
 
-    /// Run one chunk (`chunk_steps` optimizer steps in-graph).
+    /// Run one chunk: `chunk_steps` optimizer steps — in-graph through
+    /// one TrainStep call on the single-engine path, or step by step
+    /// through the pool's shard/reduce/update cycle on the data-parallel
+    /// path.
     pub fn run_chunk(&mut self) -> Result<&[StepRecord]> {
+        if self.pool.is_some() {
+            return self.run_chunk_parallel();
+        }
         let k = self.info.chunk_steps;
         let bs = self.info.train_batch;
         let seq1 = self.info.seq + 1;
@@ -272,10 +438,7 @@ impl Trainer {
         let req = TrainStepReq {
             config: self.cfg.config.clone(),
             variant: self.variant,
-            params: std::sync::Arc::new(AdapterParams {
-                frozen: self.frozen.clone(),
-                trainable: self.trainable.clone(),
-            }),
+            params: self.params.clone(),
             opt: self.opt.clone(),
             tokens,
         };
@@ -283,7 +446,9 @@ impl Trainer {
         let resp = self.backend.train_step(req)?;
         self.wall_seconds += t0.elapsed().as_secs_f64();
 
-        self.trainable = resp.trainable;
+        // The engine dropped its request handle, so this mutates the
+        // shared parameters in place (no frozen-leaf copy).
+        std::sync::Arc::make_mut(&mut self.params).trainable = resp.trainable;
         self.opt = resp.opt;
         let losses = resp.losses;
 
@@ -292,12 +457,64 @@ impl Trainer {
         for (i, &loss) in losses.iter().enumerate() {
             self.history.push(StepRecord { step: base_step + i + 1, loss });
         }
+        self.chunk_tail(prev_step)?;
+        Ok(&self.history[first..])
+    }
+
+    /// The data-parallel chunk: per optimizer step, draw `grad_accum`
+    /// micro-batches, shard each over the pool, reduce the per-sample
+    /// gradients deterministically, and apply ONE central AdamW update.
+    /// The updated parameters broadcast to the workers as the next
+    /// step's request `Arc` (engines are stateless; replication is the
+    /// refcount, not a copy).
+    fn run_chunk_parallel(&mut self) -> Result<&[StepRecord]> {
+        let k = self.info.chunk_steps;
+        let bs = self.info.train_batch;
+        let seq1 = self.info.seq + 1;
+        let accum = self.cfg.grad_accum;
+        let total_rows = accum * bs * self.info.seq;
+        let reducer = GradReducer::new(self.cfg.config.clone(), self.variant);
+        let prev_step = self.opt.step;
+        let first = self.history.len();
+        for _ in 0..k {
+            let micro = self.corpus.block(accum, bs, seq1);
+            let t0 = Instant::now();
+            let mut samples = Vec::with_capacity(accum * bs);
+            for a in 0..accum {
+                let tokens = Tensor::i32(
+                    vec![bs, seq1],
+                    micro[a * bs * seq1..(a + 1) * bs * seq1].to_vec(),
+                );
+                let pool = self.pool.as_ref().expect("parallel chunk has a pool");
+                samples.extend(reducer.sample_grads(pool, &self.params, &tokens, total_rows)?);
+            }
+            let (loss, grads) = reduce_sample_grads(&samples, total_rows)?;
+            let resp = self.backend.apply_update(ApplyUpdateReq {
+                config: self.cfg.config.clone(),
+                trainable: self.params.trainable.clone(),
+                opt: self.opt.clone(),
+                grads,
+            })?;
+            self.wall_seconds += t0.elapsed().as_secs_f64();
+            // Every shard request dropped its `Arc` when its job
+            // finished, so the update mutates the shared parameters in
+            // place — the broadcast to the next step's workers is the
+            // refcount bump on `self.params`, never a frozen-leaf copy.
+            std::sync::Arc::make_mut(&mut self.params).trainable = resp.trainable;
+            self.opt = resp.opt;
+            self.history.push(StepRecord { step: self.opt.step as usize, loss });
+        }
+        self.chunk_tail(prev_step)?;
+        Ok(&self.history[first..])
+    }
+
+    /// Shared end-of-chunk bookkeeping: periodic eval and checkpoints
+    /// (fired when this chunk crossed an interval boundary).
+    fn chunk_tail(&mut self, prev_step: i32) -> Result<()> {
         if self.cfg.eval_every > 0 && self.opt.step as usize % self.cfg.eval_every == 0 {
             let loss = self.eval()?;
             self.eval_history.push(StepRecord { step: self.opt.step as usize, loss });
         }
-        // Periodic checkpoint: fire when this chunk crossed an interval
-        // boundary.
         if let Some(c) = &self.ckpt {
             let every = c.every_steps as i32;
             if self.opt.step / every > prev_step / every {
@@ -308,7 +525,7 @@ impl Trainer {
                 self.checkpoints_written += 1;
             }
         }
-        Ok(&self.history[first..])
+        Ok(())
     }
 
     /// Train until at least `steps` optimizer steps have run.
@@ -324,10 +541,7 @@ impl Trainer {
         let resp = self.backend.eval(EvalReq {
             config: self.cfg.config.clone(),
             variant: self.variant,
-            params: std::sync::Arc::new(AdapterParams {
-                frozen: self.frozen.clone(),
-                trainable: self.trainable.clone(),
-            }),
+            params: self.params.clone(),
             tokens: self.eval_tokens.clone(),
         })?;
         Ok(resp.loss)
@@ -369,7 +583,13 @@ mod tests {
             seed,
             branching: 3,
             eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
         }
+    }
+
+    fn tiny_dp(seed: u64, workers: usize, accum: usize) -> TrainerCfg {
+        TrainerCfg { train_workers: workers, grad_accum: accum, ..tiny("fused", seed) }
     }
 
     // --- Native-engine tests: run unconditionally (no artifact gating) ---
@@ -492,6 +712,83 @@ mod tests {
         assert_ne!(
             from_start.history[0].loss, resumed.history[0].loss,
             "resumed run replayed the original run's first data block"
+        );
+    }
+
+    // --- Data-parallel path (native pool; unconditional) ---
+
+    #[test]
+    fn parallel_trainer_learns_and_tracks_the_single_engine_path() {
+        let mut dp = Trainer::new(NativeEngine::new(), tiny_dp(31, 2, 1)).unwrap();
+        assert_eq!(dp.train_workers(), 2);
+        let mut legacy = Trainer::new(NativeEngine::new(), tiny("fused", 31)).unwrap();
+        assert_eq!(legacy.train_workers(), 0);
+        dp.train_steps(16).unwrap();
+        legacy.train_steps(16).unwrap();
+        assert_eq!(dp.history.len(), legacy.history.len());
+        // Same seed + same data stream: the split/reduce path differs
+        // from the in-graph chunk only by the per-sample reduction's
+        // reassociation.
+        let (mean, max) = Trainer::loss_delta(&dp, &legacy);
+        assert!(mean < 1e-5, "mean |dloss| {mean}");
+        assert!(max < 1e-5, "max |dloss| {max}");
+        // And it actually learns.
+        let first = dp.history.first().unwrap().loss;
+        let last4: f32 = dp.history.iter().rev().take(4).map(|r| r.loss).sum::<f32>() / 4.0;
+        assert!(last4 < first, "no learning: first {first}, last-4 {last4}");
+    }
+
+    #[test]
+    fn parallel_trainer_accumulates_large_effective_batches() {
+        let mut tr = Trainer::new(NativeEngine::new(), tiny_dp(5, 2, 4)).unwrap();
+        tr.train_steps(8).unwrap();
+        assert_eq!(tr.step_count(), 8);
+        assert_eq!(tr.history.len(), 8);
+        assert!(tr.history.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+        // Checkpoints record the effective-batch provenance.
+        let a = tr.to_adapter("dp").unwrap();
+        assert_eq!(a.train_workers, 2);
+        assert_eq!(a.grad_accum, 4);
+        assert_eq!(a.effective_batch as usize, 4 * tr.config_info().train_batch);
+    }
+
+    #[test]
+    fn parallel_cfg_validation() {
+        // Accumulation without workers is a config error, not silence.
+        let err = Trainer::new(NativeEngine::new(), tiny_dp(0, 0, 2)).unwrap_err();
+        assert!(format!("{err:#}").contains("data-parallel"), "{err:#}");
+        // A zero accumulation factor is rejected.
+        assert!(Trainer::new(NativeEngine::new(), tiny_dp(0, 2, 0)).is_err());
+        // The spec constructor enforces the same rules.
+        assert!(Trainer::with_spec(&crate::runtime::BackendSpec::Native, tiny_dp(0, 1, 0))
+            .is_err());
+    }
+
+    #[test]
+    fn parallel_resume_fast_forwards_the_data_stream() {
+        // Same protocol as the single-engine resume test: a resumed DP
+        // run must continue the stream, not replay it — and the DP
+        // consumption granularity (accum micro-batches per step) must be
+        // what the fast-forward replays.
+        let fresh = Trainer::new(NativeEngine::new(), tiny_dp(23, 2, 2)).unwrap();
+        let mut adapter = fresh.to_adapter("ff-dp").unwrap();
+        let k = fresh.config_info().chunk_steps;
+        adapter.step = k as i32; // pretend one chunk was already trained
+        let mut from_start = Trainer::new(NativeEngine::new(), tiny_dp(23, 2, 2)).unwrap();
+        // The spec-based resume constructor (what the CLI --resume uses).
+        let mut resumed = Trainer::from_adapter_spec(
+            &crate::runtime::BackendSpec::Native,
+            tiny_dp(23, 2, 2),
+            &adapter,
+        )
+        .unwrap();
+        assert_eq!(resumed.train_workers(), 2);
+        from_start.run_chunk().unwrap();
+        resumed.run_chunk().unwrap();
+        assert_eq!(resumed.step_count(), 2 * k);
+        assert_ne!(
+            from_start.history[0].loss, resumed.history[0].loss,
+            "resumed DP run replayed the original run's first data block"
         );
     }
 

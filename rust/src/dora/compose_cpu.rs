@@ -232,7 +232,13 @@ pub fn dmag_reduction(d_delta: &[f32], inner: &[f32], act: ActShape) -> Vec<f32>
 
 /// Scalar reference (textbook form, fp64): the correctness oracle for the
 /// property tests.
-pub fn compose_reference_f64(base: &[f32], lora: &[f32], g: &[f32], s: f32, act: ActShape) -> Vec<f64> {
+pub fn compose_reference_f64(
+    base: &[f32],
+    lora: &[f32],
+    g: &[f32],
+    s: f32,
+    act: ActShape,
+) -> Vec<f64> {
     let d = act.d_out;
     let mut out = vec![0f64; act.elems()];
     for row in 0..act.rows {

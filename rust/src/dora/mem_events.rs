@@ -147,7 +147,12 @@ pub fn norm_events(m: ModuleShape, config: Config, dt: Dtype, budget: u64) -> Ve
 /// Forward compose allocation stream (Figure 11's forward panel).
 /// Training mode (autograd alive): temporaries of the eager chain stay
 /// reachable until the output is produced.
-pub fn compose_forward_events(act: ActShape, config: Config, dt: Dtype, training: bool) -> Vec<Event> {
+pub fn compose_forward_events(
+    act: ActShape,
+    config: Config,
+    dt: Dtype,
+    training: bool,
+) -> Vec<Event> {
     let n = act.elems() as u64 * dt.size() as u64;
     if config.fused_compose() {
         if training {

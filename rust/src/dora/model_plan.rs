@@ -331,15 +331,24 @@ mod probe {
             let tp = grad_iteration_time(dev, spec, &w, Config::Peft);
             let te = grad_iteration_time(dev, spec, &w, Config::Eager);
             let tf = grad_iteration_time(dev, spec, &w, Config::Fused);
-            println!("r={rank} peft={tp:.2} eager={te:.2} fused={tf:.2} | vsP={:.3} vsE={:.3}", tp/tf, te/tf);
+            println!(
+                "r={rank} peft={tp:.2} eager={te:.2} fused={tf:.2} | vsP={:.3} vsE={:.3}",
+                tp / tf,
+                te / tf
+            );
             let rows = w.rows();
             for (p, shape, _) in spec.inventory(rank) {
                 let f = gpu_cost::module_forward(dev, shape, rows, w.dtype, Config::Peft);
                 let ff = gpu_cost::module_forward(dev, shape, rows, w.dtype, Config::Fused);
                 let n_p = gpu_cost::weight_norm(dev, shape, w.dtype, Config::Peft);
                 let n_f = gpu_cost::weight_norm(dev, shape, w.dtype, Config::Fused);
-                println!("  {p:?} {shape:?}: fwd peft {:.3}ms fused {:.3}ms | norm peft {:.3}ms fused {:.3}ms",
-                    f.time*1e3, ff.time*1e3, n_p.time*1e3, n_f.time*1e3);
+                println!(
+                    "  {p:?} {shape:?}: fwd peft {:.3}ms fused {:.3}ms | norm peft {:.3}ms fused {:.3}ms",
+                    f.time * 1e3,
+                    ff.time * 1e3,
+                    n_p.time * 1e3,
+                    n_f.time * 1e3
+                );
             }
         }
         for c in crate::dora::ALL_CONFIGS {

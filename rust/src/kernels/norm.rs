@@ -127,7 +127,14 @@ pub(crate) fn ba_sq_row<E: Elem>(brow: &[f32], gram: &[f32], r: usize) -> f32 {
 
 /// Gram-only chunk accumulation (used by the tiled engine, which computes
 /// the shared `[r, r]` Gram before fanning rows out to threads).
-fn gram_chunk<E: Elem>(a: &[f32], r: usize, a_stride: usize, start: usize, stop: usize, gram: &mut [f32]) {
+fn gram_chunk<E: Elem>(
+    a: &[f32],
+    r: usize,
+    a_stride: usize,
+    start: usize,
+    stop: usize,
+    gram: &mut [f32],
+) {
     let width = stop - start;
     for i in 0..r {
         let ai = &a[i * a_stride + start..i * a_stride + stop];

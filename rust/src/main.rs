@@ -35,12 +35,14 @@ fn main() -> Result<()> {
                  \n\
                  report <id>     one of: {}\n\
                  train           --config tiny|small|e2e --variant eager|fused \
-                 --steps N --seed S [--eval-every N]\n\
+                 --steps N --seed S [--eval-every N] \
+                 [--train-workers N (data-parallel pool)] [--grad-accum K]\n\
                  serve-demo      --config tiny|small --requests N \
                  [--workers N] [--fast-path merged|composed]\n\
                  adapters list   [--store DIR]\n\
                  adapters train  --adapter NAME [--config tiny] [--steps N] \
-                 [--seed S] [--checkpoint-every N] [--store DIR] [--resume]\n\
+                 [--seed S] [--checkpoint-every N] [--store DIR] [--resume] \
+                 [--train-workers N] [--grad-accum K]\n\
                  adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR] \
                  [--workers N (0 = all cores)] [--fast-path merged|composed]",
                 report::REPORT_IDS.join(" ")
@@ -70,11 +72,19 @@ fn cmd_adapters_list(args: &Args) -> Result<()> {
         println!("no adapters in {:?}", store.dir());
         return Ok(());
     }
-    println!("{:20} {:8} {:>6} {:>8} {:>12}", "name", "config", "rank", "step", "bytes");
+    println!(
+        "{:20} {:8} {:>6} {:>8} {:>7} {:>12}",
+        "name", "config", "rank", "step", "eff-bs", "bytes"
+    );
     for a in listed {
+        let eff = if a.effective_batch == 0 {
+            "-".to_string()
+        } else {
+            a.effective_batch.to_string()
+        };
         println!(
-            "{:20} {:8} {:>6} {:>8} {:>12}",
-            a.name, a.config, a.rank, a.step, a.file_bytes
+            "{:20} {:8} {:>6} {:>8} {:>7} {:>12}",
+            a.name, a.config, a.rank, a.step, eff, a.file_bytes
         );
     }
     Ok(())
@@ -96,6 +106,8 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0),
         branching: args.get_usize("branching", 4),
         eval_every: args.get_usize("eval-every", 0),
+        train_workers: args.get_usize("train-workers", 0),
+        grad_accum: args.get_usize("grad-accum", 1),
     };
     let steps = args.get_usize("steps", 50);
     let ckpt_every = args.get_usize("checkpoint-every", 0);
@@ -127,7 +139,7 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
             );
         }
         cfg.seed = adapter.seed;
-        Trainer::from_adapter(BackendSpec::auto().connect()?, cfg.clone(), &adapter)?
+        Trainer::from_adapter_spec(&BackendSpec::auto(), cfg.clone(), &adapter)?
     } else {
         Trainer::auto(cfg.clone())?
     };
@@ -135,12 +147,15 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
         tr.set_checkpointing(store.clone(), name.clone(), ckpt_every)?;
     }
     println!(
-        "training adapter {name:?}: config={} variant={} seed={} backend={} store={:?}",
+        "training adapter {name:?}: config={} variant={} seed={} backend={} store={:?} \
+         train-workers={} grad-accum={}",
         cfg.config,
         cfg.variant,
         cfg.seed,
         tr.backend_kind(),
-        store.dir()
+        store.dir(),
+        tr.train_workers(),
+        cfg.grad_accum
     );
     while tr.step_count() < steps {
         let recs: Vec<_> = tr.run_chunk()?.to_vec();
@@ -299,18 +314,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0),
         branching: args.get_usize("branching", 4),
         eval_every: args.get_usize("eval-every", 0),
+        train_workers: args.get_usize("train-workers", 0),
+        grad_accum: args.get_usize("grad-accum", 1),
     };
     let steps = args.get_usize("steps", 50);
     let mut tr = Trainer::auto(cfg.clone())?;
     println!(
-        "training config={} variant={} seed={} params={} backend={} compose={} ({})",
+        "training config={} variant={} seed={} params={} backend={} compose={} ({}) \
+         train-workers={} grad-accum={}",
         cfg.config,
         cfg.variant,
         cfg.seed,
         tr.config_info().n_params,
         tr.backend_kind(),
         tr.compose_backend,
-        tr.compose_tier.name()
+        tr.compose_tier.name(),
+        tr.train_workers(),
+        cfg.grad_accum
     );
     while tr.step_count() < steps {
         let recs: Vec<_> = tr.run_chunk()?.to_vec();

@@ -342,8 +342,13 @@ struct Trace {
     layers: Vec<LayerTrace>,
     /// Final hidden state [rows, d].
     h_final: Vec<f32>,
-    /// Softmax-minus-onehot, pre-divided by rows [rows, vocab].
+    /// Softmax-minus-onehot, pre-multiplied by the normalization
+    /// constant (1/rows for the full-batch path, 1/total_rows for a
+    /// data-parallel shard) [rows, vocab].
     d_logits: Vec<f32>,
+    /// Per-row f64 cross-entropy terms (`lse - z[target]`), kept
+    /// unreduced so per-sample loss sums are exportable.
+    loss_terms: Vec<f64>,
     loss: f32,
 }
 
@@ -492,8 +497,20 @@ impl<'a> NativeModel<'a> {
     }
 
     /// Training forward with the Tier-1 dual-output compose; saves the
-    /// per-layer trace the backward needs.
+    /// per-layer trace the backward needs. The cross-entropy gradient is
+    /// normalized by the forward batch itself (the full-batch path).
     fn train_forward(&self, inputs: &[i32], targets: &[i32]) -> Result<Trace> {
+        let rows = inputs.len();
+        self.train_forward_norm(inputs, targets, 1.0 / rows as f32)
+    }
+
+    /// [`Self::train_forward`] with an explicit gradient-normalization
+    /// constant `inv` (the data-parallel shard path passes
+    /// `1/total_rows` of the EFFECTIVE batch, so shard gradients reduce
+    /// into the whole batch's mean-loss gradient). Every forward op is
+    /// row-local, so the per-row trace is bitwise-independent of how
+    /// samples were grouped into the micro-batch.
+    fn train_forward_norm(&self, inputs: &[i32], targets: &[i32], inv: f32) -> Result<Trace> {
         let d = self.info.d_model;
         let r = self.info.rank;
         let s = self.info.scale as f32;
@@ -522,28 +539,44 @@ impl<'a> NativeModel<'a> {
             h = h_next;
         }
         let logits = matmul_nt(&h, self.embed(), rows, d, self.info.vocab);
-        let (loss, d_logits) = xent_forward_backward(&logits, targets, self.info.vocab);
-        Ok(Trace { layers, h_final: h, d_logits, loss })
+        let (loss_terms, d_logits) = xent_grad(&logits, targets, self.info.vocab, inv);
+        let loss = xent_mean_loss(&loss_terms, rows);
+        Ok(Trace { layers, h_final: h, d_logits, loss_terms, loss })
     }
 
     /// Backward through the stack; returns per-layer (dA, dB, dmag).
     fn backward(&self, trace: &Trace) -> Vec<LayerGrads> {
+        let rows = trace.h_final.len() / self.info.d_model;
+        self.backward_range(trace, 0, rows)
+    }
+
+    /// Backward over the trace's row range `[row0, row1)` only. Every
+    /// non-contracting array in the backward (dh, dy, d_lora, d_base) is
+    /// row-local, so restricting to a range slices the full computation
+    /// exactly: `backward_range(trace, 0, rows)` IS the historical
+    /// full-batch backward bitwise, while per-sample ranges export the
+    /// fixed-granularity gradients of the data-parallel reduction.
+    fn backward_range(&self, trace: &Trace, row0: usize, row1: usize) -> Vec<LayerGrads> {
         let d = self.info.d_model;
         let r = self.info.rank;
         let s = self.info.scale as f32;
-        let rows = trace.h_final.len() / d;
+        let rows = row1 - row0;
         let act = ActShape::new(rows, d);
         let eps = Dtype::F32.division_eps();
+        let vocab = self.info.vocab;
         // dh = d_logits @ Embed  [rows, d].
-        let mut dh = matmul_nn(&trace.d_logits, self.embed(), rows, self.info.vocab, d);
+        let d_logits = &trace.d_logits[row0 * vocab..row1 * vocab];
+        let mut dh = matmul_nn(d_logits, self.embed(), rows, vocab, d);
         let mut grads: Vec<LayerGrads> = Vec::with_capacity(self.info.n_layers);
         for l in (0..self.info.n_layers).rev() {
             let tr = &trace.layers[l];
             let (a, b, _) = self.layer_abm(l);
+            let t = &tr.t[row0 * d..row1 * d];
+            let inner = &tr.inner[row0 * d..row1 * d];
             // Through the residual tanh branch: dy = dh * (1 - tanh^2).
             let mut dy = vec![0f32; rows * d];
             for i in 0..rows * d {
-                dy[i] = dh[i] * (1.0 - tr.t[i] * tr.t[i]);
+                dy[i] = dh[i] * (1.0 - t[i] * t[i]);
             }
             // Compose backward + the deterministic d_mag reduction. The
             // kernel computes d_lora = g*s*dy and d_base = (g-1)*dy; the
@@ -552,7 +585,7 @@ impl<'a> NativeModel<'a> {
             let mut d_base = vec![0f32; rows * d];
             let dg = self.kernels.compose().backward_with_dmag(
                 &dy,
-                &tr.inner,
+                inner,
                 &tr.g,
                 s,
                 act,
@@ -567,9 +600,11 @@ impl<'a> NativeModel<'a> {
             let dmag: Vec<f32> =
                 dg.iter().zip(&tr.c).map(|(&dgj, &cj)| dgj / cj.max(eps)).collect();
             // Adapter factors: lora = u @ B^T, u = h @ A^T.
-            let db = matmul_tn(&d_lora, &tr.u, rows, d, r);
+            let u = &tr.u[row0 * r..row1 * r];
+            let h = &tr.h[row0 * d..row1 * d];
+            let db = matmul_tn(&d_lora, u, rows, d, r);
             let du = matmul_nn(&d_lora, b, rows, d, r);
-            let da = matmul_tn(&du, &tr.h, rows, r, d);
+            let da = matmul_tn(&du, h, rows, r, d);
             // dh_prev = dh (residual skip) + d_base @ W + du @ A.
             let dh_w = matmul_nn(&d_base, self.layer_w(l), rows, d, d);
             let dh_a = matmul_nn(&du, a, rows, r, d);
@@ -596,6 +631,48 @@ impl<'a> NativeModel<'a> {
             grads.into_iter().flat_map(|g| [g.a, g.b, g.mag]).collect();
         Ok((trace.loss, flat))
     }
+
+    /// Per-sample gradient export for a `[mb, seq+1]` micro-batch — the
+    /// data-parallel shard computation. One batched forward (row-local,
+    /// so bitwise-independent of the batching), then an independent
+    /// backward per sample over its `seq` rows. The cross-entropy
+    /// gradient is normalized by `total_rows` (the EFFECTIVE batch), so
+    /// samples from different shards reduce into the whole batch's
+    /// mean-loss gradient. Returns, per sample in batch order, the f64
+    /// loss sum and the flat trainable gradients (leaf order).
+    pub fn loss_and_sample_grads(
+        &self,
+        tokens: &[i32],
+        mb: usize,
+        total_rows: usize,
+    ) -> Result<Vec<(f64, Vec<Vec<f32>>)>> {
+        let seq = self.info.seq;
+        if total_rows < mb * seq {
+            bail!(
+                "effective-batch rows {total_rows} < the micro-batch's own {} rows",
+                mb * seq
+            );
+        }
+        self.check_tokens(tokens)?;
+        let (inputs, targets) = split_tokens(tokens, mb, seq);
+        let inv = 1.0 / total_rows as f32;
+        let trace = self.train_forward_norm(&inputs, &targets, inv)?;
+        let mut out = Vec::with_capacity(mb);
+        for smp in 0..mb {
+            let (r0, r1) = (smp * seq, (smp + 1) * seq);
+            let grads = self.backward_range(&trace, r0, r1);
+            let flat: Vec<Vec<f32>> =
+                grads.into_iter().flat_map(|g| [g.a, g.b, g.mag]).collect();
+            // Sequential f64 loss accumulation in row order within the
+            // sample — the reducer continues it across samples.
+            let mut loss_sum = 0f64;
+            for &t in &trace.loss_terms[r0..r1] {
+                loss_sum += t;
+            }
+            out.push((loss_sum, flat));
+        }
+        Ok(out)
+    }
 }
 
 /// Split a [bs, seq+1] block into inputs [bs, seq] and targets [bs, seq].
@@ -616,10 +693,19 @@ fn split_tokens(tokens: &[i32], bs: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
 /// (softmax - onehot) / rows. f64 log-sum-exp accumulation.
 fn xent_forward_backward(logits: &[f32], targets: &[i32], vocab: usize) -> (f32, Vec<f32>) {
     let rows = targets.len();
+    let (terms, d) = xent_grad(logits, targets, vocab, 1.0 / rows as f32);
+    (xent_mean_loss(&terms, rows), d)
+}
+
+/// Cross-entropy core with an explicit gradient-normalization constant:
+/// per-row f64 loss terms (`lse - z[target]`, unreduced) + the gradient
+/// `(softmax - onehot) * inv`. Rows are fully independent, so per-row
+/// outputs are bitwise-identical under any batching of the rows.
+fn xent_grad(logits: &[f32], targets: &[i32], vocab: usize, inv: f32) -> (Vec<f64>, Vec<f32>) {
+    let rows = targets.len();
     debug_assert_eq!(logits.len(), rows * vocab);
-    let inv = 1.0 / rows as f32;
     let mut d = vec![0f32; rows * vocab];
-    let mut loss = 0f64;
+    let mut terms = vec![0f64; rows];
     for i in 0..rows {
         let zrow = &logits[i * vocab..(i + 1) * vocab];
         let max = zrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -629,14 +715,24 @@ fn xent_forward_backward(logits: &[f32], targets: &[i32], vocab: usize) -> (f32,
         }
         let lse = sum.ln() + max as f64;
         let t = targets[i] as usize;
-        loss += lse - zrow[t] as f64;
+        terms[i] = lse - zrow[t] as f64;
         let drow = &mut d[i * vocab..(i + 1) * vocab];
         for j in 0..vocab {
             drow[j] = (((zrow[j] - max) as f64).exp() / sum) as f32 * inv;
         }
         drow[t] -= inv;
     }
-    ((loss / rows as f64) as f32, d)
+    (terms, d)
+}
+
+/// Mean loss from per-row terms: sequential f64 accumulation in row
+/// order (bitwise-matching the historical interleaved accumulation).
+fn xent_mean_loss(terms: &[f64], rows: usize) -> f32 {
+    let mut loss = 0f64;
+    for &t in terms {
+        loss += t;
+    }
+    (loss / rows as f64) as f32
 }
 
 /// AdamW with bias correction, in-place over the trainable leaves.
@@ -872,6 +968,83 @@ mod tests {
         assert!(merged_infer_logits(&info, &merged, &[-1], 1, 1).is_err());
         // Malformed params error out of the merge.
         assert!(merge_adapter_params(&info, &AdapterParams::default()).is_err());
+    }
+
+    #[test]
+    fn sample_grads_are_batching_invariant_and_track_full_batch() {
+        let info = tiny_info();
+        let leaves = init_leaves(&info, 11);
+        let mut trainable = leaves.trainable.clone();
+        // Move B off zero so every gradient path is active.
+        let mut rng = Rng::new(5);
+        set_f32(&mut trainable[1], |b| {
+            for x in b.iter_mut() {
+                *x = rng.normal() as f32 * 0.05;
+            }
+        });
+        let kernels = variant_kernels("fused", &info, true).unwrap();
+        let model = NativeModel::new(&info, &leaves.frozen, &trainable, kernels).unwrap();
+        let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 6);
+        let bs = info.train_batch;
+        let seq1 = info.seq + 1;
+        let tokens = corpus.block(1, bs, seq1);
+        let total_rows = bs * info.seq;
+
+        // The whole batch as one micro-batch, vs an uneven [3, 1] split
+        // with the same effective-batch normalization: per-sample exports
+        // must be BITWISE identical — the property the data-parallel
+        // reduction's worker-count invariance rests on.
+        let whole = model.loss_and_sample_grads(&tokens, bs, total_rows).unwrap();
+        assert_eq!(whole.len(), bs);
+        let cut = 3 * seq1;
+        let first = model.loss_and_sample_grads(&tokens[..cut], 3, total_rows).unwrap();
+        let second = model.loss_and_sample_grads(&tokens[cut..], 1, total_rows).unwrap();
+        let split: Vec<_> = first.into_iter().chain(second).collect();
+        assert_eq!(split.len(), bs);
+        for (smp, (w, s)) in whole.iter().zip(&split).enumerate() {
+            assert_eq!(w.0.to_bits(), s.0.to_bits(), "sample {smp} loss sum");
+            for (leaf, (gw, gs)) in w.1.iter().zip(&s.1).enumerate() {
+                assert_eq!(gw.len(), gs.len());
+                for (i, (x, y)) in gw.iter().zip(gs).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "sample {smp} leaf {leaf} elem {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+
+        // Reduced over all samples (f64, sample order), the result tracks
+        // the legacy full-batch gradient to reassociation noise.
+        let (legacy_loss, legacy) = model.loss_and_grads(&tokens, bs).unwrap();
+        let mut loss_sum = 0f64;
+        let mut acc: Vec<Vec<f64>> = legacy.iter().map(|g| vec![0f64; g.len()]).collect();
+        for (ls, grads) in &whole {
+            loss_sum += ls;
+            for (a, g) in acc.iter_mut().zip(grads) {
+                for (ai, &gi) in a.iter_mut().zip(g) {
+                    *ai += gi as f64;
+                }
+            }
+        }
+        let reduced_loss = (loss_sum / total_rows as f64) as f32;
+        assert!(
+            (reduced_loss - legacy_loss).abs() < 1e-6,
+            "loss: reduced {reduced_loss} vs legacy {legacy_loss}"
+        );
+        for (leaf, (a, g)) in acc.iter().zip(&legacy).enumerate() {
+            for (i, (&r, &l)) in a.iter().zip(g).enumerate() {
+                let r = r as f32;
+                assert!(
+                    (r - l).abs() <= 1e-5 * l.abs().max(1e-4),
+                    "leaf {leaf} elem {i}: reduced {r} vs legacy {l}"
+                );
+            }
+        }
+
+        // A shard claiming a smaller effective batch than itself errors.
+        assert!(model.loss_and_sample_grads(&tokens, bs, info.seq).is_err());
     }
 
     #[test]

@@ -197,7 +197,9 @@ pub fn find(name: &str) -> Option<&'static ModelSpec> {
     let needle = name.to_lowercase();
     MODELS
         .iter()
-        .find(|m| m.name.to_lowercase().contains(&needle) || m.hf_id.to_lowercase().contains(&needle))
+        .find(|m| {
+            m.name.to_lowercase().contains(&needle) || m.hf_id.to_lowercase().contains(&needle)
+        })
 }
 
 #[cfg(test)]

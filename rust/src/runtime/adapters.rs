@@ -92,6 +92,15 @@ pub struct Adapter {
     pub seed: u64,
     /// Optimizer step the leaves were captured at.
     pub step: i32,
+    /// Effective-batch provenance: data-parallel gradient workers the
+    /// training run used (1 = single-engine path).
+    pub train_workers: u32,
+    /// Effective-batch provenance: micro-steps accumulated per optimizer
+    /// update (effective batch = `grad_accum * train_batch`).
+    pub grad_accum: u32,
+    /// Effective batch size (sequences per optimizer update) the leaves
+    /// were trained with. 0 = unrecorded (a pre-provenance checkpoint).
+    pub effective_batch: u32,
     /// Frozen + trainable leaves, manifest flatten order.
     pub params: AdapterParams,
 }
@@ -125,8 +134,25 @@ impl Adapter {
             scale: info.scale,
             seed,
             step,
+            train_workers: 1,
+            grad_accum: 1,
+            effective_batch: info.train_batch as u32,
             params,
         })
+    }
+
+    /// Record the training run's effective-batch provenance (the
+    /// data-parallel trainer calls this when snapshotting).
+    pub fn with_provenance(
+        mut self,
+        train_workers: u32,
+        grad_accum: u32,
+        effective_batch: u32,
+    ) -> Adapter {
+        self.train_workers = train_workers;
+        self.grad_accum = grad_accum;
+        self.effective_batch = effective_batch;
+        self
     }
 
     /// Total parameter elements across all leaves.
@@ -169,6 +195,9 @@ impl Adapter {
             // through the JSON f64 number model.
             ("seed", Json::Str(self.seed.to_string())),
             ("step", Json::Num(self.step as f64)),
+            ("train_workers", Json::Num(self.train_workers as f64)),
+            ("grad_accum", Json::Num(self.grad_accum as f64)),
+            ("effective_batch", Json::Num(self.effective_batch as f64)),
             ("frozen", leaf_meta(&self.params.frozen)),
             ("trainable", leaf_meta(&self.params.trainable)),
         ])
@@ -298,6 +327,17 @@ impl Adapter {
         let seed = seed_s
             .parse::<u64>()
             .with_context(|| format!("checkpoint seed {seed_s:?} is not a u64"))?;
+        // Provenance keys are additive (format version unchanged):
+        // checkpoints written before the data-parallel trainer default to
+        // the single-engine provenance, with effective_batch 0 =
+        // "unrecorded".
+        let prov = |key: &str, default: u32| -> u32 {
+            header
+                .opt(key)
+                .and_then(|v| v.as_f64().ok())
+                .map(|v| v as u32)
+                .unwrap_or(default)
+        };
         Ok(Adapter {
             name,
             config: header.get("config")?.as_str()?.to_string(),
@@ -305,6 +345,9 @@ impl Adapter {
             scale: header.get("scale")?.as_f64()?,
             seed,
             step: header.get("step")?.as_i64()? as i32,
+            train_workers: prov("train_workers", 1),
+            grad_accum: prov("grad_accum", 1),
+            effective_batch: prov("effective_batch", 0),
             params: AdapterParams { frozen, trainable },
         })
     }
@@ -371,6 +414,9 @@ pub struct AdapterSummary {
     pub config: String,
     pub rank: usize,
     pub step: i32,
+    /// Effective batch size the checkpoint was trained with
+    /// (0 = unrecorded pre-provenance checkpoint).
+    pub effective_batch: u32,
     pub file_bytes: u64,
 }
 
@@ -519,6 +565,10 @@ impl AdapterStore {
                     .ok()
                     .and_then(|v| v.as_i64().ok())
                     .unwrap_or(0) as i32,
+                effective_batch: header
+                    .opt("effective_batch")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u32,
                 file_bytes,
             });
         }
@@ -585,6 +635,48 @@ mod tests {
             .unwrap();
         let params = AdapterParams::from_flat(info, leaves).unwrap();
         Adapter::new(name, info, seed as u64, 0, params).unwrap()
+    }
+
+    #[test]
+    fn provenance_roundtrips_and_defaults_for_pre_provenance_headers() {
+        let ts = TestStore::new("prov");
+        // Fresh adapters carry the single-engine provenance by default.
+        let fresh = tiny_adapter("fresh", 1);
+        assert_eq!((fresh.train_workers, fresh.grad_accum), (1, 1));
+        let info = NativeEngine::new().config("tiny").unwrap();
+        assert_eq!(fresh.effective_batch as usize, info.train_batch);
+        // Recorded provenance survives the checkpoint round trip.
+        let a = tiny_adapter("prov", 3).with_provenance(4, 2, 8);
+        ts.store.save(&a).unwrap();
+        let back = ts.store.load("prov").unwrap();
+        assert_eq!(back.train_workers, 4);
+        assert_eq!(back.grad_accum, 2);
+        assert_eq!(back.effective_batch, 8);
+
+        // A checkpoint written before the provenance keys existed decodes
+        // with the defaults (workers/accum 1, effective batch unrecorded).
+        let header = Json::obj(vec![
+            ("name", Json::Str("old".into())),
+            ("config", Json::Str("tiny".into())),
+            ("rank", Json::Num(4.0)),
+            ("scale", Json::Num(2.0)),
+            ("seed", Json::Str("0".into())),
+            ("step", Json::Num(0.0)),
+            ("frozen", Json::Arr(vec![])),
+            ("trainable", Json::Arr(vec![])),
+        ])
+        .to_string();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        let sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        let old = Adapter::decode(&bytes).unwrap();
+        assert_eq!(old.train_workers, 1);
+        assert_eq!(old.grad_accum, 1);
+        assert_eq!(old.effective_batch, 0);
     }
 
     fn assert_bitwise_eq(a: &Adapter, b: &Adapter) {

@@ -22,9 +22,9 @@ use anyhow::{bail, Result};
 
 use crate::runtime::native::NativeEngine;
 use crate::runtime::ops::{
-    ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq,
-    EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, TrainStepReq,
-    TrainStepResp,
+    ApplyUpdateReq, ApplyUpdateResp, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp,
+    EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq,
+    InitResp, LossAndGradsReq, LossAndGradsResp, TrainStepReq, TrainStepResp,
 };
 use crate::runtime::{manifest, ConfigInfo, Engine, Tensor};
 use crate::util::lock_unpoisoned;
@@ -140,6 +140,14 @@ impl ExecBackend {
                 let info = self.config(&r.config)?;
                 EngineOut::TrainStep(TrainStepResp::unpack(&info, outs)?)
             }
+            EngineOp::LossAndGrads(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::LossAndGrads(LossAndGradsResp::unpack(&info, outs)?)
+            }
+            EngineOp::ApplyUpdate(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::ApplyUpdate(ApplyUpdateResp::unpack(&info, outs)?)
+            }
             EngineOp::Eval(_) => EngineOut::Eval(EvalResp::unpack(outs)?),
             EngineOp::Infer(r) => {
                 let info = self.config(&r.config)?;
@@ -167,6 +175,22 @@ impl ExecBackend {
         match self.execute(&EngineOp::TrainStep(req))? {
             EngineOut::TrainStep(r) => Ok(r),
             other => bail!("engine returned {other:?} for a train op"),
+        }
+    }
+
+    /// One data-parallel gradient shard (no optimizer step).
+    pub fn loss_and_grads(&self, req: LossAndGradsReq) -> Result<LossAndGradsResp> {
+        match self.execute(&EngineOp::LossAndGrads(req))? {
+            EngineOut::LossAndGrads(r) => Ok(r),
+            other => bail!("engine returned {other:?} for a loss_and_grads op"),
+        }
+    }
+
+    /// One central AdamW step over pre-reduced gradients.
+    pub fn apply_update(&self, req: ApplyUpdateReq) -> Result<ApplyUpdateResp> {
+        match self.execute(&EngineOp::ApplyUpdate(req))? {
+            EngineOut::ApplyUpdate(r) => Ok(r),
+            other => bail!("engine returned {other:?} for an apply_update op"),
         }
     }
 

@@ -111,8 +111,18 @@ impl Manifest {
 
         let mut artifacts = BTreeMap::new();
         for (name, v) in root.get("artifacts")?.as_obj()? {
-            let inputs = v.get("inputs")?.as_arr()?.iter().map(IoSlot::parse).collect::<Result<_>>()?;
-            let outputs = v.get("outputs")?.as_arr()?.iter().map(IoSlot::parse).collect::<Result<_>>()?;
+            let inputs = v
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSlot::parse)
+                .collect::<Result<_>>()?;
+            let outputs = v
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSlot::parse)
+                .collect::<Result<_>>()?;
             artifacts.insert(
                 name.clone(),
                 ArtifactInfo {

@@ -39,11 +39,12 @@ pub use backend::{BackendSpec, ExecBackend, MockExec};
 pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
 pub use native::NativeEngine;
 pub use ops::{
-    AdapterParams, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
-    EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant,
-    MergedParams, OptState, TrainStepReq, TrainStepResp, Variant,
+    reduce_sample_grads, AdapterParams, ApplyUpdateReq, ApplyUpdateResp, ComposeReq,
+    ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp,
+    InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant, LossAndGradsReq,
+    LossAndGradsResp, MergedParams, OptState, SampleGrads, TrainStepReq, TrainStepResp, Variant,
 };
-pub use pool::{EnginePool, PoolJob};
+pub use pool::{EnginePool, GradReducer, PoolJob};
 
 /// A host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone)]
@@ -353,7 +354,10 @@ mod tests {
         let inputs = [
             Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 1.0)),
             Tensor::f32(vec![rows, d_out], rng.normal_vec_f32(rows * d_out, 0.3)),
-            Tensor::f32(vec![d_out], (0..d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect()),
+            Tensor::f32(
+                vec![d_out],
+                (0..d_out).map(|_| 1.0 + rng.normal() as f32 * 0.002).collect(),
+            ),
         ];
         let e = eng.run("compose_eager_512x2048", &inputs).unwrap();
         let f = eng.run("compose_fused_512x2048", &inputs).unwrap();

@@ -34,9 +34,10 @@ use crate::kernels::{registry, BackendKind};
 use crate::models::forward::{self, init_leaves, kernels_for, NativeModel};
 use crate::numerics::half::Dtype;
 use crate::runtime::ops::{
-    AdapterParams, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
-    EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant,
-    MergedParams, OptState, TrainStepReq, TrainStepResp, Variant,
+    AdapterParams, ApplyUpdateReq, ApplyUpdateResp, ComposeReq, ComposeResp, DoraLinearReq,
+    DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq, InferReq, InferResp,
+    InitReq, InitResp, LinearVariant, LossAndGradsReq, LossAndGradsResp, MergedParams, OptState,
+    SampleGrads, TrainStepReq, TrainStepResp, Variant,
 };
 use crate::runtime::{ConfigInfo, Tensor};
 
@@ -117,6 +118,12 @@ impl NativeEngine {
             EngineOp::TrainStep(r) => {
                 run_train(self.config(&r.config)?, r).map(EngineOut::TrainStep)
             }
+            EngineOp::LossAndGrads(r) => {
+                run_loss_and_grads(self.config(&r.config)?, r).map(EngineOut::LossAndGrads)
+            }
+            EngineOp::ApplyUpdate(r) => {
+                run_apply_update(self.config(&r.config)?, r).map(EngineOut::ApplyUpdate)
+            }
             EngineOp::Eval(r) => run_eval(self.config(&r.config)?, r).map(EngineOut::Eval),
             EngineOp::Infer(r) => run_infer(self.config(&r.config)?, r).map(EngineOut::Infer),
             EngineOp::InferMerged(r) => {
@@ -160,6 +167,17 @@ impl NativeEngine {
                     ArtifactKind::Eval(info, variant)
                 });
             }
+        }
+        if let Some(rest) = name.strip_prefix("loss_and_grads_") {
+            let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
+                format!("artifact {name:?}: expected loss_and_grads_<cfg>_<variant>")
+            })?;
+            let variant =
+                Variant::parse(variant).with_context(|| format!("artifact {name:?}"))?;
+            return Ok(ArtifactKind::LossAndGrads(self.config(cfg)?, variant));
+        }
+        if let Some(cfg) = name.strip_prefix("apply_update_") {
+            return Ok(ArtifactKind::ApplyUpdate(self.config(cfg)?));
         }
         // Checked before the generic infer grammar: "infer_merged_tiny"
         // would otherwise parse as config "merged" + variant "tiny".
@@ -227,6 +245,44 @@ impl NativeEngine {
                     tokens: inputs[nf + 3 * nt + 1].clone(),
                 }))
             }
+            ArtifactKind::LossAndGrads(info, variant) => {
+                let nf = info.frozen.len();
+                let nt = info.trainable.len();
+                expect_inputs(name, inputs, nf + nt + 2)?;
+                let rows_t = &inputs[nf + nt + 1];
+                expect_shape(name, "total_rows", rows_t, &[])?;
+                let total_rows = rows_t.as_i32().context("total_rows must be i32")?[0];
+                if total_rows <= 0 {
+                    bail!("op {name:?}: total_rows {total_rows} must be positive");
+                }
+                Ok(EngineOp::LossAndGrads(LossAndGradsReq {
+                    config: info.name.clone(),
+                    variant,
+                    params: Arc::new(AdapterParams {
+                        frozen: inputs[..nf].to_vec(),
+                        trainable: inputs[nf..nf + nt].to_vec(),
+                    }),
+                    tokens: inputs[nf + nt].clone(),
+                    total_rows: total_rows as usize,
+                }))
+            }
+            ArtifactKind::ApplyUpdate(info) => {
+                let nt = info.trainable.len();
+                expect_inputs(name, inputs, 4 * nt + 1)?;
+                let step_t = &inputs[3 * nt];
+                expect_shape(name, "step", step_t, &[])?;
+                let step = step_t.as_i32().context("step must be i32")?[0];
+                Ok(EngineOp::ApplyUpdate(ApplyUpdateReq {
+                    config: info.name.clone(),
+                    trainable: inputs[..nt].to_vec(),
+                    opt: OptState {
+                        m1: inputs[nt..2 * nt].to_vec(),
+                        m2: inputs[2 * nt..3 * nt].to_vec(),
+                        step,
+                    },
+                    grads: inputs[3 * nt + 1..].to_vec(),
+                }))
+            }
             ArtifactKind::Eval(info, variant) => {
                 let (params, tokens) = split_params_tokens(info, name, inputs)?;
                 Ok(EngineOp::Eval(EvalReq {
@@ -286,6 +342,8 @@ impl NativeEngine {
 enum ArtifactKind {
     Init(&'static ConfigInfo),
     Train(&'static ConfigInfo, Variant),
+    LossAndGrads(&'static ConfigInfo, Variant),
+    ApplyUpdate(&'static ConfigInfo),
     Eval(&'static ConfigInfo, Variant),
     Infer(&'static ConfigInfo, Variant),
     InferMerged(&'static ConfigInfo),
@@ -421,6 +479,88 @@ fn run_train(info: &'static ConfigInfo, req: &TrainStepReq) -> Result<TrainStepR
         trainable: params,
         opt: OptState { m1, m2, step: step0 + k as i32 },
         losses,
+    })
+}
+
+/// LossAndGrads: per-sample gradients for one `[mb, seq+1]` micro-batch
+/// shard of an effective batch with `total_rows` rows — the data-parallel
+/// gradient op. No optimizer state touched; the update runs centrally
+/// through [`run_apply_update`] after the reduction.
+fn run_loss_and_grads(
+    info: &'static ConfigInfo,
+    req: &LossAndGradsReq,
+) -> Result<LossAndGradsResp> {
+    let label = format!("loss_and_grads_{}_{}", info.name, req.variant.as_str());
+    validate_params(info, &label, &req.params)?;
+    let seq1 = info.seq + 1;
+    if req.tokens.shape.len() != 2 || req.tokens.shape[1] != seq1 || req.tokens.shape[0] == 0 {
+        bail!(
+            "op {label:?} input \"tokens\": shape {:?} != expected [mb >= 1, {seq1}]",
+            req.tokens.shape
+        );
+    }
+    let mb = req.tokens.shape[0];
+    let tokens = req.tokens.as_i32().context("tokens must be i32")?;
+    let kernels = kernels_for(req.variant, info, true)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
+    let per_sample = model.loss_and_sample_grads(tokens, mb, req.total_rows)?;
+    let samples = per_sample
+        .into_iter()
+        .map(|(loss_sum, grads)| SampleGrads {
+            loss_sum,
+            grads: grads
+                .into_iter()
+                .zip(&req.params.trainable)
+                .map(|(g, t)| Tensor::f32(t.shape.clone(), g))
+                .collect(),
+        })
+        .collect();
+    Ok(LossAndGradsResp { samples })
+}
+
+/// ApplyUpdate: ONE central AdamW step over pre-reduced gradients — the
+/// optimizer half of the split train step.
+fn run_apply_update(info: &'static ConfigInfo, req: &ApplyUpdateReq) -> Result<ApplyUpdateResp> {
+    let label = format!("apply_update_{}", info.name);
+    let nt = info.trainable.len();
+    for (which, leaves) in [
+        ("trainable", &req.trainable),
+        ("m1", &req.opt.m1),
+        ("m2", &req.opt.m2),
+        ("grads", &req.grads),
+    ] {
+        if leaves.len() != nt {
+            bail!("op {label:?}: {which} has {} leaves, expected {nt}", leaves.len());
+        }
+        for (slot, (l, t)) in leaves.iter().zip(&req.trainable).enumerate() {
+            expect_f32(&label, &format!("{which}[{slot}]"), l, &t.shape)?;
+        }
+    }
+    // Trainable shapes themselves must match the config (the zip above
+    // only checks internal consistency).
+    let d = info.d_model;
+    let r = info.rank;
+    for l in 0..info.n_layers {
+        expect_f32(&label, &info.trainable[3 * l], &req.trainable[3 * l], &[r, d])?;
+        expect_f32(&label, &info.trainable[3 * l + 1], &req.trainable[3 * l + 1], &[d, r])?;
+        expect_f32(&label, &info.trainable[3 * l + 2], &req.trainable[3 * l + 2], &[d])?;
+    }
+    let step0 = req.opt.step;
+    if step0 < 0 {
+        bail!("op {label:?}: step counter {step0} is negative");
+    }
+    let mut params = req.trainable.clone();
+    let mut m1 = req.opt.m1.clone();
+    let mut m2 = req.opt.m2.clone();
+    let grads: Vec<Vec<f32>> = req
+        .grads
+        .iter()
+        .map(|t| t.as_f32().map(<[f32]>::to_vec))
+        .collect::<Result<_>>()?;
+    forward::adamw_step(&mut params, &mut m1, &mut m2, &grads, step0 + 1);
+    Ok(ApplyUpdateResp {
+        trainable: params,
+        opt: OptState { m1, m2, step: step0 + 1 },
     })
 }
 
@@ -694,6 +834,187 @@ mod tests {
     }
 
     #[test]
+    fn split_grad_path_tracks_the_fused_train_step() {
+        use crate::runtime::ops::reduce_sample_grads;
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let nf = info.frozen.len();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(3)]).unwrap();
+        let params = AdapterParams {
+            frozen: leaves[..nf].to_vec(),
+            trainable: leaves[nf..].to_vec(),
+        };
+        let k = info.chunk_steps;
+        let bs = info.train_batch;
+        let seq1 = info.seq + 1;
+        let total_rows = bs * info.seq;
+        let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 13);
+        let block = corpus.block(k, bs, seq1);
+
+        // Legacy chunk: k in-graph optimizer steps.
+        let legacy = match eng
+            .execute(&EngineOp::TrainStep(TrainStepReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params: Arc::new(params.clone()),
+                opt: OptState::zeros_like(&params.trainable),
+                tokens: Tensor::i32(vec![k, bs, seq1], block.clone()),
+            }))
+            .unwrap()
+        {
+            EngineOut::TrainStep(r) => r,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+
+        // Split path: per step, LossAndGrads over the full batch as one
+        // shard, deterministic reduce, one central ApplyUpdate.
+        let mut trainable = params.trainable.clone();
+        let mut opt = OptState::zeros_like(&trainable);
+        let mut losses = Vec::new();
+        for i in 0..k {
+            let step_params = AdapterParams {
+                frozen: params.frozen.clone(),
+                trainable: trainable.clone(),
+            };
+            let resp = match eng
+                .execute(&EngineOp::LossAndGrads(LossAndGradsReq {
+                    config: "tiny".into(),
+                    variant: Variant::Fused,
+                    params: Arc::new(step_params),
+                    tokens: Tensor::i32(
+                        vec![bs, seq1],
+                        block[i * bs * seq1..(i + 1) * bs * seq1].to_vec(),
+                    ),
+                    total_rows,
+                }))
+                .unwrap()
+            {
+                EngineOut::LossAndGrads(r) => r,
+                other => panic!("wrong response kind: {other:?}"),
+            };
+            assert_eq!(resp.samples.len(), bs);
+            let (loss, grads) = reduce_sample_grads(&resp.samples, total_rows).unwrap();
+            losses.push(loss);
+            let upd = match eng
+                .execute(&EngineOp::ApplyUpdate(ApplyUpdateReq {
+                    config: "tiny".into(),
+                    trainable,
+                    opt,
+                    grads,
+                }))
+                .unwrap()
+            {
+                EngineOut::ApplyUpdate(r) => r,
+                other => panic!("wrong response kind: {other:?}"),
+            };
+            trainable = upd.trainable;
+            opt = upd.opt;
+        }
+        assert_eq!(opt.step, k as i32);
+        // The split path differs from the in-graph chunk only by the
+        // per-sample f64 reduction's reassociation — per-step losses and
+        // final leaves track to well under test tolerance.
+        for (i, (&l, &tl)) in losses.iter().zip(&legacy.losses).enumerate() {
+            assert!((l - tl).abs() < 1e-5, "step {i}: split {l} vs chunk {tl}");
+        }
+        for (slot, (a, b)) in trainable.iter().zip(&legacy.trainable).enumerate() {
+            let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            for (i, (&x, &y)) in av.iter().zip(bv).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-5 * y.abs().max(1e-3),
+                    "leaf {slot} elem {i}: split {x} vs chunk {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loss_and_grads_shim_matches_typed_and_validates() {
+        use crate::runtime::ops::decode_loss_sums;
+        let eng = NativeEngine::new();
+        assert!(eng.supports("loss_and_grads_tiny_fused"));
+        assert!(eng.supports("apply_update_tiny"));
+        assert!(!eng.supports("loss_and_grads_tiny_nope"));
+        assert!(!eng.supports("apply_update_missingcfg"));
+
+        let info = eng.config("tiny").unwrap();
+        let nf = info.frozen.len();
+        let nt = info.trainable.len();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(1)]).unwrap();
+        let bs = 2usize; // a shard smaller than train_batch
+        let seq1 = info.seq + 1;
+        let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 4);
+        let tokens = Tensor::i32(vec![bs, seq1], corpus.block(1, bs, seq1));
+        let total_rows = info.train_batch * info.seq;
+
+        let typed = match eng
+            .execute(&EngineOp::LossAndGrads(LossAndGradsReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                params: Arc::new(AdapterParams {
+                    frozen: leaves[..nf].to_vec(),
+                    trainable: leaves[nf..].to_vec(),
+                }),
+                tokens: tokens.clone(),
+                total_rows,
+            }))
+            .unwrap()
+        {
+            EngineOut::LossAndGrads(r) => r,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        assert_eq!(typed.samples.len(), bs);
+        assert_eq!(typed.samples[0].grads.len(), nt);
+
+        // The string shim on identical inputs produces the identical
+        // flattened outputs (grads sample-major, loss sums bit-packed).
+        let mut inputs = leaves.clone();
+        inputs.push(tokens);
+        inputs.push(Tensor::scalar_i32(total_rows as i32));
+        let outs = eng.run("loss_and_grads_tiny_fused", &inputs).unwrap();
+        assert_eq!(outs.len(), bs * nt + 1);
+        let sums = decode_loss_sums(&outs[bs * nt]).unwrap();
+        for (smp, s) in typed.samples.iter().enumerate() {
+            assert_eq!(s.loss_sum.to_bits(), sums[smp].to_bits(), "sample {smp}");
+            for (leaf, g) in s.grads.iter().enumerate() {
+                assert!(g.bitwise_eq(&outs[smp * nt + leaf]), "sample {smp} leaf {leaf}");
+            }
+        }
+
+        // Validation: wrong tokens rank, zero total_rows, negative step.
+        let mut bad = leaves.clone();
+        bad.push(Tensor::i32(vec![4], vec![1; 4]));
+        bad.push(Tensor::scalar_i32(total_rows as i32));
+        assert!(eng.run("loss_and_grads_tiny_fused", &bad).is_err());
+        let mut bad = leaves.clone();
+        bad.push(Tensor::i32(vec![1, seq1], vec![1; seq1]));
+        bad.push(Tensor::scalar_i32(0));
+        assert!(eng.run("loss_and_grads_tiny_fused", &bad).is_err());
+        let zeros: Vec<Tensor> = leaves[nf..]
+            .iter()
+            .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.elems()]))
+            .collect();
+        let err = eng
+            .execute(&EngineOp::ApplyUpdate(ApplyUpdateReq {
+                config: "tiny".into(),
+                trainable: leaves[nf..].to_vec(),
+                opt: OptState { m1: zeros.clone(), m2: zeros.clone(), step: -1 },
+                grads: zeros.clone(),
+            }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("negative"), "{err:#}");
+        let err = eng
+            .execute(&EngineOp::ApplyUpdate(ApplyUpdateReq {
+                config: "tiny".into(),
+                trainable: leaves[nf..].to_vec(),
+                opt: OptState { m1: zeros.clone(), m2: zeros.clone(), step: 0 },
+                grads: zeros[..nt - 1].to_vec(),
+            }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("leaves"), "{err:#}");
+    }
+
+    #[test]
     fn infer_contract_and_validation() {
         let eng = NativeEngine::new();
         let info = eng.config("tiny").unwrap();
@@ -811,7 +1132,10 @@ mod tests {
             );
         }
         // Malformed merged params error, never panic: wrong layer count...
-        let short = MergedParams { embed: merged.embed.clone(), layers: merged.layers[..1].to_vec() };
+        let short = MergedParams {
+            embed: merged.embed.clone(),
+            layers: merged.layers[..1].to_vec(),
+        };
         let err = eng
             .execute(&EngineOp::InferMerged(InferMergedReq {
                 config: "tiny".into(),

@@ -10,6 +10,10 @@
 //!
 //! * [`InitReq`] / [`InitResp`] — seeded in-graph parameter init.
 //! * [`TrainStepReq`] / [`TrainStepResp`] — one chunk of optimizer steps.
+//! * [`LossAndGradsReq`] / [`LossAndGradsResp`] — one micro-batch's
+//!   per-sample gradients, no optimizer step (the data-parallel shard op).
+//! * [`ApplyUpdateReq`] / [`ApplyUpdateResp`] — one central AdamW step
+//!   over pre-reduced gradients.
 //! * [`EvalReq`] / [`EvalResp`] — held-out mean loss.
 //! * [`InferReq`] / [`InferResp`] — last-position logits (serving).
 //! * [`DoraLinearReq`] / [`DoraLinearResp`] — one adapted module.
@@ -268,6 +272,204 @@ impl TrainStepResp {
     }
 }
 
+/// One data-parallel gradient shard: loss + per-sample gradients for a
+/// `[mb, seq+1]` micro-batch, WITHOUT the optimizer step (that runs
+/// centrally via [`ApplyUpdateReq`] after the reduction). `mb` may be any
+/// size >= 1 — shards of an unevenly divided batch are first-class.
+///
+/// `total_rows` is the row count (`effective_batch * seq`) of the
+/// EFFECTIVE batch this shard belongs to: the cross-entropy gradient is
+/// normalized by the effective batch, not the shard, so per-sample
+/// gradients from different shards reduce into exactly the mean-loss
+/// gradient of the whole batch.
+#[derive(Debug, Clone)]
+pub struct LossAndGradsReq {
+    pub config: String,
+    pub variant: Variant,
+    pub params: Arc<AdapterParams>,
+    /// `[mb, seq+1]` micro-batch token block.
+    pub tokens: Tensor,
+    /// Effective-batch row count (the gradient normalization divisor).
+    pub total_rows: usize,
+}
+
+/// One sample's (sequence's) gradient export: the fixed shard granularity
+/// of the deterministic reduction. The f32 gradients and the f64 loss sum
+/// are computed from this sample alone, so they are bitwise-independent
+/// of how samples were grouped into micro-batches or spread over workers.
+#[derive(Debug, Clone)]
+pub struct SampleGrads {
+    /// f64 sum of the sample's per-row cross-entropy terms (the reducer
+    /// divides by `total_rows` once, centrally).
+    pub loss_sum: f64,
+    /// Per-leaf f32 gradients, trainable leaf order.
+    pub grads: Vec<Tensor>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LossAndGradsResp {
+    /// One entry per sample of the micro-batch, in batch order.
+    pub samples: Vec<SampleGrads>,
+}
+
+impl LossAndGradsResp {
+    pub fn unpack(info: &ConfigInfo, mut outs: Vec<Tensor>) -> Result<LossAndGradsResp> {
+        let nt = info.trainable.len();
+        if nt == 0 || outs.is_empty() || (outs.len() - 1) % nt != 0 {
+            bail!(
+                "loss_and_grads op returned {} outputs, expected mb*{nt} + 1",
+                outs.len()
+            );
+        }
+        let sums = decode_loss_sums(&outs.pop().expect("non-empty"))?;
+        let mb = outs.len() / nt;
+        if sums.len() != mb {
+            bail!(
+                "loss_and_grads op returned {} loss sums for {mb} samples",
+                sums.len()
+            );
+        }
+        let mut samples = Vec::with_capacity(mb);
+        for (smp, sum) in sums.into_iter().enumerate() {
+            let grads = outs[smp * nt..(smp + 1) * nt].to_vec();
+            for (slot, g) in grads.iter().enumerate() {
+                g.as_f32()
+                    .with_context(|| format!("sample {smp} gradient leaf {slot}"))?;
+            }
+            samples.push(SampleGrads { loss_sum: sum, grads });
+        }
+        Ok(LossAndGradsResp { samples })
+    }
+}
+
+/// Encode per-sample f64 loss sums as an `[n, 2]` i32 tensor of raw bit
+/// halves (hi, lo) — the string-shim transport for f64 values over the
+/// f32/i32 tensor boundary. Bit-exact round trip.
+pub fn encode_loss_sums(sums: &[f64]) -> Tensor {
+    let mut data = Vec::with_capacity(2 * sums.len());
+    for &s in sums {
+        let bits = s.to_bits();
+        data.push((bits >> 32) as i32);
+        data.push(bits as u32 as i32);
+    }
+    Tensor::i32(vec![sums.len(), 2], data)
+}
+
+/// Inverse of [`encode_loss_sums`].
+pub fn decode_loss_sums(t: &Tensor) -> Result<Vec<f64>> {
+    if t.shape.len() != 2 || t.shape[1] != 2 {
+        bail!("loss-sum tensor has shape {:?}, expected [n, 2]", t.shape);
+    }
+    let v = t.as_i32().context("loss-sum tensor")?;
+    Ok(v
+        .chunks_exact(2)
+        .map(|c| f64::from_bits(((c[0] as u32 as u64) << 32) | c[1] as u32 as u64))
+        .collect())
+}
+
+/// The deterministic gradient reduction: for each trainable leaf, an f64
+/// accumulator sums the per-sample f32 gradients IN GLOBAL SAMPLE ORDER
+/// and rounds to f32 once; the per-sample f64 loss sums reduce the same
+/// way and normalize by `total_rows`. Because every per-sample export is
+/// bitwise-independent of sharding and the accumulation order is fixed,
+/// the reduced result is bitwise-identical for ANY worker count and any
+/// contiguous shard plan — the invariant `tests/train_parallel.rs` pins.
+pub fn reduce_sample_grads(
+    samples: &[SampleGrads],
+    total_rows: usize,
+) -> Result<(f32, Vec<Tensor>)> {
+    let first = match samples.first() {
+        Some(s) => s,
+        None => bail!("gradient reduction over zero samples"),
+    };
+    if total_rows == 0 {
+        bail!("gradient reduction with total_rows = 0");
+    }
+    let mut acc: Vec<Vec<f64>> = first
+        .grads
+        .iter()
+        .map(|t| vec![0f64; t.elems()])
+        .collect();
+    let mut loss_sum = 0f64;
+    for (smp, s) in samples.iter().enumerate() {
+        loss_sum += s.loss_sum;
+        if s.grads.len() != acc.len() {
+            bail!(
+                "sample {smp} has {} gradient leaves, sample 0 has {}",
+                s.grads.len(),
+                acc.len()
+            );
+        }
+        for (slot, (a, g)) in acc.iter_mut().zip(&s.grads).enumerate() {
+            if g.shape != first.grads[slot].shape {
+                bail!(
+                    "sample {smp} gradient leaf {slot} has shape {:?}, sample 0 has {:?}",
+                    g.shape,
+                    first.grads[slot].shape
+                );
+            }
+            let gv = g
+                .as_f32()
+                .with_context(|| format!("sample {smp} gradient leaf {slot}"))?;
+            for (ai, &gi) in a.iter_mut().zip(gv) {
+                *ai += gi as f64;
+            }
+        }
+    }
+    let grads = acc
+        .into_iter()
+        .zip(&first.grads)
+        .map(|(a, t)| {
+            Tensor::f32(t.shape.clone(), a.into_iter().map(|x| x as f32).collect())
+        })
+        .collect();
+    Ok(((loss_sum / total_rows as f64) as f32, grads))
+}
+
+/// One central AdamW step over pre-reduced gradients — the update half
+/// of the split [`LossAndGradsReq`] introduced. Advances `opt.step` by 1.
+#[derive(Debug, Clone)]
+pub struct ApplyUpdateReq {
+    pub config: String,
+    /// Current trainable leaves.
+    pub trainable: Vec<Tensor>,
+    pub opt: OptState,
+    /// Reduced f32 gradients, trainable leaf order.
+    pub grads: Vec<Tensor>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ApplyUpdateResp {
+    pub trainable: Vec<Tensor>,
+    pub opt: OptState,
+}
+
+impl ApplyUpdateResp {
+    pub fn unpack(info: &ConfigInfo, outs: Vec<Tensor>) -> Result<ApplyUpdateResp> {
+        let nt = info.trainable.len();
+        if outs.len() != 3 * nt + 1 {
+            bail!(
+                "apply_update op returned {} outputs, expected {}",
+                outs.len(),
+                3 * nt + 1
+            );
+        }
+        let step = *outs[3 * nt]
+            .as_i32()
+            .context("apply_update step counter")?
+            .first()
+            .context("apply_update returned an empty step counter")?;
+        Ok(ApplyUpdateResp {
+            trainable: outs[..nt].to_vec(),
+            opt: OptState {
+                m1: outs[nt..2 * nt].to_vec(),
+                m2: outs[2 * nt..3 * nt].to_vec(),
+                step,
+            },
+        })
+    }
+}
+
 /// Held-out eval loss. `tokens` is `[train_batch, seq+1]`.
 #[derive(Debug, Clone)]
 pub struct EvalReq {
@@ -404,6 +606,8 @@ impl ComposeResp {
 pub enum EngineOp {
     Init(InitReq),
     TrainStep(TrainStepReq),
+    LossAndGrads(LossAndGradsReq),
+    ApplyUpdate(ApplyUpdateReq),
     Eval(EvalReq),
     Infer(InferReq),
     InferMerged(InferMergedReq),
@@ -416,6 +620,8 @@ pub enum EngineOp {
 pub enum EngineOut {
     Init(InitResp),
     TrainStep(TrainStepResp),
+    LossAndGrads(LossAndGradsResp),
+    ApplyUpdate(ApplyUpdateResp),
     Eval(EvalResp),
     Infer(InferResp),
     DoraLinear(DoraLinearResp),
@@ -429,6 +635,10 @@ impl EngineOp {
         Ok(match self {
             EngineOp::Init(r) => format!("init_{}", r.config),
             EngineOp::TrainStep(r) => format!("train_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::LossAndGrads(r) => {
+                format!("loss_and_grads_{}_{}", r.config, r.variant.as_str())
+            }
+            EngineOp::ApplyUpdate(r) => format!("apply_update_{}", r.config),
             EngineOp::Eval(r) => format!("eval_{}_{}", r.config, r.variant.as_str()),
             EngineOp::Infer(r) => format!("infer_{}_{}", r.config, r.variant.as_str()),
             EngineOp::InferMerged(r) => format!("infer_merged_{}", r.config),
@@ -465,6 +675,25 @@ impl EngineOp {
                 v.extend(r.opt.m2.iter().cloned());
                 v.push(Tensor::scalar_i32(r.opt.step));
                 v.push(r.tokens.clone());
+                v
+            }
+            EngineOp::LossAndGrads(r) => {
+                let mut v = Vec::with_capacity(
+                    r.params.frozen.len() + r.params.trainable.len() + 2,
+                );
+                v.extend(r.params.frozen.iter().cloned());
+                v.extend(r.params.trainable.iter().cloned());
+                v.push(r.tokens.clone());
+                v.push(Tensor::scalar_i32(r.total_rows as i32));
+                v
+            }
+            EngineOp::ApplyUpdate(r) => {
+                let mut v = Vec::with_capacity(4 * r.trainable.len() + 1);
+                v.extend(r.trainable.iter().cloned());
+                v.extend(r.opt.m1.iter().cloned());
+                v.extend(r.opt.m2.iter().cloned());
+                v.push(Tensor::scalar_i32(r.opt.step));
+                v.extend(r.grads.iter().cloned());
                 v
             }
             EngineOp::Eval(r) => {
@@ -508,6 +737,8 @@ impl EngineOp {
         match self {
             EngineOp::Init(_) => "init",
             EngineOp::TrainStep(_) => "train",
+            EngineOp::LossAndGrads(_) => "loss_and_grads",
+            EngineOp::ApplyUpdate(_) => "apply_update",
             EngineOp::Eval(_) => "eval",
             EngineOp::Infer(_) => "infer",
             EngineOp::InferMerged(_) => "infer_merged",
@@ -534,6 +765,24 @@ impl EngineOut {
                 v.push(Tensor::scalar_i32(r.opt.step));
                 let k = r.losses.len();
                 v.push(Tensor::f32(vec![k], r.losses));
+                v
+            }
+            EngineOut::LossAndGrads(r) => {
+                let sums: Vec<f64> = r.samples.iter().map(|s| s.loss_sum).collect();
+                let mut v = Vec::with_capacity(
+                    r.samples.iter().map(|s| s.grads.len()).sum::<usize>() + 1,
+                );
+                for s in r.samples {
+                    v.extend(s.grads);
+                }
+                v.push(encode_loss_sums(&sums));
+                v
+            }
+            EngineOut::ApplyUpdate(r) => {
+                let mut v = r.trainable;
+                v.extend(r.opt.m1);
+                v.extend(r.opt.m2);
+                v.push(Tensor::scalar_i32(r.opt.step));
                 v
             }
             EngineOut::Eval(r) => vec![Tensor::f32(vec![], vec![r.loss])],
@@ -638,6 +887,139 @@ mod tests {
         assert_eq!(opt.m1[0].shape, vec![2, 3]);
         assert_eq!(opt.m2[1].shape, vec![4]);
         assert!(opt.m1[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn loss_sums_roundtrip_bit_exact() {
+        let sums = [0.0f64, -0.0, 1.5, -3.25e-7, 4.243542117e2, f64::MIN_POSITIVE];
+        let t = encode_loss_sums(&sums);
+        assert_eq!(t.shape, vec![sums.len(), 2]);
+        let back = decode_loss_sums(&t).unwrap();
+        for (a, b) in sums.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Malformed shapes and dtypes error.
+        assert!(decode_loss_sums(&Tensor::i32(vec![4], vec![0; 4])).is_err());
+        assert!(decode_loss_sums(&Tensor::f32(vec![1, 2], vec![0.0; 2])).is_err());
+    }
+
+    #[test]
+    fn loss_and_grads_op_renders_packs_and_unpacks() {
+        let t = |n: usize| Tensor::f32(vec![n], vec![0.5; n]);
+        let op = EngineOp::LossAndGrads(LossAndGradsReq {
+            config: "tiny".into(),
+            variant: Variant::Fused,
+            params: Arc::new(AdapterParams { frozen: vec![t(2)], trainable: vec![t(3)] }),
+            tokens: Tensor::i32(vec![2, 3], vec![0; 6]),
+            total_rows: 64,
+        });
+        assert_eq!(op.artifact_name().unwrap(), "loss_and_grads_tiny_fused");
+        assert_eq!(op.kind(), "loss_and_grads");
+        let packed = op.pack_inputs();
+        // frozen(1) + trainable(1) + tokens + total_rows = 4.
+        assert_eq!(packed.len(), 4);
+        assert_eq!(packed[3].as_i32().unwrap(), &[64]);
+
+        // Response flatten/unpack roundtrip through the shim convention.
+        let resp = LossAndGradsResp {
+            samples: vec![
+                SampleGrads { loss_sum: 1.25, grads: vec![t(3)] },
+                SampleGrads { loss_sum: -0.5, grads: vec![t(3)] },
+            ],
+        };
+        let outs = EngineOut::LossAndGrads(resp).into_tensors();
+        assert_eq!(outs.len(), 3); // 2 samples x 1 leaf + loss sums.
+        let info = ConfigInfo {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            seq: 2,
+            rank: 1,
+            scale: 2.0,
+            n_params: 0,
+            train_batch: 2,
+            chunk_steps: 1,
+            frozen: vec!["embed".into()],
+            trainable: vec!["layers.0.a".into()],
+        };
+        let back = LossAndGradsResp::unpack(&info, outs).unwrap();
+        assert_eq!(back.samples.len(), 2);
+        assert_eq!(back.samples[0].loss_sum, 1.25);
+        assert_eq!(back.samples[1].loss_sum, -0.5);
+        // Wrong output count errors.
+        assert!(LossAndGradsResp::unpack(&info, vec![]).is_err());
+    }
+
+    #[test]
+    fn reduce_sample_grads_is_partition_invariant_and_validates() {
+        let g = |vals: Vec<f32>| Tensor::f32(vec![vals.len()], vals);
+        let samples: Vec<SampleGrads> = (0..4)
+            .map(|i| SampleGrads {
+                loss_sum: 1.0 + i as f64 * 0.125,
+                grads: vec![g(vec![0.1 * i as f32, -0.2, 1.0 + i as f32])],
+            })
+            .collect();
+        let (loss, grads) = reduce_sample_grads(&samples, 64).unwrap();
+        assert!(loss > 0.0);
+        assert_eq!(grads.len(), 1);
+        // The reduction is a pure function of the ordered sample list:
+        // re-reducing the same list is bitwise identical (partitioning
+        // across workers never reorders samples, so this IS the
+        // worker-count invariance at the reducer level).
+        let (loss2, grads2) = reduce_sample_grads(&samples, 64).unwrap();
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        assert!(grads[0].bitwise_eq(&grads2[0]));
+        // Empty sample lists and zero rows are errors.
+        assert!(reduce_sample_grads(&[], 64).is_err());
+        assert!(reduce_sample_grads(&samples, 0).is_err());
+        // Shape mismatches across samples are errors.
+        let bad = vec![
+            samples[0].clone(),
+            SampleGrads { loss_sum: 0.0, grads: vec![g(vec![1.0])] },
+        ];
+        assert!(reduce_sample_grads(&bad, 64).is_err());
+    }
+
+    #[test]
+    fn apply_update_op_renders_packs_and_unpacks() {
+        let t = |n: usize| Tensor::f32(vec![n], vec![0.0; n]);
+        let op = EngineOp::ApplyUpdate(ApplyUpdateReq {
+            config: "tiny".into(),
+            trainable: vec![t(3)],
+            opt: OptState { m1: vec![t(3)], m2: vec![t(3)], step: 5 },
+            grads: vec![t(3)],
+        });
+        assert_eq!(op.artifact_name().unwrap(), "apply_update_tiny");
+        assert_eq!(op.kind(), "apply_update");
+        let packed = op.pack_inputs();
+        // trainable + m1 + m2 + step + grads = 5.
+        assert_eq!(packed.len(), 5);
+        assert_eq!(packed[3].as_i32().unwrap(), &[5]);
+
+        let resp = ApplyUpdateResp {
+            trainable: vec![t(3)],
+            opt: OptState { m1: vec![t(3)], m2: vec![t(3)], step: 6 },
+        };
+        let outs = EngineOut::ApplyUpdate(resp).into_tensors();
+        assert_eq!(outs.len(), 4);
+        let info = ConfigInfo {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            seq: 2,
+            rank: 1,
+            scale: 2.0,
+            n_params: 0,
+            train_batch: 2,
+            chunk_steps: 1,
+            frozen: vec!["embed".into()],
+            trainable: vec!["layers.0.a".into()],
+        };
+        let back = ApplyUpdateResp::unpack(&info, outs).unwrap();
+        assert_eq!(back.opt.step, 6);
+        assert!(ApplyUpdateResp::unpack(&info, vec![]).is_err());
     }
 
     #[test]

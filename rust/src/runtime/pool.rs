@@ -28,13 +28,15 @@
 //! inside the worker thread without the pool knowing about either.
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::runtime::{BackendSpec, ExecBackend};
+use crate::runtime::ops::{AdapterParams, LossAndGradsReq, SampleGrads, Variant};
+use crate::runtime::{BackendSpec, ExecBackend, Tensor};
 use crate::util::lock_unpoisoned;
 
 /// One unit of pool work: runs on the routed worker's thread with that
@@ -61,7 +63,10 @@ impl EnginePool {
     /// cannot connect.
     pub fn start(spec: &BackendSpec, workers: usize) -> Result<EnginePool> {
         let n = if workers == 0 { crate::dispatch::default_threads() } else { workers };
-        let mut pool = EnginePool { workers: Vec::with_capacity(n), routes: Mutex::new(HashMap::new()) };
+        let mut pool = EnginePool {
+            workers: Vec::with_capacity(n),
+            routes: Mutex::new(HashMap::new()),
+        };
         for idx in 0..n {
             let (tx, rx): (Sender<PoolJob>, Receiver<PoolJob>) = mpsc::channel();
             let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
@@ -142,6 +147,120 @@ impl EnginePool {
             .iter()
             .map(|w| w.executed.load(Ordering::Relaxed))
             .collect()
+    }
+}
+
+/// Data-parallel gradient scatter/gather over an [`EnginePool`]: shards a
+/// batch into contiguous per-worker micro-batches, runs the
+/// `loss_and_grads` op concurrently on the pool's workers (each holding
+/// the replicated adapter parameters behind the request's `Arc`), and
+/// gathers the per-sample gradient exports back IN GLOBAL SAMPLE ORDER.
+///
+/// Determinism contract: the shard granularity is one sample, each
+/// sample's export is computed from that sample alone (bitwise
+/// independent of which worker ran it or how samples were grouped), and
+/// the final reduction ([`reduce_sample_grads`](crate::runtime::ops::reduce_sample_grads))
+/// accumulates in f64 in fixed sample order — so the reduced gradient is
+/// **bitwise-identical for any worker count**, including uneven shards
+/// when `batch % workers != 0`.
+pub struct GradReducer {
+    config: String,
+    variant: Variant,
+}
+
+impl GradReducer {
+    pub fn new(config: impl Into<String>, variant: Variant) -> GradReducer {
+        GradReducer { config: config.into(), variant }
+    }
+
+    /// Contiguous shard plan: `bs` samples over at most `workers` shards,
+    /// remainder spread over the leading shards (`bs=4, workers=3` →
+    /// `[0..2, 2..3, 3..4]`). Empty shards are never emitted.
+    pub fn shards(bs: usize, workers: usize) -> Vec<Range<usize>> {
+        let n = workers.min(bs).max(1);
+        let base = bs / n;
+        let rem = bs % n;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        for w in 0..n {
+            let len = base + usize::from(w < rem);
+            out.push(start..start + len);
+            start += len;
+        }
+        debug_assert_eq!(start, bs);
+        out
+    }
+
+    /// Run one `[bs, seq+1]` micro-batch across the pool and return the
+    /// per-sample gradient exports in global sample order. `total_rows`
+    /// is the effective batch's row count (with gradient accumulation the
+    /// effective batch spans several micro-batches, so it can exceed
+    /// `bs * seq`).
+    pub fn sample_grads(
+        &self,
+        pool: &EnginePool,
+        params: &Arc<AdapterParams>,
+        tokens: &Tensor,
+        total_rows: usize,
+    ) -> Result<Vec<SampleGrads>> {
+        if tokens.shape.len() != 2 || tokens.shape[0] == 0 {
+            bail!(
+                "grad reducer tokens must be [bs >= 1, seq+1], got {:?}",
+                tokens.shape
+            );
+        }
+        let bs = tokens.shape[0];
+        let stride = tokens.shape[1];
+        let toks = tokens.as_i32().context("grad reducer tokens")?;
+        let shards = Self::shards(bs, pool.size());
+        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<SampleGrads>>)>();
+        for (idx, range) in shards.iter().enumerate() {
+            let req = LossAndGradsReq {
+                config: self.config.clone(),
+                variant: self.variant,
+                params: params.clone(),
+                tokens: Tensor::i32(
+                    vec![range.len(), stride],
+                    toks[range.start * stride..range.end * stride].to_vec(),
+                ),
+                total_rows,
+            };
+            let tx = tx.clone();
+            let want = range.len();
+            // Shard index as the affinity key: on a dedicated training
+            // pool, first-seen keys take workers round-robin, so shard i
+            // lands on worker i (shards never outnumber workers).
+            pool.submit(
+                &format!("grad-shard-{idx}"),
+                Box::new(move |_, engine| {
+                    let result = engine.loss_and_grads(req).and_then(|resp| {
+                        if resp.samples.len() != want {
+                            bail!(
+                                "shard returned {} samples, expected {want}",
+                                resp.samples.len()
+                            );
+                        }
+                        Ok(resp.samples)
+                    });
+                    let _ = tx.send((idx, result));
+                }),
+            );
+        }
+        drop(tx);
+        let mut per_shard: Vec<Option<Vec<SampleGrads>>> = vec![None; shards.len()];
+        for _ in 0..shards.len() {
+            let (idx, result) = rx
+                .recv()
+                .context("a gradient worker died before returning its shard")?;
+            per_shard[idx] = Some(result.with_context(|| format!("gradient shard {idx}"))?);
+        }
+        // Gather in shard order == global sample order (shards are
+        // contiguous and emitted in order).
+        let mut samples = Vec::with_capacity(bs);
+        for shard in per_shard {
+            samples.extend(shard.expect("all shards received"));
+        }
+        Ok(samples)
     }
 }
 
@@ -252,6 +371,64 @@ mod tests {
         );
         rx.recv_timeout(std::time::Duration::from_secs(10))
             .expect("worker died after a panicking job");
+    }
+
+    #[test]
+    fn grad_reducer_shards_are_contiguous_and_never_empty() {
+        assert_eq!(GradReducer::shards(4, 1), vec![0..4]);
+        assert_eq!(GradReducer::shards(4, 2), vec![0..2, 2..4]);
+        assert_eq!(GradReducer::shards(4, 3), vec![0..2, 2..3, 3..4]);
+        assert_eq!(GradReducer::shards(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        // More workers than samples: one shard per sample, no empties.
+        assert_eq!(GradReducer::shards(2, 8), vec![0..1, 1..2]);
+        assert_eq!(GradReducer::shards(5, 2), vec![0..3, 3..5]);
+        for (bs, w) in [(1usize, 1usize), (7, 3), (8, 5), (3, 16)] {
+            let shards = GradReducer::shards(bs, w);
+            assert!(shards.iter().all(|r| !r.is_empty()));
+            assert_eq!(shards.first().unwrap().start, 0);
+            assert_eq!(shards.last().unwrap().end, bs);
+            for pair in shards.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_reducer_gathers_in_sample_order_across_pool_sizes() {
+        use crate::runtime::ops::{reduce_sample_grads, InitReq, Variant};
+        let be = ExecBackend::native();
+        let info = be.config("tiny").unwrap();
+        let init = be.init(InitReq { config: "tiny".into(), seed: 2 }).unwrap();
+        let params = Arc::new(init.params);
+        let bs = info.train_batch;
+        let seq1 = info.seq + 1;
+        let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 21);
+        let tokens = Tensor::i32(vec![bs, seq1], corpus.block(1, bs, seq1));
+        let total_rows = bs * info.seq;
+        let reducer = GradReducer::new("tiny", Variant::Fused);
+
+        let mut reference: Option<(f32, Vec<Tensor>)> = None;
+        for workers in [1usize, 3] {
+            let pool = EnginePool::start(&BackendSpec::Native, workers).unwrap();
+            let samples = reducer
+                .sample_grads(&pool, &params, &tokens, total_rows)
+                .unwrap();
+            assert_eq!(samples.len(), bs);
+            let (loss, grads) = reduce_sample_grads(&samples, total_rows).unwrap();
+            match &reference {
+                None => reference = Some((loss, grads)),
+                Some((l0, g0)) => {
+                    assert_eq!(loss.to_bits(), l0.to_bits(), "{workers} workers");
+                    for (i, (a, b)) in grads.iter().zip(g0).enumerate() {
+                        assert!(a.bitwise_eq(b), "{workers} workers, leaf {i}");
+                    }
+                }
+            }
+        }
+        // Malformed tokens error before any job is submitted.
+        let pool = EnginePool::start(&BackendSpec::Native, 1).unwrap();
+        let bad = Tensor::i32(vec![4], vec![1; 4]);
+        assert!(reducer.sample_grads(&pool, &params, &bad, total_rows).is_err());
     }
 
     #[test]

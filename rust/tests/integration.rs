@@ -48,6 +48,8 @@ fn tiny_trainer_cfg(seed: u64) -> TrainerCfg {
         seed,
         branching: 3,
         eval_every: 0,
+        train_workers: 0,
+        grad_accum: 1,
     }
 }
 
@@ -66,6 +68,8 @@ fn native_train_then_serve_handoff_under_concurrent_load() {
             seed: 13,
             branching: 3,
             eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
         },
     )
     .unwrap();
@@ -76,7 +80,11 @@ fn native_train_then_serve_handoff_under_concurrent_load() {
 
     let server = Server::start_with_params(
         BackendSpec::Native,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(50), ..ServerCfg::default() },
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(50),
+            ..ServerCfg::default()
+        },
         tr.frozen().to_vec(),
         tr.trainable().to_vec(),
     )
@@ -119,6 +127,8 @@ fn native_eager_vs_fused_convergence_parity_end_to_end() {
                 seed: 21,
                 branching: 3,
                 eval_every: 4,
+                train_workers: 0,
+                grad_accum: 1,
             },
         )
         .unwrap();
@@ -221,7 +231,11 @@ fn multi_adapter_server_matches_single_adapter_logits() {
     tr_b.train_steps(8).unwrap();
     let adapter_a = tr_a.to_adapter("job-a").unwrap();
     let adapter_b = tr_b.to_adapter("job-b").unwrap();
-    let cfg = || ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() };
+    let cfg = || ServerCfg {
+        config: "tiny".into(),
+        max_wait: Duration::from_millis(5),
+        ..ServerCfg::default()
+    };
     let prompt = [3, 1, 4, 1, 5];
 
     // Single-adapter reference paths.
@@ -275,7 +289,11 @@ fn trainer_checkpoints_hot_load_into_a_running_server() {
 
     let server = Server::start_with_adapters(
         BackendSpec::Native,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() },
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(5),
+            ..ServerCfg::default()
+        },
         vec![store.load("live").unwrap()],
     )
     .unwrap();
@@ -293,7 +311,11 @@ fn trainer_checkpoints_hot_load_into_a_running_server() {
     // checkpoint.
     let cold = Server::start_with_adapters(
         BackendSpec::Native,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() },
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(5),
+            ..ServerCfg::default()
+        },
         vec![store.load("live").unwrap()],
     )
     .unwrap();
@@ -336,6 +358,8 @@ fn train_then_serve_handoff() {
             seed: 11,
             branching: 3,
             eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
         },
     )
     .unwrap();
@@ -343,7 +367,11 @@ fn train_then_serve_handoff() {
 
     let server = Server::start_with_params(
         &dir,
-        ServerCfg { config: "tiny".into(), max_wait: Duration::from_millis(5), ..ServerCfg::default() },
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(5),
+            ..ServerCfg::default()
+        },
         tr.frozen().to_vec(),
         tr.trainable().to_vec(),
     )
