@@ -5,7 +5,12 @@
 //! * fused compose <= eager compose (per quick shape, and geomean with
 //!   headroom) — the paper's single-pass-vs-4-pass claim;
 //! * merged fast path < composed at pool size 1 — the serving fast
-//!   path's reason to exist.
+//!   path's reason to exist;
+//! * blocked GEMM >= 2x geomean over the branch-free naive loops on the
+//!   e2e contraction shapes (2x per nt dot-chain row), and the small-K
+//!   path beats the generic blocked core wherever dispatch picks it
+//!   (r <= SMALL_K_MAX) — the PR6 micro-kernel claim, plus the
+//!   zero-skip before/after trajectory rows.
 //!
 //! Trial counts are sized for a CI runner (~seconds, not minutes); the
 //! full-resolution sweeps live in `compose_kernel`, `backward_kernel`
@@ -22,6 +27,7 @@ use dorafactors::bench::timing;
 use dorafactors::coordinator::{FastPath, Server, ServerCfg};
 use dorafactors::dora::compose_cpu;
 use dorafactors::dora::config::ActShape;
+use dorafactors::kernels::gemm::{self, naive, SMALL_K_MAX};
 use dorafactors::kernels::{ComposeKernel, EagerCpu, FusedCpu};
 use dorafactors::numerics::Dtype;
 use dorafactors::runtime::BackendSpec;
@@ -126,6 +132,185 @@ fn main() {
     }
     let compose_geomean = stats::geomean(&compose_speedups);
 
+    // -----------------------------------------------------------------
+    // GEMM micro-kernel rows: the e2e-config contraction shapes
+    // (d_model 128, rank 16, rows = bs*seq = 512, vocab 512), branch-free
+    // naive loops vs the blocked/register-tiled cores in `kernels::gemm`,
+    // normalized per MAC (m*k*n). `reps` lifts sub-ms shapes above timer
+    // noise. Gate: blocked beats naive on every row, the dot-chain nt
+    // rows by >= 2x, and >= 2x geomean across the set.
+    // -----------------------------------------------------------------
+    let (d, r, e2e_rows, vocab) = (128usize, 16usize, 512usize, 512usize);
+    let mut grng = Rng::new(99);
+    let h = grng.normal_vec_f32(e2e_rows * d, 0.1);
+    let w = grng.normal_vec_f32(d * d, 0.1);
+    let embed = grng.normal_vec_f32(vocab * d, 0.1);
+    let dlogits = grng.normal_vec_f32(e2e_rows * vocab, 0.1);
+    let du = grng.normal_vec_f32(e2e_rows * r, 0.1);
+
+    let mut push_row = |kernel: String, m: usize, k: usize, n: usize, median_s: f64, ns: f64| {
+        kernel_rows.push(Json::obj(vec![
+            ("kernel", Json::Str(kernel)),
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+            ("median_s", Json::Num(median_s)),
+            ("ns_per_mac", Json::Num(ns)),
+        ]));
+    };
+
+    struct GemmCase<'a> {
+        name: &'static str,
+        m: usize,
+        k: usize,
+        n: usize,
+        naive: Box<dyn Fn() -> Vec<f32> + 'a>,
+        blocked: Box<dyn Fn() -> Vec<f32> + 'a>,
+        /// Scalar-dot-chain baseline (nt): held to the full 2x bar alone.
+        is_nt: bool,
+    }
+    let gemm_cases: Vec<GemmCase> = vec![
+        GemmCase {
+            name: "gemm_e2e_fwd_base_nt",
+            m: e2e_rows,
+            k: d,
+            n: d,
+            naive: Box::new(|| naive::nt(&h, &w, e2e_rows, d, d)),
+            blocked: Box::new(|| gemm::nt(&h, &w, e2e_rows, d, d)),
+            is_nt: true,
+        },
+        GemmCase {
+            name: "gemm_e2e_fwd_logits_nt",
+            m: e2e_rows,
+            k: d,
+            n: vocab,
+            naive: Box::new(|| naive::nt(&h, &embed, e2e_rows, d, vocab)),
+            blocked: Box::new(|| gemm::nt(&h, &embed, e2e_rows, d, vocab)),
+            is_nt: true,
+        },
+        GemmCase {
+            name: "gemm_e2e_bwd_dh_nn",
+            m: e2e_rows,
+            k: vocab,
+            n: d,
+            naive: Box::new(|| naive::nn(&dlogits, &embed, e2e_rows, vocab, d)),
+            blocked: Box::new(|| gemm::nn(&dlogits, &embed, e2e_rows, vocab, d)),
+            is_nt: false,
+        },
+        GemmCase {
+            name: "gemm_e2e_bwd_da_tn",
+            m: r,
+            k: e2e_rows,
+            n: d,
+            naive: Box::new(|| naive::tn(&du, &h, e2e_rows, r, d)),
+            blocked: Box::new(|| gemm::tn(&du, &h, e2e_rows, r, d)),
+            is_nt: false,
+        },
+    ];
+    let mut gemm_speedups = Vec::new();
+    let (mut gemm_ok, mut gemm_nt_ok) = (true, true);
+    for case in &gemm_cases {
+        let macs = case.m * case.k * case.n;
+        let reps = (4_000_000 / macs.max(1)).max(1);
+        let nv = timing::bench(case.name, cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box((case.naive)());
+            }
+        });
+        let bv = timing::bench(case.name, cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box((case.blocked)());
+            }
+        });
+        let per_mac = |s: f64| s / (macs * reps) as f64 * 1e9;
+        push_row(format!("{}_naive", case.name), case.m, case.k, case.n, nv.median_s, per_mac(nv.median_s));
+        push_row(format!("{}_blocked", case.name), case.m, case.k, case.n, bv.median_s, per_mac(bv.median_s));
+        let sp = nv.median_s / bv.median_s;
+        gemm_speedups.push(sp);
+        gemm_ok &= sp >= 0.9; // every row at least holds ground (0.9 absorbs runner noise)
+        if case.is_nt {
+            gemm_nt_ok &= sp >= 2.0;
+        }
+        println!(
+            "{} {}x{}x{}: naive {:.3} ns/MAC, blocked {:.3} ns/MAC ({sp:.2}x)",
+            case.name,
+            case.m,
+            case.k,
+            case.n,
+            per_mac(nv.median_s),
+            per_mac(bv.median_s)
+        );
+    }
+    let gemm_geomean = stats::geomean(&gemm_speedups);
+
+    // Zero-skip before/after (the old `matmul_tn` data-dependent branch,
+    // removed in PR6): same bwd_da shape, branchy vs branch-free naive.
+    // Reported as trajectory rows, no gate — on zero-free data the win is
+    // the branch overhead itself, not a throughput cliff.
+    {
+        let macs = r * e2e_rows * d;
+        let reps = (4_000_000 / macs.max(1)).max(1);
+        let branchy = timing::bench("tn zero-skip", cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(branchy_tn(&du, &h, e2e_rows, r, d));
+            }
+        });
+        let clean = timing::bench("tn branch-free", cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(naive::tn(&du, &h, e2e_rows, r, d));
+            }
+        });
+        let per_mac = |s: f64| s / (macs * reps) as f64 * 1e9;
+        push_row("gemm_tn_zeroskip_before".into(), r, e2e_rows, d, branchy.median_s, per_mac(branchy.median_s));
+        push_row("gemm_tn_zeroskip_after".into(), r, e2e_rows, d, clean.median_s, per_mac(clean.median_s));
+        println!(
+            "tn zero-skip removal: before {:.3} ns/MAC, after {:.3} ns/MAC ({:.2}x)",
+            per_mac(branchy.median_s),
+            per_mac(clean.median_s),
+            branchy.median_s / clean.median_s
+        );
+    }
+
+    // Small-K dispatch sweep: the adapter B@A shape at e2e d_model
+    // (m = n = 128) across ranks {8, 64, 384} — naive vs the forced
+    // generic blocked core vs the small-K path. Gate: small-K beats
+    // generic wherever dispatch actually picks it (r <= SMALL_K_MAX).
+    let mut smallk_ok = true;
+    for rank in [8usize, 64, 384] {
+        let bw = grng.normal_vec_f32(d * rank, 0.1);
+        let aw = grng.normal_vec_f32(rank * d, 0.1);
+        let macs = d * rank * d;
+        let reps = (4_000_000 / macs.max(1)).max(1);
+        let nv = timing::bench("ba naive", cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(naive::nn(&bw, &aw, d, rank, d));
+            }
+        });
+        let gv = timing::bench("ba blocked", cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(gemm::nn_blocked(&bw, &aw, d, rank, d));
+            }
+        });
+        let sv = timing::bench("ba small-k", cfg, || {
+            for _ in 0..reps {
+                std::hint::black_box(gemm::nn_small_k(&bw, &aw, d, rank, d));
+            }
+        });
+        let per_mac = |s: f64| s / (macs * reps) as f64 * 1e9;
+        push_row(format!("gemm_ba_r{rank}_naive"), d, rank, d, nv.median_s, per_mac(nv.median_s));
+        push_row(format!("gemm_ba_r{rank}_blocked"), d, rank, d, gv.median_s, per_mac(gv.median_s));
+        push_row(format!("gemm_ba_r{rank}_smallk"), d, rank, d, sv.median_s, per_mac(sv.median_s));
+        if rank <= SMALL_K_MAX {
+            smallk_ok &= sv.median_s < gv.median_s;
+        }
+        println!(
+            "gemm B@A 128x{rank}x128: naive {:.3}, blocked {:.3}, small-K {:.3} ns/MAC",
+            per_mac(nv.median_s),
+            per_mac(gv.median_s),
+            per_mac(sv.median_s)
+        );
+    }
+
     // Serving pool: per-request round-trip at pool {1, 2} x {merged,
     // composed} on the `small` config (no batching window, so the rows
     // isolate per-request latency).
@@ -182,11 +367,15 @@ fn main() {
         ("kernels", Json::Arr(kernel_rows)),
         ("serving", Json::Arr(serving_rows)),
         ("compose_geomean_speedup", Json::Num(compose_geomean)),
+        ("gemm_geomean_speedup", Json::Num(gemm_geomean)),
         (
             "invariants",
             Json::obj(vec![
                 ("fused_le_eager", Json::Bool(compose_ok)),
                 ("merged_lt_composed_pool1", Json::Bool(merged_ok)),
+                ("gemm_blocked_beats_naive_e2e", Json::Bool(gemm_ok)),
+                ("gemm_nt_2x_e2e", Json::Bool(gemm_nt_ok)),
+                ("smallk_beats_blocked_r_le_64", Json::Bool(smallk_ok)),
             ]),
         ),
     ]);
@@ -212,8 +401,44 @@ fn main() {
         merged_ok,
         "merged fast path not faster at pool=1: merged {merged1:.3e}s vs composed {composed1:.3e}s"
     );
+    assert!(
+        gemm_ok,
+        "blocked GEMM lost ground to naive on an e2e row: speedups {gemm_speedups:?}"
+    );
+    assert!(
+        gemm_nt_ok,
+        "blocked GEMM under 2x on a dot-chain nt row: speedups {gemm_speedups:?}"
+    );
+    assert!(
+        gemm_geomean >= 2.0,
+        "blocked GEMM geomean speedup {gemm_geomean:.2} < 2.0 on the e2e rows"
+    );
+    assert!(smallk_ok, "small-K path lost to generic blocked at r <= {SMALL_K_MAX}");
     println!(
-        "perf gate OK: compose geomean {compose_geomean:.2}x, merged/composed {:.2}x",
+        "perf gate OK: compose geomean {compose_geomean:.2}x, gemm geomean {gemm_geomean:.2}x, \
+         merged/composed {:.2}x",
         composed1 / merged1
     );
+}
+
+/// The pre-PR6 `matmul_tn` inner loop, zero-skip branch included — kept
+/// only here so the gate can keep showing what removing the
+/// data-dependent branch is worth on the same shape.
+fn branchy_tn(a: &[f32], b: &[f32], rows: usize, n1: usize, n2: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n1 * n2];
+    for i in 0..rows {
+        let arow = &a[i * n1..(i + 1) * n1];
+        let brow = &b[i * n2..(i + 1) * n2];
+        for p in 0..n1 {
+            let ap = arow[p];
+            if ap == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n2..(p + 1) * n2];
+            for q in 0..n2 {
+                crow[q] += ap * brow[q];
+            }
+        }
+    }
+    c
 }

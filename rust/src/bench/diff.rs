@@ -1,0 +1,246 @@
+//! Perf-trajectory diff: compare a fresh `perf_gate` BENCH JSON against
+//! a committed baseline snapshot (`bench_baselines/BENCH_pr6.json`) and
+//! render per-row deltas, so perf regressions show up as a reviewable
+//! table instead of silently drifting (bench_results/ is gitignored —
+//! the committed snapshot is the only history).
+//!
+//! Rows are matched by identity key — `kernel` name plus its shape
+//! columns (`rows`/`d_out` for compose rows, `m`/`k`/`n` for GEMM rows),
+//! `pool`+`fast_path` for serving rows — and compared on the row's
+//! primary metric (ns_per_elem, ns_per_mac, or median_s). Rows present
+//! on only one side are listed separately rather than dropped.
+
+use crate::util::json::{Json, JsonError};
+use crate::util::table::Table;
+
+/// One matched row: metric values from both files.
+#[derive(Debug, Clone)]
+pub struct RowDelta {
+    pub key: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub fresh: f64,
+}
+
+impl RowDelta {
+    /// Signed percent change, fresh vs baseline (+ = slower/regression
+    /// for time-like metrics).
+    pub fn delta_pct(&self) -> f64 {
+        if self.baseline == 0.0 {
+            return 0.0;
+        }
+        (self.fresh - self.baseline) / self.baseline * 100.0
+    }
+}
+
+/// The structured comparison of two BENCH JSON documents.
+#[derive(Debug, Default)]
+pub struct BenchDiff {
+    pub rows: Vec<RowDelta>,
+    /// Keys present only in the baseline (removed rows).
+    pub only_baseline: Vec<String>,
+    /// Keys present only in the fresh run (new rows).
+    pub only_fresh: Vec<String>,
+}
+
+/// Identity key of a `kernels` row.
+fn kernel_key(row: &Json) -> Result<String, JsonError> {
+    let kernel = row.get("kernel")?.as_str()?.to_string();
+    if row.opt("m").is_some() {
+        let (m, k, n) =
+            (row.get("m")?.as_usize()?, row.get("k")?.as_usize()?, row.get("n")?.as_usize()?);
+        Ok(format!("{kernel} {m}x{k}x{n}"))
+    } else {
+        let (rows, d_out) = (row.get("rows")?.as_usize()?, row.get("d_out")?.as_usize()?);
+        Ok(format!("{kernel} {rows}x{d_out}"))
+    }
+}
+
+/// Identity key of a `serving` row.
+fn serving_key(row: &Json) -> Result<String, JsonError> {
+    Ok(format!(
+        "serve pool={} path={}",
+        row.get("pool")?.as_usize()?,
+        row.get("fast_path")?.as_str()?
+    ))
+}
+
+/// The row's primary metric: most specific time-per-work field present.
+fn metric_of(row: &Json) -> Result<(&'static str, f64), JsonError> {
+    for name in ["ns_per_elem", "ns_per_mac"] {
+        if let Some(v) = row.opt(name) {
+            return Ok((name, v.as_f64()?));
+        }
+    }
+    Ok(("median_s", row.get("median_s")?.as_f64()?))
+}
+
+/// Collect `(key, metric, value)` triples from one BENCH document.
+fn collect(doc: &Json) -> Result<Vec<(String, &'static str, f64)>, JsonError> {
+    let mut out = Vec::new();
+    if let Some(rows) = doc.opt("kernels") {
+        for row in rows.as_arr()? {
+            let (metric, v) = metric_of(row)?;
+            out.push((kernel_key(row)?, metric, v));
+        }
+    }
+    if let Some(rows) = doc.opt("serving") {
+        for row in rows.as_arr()? {
+            let (metric, v) = metric_of(row)?;
+            out.push((serving_key(row)?, metric, v));
+        }
+    }
+    Ok(out)
+}
+
+/// Structurally compare two BENCH documents.
+pub fn diff(baseline: &Json, fresh: &Json) -> Result<BenchDiff, JsonError> {
+    let base_rows = collect(baseline)?;
+    let fresh_rows = collect(fresh)?;
+    let mut out = BenchDiff::default();
+    for (key, metric, bv) in &base_rows {
+        match fresh_rows.iter().find(|(k, _, _)| k == key) {
+            Some((_, _, fv)) => out.rows.push(RowDelta {
+                key: key.clone(),
+                metric,
+                baseline: *bv,
+                fresh: *fv,
+            }),
+            None => out.only_baseline.push(key.clone()),
+        }
+    }
+    for (key, _, _) in &fresh_rows {
+        if !base_rows.iter().any(|(k, _, _)| k == key) {
+            out.only_fresh.push(key.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Render the comparison as an aligned table plus summary lines.
+pub fn render(baseline: &Json, fresh: &Json) -> Result<String, JsonError> {
+    let d = diff(baseline, fresh)?;
+    let mut out = String::new();
+    if let Some(p) = baseline.opt("provenance") {
+        out.push_str(&format!("baseline provenance: {}\n\n", p.as_str()?));
+    }
+    let mut table =
+        Table::new("perf trajectory vs baseline", &["row", "metric", "baseline", "fresh", "delta"]);
+    for row in &d.rows {
+        table.row(vec![
+            row.key.clone(),
+            row.metric.to_string(),
+            format!("{:.4}", row.baseline),
+            format!("{:.4}", row.fresh),
+            format!("{:+.1}%", row.delta_pct()),
+        ]);
+    }
+    out.push_str(&table.to_markdown());
+    for (label, keys) in
+        [("only in baseline", &d.only_baseline), ("only in fresh run", &d.only_fresh)]
+    {
+        if !keys.is_empty() {
+            out.push_str(&format!("\n{label}: {}\n", keys.join(", ")));
+        }
+    }
+    for field in ["compose_geomean_speedup", "gemm_geomean_speedup"] {
+        if let (Some(b), Some(f)) = (baseline.opt(field), fresh.opt(field)) {
+            out.push_str(&format!("\n{field}: baseline {:.2}x, fresh {:.2}x", b.as_f64()?, f.as_f64()?));
+        }
+    }
+    out.push('\n');
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn doc(extra_row: bool) -> Json {
+        let mut kernels = vec![
+            Json::obj(vec![
+                ("kernel", Json::Str("compose_fused".into())),
+                ("rows", Json::Num(512.0)),
+                ("d_out", Json::Num(2048.0)),
+                ("median_s", Json::Num(0.001)),
+                ("ns_per_elem", Json::Num(if extra_row { 1.0 } else { 1.25 })),
+            ]),
+            Json::obj(vec![
+                ("kernel", Json::Str("gemm_e2e_fwd_base_nt_blocked".into())),
+                ("m", Json::Num(512.0)),
+                ("k", Json::Num(128.0)),
+                ("n", Json::Num(128.0)),
+                ("median_s", Json::Num(0.002)),
+                ("ns_per_mac", Json::Num(0.2)),
+            ]),
+        ];
+        if extra_row {
+            kernels.push(Json::obj(vec![
+                ("kernel", Json::Str("gemm_ba_r8_smallk".into())),
+                ("m", Json::Num(128.0)),
+                ("k", Json::Num(8.0)),
+                ("n", Json::Num(128.0)),
+                ("median_s", Json::Num(0.0001)),
+                ("ns_per_mac", Json::Num(0.1)),
+            ]));
+        }
+        Json::obj(vec![
+            ("bench", Json::Str("perf_gate".into())),
+            ("kernels", Json::Arr(kernels)),
+            (
+                "serving",
+                Json::Arr(vec![Json::obj(vec![
+                    ("pool", Json::Num(1.0)),
+                    ("fast_path", Json::Str("merged".into())),
+                    ("median_s", Json::Num(0.0005)),
+                    ("req_per_s", Json::Num(2000.0)),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn diff_matches_rows_and_flags_extras() {
+        let base = doc(false);
+        let fresh = doc(true);
+        let d = diff(&base, &fresh).unwrap();
+        assert_eq!(d.rows.len(), 3); // 2 kernel rows + 1 serving row
+        assert!(d.only_baseline.is_empty());
+        assert_eq!(d.only_fresh, vec!["gemm_ba_r8_smallk 128x8x128".to_string()]);
+        let compose = d.rows.iter().find(|r| r.key.starts_with("compose_fused")).unwrap();
+        assert_eq!(compose.metric, "ns_per_elem");
+        assert!((compose.delta_pct() - (-20.0)).abs() < 1e-9);
+        let serve = d.rows.iter().find(|r| r.key.starts_with("serve")).unwrap();
+        assert_eq!(serve.metric, "median_s");
+        assert_eq!(serve.delta_pct(), 0.0);
+    }
+
+    #[test]
+    fn render_includes_table_and_geomeans() {
+        let base = Json::obj(vec![
+            ("kernels", doc(false).get("kernels").unwrap().clone()),
+            ("compose_geomean_speedup", Json::Num(1.4)),
+            ("provenance", Json::Str("test".into())),
+        ]);
+        let fresh = Json::obj(vec![
+            ("kernels", doc(true).get("kernels").unwrap().clone()),
+            ("compose_geomean_speedup", Json::Num(1.5)),
+        ]);
+        let text = render(&base, &fresh).unwrap();
+        assert!(text.contains("perf trajectory"));
+        assert!(text.contains("provenance: test"));
+        assert!(text.contains("compose_geomean_speedup"));
+        assert!(text.contains("-20.0%"));
+    }
+
+    #[test]
+    fn diff_round_trips_through_the_parser() {
+        // The tool consumes files perf_gate wrote with `to_pretty`.
+        let base = doc(false);
+        let reparsed = json::parse(&base.to_pretty()).unwrap();
+        let d = diff(&base, &reparsed).unwrap();
+        assert!(d.only_baseline.is_empty() && d.only_fresh.is_empty());
+        assert!(d.rows.iter().all(|r| r.delta_pct() == 0.0));
+    }
+}

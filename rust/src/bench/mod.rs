@@ -3,6 +3,7 @@
 //! table and figure of the paper's evaluation (DESIGN.md §5).
 
 pub mod ablation;
+pub mod diff;
 pub mod report;
 pub mod shapes;
 pub mod timing;

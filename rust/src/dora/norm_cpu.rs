@@ -65,9 +65,11 @@ fn drop_vec(tracker: &mut AllocTracker, v: Vec<f32>) {
     drop(v);
 }
 
-/// Naive dense matmul C[m,n] = A[m,k] @ B[k,n] (row-major, blocked on k
-/// for cache behaviour). Used by the dense baselines; correctness matters
-/// more than speed here — the factored path is the optimized one.
+/// Dense matmul C[m,n] = A[m,k] @ B[k,n] (row-major). Routed through the
+/// blocked register-tiled cores (`kernels::gemm`); the old i-k-j loop's
+/// `aik == 0.0` skip branch is gone — it defeated vectorization and made
+/// throughput data-dependent, and a real PEFT dense GEMM does not skip
+/// zeros either, so the eye-matmul baseline now costs what it claims.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * n];
     matmul_into(a, b, m, k, n, &mut c);
@@ -75,24 +77,7 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 }
 
 pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    // i-k-j loop order: unit-stride inner loop over C and B rows.
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..kk * n + n];
-            let crow = &mut c[i * n..i * n + n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
-        }
-    }
+    crate::kernels::gemm::nn_into(a, b, m, k, n, c);
 }
 
 /// Row-wise L2 norm of `w + s * delta`, materializing `scaled = s * delta`

@@ -1,0 +1,46 @@
+//! The register-tiled micro-kernels. Both variants keep the same
+//! arithmetic shape: per k-step, broadcast one A value per accumulator
+//! row and FMA it against NR unit-stride B values — no data-dependent
+//! branches, no horizontal reductions, so LLVM vectorizes the j-axis.
+//! Accumulation over k is strictly sequential per element (the
+//! determinism contract in the module docs).
+
+use super::{MR, NR};
+
+/// Packed-panel kernel: `acc[MR][NR] += Â-panel × B̂-panel` over the full
+/// panel depth. `a_panel` is column-major `[kc, MR]` (MR values per
+/// k-step, unit stride), `b_panel` row-major `[kc, NR]`.
+#[inline]
+pub(crate) fn microkernel(a_panel: &[f32], b_panel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (av, bv) in a_panel.chunks_exact(MR).zip(b_panel.chunks_exact(NR)) {
+        for (&ai, row) in av.iter().zip(acc.iter_mut()) {
+            for (c, &bj) in row.iter_mut().zip(bv) {
+                *c += ai * bj;
+            }
+        }
+    }
+}
+
+/// Unpacked kernel for the small-K path: reads MR rows of A in place
+/// (`a[i * lda + p]`) and NR-wide row slices of B (`b[p * ldb .. +NR]`).
+/// Callers guarantee `a` holds MR full rows and `b` holds `k` rows of at
+/// least NR columns past its origin.
+#[inline]
+pub(crate) fn microkernel_direct(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    k: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    for p in 0..k {
+        let bv = &b[p * ldb..p * ldb + NR];
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = a[i * lda + p];
+            for (c, &bj) in row.iter_mut().zip(bv) {
+                *c += ai * bj;
+            }
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Branch-free naive reference loops — the pre-PR6 engine GEMMs with the
+//! data-dependent zero-skip removed. Kept public on purpose: they are
+//! the measured baseline of the perf-gate GEMM rows and the bitwise
+//! reference of the parity tests (per-element k-order is sequential, the
+//! same fold as the register tile for a single k-block).
+
+/// C[m,n] = A[m,k] @ B[k,n] (i-k-j loop order, unit-stride inner loop).
+pub fn nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    nn_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// In-place variant of [`nn`]; `c` is overwritten.
+pub fn nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            let brow = &b[p * n..p * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]ᵀ (dot-product form; both rows unit-stride).
+pub fn nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// C[n1,n2] = A[rows,n1]ᵀ @ B[rows,n2] (rank-1 update form).
+pub fn tn(a: &[f32], b: &[f32], rows: usize, n1: usize, n2: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * n1);
+    debug_assert_eq!(b.len(), rows * n2);
+    let mut c = vec![0f32; n1 * n2];
+    for i in 0..rows {
+        let arow = &a[i * n1..(i + 1) * n1];
+        let brow = &b[i * n2..(i + 1) * n2];
+        for (p, &ap) in arow.iter().enumerate() {
+            let crow = &mut c[p * n2..(p + 1) * n2];
+            for (cq, &bq) in crow.iter_mut().zip(brow) {
+                *cq += ap * bq;
+            }
+        }
+    }
+    c
+}

@@ -1,0 +1,75 @@
+//! Panel packing: copy an operand block into the contiguous layout the
+//! micro-kernel streams, absorbing any transposition here so the inner
+//! loop never sees a non-unit stride. Edge panels are zero-padded to a
+//! full MR rows / NR columns — padding contributes exact `+0.0 * x`
+//! terms only to padded C positions, which the driver never writes back.
+
+use std::ops::Range;
+
+use super::{MatA, MatB, MR, NR};
+
+/// Pack the A block `rows × cols` into `rows.len().div_ceil(MR)` panels.
+/// Panel `t` holds source rows `rows.start + t*MR ..` in column-major
+/// order within the panel: `buf[t*MR*kc + p*MR + i]` = A(row, col) for
+/// panel-local row `i` and k-offset `p`, so the micro-kernel reads MR
+/// A values per k-step at unit stride.
+pub(crate) fn pack_a(
+    a: MatA<'_>,
+    m: usize,
+    k: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    buf: &mut [f32],
+) {
+    let kc = cols.len();
+    let panels = rows.len().div_ceil(MR);
+    for t in 0..panels {
+        let dst = &mut buf[t * MR * kc..(t + 1) * MR * kc];
+        for (p, col) in cols.clone().enumerate() {
+            for i in 0..MR {
+                let row = rows.start + t * MR + i;
+                dst[p * MR + i] = if row < rows.end {
+                    match a {
+                        MatA::Normal(d) => d[row * k + col],
+                        MatA::Trans(d) => d[col * m + row],
+                    }
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack the B block `rows(k) × cols(n)` into `cols.len().div_ceil(NR)`
+/// panels. Panel `t` holds source columns `cols.start + t*NR ..` in
+/// row-major order within the panel: `buf[t*kc*NR + p*NR + j]` =
+/// B(krow, col), so the micro-kernel reads NR B values per k-step at
+/// unit stride.
+pub(crate) fn pack_b(
+    b: MatB<'_>,
+    k: usize,
+    n: usize,
+    krows: Range<usize>,
+    cols: Range<usize>,
+    buf: &mut [f32],
+) {
+    let kc = krows.len();
+    let panels = cols.len().div_ceil(NR);
+    for t in 0..panels {
+        let dst = &mut buf[t * kc * NR..(t + 1) * kc * NR];
+        for (p, krow) in krows.clone().enumerate() {
+            for j in 0..NR {
+                let col = cols.start + t * NR + j;
+                dst[p * NR + j] = if col < cols.end {
+                    match b {
+                        MatB::Normal(d) => d[krow * n + col],
+                        MatB::Trans(d) => d[col * k + krow],
+                    }
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Small-K fast path (k ≤ SMALL_K_MAX): the adapter-shape regime where
+//! the contraction depth is the rank. The whole K extent fits one panel,
+//! so the MC/KC/NC loop nest degenerates — this path drops it:
+//!
+//! * `nn` touches no scratch at all: B rows are already unit-stride, so
+//!   the direct kernel streams both operands in place.
+//! * `nt` packs Bᵀ once into `[k × NR]` column panels (one pass over B),
+//!   then runs the same direct kernel with `ldb = NR`.
+//!
+//! Scalar tail rows/columns fall back to sequential dots, which keep the
+//! same per-element k-order as the register tile — so the fast path is
+//! bitwise-identical to the blocked core (asserted in `gemm::tests`).
+
+use super::kernel::microkernel_direct;
+use super::{pack, store_tile, MatB, MR, NR};
+
+/// C[m,n] = A[m,k] @ B[k,n], k small; no packing.
+pub(crate) fn nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let m_main = m - m % MR;
+    let n_main = n - n % NR;
+    for i0 in (0..m_main).step_by(MR) {
+        for j0 in (0..n_main).step_by(NR) {
+            let mut acc = [[0f32; NR]; MR];
+            microkernel_direct(&a[i0 * k..], k, &b[j0..], n, k, &mut acc);
+            store_tile(c, n, i0, j0, MR, NR, &acc);
+        }
+        for i in i0..i0 + MR {
+            for j in n_main..n {
+                c[i * n + j] = dot_nn(a, i, k, b, j, n);
+            }
+        }
+    }
+    for i in m_main..m {
+        for j in 0..n {
+            c[i * n + j] = dot_nn(a, i, k, b, j, n);
+        }
+    }
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]ᵀ, k small; Bᵀ packed once.
+pub(crate) fn nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let panels = n.div_ceil(NR);
+    let mut bbuf = vec![0f32; panels * k * NR];
+    pack::pack_b(MatB::Trans(b), k, n, 0..k, 0..n, &mut bbuf);
+    let m_main = m - m % MR;
+    for i0 in (0..m_main).step_by(MR) {
+        for (t, bpanel) in bbuf.chunks_exact(k * NR).enumerate() {
+            let mut acc = [[0f32; NR]; MR];
+            microkernel_direct(&a[i0 * k..], k, bpanel, NR, k, &mut acc);
+            let nj = NR.min(n - t * NR);
+            store_tile(c, n, i0, t * NR, MR, nj, &acc);
+        }
+    }
+    for i in m_main..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// One C element of A[m,k] @ B[k,n], accumulated in storage k-order.
+fn dot_nn(a: &[f32], i: usize, k: usize, b: &[f32], j: usize, n: usize) -> f32 {
+    let arow = &a[i * k..(i + 1) * k];
+    let mut acc = 0f32;
+    for (p, &ap) in arow.iter().enumerate() {
+        acc += ap * b[p * n + j];
+    }
+    acc
+}

@@ -8,6 +8,8 @@
 //!   adapters list      list checkpoints in the adapter store
 //!   adapters train     train a NAMED adapter with periodic checkpoints
 //!   adapters serve     serve one or more named adapters from the store
+//!   bench-diff         compare a fresh perf_gate run against the
+//!                      committed bench_baselines snapshot
 //!
 //! The heavier end-to-end drivers (quickstart, convergence study, the
 //! ~100M e2e training run, serving load test) live in `examples/`.
@@ -29,9 +31,10 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("adapters") => cmd_adapters(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             eprintln!(
-                "usage: dorafactors <report|info|train|serve-demo|adapters> [--flags]\n\
+                "usage: dorafactors <report|info|train|serve-demo|adapters|bench-diff> [--flags]\n\
                  \n\
                  report <id>     one of: {}\n\
                  train           --config tiny|small|e2e --variant eager|fused \
@@ -44,12 +47,37 @@ fn main() -> Result<()> {
                  [--seed S] [--checkpoint-every N] [--store DIR] [--resume] \
                  [--train-workers N] [--grad-accum K]\n\
                  adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR] \
-                 [--workers N (0 = all cores)] [--fast-path merged|composed]",
+                 [--workers N (0 = all cores)] [--fast-path merged|composed]\n\
+                 bench-diff      [--baseline bench_baselines/BENCH_pr6.json] \
+                 [--fresh bench_results/BENCH_ci.json]",
                 report::REPORT_IDS.join(" ")
             );
             std::process::exit(2);
         }
     }
+}
+
+/// Compare a fresh perf-gate BENCH JSON against the committed baseline
+/// snapshot and print per-row deltas (the perf trajectory lives in git;
+/// bench_results/ is gitignored).
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let baseline_path = args.get_or("baseline", "bench_baselines/BENCH_pr6.json");
+    let fresh_path = args.get_or("fresh", "bench_results/BENCH_ci.json");
+    let read = |path: &str| -> Result<dorafactors::util::json::Json> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!(
+                "reading {path} (generate a fresh run with \
+                 `cargo bench --bench perf_gate`, or point --baseline/--fresh elsewhere)"
+            )
+        })?;
+        dorafactors::util::json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let baseline = read(baseline_path)?;
+    let fresh = read(fresh_path)?;
+    let rendered = dorafactors::bench::diff::render(&baseline, &fresh)
+        .with_context(|| format!("diffing {baseline_path} vs {fresh_path}"))?;
+    println!("{rendered}");
+    Ok(())
 }
 
 fn store_from(args: &Args) -> Result<AdapterStore> {

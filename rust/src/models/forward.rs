@@ -259,54 +259,27 @@ pub fn merged_infer_logits(
 
 // ---------------------------------------------------------------------------
 // Dense ops (the non-adapter matmuls the AOT artifacts lower to XLA dots).
-// Naive loops are deliberate: the native configs are small, and the
-// registry kernels — not these — are the measured hot path.
+// All three route through the blocked/register-tiled cores in
+// `kernels::gemm` — small-K dispatch picks the adapter fast path when the
+// contraction depth is the rank. For every builtin-config shape the cores
+// are bitwise-identical to the old naive loops (single k-block,
+// sequential per-element k-order), so the golden trace and the NumPy
+// replicas are unchanged by the reroute.
 // ---------------------------------------------------------------------------
 
-/// C[m,n] = A[m,k] @ B[n,k]^T (both operands row-major; unit-stride dot).
+/// C[m,n] = A[m,k] @ B[n,k]^T (both operands row-major).
 pub(crate) fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    let mut c = vec![0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            c[i * n + j] = acc;
-        }
-    }
-    c
+    crate::kernels::gemm::nt(a, b, m, k, n)
 }
 
 /// C[m,n] = A[m,k] @ B[k,n] (row-major).
 pub(crate) fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    crate::dora::norm_cpu::matmul(a, b, m, k, n)
+    crate::kernels::gemm::nn(a, b, m, k, n)
 }
 
 /// C[n1,n2] = A[rows,n1]^T @ B[rows,n2] (gradient contractions).
 pub(crate) fn matmul_tn(a: &[f32], b: &[f32], rows: usize, n1: usize, n2: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), rows * n1);
-    debug_assert_eq!(b.len(), rows * n2);
-    let mut c = vec![0f32; n1 * n2];
-    for i in 0..rows {
-        let arow = &a[i * n1..(i + 1) * n1];
-        let brow = &b[i * n2..(i + 1) * n2];
-        for p in 0..n1 {
-            let ap = arow[p];
-            if ap == 0.0 {
-                continue;
-            }
-            let crow = &mut c[p * n2..(p + 1) * n2];
-            for q in 0..n2 {
-                crow[q] += ap * brow[q];
-            }
-        }
-    }
-    c
+    crate::kernels::gemm::tn(a, b, rows, n1, n2)
 }
 
 // ---------------------------------------------------------------------------
