@@ -10,7 +10,10 @@
 //!   e2e contraction shapes (2x per nt dot-chain row), and the small-K
 //!   path beats the generic blocked core wherever dispatch picks it
 //!   (r <= SMALL_K_MAX) — the PR6 micro-kernel claim, plus the
-//!   zero-skip before/after trajectory rows.
+//!   zero-skip before/after trajectory rows;
+//! * each adapter variant's fused forward (rsLoRA, BoRA) stays within
+//!   1.2x of the Dora fused forward — the variant axis must not tax the
+//!   compose hot path.
 //!
 //! Trial counts are sized for a CI runner (~seconds, not minutes); the
 //! full-resolution sweeps live in `compose_kernel`, `backward_kernel`
@@ -29,8 +32,10 @@ use dorafactors::dora::compose_cpu;
 use dorafactors::dora::config::ActShape;
 use dorafactors::kernels::gemm::{self, naive, SMALL_K_MAX};
 use dorafactors::kernels::{ComposeKernel, EagerCpu, FusedCpu};
+use dorafactors::models::forward::{self, NativeModel};
 use dorafactors::numerics::Dtype;
-use dorafactors::runtime::BackendSpec;
+use dorafactors::runtime::ops::{AdapterParams, AdapterVariant, Variant};
+use dorafactors::runtime::{BackendSpec, ConfigInfo, TensorData};
 use dorafactors::util::json::Json;
 use dorafactors::util::rng::Rng;
 use dorafactors::util::stats;
@@ -131,6 +136,75 @@ fn main() {
         );
     }
     let compose_geomean = stats::geomean(&compose_speedups);
+
+    // -----------------------------------------------------------------
+    // Adapter-variant rows: the full fused forward per AdapterVariant on
+    // a synthetic mid-size config. rsLoRA is the same kernel under the
+    // rank-stabilized scale; BoRA adds the frozen factored column-norm
+    // gain plus the input column scaling. Gate: either variant's compose
+    // path stays within 1.2x of the Dora fused forward.
+    // -----------------------------------------------------------------
+    let mut variant_ratios: Vec<(&'static str, f64)> = Vec::new();
+    {
+        let (vd, vr, v_layers) = (128usize, 16usize, 2usize);
+        let (v_seq, v_bs, v_vocab) = (32usize, 8usize, 256usize);
+        let info = ConfigInfo {
+            name: "bench".into(),
+            vocab: v_vocab,
+            d_model: vd,
+            n_layers: v_layers,
+            seq: v_seq,
+            rank: vr,
+            scale: 2.0,
+            n_params: 0,
+            train_batch: v_bs,
+            chunk_steps: 1,
+            frozen: forward::frozen_names(v_layers),
+            trainable: forward::trainable_names(v_layers),
+        };
+        let leaves = forward::init_leaves(&info, 1234);
+        let mut trainable = leaves.trainable;
+        let mut vrng = Rng::new(55);
+        for l in 0..v_layers {
+            if let TensorData::F32(b) = &mut trainable[3 * l + 1].data {
+                for x in b.iter_mut() {
+                    *x = vrng.normal() as f32 * 0.1;
+                }
+            }
+        }
+        let params = AdapterParams { frozen: leaves.frozen, trainable };
+        let tokens: Vec<i32> = (0..v_bs * v_seq).map(|i| (i * 7 % v_vocab) as i32).collect();
+        let v_rows = v_bs * v_seq;
+        let mut dora_s = f64::NAN;
+        for adapter in AdapterVariant::ALL {
+            let kernels = forward::kernels_for(Variant::Fused, &info, false).expect("kernels");
+            let model = NativeModel::new(&info, &params.frozen, &params.trainable, kernels)
+                .expect("bench model")
+                .with_adapter(adapter);
+            let m = timing::bench("variant forward", cfg, || {
+                std::hint::black_box(model.infer_logits(&tokens, v_bs, v_seq).unwrap());
+            });
+            kernel_rows.push(Json::obj(vec![
+                ("kernel", Json::Str("forward_fused".into())),
+                ("variant", Json::Str(adapter.as_str().into())),
+                ("rows", Json::Num(v_rows as f64)),
+                ("d_out", Json::Num(vd as f64)),
+                ("median_s", Json::Num(m.median_s)),
+                ("ns_per_elem", Json::Num(m.median_s / (v_rows * vd) as f64 * 1e9)),
+            ]));
+            if adapter == AdapterVariant::Dora {
+                dora_s = m.median_s;
+            } else {
+                variant_ratios.push((adapter.as_str(), m.median_s / dora_s));
+            }
+            println!(
+                "forward fused {v_rows}x{vd} variant={}: {:.3} ms/fwd",
+                adapter.as_str(),
+                m.median_s * 1e3
+            );
+        }
+    }
+    let variant_ok = variant_ratios.iter().all(|(_, ratio)| *ratio <= 1.2);
 
     // -----------------------------------------------------------------
     // GEMM micro-kernel rows: the e2e-config contraction shapes
@@ -376,6 +450,7 @@ fn main() {
                 ("gemm_blocked_beats_naive_e2e", Json::Bool(gemm_ok)),
                 ("gemm_nt_2x_e2e", Json::Bool(gemm_nt_ok)),
                 ("smallk_beats_blocked_r_le_64", Json::Bool(smallk_ok)),
+                ("variant_forward_le_1p2x_dora", Json::Bool(variant_ok)),
             ]),
         ),
     ]);
@@ -414,6 +489,10 @@ fn main() {
         "blocked GEMM geomean speedup {gemm_geomean:.2} < 2.0 on the e2e rows"
     );
     assert!(smallk_ok, "small-K path lost to generic blocked at r <= {SMALL_K_MAX}");
+    assert!(
+        variant_ok,
+        "an adapter variant's fused forward exceeded 1.2x the Dora forward: {variant_ratios:?}"
+    );
     println!(
         "perf gate OK: compose geomean {compose_geomean:.2}x, gemm geomean {gemm_geomean:.2}x, \
          merged/composed {:.2}x",

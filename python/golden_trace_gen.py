@@ -46,8 +46,19 @@ determinism are asserted bitwise in ``rust/tests/golden_trace.rs``
 1e-6 is itself a floor — the Rust loader rejects any fixture regenerated
 with a looser tolerance.
 
+The adapter-variant fixtures ride the same replica: ``rslora`` swaps the
+effective scale to ``s*sqrt(r)`` (``models::forward::variant_scale``) and
+``bora`` adds the frozen factored column gain
+``g_col = colnorm(W)/max(colnorm(W + sBA), eps)`` on the module input
+(``kernels::norm::factored_colnorm_seq``, zero-B numerator), mirrored op
+for op. All variants share the Dora state at init (B = 0 makes both
+gains exactly 1), so the step-1 losses agree bitwise and the traces
+diverge only through training.
+
 Usage:  python3 python/golden_trace_gen.py [--check]
 Writes: rust/tests/golden/golden_trace_tiny_fused.json
+        rust/tests/golden/golden_trace_tiny_fused_rslora.json
+        rust/tests/golden/golden_trace_tiny_fused_bora.json
 """
 
 import ctypes
@@ -270,6 +281,57 @@ def magnitude_divide(mag, c):
     return mag / np.maximum(c, DIVISION_EPS_F32)
 
 
+def factored_colnorm(w, a, b, s):
+    """kernels::norm::factored_colnorm_seq (f32, single chunk): column-wise
+    ``||W + s*B@A||`` via base_sq/cross/B-Gram, axes swapped vs the row
+    norm but with the same accumulation discipline."""
+    d_out, d_in = w.shape
+    r = a.shape[0]
+    s64 = float(F32(s))
+    # base_sq: f64 column accumulation (sequential in row), rounded once.
+    acc64 = np.zeros(d_in, dtype=np.float64)
+    w64 = w.astype(np.float64)
+    for i in range(d_out):
+        acc64 += w64[i] * w64[i]
+    base_sq = F32(0.0) + acc64.astype(F32)
+    # gram = B^T @ B [r, r]: per entry a sequential f32 dot over rows —
+    # the outer-product accumulation below performs the identical
+    # per-entry operation sequence.
+    gram = np.zeros((r, r), dtype=F32)
+    for i in range(d_out):
+        gram += b[i][:, None] * b[i][None, :]
+    # u_c = W^T @ B [d_in, r] (f32 seq over rows); cross[k] = sequential
+    # f32 dot of u_c[k, :] against A[:, k].
+    u_c = np.zeros((d_in, r), dtype=F32)
+    for i in range(d_out):
+        u_c += w[i][:, None] * b[i][None, :]
+    cacc = np.zeros(d_in, dtype=F32)
+    for l in range(r):
+        cacc += u_c[:, l] * a[l]
+    cross = F32(0.0) + cacc
+    # ba_sq[k] = (A^T G A)_kk: ag = A[:,k]^T G (seq over t), then the
+    # sequential dot against A[:,k].
+    ag = np.zeros((d_in, r), dtype=F32)
+    for t in range(r):
+        ag += a[t][:, None] * gram[t][None, :]
+    ba = np.zeros(d_in, dtype=F32)
+    for l in range(r):
+        ba += ag[:, l] * a[l]
+    two_s = F32(2.0 * s64)
+    s2 = F32(s64 * s64)
+    total = base_sq + two_s * cross + s2 * ba
+    return np.sqrt(np.maximum(total, F32(0.0)))
+
+
+def layer_g_col(w, a, b, s):
+    """models::forward::layer_g_col — BoRA's frozen column gain. The
+    numerator runs the SAME factored kernel with a zero B (not s = 0), so
+    at init both norms are bitwise equal and g_col = 1 exactly."""
+    m_col = factored_colnorm(w, a, np.zeros_like(b), s)
+    c_col = factored_colnorm(w, a, b, s)
+    return magnitude_divide(m_col, c_col)
+
+
 # --------------------------------------------------------------------------
 # models::forward — init, forward/backward, AdamW
 # --------------------------------------------------------------------------
@@ -299,9 +361,16 @@ def init_leaves(seed):
     return frozen, trainable
 
 
-def layer_g(w, a, b, mag):
-    c = factored_norm(w, a, b, SCALE)
+def layer_g(w, a, b, mag, s=SCALE):
+    c = factored_norm(w, a, b, s)
     return magnitude_divide(mag, c), c
+
+
+def variant_scale(variant):
+    """models::forward::variant_scale — f32 rounding order preserved."""
+    if variant == "rslora":
+        return F32(SCALE * F32(np.sqrt(F32(RANK))))
+    return SCALE
 
 
 def xent_forward_backward(logits, targets):
@@ -327,7 +396,7 @@ def xent_forward_backward(logits, targets):
     return F32(loss / float(rows)), d
 
 
-def forward_backward(frozen, trainable, tokens_block):
+def forward_backward(frozen, trainable, tokens_block, s_eff=SCALE, bora=False):
     """One training step's loss + grads for a [bs, seq+1] token block."""
     block = tokens_block.reshape(BS, SEQ + 1)
     inputs = block[:, :SEQ].reshape(-1)
@@ -340,20 +409,25 @@ def forward_backward(frozen, trainable, tokens_block):
     for l in range(N_LAYERS):
         w = frozen[1 + l]
         a, b, mag = trainable[3 * l], trainable[3 * l + 1], trainable[3 * l + 2]
-        base = matmul_nt(h, w)
-        u = matmul_nt(h, a)
+        # BoRA scales the module INPUT by the frozen column gain; the
+        # residual stream stays unscaled, and the trace keeps the SCALED
+        # input (what the adapter gradients contract against).
+        g_col = layer_g_col(w, a, b, s_eff) if bora else None
+        hin = h * g_col[None, :] if g_col is not None else h
+        base = matmul_nt(hin, w)
+        u = matmul_nt(hin, a)
         lora = matmul_nt(u, b)
-        g, c = layer_g(w, a, b, mag)
+        g, c = layer_g(w, a, b, mag, s_eff)
         # forward_dual_rows: sl = s*l; t2 = g*sl; t3 = (g-1)*base;
         # delta = t3 + t2; inner = sl + base.
-        sl = SCALE * lora
+        sl = s_eff * lora
         t2 = g[None, :] * sl
         t3 = (g - F32(1.0))[None, :] * base
         delta = t3 + t2
         inner = sl + base
         t = tanhf32(base + delta)
         h_next = h + t
-        layers.append(dict(h=h, u=u, inner=inner, t=t, g=g, c=c))
+        layers.append(dict(h=hin, u=u, inner=inner, t=t, g=g, c=c, g_col=g_col))
         h = h_next
     logits = matmul_nt(h, embed)
     loss, d_logits = xent_forward_backward(logits, targets)
@@ -368,7 +442,7 @@ def forward_backward(frozen, trainable, tokens_block):
         dy = dh * (F32(1.0) - tr["t"] * tr["t"])
         # FusedCpu backward_with_dmag: 32-row blocks, f64 partials per
         # block reduced in fixed block order.
-        sdd = SCALE * dy
+        sdd = s_eff * dy
         d_lora = tr["g"][None, :] * sdd
         d_base = (tr["g"] - F32(1.0))[None, :] * dy
         block_rows = 32
@@ -389,7 +463,12 @@ def forward_backward(frozen, trainable, tokens_block):
         da = matmul_tn(du, tr["h"])
         dh_w = matmul_nn(d_base, w)
         dh_a = matmul_nn(du, a)
-        dh = dh + (dh_w + dh_a)
+        # With BoRA the through-module input was h ⊙ g_col: both module
+        # contributions pick up the frozen, detached gain.
+        if tr["g_col"] is not None:
+            dh = dh + (dh_w + dh_a) * tr["g_col"][None, :]
+        else:
+            dh = dh + (dh_w + dh_a)
         grads_rev.append([da, db, dmag])
     grads = []
     for layer_grads in reversed(grads_rev):
@@ -427,19 +506,21 @@ def adamw_step(params, m1, m2, grads, t):
         )
 
 
-def run_golden(seed=7, branching=3, steps=52):
+def run_golden(seed=7, branching=3, steps=52, variant="dora"):
     frozen, trainable = init_leaves(seed)
     m1 = [np.zeros_like(t) for t in trainable]
     m2 = [np.zeros_like(t) for t in trainable]
     corpus = MarkovCorpus(VOCAB, branching, (seed ^ 0xDA7A) & M64)
     # Trainer construction draws the held-out eval block FIRST.
     _eval_tokens = corpus.block(1, BS, SEQ + 1)
+    s_eff = variant_scale(variant)
+    bora = variant == "bora"
     losses = []
     step = 0
     while step < steps:
         tokens = corpus.block(CHUNK, BS, SEQ + 1).reshape(CHUNK, BS * (SEQ + 1))
         for i in range(CHUNK):
-            loss, grads = forward_backward(frozen, trainable, tokens[i])
+            loss, grads = forward_backward(frozen, trainable, tokens[i], s_eff, bora)
             adamw_step(trainable, m1, m2, grads, step + i + 1)
             losses.append(float(loss))
         step += CHUNK
@@ -452,7 +533,7 @@ def run_golden(seed=7, branching=3, steps=52):
 # --------------------------------------------------------------------------
 
 
-def run_shadow_f64(seed=7, branching=3, steps=52):
+def run_shadow_f64(seed=7, branching=3, steps=52, variant="dora"):
     frozen, trainable = init_leaves(seed)
     frozen = [x.astype(np.float64) for x in frozen]
     trainable = [x.astype(np.float64) for x in trainable]
@@ -460,7 +541,9 @@ def run_shadow_f64(seed=7, branching=3, steps=52):
     m2 = [np.zeros_like(t) for t in trainable]
     corpus = MarkovCorpus(VOCAB, branching, (seed ^ 0xDA7A) & M64)
     _ = corpus.block(1, BS, SEQ + 1)
-    s, lr, b1, b2, eps = 2.0, 1e-2, 0.9, 0.999, float(F32(1e-8))
+    lr, b1, b2, eps = 1e-2, 0.9, 0.999, float(F32(1e-8))
+    s = float(variant_scale(variant))
+    bora = variant == "bora"
     losses = []
     step = 0
     while step < steps:
@@ -480,13 +563,21 @@ def run_shadow_f64(seed=7, branching=3, steps=52):
                 )
                 c = np.linalg.norm(w + s * (b @ a), axis=1)
                 g = mag / np.maximum(c, 1e-12)
-                base = h @ w.T
-                u = h @ a.T
+                if bora:
+                    g_col = np.linalg.norm(w, axis=0) / np.maximum(
+                        np.linalg.norm(w + s * (b @ a), axis=0), 1e-12
+                    )
+                    hin = h * g_col[None, :]
+                else:
+                    g_col = None
+                    hin = h
+                base = hin @ w.T
+                u = hin @ a.T
                 lora = u @ b.T
                 inner = s * lora + base
                 y = g[None, :] * inner
                 t = np.tanh(y)
-                layers.append((h, u, inner, t, g, c))
+                layers.append((hin, u, inner, t, g, c, g_col))
                 h = h + t
             logits = h @ embed.T
             zs = logits - logits.max(axis=1, keepdims=True)
@@ -502,7 +593,7 @@ def run_shadow_f64(seed=7, branching=3, steps=52):
             dh = d @ embed
             grads_rev = []
             for l in range(N_LAYERS - 1, -1, -1):
-                h_in, u, inner, t, g, c = layers[l]
+                h_in, u, inner, t, g, c, g_col = layers[l]
                 w = frozen[1 + l]
                 a, b = trainable[3 * l], trainable[3 * l + 1]
                 dy = dh * (1.0 - t * t)
@@ -515,7 +606,10 @@ def run_shadow_f64(seed=7, branching=3, steps=52):
                 db = d_lora.T @ u
                 du = d_lora @ b
                 da = du.T @ h_in
-                dh = dh + d_base @ w + du @ a
+                dmod = d_base @ w + du @ a
+                if g_col is not None:
+                    dmod = dmod * g_col[None, :]
+                dh = dh + dmod
                 grads_rev.append([da, db, dmag])
             grads = []
             for lg in reversed(grads_rev):
@@ -534,44 +628,63 @@ def run_shadow_f64(seed=7, branching=3, steps=52):
 
 
 def main():
-    losses = run_golden()
-    print(f"bit-exact f32 run: first {losses[0]:.6f}, last {losses[-1]:.6f}")
-    assert len(losses) == 52
-    assert losses[0] > losses[-1], "no learning in the golden run"
-    # ln(64) start, entropy floor ~ln(3) target band.
-    assert 3.8 < losses[0] < 4.5, losses[0]
+    all_losses = {}
+    for variant in ["dora", "rslora", "bora"]:
+        losses = run_golden(variant=variant)
+        assert len(losses) == 52
+        assert all(math.isfinite(x) for x in losses)
+        assert losses[0] > losses[-1], f"no learning in the {variant} run"
+        # ln(64) start, entropy floor ~ln(3) target band.
+        assert 3.8 < losses[0] < 4.5, losses[0]
 
-    shadow = run_shadow_f64()
-    print(f"f64 shadow run:    first {shadow[0]:.6f}, last {shadow[-1]:.6f}")
-    worst = max(abs(a - b) for a, b in zip(losses, shadow))
-    print(f"max |f32 - f64| over 52 steps: {worst:.3e}")
-    # Pure-precision divergence stays small over 52 tiny steps; a LOGIC
-    # error in either implementation blows this up immediately.
-    assert worst < 2e-2, f"replica logic divergence: {worst}"
+        shadow = run_shadow_f64(variant=variant)
+        worst = max(abs(a - b) for a, b in zip(losses, shadow))
+        print(
+            f"{variant:7} f32 first {losses[0]:.6f} last {losses[-1]:.6f} | "
+            f"f64 shadow last {shadow[-1]:.6f} | max |f32 - f64| {worst:.3e}"
+        )
+        # Pure-precision divergence stays small over 52 tiny steps; a
+        # LOGIC error in either implementation blows this up immediately.
+        assert worst < 2e-2, f"{variant} replica logic divergence: {worst}"
+        all_losses[variant] = losses
+
+    # All variants share the init state (B = 0 makes every gain exactly
+    # 1), so the pre-update step-1 loss is bitwise-shared; training then
+    # has to diverge.
+    assert all_losses["dora"][0] == all_losses["rslora"][0] == all_losses["bora"][0]
+    for variant in ["rslora", "bora"]:
+        gap = max(abs(a - b) for a, b in zip(all_losses["dora"], all_losses[variant]))
+        print(f"{variant:7} max trace gap vs dora: {gap:.3e}")
+        assert gap > 1e-3, f"{variant} never diverged from dora: {gap}"
 
     if "--check" in sys.argv:
         return
 
-    out = {
-        "branching": 3,
-        "config": "tiny",
-        "losses": losses,
-        "seed": 7,
-        "tolerance": 1e-6,
-        "variant": "fused",
-    }
-    path = os.path.join(
+    golden_dir = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "rust",
         "tests",
         "golden",
-        "golden_trace_tiny_fused.json",
     )
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {path}")
+    os.makedirs(golden_dir, exist_ok=True)
+    for variant, token, fname in [
+        ("dora", "fused", "golden_trace_tiny_fused.json"),
+        ("rslora", "fused-rslora", "golden_trace_tiny_fused_rslora.json"),
+        ("bora", "fused-bora", "golden_trace_tiny_fused_bora.json"),
+    ]:
+        out = {
+            "branching": 3,
+            "config": "tiny",
+            "losses": all_losses[variant],
+            "seed": 7,
+            "tolerance": 1e-6,
+            "variant": token,
+        }
+        path = os.path.join(golden_dir, fname)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,8 @@
 //! the committed snapshot is the only history).
 //!
 //! Rows are matched by identity key — `kernel` name plus its shape
-//! columns (`rows`/`d_out` for compose rows, `m`/`k`/`n` for GEMM rows),
+//! columns (`rows`/`d_out` for compose rows, `m`/`k`/`n` for GEMM rows)
+//! plus the adapter `variant` when the row carries one,
 //! `pool`+`fast_path` for serving rows — and compared on the row's
 //! primary metric (ns_per_elem, ns_per_mac, or median_s). Rows present
 //! on only one side are listed separately rather than dropped.
@@ -43,16 +44,23 @@ pub struct BenchDiff {
     pub only_fresh: Vec<String>,
 }
 
-/// Identity key of a `kernels` row.
+/// Identity key of a `kernels` row. The adapter-variant column is part
+/// of the identity only when the row carries one — committed baselines
+/// that predate the variant axis keep matching their (implicitly DoRA)
+/// fresh counterparts.
 fn kernel_key(row: &Json) -> Result<String, JsonError> {
     let kernel = row.get("kernel")?.as_str()?.to_string();
+    let variant = match row.opt("variant") {
+        Some(v) => format!(" variant={}", v.as_str()?),
+        None => String::new(),
+    };
     if row.opt("m").is_some() {
         let (m, k, n) =
             (row.get("m")?.as_usize()?, row.get("k")?.as_usize()?, row.get("n")?.as_usize()?);
-        Ok(format!("{kernel} {m}x{k}x{n}"))
+        Ok(format!("{kernel} {m}x{k}x{n}{variant}"))
     } else {
         let (rows, d_out) = (row.get("rows")?.as_usize()?, row.get("d_out")?.as_usize()?);
-        Ok(format!("{kernel} {rows}x{d_out}"))
+        Ok(format!("{kernel} {rows}x{d_out}{variant}"))
     }
 }
 
@@ -232,6 +240,46 @@ mod tests {
         assert!(text.contains("provenance: test"));
         assert!(text.contains("compose_geomean_speedup"));
         assert!(text.contains("-20.0%"));
+    }
+
+    #[test]
+    fn variant_rows_key_separately_and_legacy_rows_keep_their_keys() {
+        let legacy = Json::obj(vec![
+            ("kernel", Json::Str("compose_fused".into())),
+            ("rows", Json::Num(512.0)),
+            ("d_out", Json::Num(2048.0)),
+            ("median_s", Json::Num(0.001)),
+        ]);
+        // Pre-variant rows keep the exact key the committed baseline used.
+        assert_eq!(kernel_key(&legacy).unwrap(), "compose_fused 512x2048");
+        let mut rows = Vec::new();
+        for v in ["rslora", "bora"] {
+            rows.push(Json::obj(vec![
+                ("kernel", Json::Str("compose_fused".into())),
+                ("variant", Json::Str(v.into())),
+                ("rows", Json::Num(512.0)),
+                ("d_out", Json::Num(2048.0)),
+                ("median_s", Json::Num(0.001)),
+            ]));
+        }
+        assert_eq!(kernel_key(&rows[0]).unwrap(), "compose_fused 512x2048 variant=rslora");
+        assert_eq!(kernel_key(&rows[1]).unwrap(), "compose_fused 512x2048 variant=bora");
+        // Same kernel + shape, different variant: three distinct rows, so
+        // a diff of {legacy} vs {legacy, rslora, bora} flags the variant
+        // rows as new instead of colliding with the Dora row.
+        let base = Json::obj(vec![("kernels", Json::Arr(vec![legacy.clone()]))]);
+        rows.insert(0, legacy);
+        let fresh = Json::obj(vec![("kernels", Json::Arr(rows))]);
+        let d = diff(&base, &fresh).unwrap();
+        assert_eq!(d.rows.len(), 1);
+        assert!(d.only_baseline.is_empty());
+        assert_eq!(
+            d.only_fresh,
+            vec![
+                "compose_fused 512x2048 variant=rslora".to_string(),
+                "compose_fused 512x2048 variant=bora".to_string(),
+            ]
+        );
     }
 
     #[test]

@@ -56,7 +56,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::models::forward;
-use crate::runtime::ops::{AdapterParams, InferMergedReq, InferReq, InitReq, MergedParams, Variant};
+use crate::runtime::ops::{
+    AdapterParams, AdapterVariant, InferMergedReq, InferReq, InitReq, MergedParams, Variant,
+};
 use crate::runtime::{
     Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, Tensor,
 };
@@ -239,6 +241,8 @@ impl ServerMetrics {
 /// merged weights. Immutable once built — hot-loads swap the whole entry.
 struct AdapterEntry {
     params: Arc<AdapterParams>,
+    /// Which compose math this adapter's requests (and its merge) use.
+    variant: AdapterVariant,
     merged: Option<Arc<MergedParams>>,
 }
 
@@ -327,7 +331,7 @@ impl Server {
             spec,
             backend,
             cfg,
-            vec![(DEFAULT_ADAPTER.to_string(), init.params)],
+            vec![(DEFAULT_ADAPTER.to_string(), init.params, AdapterVariant::Dora)],
         )
     }
 
@@ -351,7 +355,11 @@ impl Server {
             spec,
             probe,
             cfg,
-            vec![(DEFAULT_ADAPTER.to_string(), AdapterParams { frozen, trainable })],
+            vec![(
+                DEFAULT_ADAPTER.to_string(),
+                AdapterParams { frozen, trainable },
+                AdapterVariant::Dora,
+            )],
         )
     }
 
@@ -383,7 +391,7 @@ impl Server {
             spec,
             probe,
             cfg,
-            adapters.into_iter().map(|a| (a.name, a.params)).collect(),
+            adapters.into_iter().map(|a| (a.name, a.params, a.variant)).collect(),
         )
     }
 
@@ -401,11 +409,13 @@ impl Server {
         spec: BackendSpec,
         probe: ExecBackend,
         cfg: ServerCfg,
-        adapters: Vec<(String, AdapterParams)>,
+        adapters: Vec<(String, AdapterParams, AdapterVariant)>,
     ) -> Result<Server> {
         let info = probe.config(&cfg.config)?;
-        let default_adapter =
-            adapters.first().map(|(n, _)| n.clone()).context("no adapters to serve")?;
+        let default_adapter = adapters
+            .first()
+            .map(|(n, _, _)| n.clone())
+            .context("no adapters to serve")?;
         let artifact = format!("infer_{}_fused", cfg.config);
         probe
             .ensure_artifact(&artifact)
@@ -426,9 +436,10 @@ impl Server {
 
         let mut merge_fallbacks = 0u64;
         let mut table = BTreeMap::new();
-        for (name, params) in adapters {
+        for (name, params, variant) in adapters {
             validate_adapter_params(&info, &name, &params)?;
-            let entry = build_entry(&info, &name, params, fast_path, &mut merge_fallbacks);
+            let entry =
+                build_entry(&info, &name, params, variant, fast_path, &mut merge_fallbacks);
             if table.insert(name.clone(), Arc::new(entry)).is_some() {
                 bail!("duplicate adapter name {name:?}");
             }
@@ -527,10 +538,23 @@ impl Server {
     /// batches keep the snapshot they already took and no request can
     /// ever see new parameters with stale merged weights (or vice versa).
     pub fn load_adapter(&self, name: &str, params: AdapterParams) -> Result<()> {
+        self.load_adapter_variant(name, params, AdapterVariant::Dora)
+    }
+
+    /// [`Server::load_adapter`] with an explicit adapter variant (the
+    /// checkpoint-carrying paths use this; bare parameter sets default to
+    /// DoRA).
+    pub fn load_adapter_variant(
+        &self,
+        name: &str,
+        params: AdapterParams,
+        variant: AdapterVariant,
+    ) -> Result<()> {
         crate::runtime::adapters::validate_name(name)?;
         params.validate(&self.info, name)?;
         let mut fallbacks = 0u64;
-        let entry = build_entry(&self.info, name, params, self.fast_path, &mut fallbacks);
+        let entry =
+            build_entry(&self.info, name, params, variant, self.fast_path, &mut fallbacks);
         lock_unpoisoned(&self.adapters).insert(name.to_string(), Arc::new(entry));
         let mut m = lock_unpoisoned(&self.metrics);
         m.hot_loads += 1;
@@ -549,7 +573,7 @@ impl Server {
                 self.info.name
             );
         }
-        self.load_adapter(name, adapter.params)
+        self.load_adapter_variant(name, adapter.params, adapter.variant)
     }
 
     pub fn metrics(&self) -> ServerMetrics {
@@ -583,12 +607,13 @@ fn build_entry(
     info: &ConfigInfo,
     name: &str,
     params: AdapterParams,
+    variant: AdapterVariant,
     fast_path: FastPath,
     fallbacks: &mut u64,
 ) -> AdapterEntry {
     let merged = match fast_path {
         FastPath::Composed => None,
-        FastPath::Merged => match forward::merge_adapter_params(info, &params) {
+        FastPath::Merged => match forward::merge_adapter_params(info, &params, variant) {
             Ok(m) => Some(Arc::new(m)),
             Err(e) => {
                 eprintln!(
@@ -600,7 +625,7 @@ fn build_entry(
             }
         },
     };
-    AdapterEntry { params: Arc::new(params), merged }
+    AdapterEntry { params: Arc::new(params), variant, merged }
 }
 
 /// Leaf-count check for one adapter against the server config. Startup
@@ -767,6 +792,7 @@ fn serve_group(
         None => engine.infer(InferReq {
             config: ctx.config.clone(),
             variant: Variant::Fused,
+            adapter: entry.variant,
             params: entry.params.clone(),
             tokens,
         }),
@@ -999,6 +1025,71 @@ mod tests {
                 "logit {i}: merged {m} vs composed {c}"
             );
         }
+    }
+
+    #[test]
+    fn variant_adapters_serve_on_both_paths_and_agree() {
+        // rsLoRA and BoRA adapters (leaves nudged off init so the
+        // variant math bites) serve through the merged fast path with no
+        // fallback, and the merged logits match the composed path at
+        // 1e-5 — the per-variant merge formula is what the worker serves.
+        let mut base = tiny_adapter("v", 3);
+        for t in base.params.trainable.iter_mut() {
+            if let crate::runtime::TensorData::F32(v) = &mut t.data {
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x += ((i % 7) as f32 - 3.0) * 0.01;
+                }
+            }
+        }
+        let prompt = [2, 4, 6, 8];
+        let run = |variant: AdapterVariant, fp: FastPath| {
+            let server = Server::start_with_adapters(
+                BackendSpec::Native,
+                ServerCfg { fast_path: fp, ..tiny_cfg() },
+                vec![base.clone().with_variant(variant)],
+            )
+            .unwrap();
+            let reply = server.client().infer_with("v", &prompt).unwrap();
+            let m = server.shutdown();
+            if fp == FastPath::Merged {
+                assert_eq!(m.merge_fallbacks, 0, "{variant:?} failed to merge");
+                assert_eq!(m.merged_batches, 1);
+            } else {
+                assert_eq!(m.composed_batches, 1);
+            }
+            reply.logits
+        };
+        let dora = run(AdapterVariant::Dora, FastPath::Merged);
+        for variant in [AdapterVariant::RsLora, AdapterVariant::Bora] {
+            let merged = run(variant, FastPath::Merged);
+            let composed = run(variant, FastPath::Composed);
+            for (i, (&m, &c)) in merged.iter().zip(&composed).enumerate() {
+                assert!(
+                    (m - c).abs() <= 1e-5 * c.abs().max(1.0),
+                    "{variant:?} logit {i}: merged {m} vs composed {c}"
+                );
+            }
+            // Off init the variant really is a different model.
+            let diff =
+                dora.iter().zip(&merged).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+            assert!(diff > 1e-4, "{variant:?} matches dora off init, max diff {diff}");
+        }
+
+        // Hot-loading a stored variant checkpoint carries its variant
+        // into the serving entry (bitwise the same merge as startup).
+        let dir = std::env::temp_dir()
+            .join(format!("dora_server_variant_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = AdapterStore::open(&dir).unwrap();
+        store.save(&base.clone().with_variant(AdapterVariant::RsLora)).unwrap();
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        server.hot_load(&store, "v").unwrap();
+        let reply = server.client().infer_with("v", &prompt).unwrap();
+        let expect = run(AdapterVariant::RsLora, FastPath::Merged);
+        assert_eq!(reply.logits, expect, "hot-loaded rslora serves different logits");
+        let m = server.shutdown();
+        assert_eq!(m.merge_fallbacks, 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

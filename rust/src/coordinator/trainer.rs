@@ -50,8 +50,8 @@ use anyhow::{bail, Context, Result};
 
 use super::data::MarkovCorpus;
 use crate::runtime::ops::{
-    reduce_sample_grads, AdapterParams, ApplyUpdateReq, EvalReq, InitReq, OptState,
-    TrainStepReq, Variant,
+    parse_variant_spec, reduce_sample_grads, variant_token, AdapterParams, AdapterVariant,
+    ApplyUpdateReq, EvalReq, InitReq, OptState, TrainStepReq, Variant,
 };
 use crate::runtime::{
     Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, GradReducer,
@@ -63,7 +63,10 @@ use crate::runtime::{
 pub struct TrainerCfg {
     /// Manifest config name: "tiny" | "small" | "e2e".
     pub config: String,
-    /// Variant: "eager" | "fused".
+    /// Variant spec: a kernel token ("eager" | "fused", implying DoRA),
+    /// an adapter token ("dora" | "rslora" | "bora", implying the fused
+    /// kernel path), or the combined "<kernel>-<adapter>" form
+    /// ("eager-rslora"). See [`parse_variant_spec`].
     pub variant: String,
     /// Parameter-init + data seed.
     pub seed: u64,
@@ -113,6 +116,7 @@ pub struct Trainer {
     backend: ExecBackend,
     cfg: TrainerCfg,
     variant: Variant,
+    adapter: AdapterVariant,
     info: ConfigInfo,
     corpus: MarkovCorpus,
     /// Frozen + trainable leaves behind one shared handle: engine
@@ -150,7 +154,7 @@ impl Trainer {
         let backend = backend.into();
         // Cheap validation first: a bad variant must not cost a full
         // parameter init (or a PJRT artifact compile) before erroring.
-        Variant::parse(&cfg.variant)?;
+        parse_variant_spec(&cfg.variant)?;
         let pool = Self::pool_for(&backend, &cfg)?;
         let init = backend
             .init(InitReq { config: cfg.config.clone(), seed: cfg.seed as i32 })
@@ -162,7 +166,7 @@ impl Trainer {
     /// general data-parallel constructor (every pool worker reconnects
     /// its own engine from the spec).
     pub fn with_spec(spec: &BackendSpec, cfg: TrainerCfg) -> Result<Trainer> {
-        Variant::parse(&cfg.variant)?;
+        parse_variant_spec(&cfg.variant)?;
         let backend = spec.connect()?;
         let pool = Self::pool_for_spec(spec, &cfg)?;
         let init = backend
@@ -239,7 +243,6 @@ impl Trainer {
         adapter: &Adapter,
     ) -> Result<Trainer> {
         Self::check_adapter_config(&cfg, adapter)?;
-        Variant::parse(&cfg.variant)?;
         let backend = spec.connect()?;
         let pool = Self::pool_for_spec(spec, &cfg)?;
         Self::with_parts(backend, pool, cfg, adapter.params.clone(), adapter.step)
@@ -254,6 +257,17 @@ impl Trainer {
                 cfg.config
             );
         }
+        // Resuming a checkpoint under a different adapter variant would
+        // silently train it with the wrong compose math — hard error.
+        let (_, adapter_variant) = parse_variant_spec(&cfg.variant)?;
+        if adapter.variant != adapter_variant {
+            bail!(
+                "adapter {:?} was trained as variant {:?}, trainer is configured for {:?}",
+                adapter.name,
+                adapter.variant.as_str(),
+                adapter_variant.as_str()
+            );
+        }
         Ok(())
     }
 
@@ -265,7 +279,7 @@ impl Trainer {
         params: AdapterParams,
         step: i32,
     ) -> Result<Trainer> {
-        let variant = Variant::parse(&cfg.variant)?;
+        let (variant, adapter) = parse_variant_spec(&cfg.variant)?;
         let info = backend.config(&cfg.config)?;
         if !params.matches(&info) {
             bail!(
@@ -286,7 +300,7 @@ impl Trainer {
         // startup cost is paid.
         if pool.is_some() {
             for artifact in [
-                format!("loss_and_grads_{}_{}", info.name, variant.as_str()),
+                format!("loss_and_grads_{}_{}", info.name, variant_token(variant, adapter)),
                 format!("apply_update_{}", info.name),
             ] {
                 backend.ensure_artifact(&artifact).with_context(|| {
@@ -331,6 +345,7 @@ impl Trainer {
             backend,
             cfg,
             variant,
+            adapter,
             info,
             corpus,
             params: std::sync::Arc::new(params),
@@ -399,7 +414,8 @@ impl Trainer {
             self.opt.step,
             (*self.params).clone(),
         )?
-        .with_provenance(workers, accum, accum * self.info.train_batch as u32))
+        .with_provenance(workers, accum, accum * self.info.train_batch as u32)
+        .with_variant(self.adapter))
     }
 
     /// Write the adapter to `store` under `name` every `every_steps`
@@ -438,6 +454,7 @@ impl Trainer {
         let req = TrainStepReq {
             config: self.cfg.config.clone(),
             variant: self.variant,
+            adapter: self.adapter,
             params: self.params.clone(),
             opt: self.opt.clone(),
             tokens,
@@ -473,7 +490,7 @@ impl Trainer {
         let seq1 = self.info.seq + 1;
         let accum = self.cfg.grad_accum;
         let total_rows = accum * bs * self.info.seq;
-        let reducer = GradReducer::new(self.cfg.config.clone(), self.variant);
+        let reducer = GradReducer::new(self.cfg.config.clone(), self.variant, self.adapter);
         let prev_step = self.opt.step;
         let first = self.history.len();
         for _ in 0..k {
@@ -541,6 +558,7 @@ impl Trainer {
         let resp = self.backend.eval(EvalReq {
             config: self.cfg.config.clone(),
             variant: self.variant,
+            adapter: self.adapter,
             params: self.params.clone(),
             tokens: self.eval_tokens.clone(),
         })?;
@@ -713,6 +731,42 @@ mod tests {
             from_start.history[0].loss, resumed.history[0].loss,
             "resumed run replayed the original run's first data block"
         );
+    }
+
+    #[test]
+    fn adapter_variants_train_and_the_resume_guard_holds() {
+        // rsLoRA through the combined "<kernel>-<adapter>" spec.
+        let mut rs = Trainer::new(NativeEngine::new(), tiny("fused-rslora", 9)).unwrap();
+        rs.run_chunk().unwrap();
+        assert!(rs.history.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+        let a = rs.to_adapter("rs").unwrap();
+        assert_eq!(a.variant, AdapterVariant::RsLora);
+        // Resuming under the matching variant works; a mismatch bails
+        // before any training step runs.
+        assert!(
+            Trainer::from_adapter(NativeEngine::new(), tiny("fused-rslora", 9), &a).is_ok()
+        );
+        let err =
+            Trainer::from_adapter(NativeEngine::new(), tiny("fused", 9), &a).unwrap_err();
+        assert!(format!("{err:#}").contains("variant"), "{err:#}");
+        // A bare adapter token implies the fused kernel path; BoRA's
+        // column-normalized compose trains to finite losses too.
+        let mut bo = Trainer::new(NativeEngine::new(), tiny("bora", 10)).unwrap();
+        bo.run_chunk().unwrap();
+        assert!(bo.history.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+
+        // The data-parallel path threads the adapter variant through the
+        // shard requests: a 2-worker rsLoRA run tracks the single-engine
+        // rsLoRA run within the reduction's reassociation tolerance.
+        let mut dp = Trainer::new(
+            NativeEngine::new(),
+            TrainerCfg { train_workers: 2, ..tiny("fused-rslora", 9) },
+        )
+        .unwrap();
+        dp.train_steps(rs.step_count()).unwrap();
+        let (mean, max) = Trainer::loss_delta(&dp, &rs);
+        assert!(mean < 1e-5, "mean |dloss| {mean}");
+        assert!(max < 1e-5, "max |dloss| {max}");
     }
 
     // --- Data-parallel path (native pool; unconditional) ---

@@ -188,6 +188,41 @@ pub fn dense_ba_norm(
     norms
 }
 
+/// Dense column-wise baseline: materialize `B@A` and the composed weight
+/// (the same two `[d_out, d_in]` temporaries as [`dense_ba_norm`]), then
+/// reduce down columns with a per-column f64 accumulator. The eager
+/// reference the factored column engines are verified against.
+pub fn dense_ba_colnorm(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    s: f32,
+    m: ModuleShape,
+    tracker: &mut AllocTracker,
+) -> Vec<f32> {
+    let ModuleShape { d_out, d_in, rank: r } = m;
+    let n = d_out * d_in;
+    let mut ba = vec_f32(tracker, n);
+    matmul_into(b, a, d_out, r, d_in, &mut ba);
+    let mut composed = vec_f32(tracker, n);
+    for i in 0..n {
+        composed[i] = w[i] + s * ba[i];
+    }
+    drop_vec(tracker, ba);
+    tracker.alloc((d_in * 8) as u64);
+    let mut acc = vec![0f64; d_in];
+    for i in 0..d_out {
+        let row = &composed[i * d_in..(i + 1) * d_in];
+        for (k, &v) in row.iter().enumerate() {
+            acc[k] += (v as f64) * (v as f64);
+        }
+    }
+    drop_vec(tracker, composed);
+    let out = acc.iter().map(|&x| x.sqrt() as f32).collect();
+    tracker.free((d_in * 8) as u64);
+    out
+}
+
 /// Default chunk budget (bytes), matching the paper's 256 MB knob.
 pub const DEFAULT_CHUNK_BUDGET: u64 = 256 << 20;
 

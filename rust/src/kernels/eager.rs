@@ -136,4 +136,33 @@ impl NormEngine for EagerCpu {
         tracker.free(((wq.len() + aq.len() + bq.len()) * 4) as u64);
         out
     }
+
+    /// Column-wise analogue of the dense baseline
+    /// (`norm_cpu::dense_ba_colnorm`), with the same tracked fp32-cast
+    /// copies for half storage dtypes.
+    fn weight_colnorm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        _budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32> {
+        if dt == Dtype::F32 {
+            return crate::dora::norm_cpu::dense_ba_colnorm(w, a, b, s, m, tracker);
+        }
+        let cast = |v: &[f32], tracker: &mut AllocTracker| -> Vec<f32> {
+            tracker.alloc((v.len() * 4) as u64);
+            v.iter().map(|&x| dt.quantize(x)).collect()
+        };
+        let wq = cast(w, tracker);
+        let aq = cast(a, tracker);
+        let bq = cast(b, tracker);
+        let out = crate::dora::norm_cpu::dense_ba_colnorm(&wq, &aq, &bq, s, m, tracker);
+        tracker.free(((wq.len() + aq.len() + bq.len()) * 4) as u64);
+        out
+    }
 }

@@ -128,4 +128,18 @@ impl NormEngine for FusedCpu {
     ) -> Vec<f32> {
         with_elem!(dt, E, norm::factored_norm_seq::<E>(w, a, b, s, m, budget, tracker))
     }
+
+    fn weight_colnorm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32> {
+        with_elem!(dt, E, norm::factored_colnorm_seq::<E>(w, a, b, s, m, budget, tracker))
+    }
 }

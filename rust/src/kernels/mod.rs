@@ -172,6 +172,20 @@ pub trait NormEngine: Send + Sync {
         dt: Dtype,
         tracker: &mut AllocTracker,
     ) -> Vec<f32>;
+
+    /// Column-wise `||W + s*B@A||` (Algorithm 1 transposed) — the BoRA
+    /// column-magnitude reduction, `[d_in]` output.
+    fn weight_colnorm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32>;
 }
 
 /// Approximate last-level-cache size used for the parallel-backend
@@ -575,6 +589,149 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn property_factored_vs_dense_colnorm_parity_across_dtypes() {
+        // Column-norm mirror of the row parity suite: the factored COLUMN
+        // engines (sequential + tiled) against the dense-materialized
+        // column baseline and an exact f64 reference, in f32, soft-bf16,
+        // and fp16, under adversarial PER-COLUMN cancellation — columns
+        // are built as W[:,k] = -s·(B·A)[:,k] + amp·noise with amp swept
+        // down to 1e-3 of the column scale.
+        check("factored vs dense colnorm dtypes", 36, |gen| {
+            let dt = gen.pick(&[Dtype::F32, Dtype::Bf16, Dtype::F16]);
+            let d_out = gen.usize_in(4, 96); // > 64 exercises row chunking
+            let d_in = gen.usize_in(3, 20);
+            let r = gen.usize_in(1, 8);
+            let m = ModuleShape::new(d_out, d_in, r);
+            let s = gen.f64_in(0.1, 2.0) as f32;
+            let global = 10f64.powf(gen.f64_in(-1.0, 1.0)) as f32;
+            let mut rng = Rng::new(7000 + gen.case as u64);
+            let a = rng.normal_vec_f32(r * d_in, 0.3 * global);
+            let b = rng.normal_vec_f32(d_out * r, 0.3);
+            let ba = crate::dora::norm_cpu::matmul(&b, &a, d_out, r, d_in);
+            // Per-column cancellation severity spanning 3 orders of
+            // magnitude.
+            let mut amps = vec![0f32; d_in];
+            let mut rmss = vec![0f32; d_in];
+            for k in 0..d_in {
+                let col_sq: f64 =
+                    (0..d_out).map(|i| (ba[i * d_in + k] as f64).powi(2)).sum();
+                rmss[k] = (col_sq / d_out as f64).sqrt().max(1e-6) as f32;
+                amps[k] = 10f64.powf(gen.f64_in(-3.0, 0.0)) as f32;
+            }
+            let mut w = vec![0f32; d_out * d_in];
+            for i in 0..d_out {
+                for k in 0..d_in {
+                    w[i * d_in + k] =
+                        -s * ba[i * d_in + k] + amps[k] * rmss[k] * (rng.normal() as f32);
+                }
+            }
+
+            let budget = (d_in * 64 * 4) as u64; // force multiple row chunks
+            let mut t1 = AllocTracker::new();
+            let dense = EagerCpu.weight_colnorm(&w, &a, &b, s, m, budget, dt, &mut t1);
+            let mut t2 = AllocTracker::new();
+            let fact = FusedCpu.weight_colnorm(&w, &a, &b, s, m, budget, dt, &mut t2);
+            let mut t3 = AllocTracker::new();
+            let tiled = ParallelTiledCpu::with_tile(3, 2)
+                .weight_colnorm(&w, &a, &b, s, m, budget, dt, &mut t3);
+
+            // Exact f64 reference over the quantized inputs.
+            let q = |v: &[f32]| -> Vec<f64> {
+                v.iter().map(|&x| dt.quantize(x) as f64).collect()
+            };
+            let (wq, aq, bq) = (q(&w), q(&a), q(&b));
+            let sq = s as f64;
+            for k in 0..d_in {
+                let mut norm_sq = 0f64;
+                let mut w_sq = 0f64;
+                let mut ba_sq = 0f64;
+                for i in 0..d_out {
+                    let mut ba_ik = 0f64;
+                    for l in 0..r {
+                        ba_ik += bq[i * r + l] * aq[l * d_in + k];
+                    }
+                    let composed = wq[i * d_in + k] + sq * ba_ik;
+                    norm_sq += composed * composed;
+                    w_sq += wq[i * d_in + k] * wq[i * d_in + k];
+                    ba_sq += ba_ik * ba_ik;
+                }
+                let reference = norm_sq.sqrt();
+                let col_scale = (w_sq.sqrt() + sq * ba_sq.sqrt()).max(1e-6);
+                let envelope = 1e-2 * col_scale;
+                for (name, got) in
+                    [("dense", dense[k]), ("factored", fact[k]), ("tiled", tiled[k])]
+                {
+                    prop_assert(
+                        (got as f64 - reference).abs() <= envelope,
+                        format!(
+                            "{name} col {k} ({dt:?}, {m:?}, s={s}): {got} vs f64 {reference} \
+                             (scale {col_scale:.3e})"
+                        ),
+                    )?;
+                }
+                // No heavy cancellation -> tight relative parity.
+                if reference > 0.3 * col_scale {
+                    prop_assert(
+                        (dense[k] as f64 - fact[k] as f64).abs() <= 3e-4 * reference,
+                        format!(
+                            "dense vs factored col {k} ({dt:?}): {} vs {}",
+                            dense[k], fact[k]
+                        ),
+                    )?;
+                }
+                // The two factored executors stay bitwise identical in
+                // every dtype.
+                prop_assert(
+                    fact[k].to_bits() == tiled[k].to_bits(),
+                    format!(
+                        "factored seq vs tiled col {k} ({dt:?}): {} vs {}",
+                        fact[k], tiled[k]
+                    ),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn colnorm_scale_zero_and_chunk_invariance() {
+        // s == 0 fast path equals plain column norms of W; chunked and
+        // unchunked runs agree.
+        let m = ModuleShape::new(96, 12, 4);
+        let mut rng = Rng::new(31);
+        let w = rng.normal_vec_f32(m.d_out * m.d_in, 0.1);
+        let a = rng.normal_vec_f32(m.rank * m.d_in, 0.2);
+        let b = rng.normal_vec_f32(m.d_out * m.rank, 0.2);
+        let mut t = AllocTracker::new();
+        let fast = FusedCpu.weight_colnorm(&w, &a, &b, 0.0, m, u64::MAX, Dtype::F32, &mut t);
+        for k in 0..m.d_in {
+            let want: f64 = (0..m.d_out)
+                .map(|i| (w[i * m.d_in + k] as f64).powi(2))
+                .sum();
+            assert!((fast[k] as f64 - want.sqrt()).abs() < 1e-5, "col {k}");
+        }
+        let full = FusedCpu.weight_colnorm(&w, &a, &b, 1.3, m, u64::MAX, Dtype::F32, &mut t);
+        let chunked = FusedCpu.weight_colnorm(
+            &w,
+            &a,
+            &b,
+            1.3,
+            m,
+            (m.d_in * 64 * 4) as u64,
+            Dtype::F32,
+            &mut t,
+        );
+        for k in 0..m.d_in {
+            assert!(
+                (full[k] - chunked[k]).abs() < 1e-4 * full[k].abs().max(1.0),
+                "col {k}: {} vs {}",
+                full[k],
+                chunked[k]
+            );
+        }
     }
 
     #[test]

@@ -334,6 +334,276 @@ pub(crate) fn factored_norm_tiled<E: Elem>(
     out
 }
 
+/// One row-chunk's contribution to the B-Gram `G += B_c^T @ B_c` `[r, r]`
+/// (the column-norm analogue of [`gram_chunk`]): per entry, a full-chunk
+/// f32 dot added once — the same per-chunk discipline as the A-Gram.
+fn gram_b_chunk<E: Elem>(b: &[f32], r: usize, start: usize, stop: usize, gram: &mut [f32]) {
+    for l in 0..r {
+        for t in l..r {
+            let mut acc = 0f32;
+            for i in start..stop {
+                acc += E::q(b[i * r + l]) * E::q(b[i * r + t]);
+            }
+            gram[l * r + t] += acc;
+            if l != t {
+                gram[t * r + l] += acc;
+            }
+        }
+    }
+}
+
+/// `ba_sq` for one COLUMN: `(A^T G_B A)_kk` from the B-Gram. Mirrors
+/// [`ba_sq_row`] with A read down column `k` (stride `a_stride`).
+#[inline]
+pub(crate) fn ba_sq_col<E: Elem>(
+    a: &[f32],
+    k: usize,
+    a_stride: usize,
+    gram: &[f32],
+    r: usize,
+) -> f32 {
+    let mut acc = 0f32;
+    for l in 0..r {
+        let mut ag = 0f32;
+        for t in 0..r {
+            ag += E::q(a[t * a_stride + k]) * gram[t * r + l];
+        }
+        acc += ag * E::q(a[l * a_stride + k]);
+    }
+    acc
+}
+
+/// Rows-per-chunk for the column norm: the transpose of the row norm's
+/// [`chunk_size`] knob — the chunk workspace is `[d_in, r]` + the `[d_in]`
+/// f64 accumulator, so rows are budgeted against `d_in`.
+pub(crate) fn colnorm_chunk_rows(m: ModuleShape, budget: u64) -> usize {
+    chunk_size(ModuleShape::new(m.d_in, m.d_out, m.rank), budget)
+}
+
+/// Algorithm 1 transposed: factored COLUMN-wise norm
+/// `||W + s*B@A||_col` in `O(d_in*r + r^2)` intermediates — the BoRA
+/// column-magnitude decomposition. Per column `k`:
+///
+/// ```text
+/// ||W + sBA||^2_col[k] = base_sq[k] + 2s*cross[k] + s^2*ba_sq[k]
+///   base_sq[k] = sum_i W[i,k]^2                 (f64 per row-chunk)
+///   cross[k]   = sum_l (W^T B)[k,l] * A[l,k]    (f32 chunk partials)
+///   ba_sq[k]   = (A^T (B^T B) A)_kk             (B-Gram, [r, r])
+/// ```
+///
+/// Accumulation discipline matches [`factored_norm_seq`] with the axes
+/// swapped: d_out is chunked instead of d_in, the chunk workspace is
+/// `U_c = W_c^T @ B_c` `[d_in, r]`, and assembly reuses the same
+/// `two_s`/`s2`/[`sqrt_clamp_min0`] constants.
+pub(crate) fn factored_colnorm_seq<E: Elem>(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    s: f32,
+    m: ModuleShape,
+    budget: u64,
+    tracker: &mut AllocTracker,
+) -> Vec<f32> {
+    let ModuleShape { d_out, d_in, rank: r } = m;
+    let cs = colnorm_chunk_rows(m, budget);
+
+    // Scale-is-zero fast path: column sums of W^2 only (f32 square
+    // widened to f64, matching the row fast path's discipline).
+    if s == 0.0 {
+        tracker.alloc((d_in * 8) as u64);
+        let mut acc = vec![0f64; d_in];
+        for i in 0..d_out {
+            let row = &w[i * d_in..(i + 1) * d_in];
+            for (k, &x) in row.iter().enumerate() {
+                let x = E::q(x);
+                acc[k] += (x * x) as f64;
+            }
+        }
+        let out = acc.iter().map(|&x| sqrt_clamp_min0(x as f32)).collect();
+        tracker.free((d_in * 8) as u64);
+        drop(acc);
+        return out;
+    }
+
+    let mut base_sq = vec_f32(tracker, d_in);
+    let mut cross = vec_f32(tracker, d_in);
+    let mut gram = vec_f32(tracker, r * r);
+    // U_c chunk buffer [d_in, r] + f64 column accumulator, reused across
+    // chunks.
+    let mut u_c = vec_f32(tracker, d_in * r);
+    tracker.alloc((d_in * 8) as u64);
+    let mut acc64 = vec![0f64; d_in];
+
+    let mut start = 0;
+    while start < d_out {
+        let stop = (start + cs).min(d_out);
+        // base_sq += columnwise sum of W_c^2 (f64 chunk accumulator).
+        for a64 in acc64.iter_mut() {
+            *a64 = 0.0;
+        }
+        for i in start..stop {
+            let row = &w[i * d_in..(i + 1) * d_in];
+            for (k, &x) in row.iter().enumerate() {
+                let x = E::q(x);
+                acc64[k] += (x as f64) * (x as f64);
+            }
+        }
+        for (bs, &a64) in base_sq.iter_mut().zip(acc64.iter()) {
+            *bs += a64 as f32;
+        }
+        // G += B_c^T @ B_c  [r, r]
+        gram_b_chunk::<E>(b, r, start, stop, &mut gram);
+        // U_c = W_c^T @ B_c  [d_in, r]; cross += sum(U_c[k,:] * A[:,k]).
+        for u in u_c.iter_mut() {
+            *u = 0.0;
+        }
+        for i in start..stop {
+            let wrow = &w[i * d_in..(i + 1) * d_in];
+            let brow = &b[i * r..(i + 1) * r];
+            for (k, &wv) in wrow.iter().enumerate() {
+                let wq = E::q(wv);
+                let dst = &mut u_c[k * r..(k + 1) * r];
+                for (l, u) in dst.iter_mut().enumerate() {
+                    *u += wq * E::q(brow[l]);
+                }
+            }
+        }
+        for k in 0..d_in {
+            let urow = &u_c[k * r..(k + 1) * r];
+            let mut cacc = 0f32;
+            for (l, &u) in urow.iter().enumerate() {
+                cacc += u * E::q(a[l * d_in + k]);
+            }
+            cross[k] += cacc;
+        }
+        start = stop;
+    }
+    tracker.free((d_in * 8) as u64);
+    drop(acc64);
+    drop_vec(tracker, u_c);
+
+    // ba_sq = diag(A^T G A)  [d_in]
+    let mut ba_sq = vec_f32(tracker, d_in);
+    for (k, slot) in ba_sq.iter_mut().enumerate() {
+        *slot = ba_sq_col::<E>(a, k, d_in, &gram, r);
+    }
+    drop_vec(tracker, gram);
+
+    let two_s = (2.0 * s as f64) as f32;
+    let s2 = (s as f64 * s as f64) as f32;
+    let mut out = vec![0f32; d_in];
+    for k in 0..d_in {
+        let total = base_sq[k] + two_s * cross[k] + s2 * ba_sq[k];
+        out[k] = sqrt_clamp_min0(total);
+    }
+    drop_vec(tracker, ba_sq);
+    drop_vec(tracker, cross);
+    drop_vec(tracker, base_sq);
+    out
+}
+
+/// Factored column norm over d_in column-tiles on a scoped thread pool.
+///
+/// The shared `[r, r]` B-Gram is accumulated once on the calling thread
+/// through the same row-chunk schedule as [`factored_colnorm_seq`];
+/// columns are then fully independent — each worker walks ITS columns
+/// through the identical chunk schedule with a private `[r]` workspace,
+/// so results are bitwise identical to the sequential engine.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn factored_colnorm_tiled<E: Elem>(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    s: f32,
+    m: ModuleShape,
+    budget: u64,
+    threads: usize,
+    tile_cols: usize,
+    tracker: &mut AllocTracker,
+) -> Vec<f32> {
+    let ModuleShape { d_out, d_in, rank: r } = m;
+    let cs = colnorm_chunk_rows(m, budget);
+    let tile = tile_cols.max(1);
+    let n_threads = threads.max(1).min(d_in.div_ceil(tile)).max(1);
+
+    let mut out = vec![0f32; d_in];
+
+    // Scale-is-zero fast path: per-column f64 row sums (ascending-row
+    // order — bitwise-matches the sequential fast path), column-parallel.
+    if s == 0.0 {
+        run_row_tiles(&mut out, tile, n_threads, |c0, ocol| {
+            for (kk, o) in ocol.iter_mut().enumerate() {
+                let k = c0 + kk;
+                let mut acc = 0f64;
+                for i in 0..d_out {
+                    let x = E::q(w[i * d_in + k]);
+                    acc += (x * x) as f64;
+                }
+                *o = sqrt_clamp_min0(acc as f32);
+            }
+        });
+        return out;
+    }
+
+    // Shared B-Gram, same row-chunk schedule as the sequential engine.
+    let mut gram = vec_f32(tracker, r * r);
+    let mut start = 0;
+    while start < d_out {
+        let stop = (start + cs).min(d_out);
+        gram_b_chunk::<E>(b, r, start, stop, &mut gram);
+        start = stop;
+    }
+
+    let two_s = (2.0 * s as f64) as f32;
+    let s2 = (s as f64 * s as f64) as f32;
+
+    // Per-worker U-column workspace: threads * [r].
+    tracker.alloc((n_threads * r * 4) as u64);
+    let gram_ref = &gram;
+    run_row_tiles(&mut out, tile, n_threads, |c0, ocol| {
+        let mut u_col = vec![0f32; r];
+        for (kk, o) in ocol.iter_mut().enumerate() {
+            let k = c0 + kk;
+            let mut base_sq = 0f32;
+            let mut cross = 0f32;
+            // Same per-column chunk schedule and accumulation order as
+            // the sequential engine -> bitwise-identical partials.
+            let mut r0 = 0;
+            while r0 < d_out {
+                let r1 = (r0 + cs).min(d_out);
+                let mut acc = 0f64;
+                for i in r0..r1 {
+                    let x = E::q(w[i * d_in + k]);
+                    acc += (x as f64) * (x as f64);
+                }
+                base_sq += acc as f32;
+                for u in u_col.iter_mut() {
+                    *u = 0.0;
+                }
+                for i in r0..r1 {
+                    let wq = E::q(w[i * d_in + k]);
+                    let brow = &b[i * r..(i + 1) * r];
+                    for (l, u) in u_col.iter_mut().enumerate() {
+                        *u += wq * E::q(brow[l]);
+                    }
+                }
+                let mut cacc = 0f32;
+                for (l, &u) in u_col.iter().enumerate() {
+                    cacc += u * E::q(a[l * d_in + k]);
+                }
+                cross += cacc;
+                r0 = r1;
+            }
+            let ba = ba_sq_col::<E>(a, k, d_in, gram_ref, r);
+            let total = base_sq + two_s * cross + s2 * ba;
+            *o = sqrt_clamp_min0(total);
+        }
+    });
+    tracker.free((n_threads * r * 4) as u64);
+    drop_vec(tracker, gram);
+    out
+}
+
 /// Run `job(first_row, out_tile)` over row tiles of `out` on a scoped
 /// thread pool. Tiles are handed out through a shared queue (coarse
 /// work-stealing); each tile is a disjoint `&mut` slice, so the only

@@ -339,4 +339,31 @@ impl NormEngine for ParallelTiledCpu {
             )
         })
     }
+
+    fn weight_colnorm(
+        &self,
+        w: &[f32],
+        a: &[f32],
+        b: &[f32],
+        s: f32,
+        m: ModuleShape,
+        budget: u64,
+        dt: Dtype,
+        tracker: &mut AllocTracker,
+    ) -> Vec<f32> {
+        // `tile_rows` doubles as the column-tile width here.
+        with_elem!(dt, E, {
+            norm::factored_colnorm_tiled::<E>(
+                w,
+                a,
+                b,
+                s,
+                m,
+                budget,
+                self.threads,
+                self.tile_rows,
+                tracker,
+            )
+        })
+    }
 }

@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use dorafactors::bench::report;
 use dorafactors::coordinator::{FastPath, Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::runtime::ops::{parse_variant_spec, variant_token};
 use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, Engine};
 use dorafactors::util::Args;
 
@@ -37,13 +38,14 @@ fn main() -> Result<()> {
                 "usage: dorafactors <report|info|train|serve-demo|adapters|bench-diff> [--flags]\n\
                  \n\
                  report <id>     one of: {}\n\
-                 train           --config tiny|small|e2e --variant eager|fused \
+                 train           --config tiny|small|e2e \
+                 --variant eager|fused|dora|rslora|bora|<kernel>-<adapter> \
                  --steps N --seed S [--eval-every N] \
                  [--train-workers N (data-parallel pool)] [--grad-accum K]\n\
                  serve-demo      --config tiny|small --requests N \
                  [--workers N] [--fast-path merged|composed]\n\
                  adapters list   [--store DIR]\n\
-                 adapters train  --adapter NAME [--config tiny] [--steps N] \
+                 adapters train  --adapter NAME [--config tiny] [--variant SPEC] [--steps N] \
                  [--seed S] [--checkpoint-every N] [--store DIR] [--resume] \
                  [--train-workers N] [--grad-accum K]\n\
                  adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR] \
@@ -101,8 +103,8 @@ fn cmd_adapters_list(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "{:20} {:8} {:>6} {:>8} {:>7} {:>12}",
-        "name", "config", "rank", "step", "eff-bs", "bytes"
+        "{:20} {:8} {:8} {:>6} {:>8} {:>7} {:>12}",
+        "name", "config", "variant", "rank", "step", "eff-bs", "bytes"
     );
     for a in listed {
         let eff = if a.effective_batch == 0 {
@@ -111,8 +113,14 @@ fn cmd_adapters_list(args: &Args) -> Result<()> {
             a.effective_batch.to_string()
         };
         println!(
-            "{:20} {:8} {:>6} {:>8} {:>7} {:>12}",
-            a.name, a.config, a.rank, a.step, eff, a.file_bytes
+            "{:20} {:8} {:8} {:>6} {:>8} {:>7} {:>12}",
+            a.name,
+            a.config,
+            a.variant.as_str(),
+            a.rank,
+            a.step,
+            eff,
+            a.file_bytes
         );
     }
     Ok(())
@@ -167,6 +175,21 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
             );
         }
         cfg.seed = adapter.seed;
+        // The stored adapter variant wins the same way: resuming under a
+        // different variant would continue the checkpoint with the wrong
+        // compose math. An explicit --variant that disagrees is an
+        // error; otherwise the kernel half of the spec combines with the
+        // checkpoint's variant.
+        let (kernel, adapter_variant) = parse_variant_spec(&cfg.variant)?;
+        if args.get("variant").is_some() && adapter_variant != adapter.variant {
+            bail!(
+                "--variant {} conflicts with checkpoint variant {:?}; \
+                 drop --variant to resume",
+                cfg.variant,
+                adapter.variant.as_str()
+            );
+        }
+        cfg.variant = variant_token(kernel, adapter.variant);
         Trainer::from_adapter_spec(&BackendSpec::auto(), cfg.clone(), &adapter)?
     } else {
         Trainer::auto(cfg.clone())?

@@ -31,7 +31,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::ops::AdapterParams;
+use crate::runtime::ops::{AdapterParams, AdapterVariant};
 use crate::runtime::{ConfigInfo, Tensor, TensorData};
 use crate::util::json::{self, Json};
 
@@ -101,6 +101,9 @@ pub struct Adapter {
     /// Effective batch size (sequences per optimizer update) the leaves
     /// were trained with. 0 = unrecorded (a pre-provenance checkpoint).
     pub effective_batch: u32,
+    /// Adapter variant the leaves were trained as. Additive header key:
+    /// checkpoints written before the variant axis decode as `Dora`.
+    pub variant: AdapterVariant,
     /// Frozen + trainable leaves, manifest flatten order.
     pub params: AdapterParams,
 }
@@ -137,6 +140,7 @@ impl Adapter {
             train_workers: 1,
             grad_accum: 1,
             effective_batch: info.train_batch as u32,
+            variant: AdapterVariant::Dora,
             params,
         })
     }
@@ -152,6 +156,12 @@ impl Adapter {
         self.train_workers = train_workers;
         self.grad_accum = grad_accum;
         self.effective_batch = effective_batch;
+        self
+    }
+
+    /// Record the adapter variant the leaves were trained as.
+    pub fn with_variant(mut self, variant: AdapterVariant) -> Adapter {
+        self.variant = variant;
         self
     }
 
@@ -198,6 +208,7 @@ impl Adapter {
             ("train_workers", Json::Num(self.train_workers as f64)),
             ("grad_accum", Json::Num(self.grad_accum as f64)),
             ("effective_batch", Json::Num(self.effective_batch as f64)),
+            ("variant", Json::Str(self.variant.as_str().to_string())),
             ("frozen", leaf_meta(&self.params.frozen)),
             ("trainable", leaf_meta(&self.params.trainable)),
         ])
@@ -338,6 +349,14 @@ impl Adapter {
                 .map(|v| v as u32)
                 .unwrap_or(default)
         };
+        // The variant key is additive too: pre-variant checkpoints are
+        // DoRA by construction. An unknown variant string is an error —
+        // silently treating it as DoRA would serve the wrong math.
+        let variant = match header.opt("variant") {
+            Some(v) => AdapterVariant::parse(v.as_str()?)
+                .context("parsing checkpoint adapter variant")?,
+            None => AdapterVariant::Dora,
+        };
         Ok(Adapter {
             name,
             config: header.get("config")?.as_str()?.to_string(),
@@ -348,6 +367,7 @@ impl Adapter {
             train_workers: prov("train_workers", 1),
             grad_accum: prov("grad_accum", 1),
             effective_batch: prov("effective_batch", 0),
+            variant,
             params: AdapterParams { frozen, trainable },
         })
     }
@@ -417,6 +437,8 @@ pub struct AdapterSummary {
     /// Effective batch size the checkpoint was trained with
     /// (0 = unrecorded pre-provenance checkpoint).
     pub effective_batch: u32,
+    /// Adapter variant (pre-variant checkpoints list as `Dora`).
+    pub variant: AdapterVariant,
     pub file_bytes: u64,
 }
 
@@ -569,6 +591,11 @@ impl AdapterStore {
                     .opt("effective_batch")
                     .and_then(|v| v.as_f64().ok())
                     .unwrap_or(0.0) as u32,
+                variant: header
+                    .opt("variant")
+                    .and_then(|v| v.as_str().ok())
+                    .and_then(|s| AdapterVariant::parse(s).ok())
+                    .unwrap_or_default(),
                 file_bytes,
             });
         }
@@ -677,6 +704,43 @@ mod tests {
         assert_eq!(old.train_workers, 1);
         assert_eq!(old.grad_accum, 1);
         assert_eq!(old.effective_batch, 0);
+        // The variant key is additive the same way: no key = DoRA.
+        assert_eq!(old.variant, AdapterVariant::Dora);
+    }
+
+    #[test]
+    fn variant_roundtrips_and_lists() {
+        let ts = TestStore::new("variant");
+        // Fresh adapters are DoRA unless tagged.
+        assert_eq!(tiny_adapter("fresh", 1).variant, AdapterVariant::Dora);
+        let a = tiny_adapter("rs", 5).with_variant(AdapterVariant::RsLora);
+        ts.store.save(&a).unwrap();
+        let back = ts.store.load("rs").unwrap();
+        assert_eq!(back.variant, AdapterVariant::RsLora);
+        // Stable encoding holds with the new header key present.
+        assert_eq!(a.encode(), back.encode());
+        // The header-level listing surfaces the variant without a payload
+        // decode.
+        ts.store.save(&tiny_adapter("plain", 6)).unwrap();
+        let listed = ts.store.list().unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].name, "plain");
+        assert_eq!(listed[0].variant, AdapterVariant::Dora);
+        assert_eq!(listed[1].name, "rs");
+        assert_eq!(listed[1].variant, AdapterVariant::RsLora);
+        // An unknown variant string in the header is a decode error, not
+        // a silent DoRA fallback.
+        let mut bytes = a.encode();
+        let pos = bytes
+            .windows(8)
+            .position(|w| w == b"\"rslora\"")
+            .expect("variant value in header");
+        bytes[pos + 1..pos + 7].copy_from_slice(b"rslorb");
+        let body_end = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..body_end]);
+        bytes[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = Adapter::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("adapter variant"), "{err:#}");
     }
 
     fn assert_bitwise_eq(a: &Adapter, b: &Adapter) {

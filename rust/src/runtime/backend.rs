@@ -473,7 +473,7 @@ mod tests {
 
     #[test]
     fn typed_ops_run_against_native_and_mock() {
-        use crate::runtime::ops::{InferReq, InitReq, Variant};
+        use crate::runtime::ops::{AdapterVariant, InferReq, InitReq, Variant};
         let be = ExecBackend::native();
         let info = be.config("tiny").unwrap();
         let init = be.init(InitReq { config: "tiny".into(), seed: 0 }).unwrap();
@@ -487,6 +487,7 @@ mod tests {
             .infer(InferReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params: params.clone(),
                 tokens: tokens.clone(),
             })
@@ -504,6 +505,7 @@ mod tests {
             .infer(InferReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params,
                 tokens,
             })

@@ -34,10 +34,11 @@ use crate::kernels::{registry, BackendKind};
 use crate::models::forward::{self, init_leaves, kernels_for, NativeModel};
 use crate::numerics::half::Dtype;
 use crate::runtime::ops::{
-    AdapterParams, ApplyUpdateReq, ApplyUpdateResp, ComposeReq, ComposeResp, DoraLinearReq,
-    DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq, InferReq, InferResp,
-    InitReq, InitResp, LinearVariant, LossAndGradsReq, LossAndGradsResp, MergedParams, OptState,
-    SampleGrads, TrainStepReq, TrainStepResp, Variant,
+    parse_variant_spec, variant_token, AdapterParams, AdapterVariant, ApplyUpdateReq,
+    ApplyUpdateResp, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
+    EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant,
+    LossAndGradsReq, LossAndGradsResp, MergedParams, OptState, SampleGrads, TrainStepReq,
+    TrainStepResp, Variant,
 };
 use crate::runtime::{ConfigInfo, Tensor};
 
@@ -158,13 +159,15 @@ impl NativeEngine {
                 let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
                     format!("artifact {name:?}: expected {prefix}<cfg>_<variant>")
                 })?;
-                let variant = Variant::parse(variant)
-                    .with_context(|| format!("artifact {name:?}"))?;
+                // The token is either a bare kernel variant ("fused" —
+                // the Dora names, unchanged) or "<kernel>-<adapter>".
+                let (variant, adapter) =
+                    parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
                 let info = self.config(cfg)?;
                 return Ok(if train {
-                    ArtifactKind::Train(info, variant)
+                    ArtifactKind::Train(info, variant, adapter)
                 } else {
-                    ArtifactKind::Eval(info, variant)
+                    ArtifactKind::Eval(info, variant, adapter)
                 });
             }
         }
@@ -172,9 +175,9 @@ impl NativeEngine {
             let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
                 format!("artifact {name:?}: expected loss_and_grads_<cfg>_<variant>")
             })?;
-            let variant =
-                Variant::parse(variant).with_context(|| format!("artifact {name:?}"))?;
-            return Ok(ArtifactKind::LossAndGrads(self.config(cfg)?, variant));
+            let (variant, adapter) =
+                parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
+            return Ok(ArtifactKind::LossAndGrads(self.config(cfg)?, variant, adapter));
         }
         if let Some(cfg) = name.strip_prefix("apply_update_") {
             return Ok(ArtifactKind::ApplyUpdate(self.config(cfg)?));
@@ -188,9 +191,9 @@ impl NativeEngine {
             let (cfg, variant) = rest
                 .rsplit_once('_')
                 .with_context(|| format!("artifact {name:?}: expected infer_<cfg>_<variant>"))?;
-            let variant =
-                Variant::parse(variant).with_context(|| format!("artifact {name:?}"))?;
-            return Ok(ArtifactKind::Infer(self.config(cfg)?, variant));
+            let (variant, adapter) =
+                parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
+            return Ok(ArtifactKind::Infer(self.config(cfg)?, variant, adapter));
         }
         if let Some(variant) = name.strip_prefix("dora_linear_") {
             let variant = LinearVariant::parse(variant)
@@ -223,7 +226,7 @@ impl NativeEngine {
                 let seed = inputs[0].as_i32().context("init seed must be i32")?[0];
                 Ok(EngineOp::Init(InitReq { config: info.name.clone(), seed }))
             }
-            ArtifactKind::Train(info, variant) => {
+            ArtifactKind::Train(info, variant, adapter) => {
                 let nf = info.frozen.len();
                 let nt = info.trainable.len();
                 expect_inputs(name, inputs, nf + 3 * nt + 2)?;
@@ -233,6 +236,7 @@ impl NativeEngine {
                 Ok(EngineOp::TrainStep(TrainStepReq {
                     config: info.name.clone(),
                     variant,
+                    adapter,
                     params: Arc::new(AdapterParams {
                         frozen: inputs[..nf].to_vec(),
                         trainable: inputs[nf..nf + nt].to_vec(),
@@ -245,7 +249,7 @@ impl NativeEngine {
                     tokens: inputs[nf + 3 * nt + 1].clone(),
                 }))
             }
-            ArtifactKind::LossAndGrads(info, variant) => {
+            ArtifactKind::LossAndGrads(info, variant, adapter) => {
                 let nf = info.frozen.len();
                 let nt = info.trainable.len();
                 expect_inputs(name, inputs, nf + nt + 2)?;
@@ -258,6 +262,7 @@ impl NativeEngine {
                 Ok(EngineOp::LossAndGrads(LossAndGradsReq {
                     config: info.name.clone(),
                     variant,
+                    adapter,
                     params: Arc::new(AdapterParams {
                         frozen: inputs[..nf].to_vec(),
                         trainable: inputs[nf..nf + nt].to_vec(),
@@ -283,20 +288,22 @@ impl NativeEngine {
                     grads: inputs[3 * nt + 1..].to_vec(),
                 }))
             }
-            ArtifactKind::Eval(info, variant) => {
+            ArtifactKind::Eval(info, variant, adapter) => {
                 let (params, tokens) = split_params_tokens(info, name, inputs)?;
                 Ok(EngineOp::Eval(EvalReq {
                     config: info.name.clone(),
                     variant,
+                    adapter,
                     params,
                     tokens,
                 }))
             }
-            ArtifactKind::Infer(info, variant) => {
+            ArtifactKind::Infer(info, variant, adapter) => {
                 let (params, tokens) = split_params_tokens(info, name, inputs)?;
                 Ok(EngineOp::Infer(InferReq {
                     config: info.name.clone(),
                     variant,
+                    adapter,
                     params,
                     tokens,
                 }))
@@ -341,11 +348,11 @@ impl NativeEngine {
 /// Parsed artifact-name descriptor (the shim's grammar).
 enum ArtifactKind {
     Init(&'static ConfigInfo),
-    Train(&'static ConfigInfo, Variant),
-    LossAndGrads(&'static ConfigInfo, Variant),
+    Train(&'static ConfigInfo, Variant, AdapterVariant),
+    LossAndGrads(&'static ConfigInfo, Variant, AdapterVariant),
     ApplyUpdate(&'static ConfigInfo),
-    Eval(&'static ConfigInfo, Variant),
-    Infer(&'static ConfigInfo, Variant),
+    Eval(&'static ConfigInfo, Variant, AdapterVariant),
+    Infer(&'static ConfigInfo, Variant, AdapterVariant),
     InferMerged(&'static ConfigInfo),
     DoraLinear(LinearVariant),
     Compose(Variant, usize, usize),
@@ -432,7 +439,7 @@ fn run_init(info: &'static ConfigInfo, req: &InitReq) -> Result<InitResp> {
 /// `[k, bs, seq+1]` — the scan-over-steps contract, executed as k native
 /// steps.
 fn run_train(info: &'static ConfigInfo, req: &TrainStepReq) -> Result<TrainStepResp> {
-    let label = format!("train_{}_{}", info.name, req.variant.as_str());
+    let label = format!("train_{}_{}", info.name, variant_token(req.variant, req.adapter));
     validate_params(info, &label, &req.params)?;
     let k = info.chunk_steps;
     let bs = info.train_batch;
@@ -469,7 +476,8 @@ fn run_train(info: &'static ConfigInfo, req: &TrainStepReq) -> Result<TrainStepR
         // The model is a borrowed view over `params`; grads are computed
         // with the view alive, the update after it drops.
         let (loss, grads) = {
-            let model = NativeModel::new(info, &req.params.frozen, &params, kernels.clone())?;
+            let model = NativeModel::new(info, &req.params.frozen, &params, kernels.clone())?
+                .with_adapter(req.adapter);
             model.loss_and_grads(block, bs)?
         };
         forward::adamw_step(&mut params, &mut m1, &mut m2, &grads, step0 + i as i32 + 1);
@@ -490,7 +498,8 @@ fn run_loss_and_grads(
     info: &'static ConfigInfo,
     req: &LossAndGradsReq,
 ) -> Result<LossAndGradsResp> {
-    let label = format!("loss_and_grads_{}_{}", info.name, req.variant.as_str());
+    let label =
+        format!("loss_and_grads_{}_{}", info.name, variant_token(req.variant, req.adapter));
     validate_params(info, &label, &req.params)?;
     let seq1 = info.seq + 1;
     if req.tokens.shape.len() != 2 || req.tokens.shape[1] != seq1 || req.tokens.shape[0] == 0 {
@@ -502,7 +511,8 @@ fn run_loss_and_grads(
     let mb = req.tokens.shape[0];
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let kernels = kernels_for(req.variant, info, true)?;
-    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
+        .with_adapter(req.adapter);
     let per_sample = model.loss_and_sample_grads(tokens, mb, req.total_rows)?;
     let samples = per_sample
         .into_iter()
@@ -566,13 +576,14 @@ fn run_apply_update(info: &'static ConfigInfo, req: &ApplyUpdateReq) -> Result<A
 
 /// Eval: mean loss over one held-out token block `[bs, seq+1]`.
 fn run_eval(info: &'static ConfigInfo, req: &EvalReq) -> Result<EvalResp> {
-    let label = format!("eval_{}_{}", info.name, req.variant.as_str());
+    let label = format!("eval_{}_{}", info.name, variant_token(req.variant, req.adapter));
     validate_params(info, &label, &req.params)?;
     let bs = info.train_batch;
     expect_shape(&label, "tokens", &req.tokens, &[bs, info.seq + 1])?;
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let kernels = kernels_for(req.variant, info, false)?;
-    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
+        .with_adapter(req.adapter);
     let loss = model.eval_loss(tokens, bs)?;
     Ok(EvalResp { loss })
 }
@@ -580,14 +591,15 @@ fn run_eval(info: &'static ConfigInfo, req: &EvalReq) -> Result<EvalResp> {
 /// Infer: last-position logits `[bs, vocab]` for a token batch
 /// `[bs, seq]` (the Tier-2 serving path).
 fn run_infer(info: &'static ConfigInfo, req: &InferReq) -> Result<InferResp> {
-    let label = format!("infer_{}_{}", info.name, req.variant.as_str());
+    let label = format!("infer_{}_{}", info.name, variant_token(req.variant, req.adapter));
     validate_params(info, &label, &req.params)?;
     let bs = info.train_batch;
     let seq = info.seq;
     expect_shape(&label, "tokens", &req.tokens, &[bs, seq])?;
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let kernels = kernels_for(req.variant, info, false)?;
-    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
+        .with_adapter(req.adapter);
     let logits = model.infer_logits(tokens, bs, seq)?;
     Ok(InferResp { logits: Tensor::f32(vec![bs, info.vocab], logits) })
 }
@@ -805,6 +817,7 @@ mod tests {
             .execute(&EngineOp::TrainStep(TrainStepReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params: Arc::new(params.clone()),
                 opt: opt.clone(),
                 tokens: tokens.clone(),
@@ -856,6 +869,7 @@ mod tests {
             .execute(&EngineOp::TrainStep(TrainStepReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params: Arc::new(params.clone()),
                 opt: OptState::zeros_like(&params.trainable),
                 tokens: Tensor::i32(vec![k, bs, seq1], block.clone()),
@@ -880,6 +894,7 @@ mod tests {
                 .execute(&EngineOp::LossAndGrads(LossAndGradsReq {
                     config: "tiny".into(),
                     variant: Variant::Fused,
+                    adapter: AdapterVariant::Dora,
                     params: Arc::new(step_params),
                     tokens: Tensor::i32(
                         vec![bs, seq1],
@@ -951,6 +966,7 @@ mod tests {
             .execute(&EngineOp::LossAndGrads(LossAndGradsReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params: Arc::new(AdapterParams {
                     frozen: leaves[..nf].to_vec(),
                     trainable: leaves[nf..].to_vec(),
@@ -1044,11 +1060,51 @@ mod tests {
         assert!(!eng.supports("norm_dense_ba_1024x1024r64"));
         assert!(eng.supports("init_small"));
         assert!(eng.supports("infer_tiny_fused"));
+        // Adapter-variant artifact names: <kernel>-<adapter> tokens.
+        assert!(eng.supports("train_tiny_fused-rslora"));
+        assert!(eng.supports("infer_tiny_eager-bora"));
+        assert!(eng.supports("loss_and_grads_tiny_fused-rslora"));
+        assert!(!eng.supports("train_tiny_fused-nope"));
+        assert!(!eng.supports("eval_tiny_nope-rslora"));
         assert!(eng.supports("infer_merged_tiny"));
         assert!(!eng.supports("infer_merged_nocfg"));
         assert!(eng.supports("compose_fused_512x2048"));
         // Input-count mismatch is an error, not a panic.
         assert!(eng.run("init_tiny", &[]).is_err());
+    }
+
+    #[test]
+    fn adapter_variant_train_steps_are_finite_and_distinct() {
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let nt = info.trainable.len();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(4)]).unwrap();
+        let zeros: Vec<Tensor> = leaves[info.frozen.len()..]
+            .iter()
+            .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.elems()]))
+            .collect();
+        let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 11);
+        let k = info.chunk_steps;
+        let tokens = Tensor::i32(
+            vec![k, info.train_batch, info.seq + 1],
+            corpus.block(k, info.train_batch, info.seq + 1),
+        );
+        let mut inputs = leaves.clone();
+        inputs.extend(zeros.clone());
+        inputs.extend(zeros.clone());
+        inputs.push(Tensor::scalar_i32(0));
+        inputs.push(tokens);
+        let mut trained_a = Vec::new();
+        for name in ["train_tiny_fused", "train_tiny_fused-rslora", "train_tiny_fused-bora"] {
+            let outs = eng.run(name, &inputs).unwrap();
+            let losses = outs[3 * nt + 1].as_f32().unwrap();
+            assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0), "{name}: {losses:?}");
+            trained_a.push(outs[0].as_f32().unwrap().to_vec());
+        }
+        // The variants optimize genuinely different objectives: once B
+        // moves off zero their trajectories separate from Dora's.
+        assert_ne!(trained_a[0], trained_a[1], "rslora tracked dora exactly");
+        assert_ne!(trained_a[0], trained_a[2], "bora tracked dora exactly");
     }
 
     #[test]
@@ -1079,6 +1135,7 @@ mod tests {
             .execute(&EngineOp::Infer(InferReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params: Arc::new(AdapterParams::default()),
                 tokens: Tensor::i32(vec![bs, info.seq], vec![1; bs * info.seq]),
             }))
@@ -1101,6 +1158,7 @@ mod tests {
             .execute(&EngineOp::Infer(InferReq {
                 config: "tiny".into(),
                 variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
                 params: Arc::new(params.clone()),
                 tokens: tokens.clone(),
             }))
@@ -1109,7 +1167,9 @@ mod tests {
             EngineOut::Infer(r) => r,
             other => panic!("wrong response kind: {other:?}"),
         };
-        let merged = crate::models::forward::merge_adapter_params(info, &params).unwrap();
+        let merged =
+            crate::models::forward::merge_adapter_params(info, &params, AdapterVariant::Dora)
+                .unwrap();
         let fast = match eng
             .execute(&EngineOp::InferMerged(InferMergedReq {
                 config: "tiny".into(),

@@ -58,6 +58,84 @@ impl Variant {
     }
 }
 
+/// The adapter-method axis: which compose/norm math a run uses. This is
+/// orthogonal to [`Variant`] (the eager-vs-fused NUMERIC path): every
+/// adapter variant can run on either kernel path.
+///
+/// * `Dora` — the paper's row-norm DoRA. The default; bitwise-identical
+///   to the pre-variant code (committed golden traces pin this).
+/// * `RsLora` — rank-stabilized scaling (Kalajdzievski 2023): identical
+///   compose math with the effective scale `s·√r` instead of `s`.
+/// * `Bora` — bi-dimensional normalization (Wang et al. 2024): a frozen
+///   derived column-magnitude `g_col = colnorm(W)/colnorm(W+sBA)` scales
+///   the module INPUT, composed with the trainable row-norm DoRA path.
+///
+/// Future init-time variants (`Doran`, `Edora`) slot in as new arms; the
+/// checkpoint header key and artifact grammar are already additive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdapterVariant {
+    #[default]
+    Dora,
+    RsLora,
+    Bora,
+}
+
+impl AdapterVariant {
+    pub const ALL: [AdapterVariant; 3] =
+        [AdapterVariant::Dora, AdapterVariant::RsLora, AdapterVariant::Bora];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdapterVariant::Dora => "dora",
+            AdapterVariant::RsLora => "rslora",
+            AdapterVariant::Bora => "bora",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AdapterVariant> {
+        match s {
+            "dora" => Ok(AdapterVariant::Dora),
+            "rslora" => Ok(AdapterVariant::RsLora),
+            "bora" => Ok(AdapterVariant::Bora),
+            other => bail!("adapter variant must be dora|rslora|bora, got {other:?}"),
+        }
+    }
+}
+
+/// Render the combined artifact variant token: `Dora` keeps the historic
+/// bare kernel-variant token (`fused`), non-Dora adapters append their
+/// name (`fused-rslora`) so PJRT manifest names stay collision-free per
+/// (kernel, adapter) pair.
+pub fn variant_token(variant: Variant, adapter: AdapterVariant) -> String {
+    match adapter {
+        AdapterVariant::Dora => variant.as_str().to_string(),
+        other => format!("{}-{}", variant.as_str(), other.as_str()),
+    }
+}
+
+/// Parse a CLI `--variant` spec into the (kernel, adapter) pair. Accepts
+/// the historic kernel tokens (`eager`/`fused`, implying `Dora`), bare
+/// adapter tokens (`dora`/`rslora`/`bora`, implying the default `Fused`
+/// kernel path), or the combined `<kernel>-<adapter>` form
+/// (`eager-rslora`).
+pub fn parse_variant_spec(s: &str) -> Result<(Variant, AdapterVariant)> {
+    if let Ok(v) = Variant::parse(s) {
+        return Ok((v, AdapterVariant::default()));
+    }
+    if let Ok(a) = AdapterVariant::parse(s) {
+        return Ok((Variant::default(), a));
+    }
+    if let Some((kv, av)) = s.split_once('-') {
+        if let (Ok(v), Ok(a)) = (Variant::parse(kv), AdapterVariant::parse(av)) {
+            return Ok((v, a));
+        }
+    }
+    bail!(
+        "variant must be eager|fused, dora|rslora|bora, or <kernel>-<adapter> \
+         (e.g. eager-rslora), got {s:?}"
+    )
+}
+
 /// The four single-module configurations of the paper's §1 table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinearVariant {
@@ -236,6 +314,7 @@ impl InitResp {
 pub struct TrainStepReq {
     pub config: String,
     pub variant: Variant,
+    pub adapter: AdapterVariant,
     pub params: Arc<AdapterParams>,
     pub opt: OptState,
     pub tokens: Tensor,
@@ -286,6 +365,7 @@ impl TrainStepResp {
 pub struct LossAndGradsReq {
     pub config: String,
     pub variant: Variant,
+    pub adapter: AdapterVariant,
     pub params: Arc<AdapterParams>,
     /// `[mb, seq+1]` micro-batch token block.
     pub tokens: Tensor,
@@ -475,6 +555,7 @@ impl ApplyUpdateResp {
 pub struct EvalReq {
     pub config: String,
     pub variant: Variant,
+    pub adapter: AdapterVariant,
     pub params: Arc<AdapterParams>,
     pub tokens: Tensor,
 }
@@ -501,6 +582,7 @@ impl EvalResp {
 pub struct InferReq {
     pub config: String,
     pub variant: Variant,
+    pub adapter: AdapterVariant,
     pub params: Arc<AdapterParams>,
     pub tokens: Tensor,
 }
@@ -634,13 +716,19 @@ impl EngineOp {
     pub fn artifact_name(&self) -> Result<String> {
         Ok(match self {
             EngineOp::Init(r) => format!("init_{}", r.config),
-            EngineOp::TrainStep(r) => format!("train_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::TrainStep(r) => {
+                format!("train_{}_{}", r.config, variant_token(r.variant, r.adapter))
+            }
             EngineOp::LossAndGrads(r) => {
-                format!("loss_and_grads_{}_{}", r.config, r.variant.as_str())
+                format!("loss_and_grads_{}_{}", r.config, variant_token(r.variant, r.adapter))
             }
             EngineOp::ApplyUpdate(r) => format!("apply_update_{}", r.config),
-            EngineOp::Eval(r) => format!("eval_{}_{}", r.config, r.variant.as_str()),
-            EngineOp::Infer(r) => format!("infer_{}_{}", r.config, r.variant.as_str()),
+            EngineOp::Eval(r) => {
+                format!("eval_{}_{}", r.config, variant_token(r.variant, r.adapter))
+            }
+            EngineOp::Infer(r) => {
+                format!("infer_{}_{}", r.config, variant_token(r.variant, r.adapter))
+            }
             EngineOp::InferMerged(r) => format!("infer_merged_{}", r.config),
             EngineOp::DoraLinear(r) => format!("dora_linear_{}", r.variant.as_str()),
             EngineOp::Compose(r) => {
@@ -812,6 +900,102 @@ mod tests {
     }
 
     #[test]
+    fn adapter_variant_roundtrip_and_rejects() {
+        for a in AdapterVariant::ALL {
+            assert_eq!(AdapterVariant::parse(a.as_str()).unwrap(), a);
+        }
+        assert_eq!(AdapterVariant::default(), AdapterVariant::Dora);
+        assert!(AdapterVariant::parse("lora").is_err());
+        assert!(AdapterVariant::parse("").is_err());
+    }
+
+    #[test]
+    fn variant_spec_parses_kernel_adapter_and_combined_forms() {
+        // Historic kernel tokens imply Dora.
+        assert_eq!(
+            parse_variant_spec("fused").unwrap(),
+            (Variant::Fused, AdapterVariant::Dora)
+        );
+        assert_eq!(
+            parse_variant_spec("eager").unwrap(),
+            (Variant::Eager, AdapterVariant::Dora)
+        );
+        // Bare adapter tokens imply the default Fused kernel path.
+        assert_eq!(
+            parse_variant_spec("rslora").unwrap(),
+            (Variant::Fused, AdapterVariant::RsLora)
+        );
+        assert_eq!(
+            parse_variant_spec("bora").unwrap(),
+            (Variant::Fused, AdapterVariant::Bora)
+        );
+        assert_eq!(
+            parse_variant_spec("dora").unwrap(),
+            (Variant::Fused, AdapterVariant::Dora)
+        );
+        // Combined <kernel>-<adapter> form.
+        assert_eq!(
+            parse_variant_spec("eager-rslora").unwrap(),
+            (Variant::Eager, AdapterVariant::RsLora)
+        );
+        assert_eq!(
+            parse_variant_spec("fused-bora").unwrap(),
+            (Variant::Fused, AdapterVariant::Bora)
+        );
+        assert!(parse_variant_spec("nope").is_err());
+        assert!(parse_variant_spec("fused-nope").is_err());
+        assert!(parse_variant_spec("nope-rslora").is_err());
+    }
+
+    #[test]
+    fn variant_token_keeps_dora_names_and_extends_others() {
+        // Dora renders the historic bare token — PJRT manifests and
+        // golden artifacts keep their names.
+        assert_eq!(variant_token(Variant::Fused, AdapterVariant::Dora), "fused");
+        assert_eq!(variant_token(Variant::Eager, AdapterVariant::Dora), "eager");
+        assert_eq!(variant_token(Variant::Fused, AdapterVariant::RsLora), "fused-rslora");
+        assert_eq!(variant_token(Variant::Eager, AdapterVariant::Bora), "eager-bora");
+    }
+
+    #[test]
+    fn artifact_names_carry_the_adapter_variant() {
+        let t = |n: usize| Tensor::f32(vec![n], vec![0.0; n]);
+        let params = Arc::new(AdapterParams { frozen: vec![t(2)], trainable: vec![t(3)] });
+        let infer = |adapter: AdapterVariant| {
+            EngineOp::Infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                adapter,
+                params: params.clone(),
+                tokens: Tensor::i32(vec![1, 2], vec![0, 1]),
+            })
+        };
+        assert_eq!(infer(AdapterVariant::Dora).artifact_name().unwrap(), "infer_tiny_fused");
+        assert_eq!(
+            infer(AdapterVariant::RsLora).artifact_name().unwrap(),
+            "infer_tiny_fused-rslora"
+        );
+        let train = EngineOp::TrainStep(TrainStepReq {
+            config: "tiny".into(),
+            variant: Variant::Fused,
+            adapter: AdapterVariant::Bora,
+            params: params.clone(),
+            opt: OptState::default(),
+            tokens: Tensor::i32(vec![1, 1, 2], vec![0, 1]),
+        });
+        assert_eq!(train.artifact_name().unwrap(), "train_tiny_fused-bora");
+        let lag = EngineOp::LossAndGrads(LossAndGradsReq {
+            config: "tiny".into(),
+            variant: Variant::Fused,
+            adapter: AdapterVariant::RsLora,
+            params,
+            tokens: Tensor::i32(vec![2, 3], vec![0; 6]),
+            total_rows: 64,
+        });
+        assert_eq!(lag.artifact_name().unwrap(), "loss_and_grads_tiny_fused-rslora");
+    }
+
+    #[test]
     fn artifact_names_render_the_manifest_convention() {
         let init = EngineOp::Init(InitReq { config: "tiny".into(), seed: 0 });
         assert_eq!(init.artifact_name().unwrap(), "init_tiny");
@@ -909,6 +1093,7 @@ mod tests {
         let op = EngineOp::LossAndGrads(LossAndGradsReq {
             config: "tiny".into(),
             variant: Variant::Fused,
+            adapter: AdapterVariant::Dora,
             params: Arc::new(AdapterParams { frozen: vec![t(2)], trainable: vec![t(3)] }),
             tokens: Tensor::i32(vec![2, 3], vec![0; 6]),
             total_rows: 64,
@@ -1028,6 +1213,7 @@ mod tests {
         let req = TrainStepReq {
             config: "tiny".into(),
             variant: Variant::Fused,
+            adapter: AdapterVariant::Dora,
             params: Arc::new(AdapterParams { frozen: vec![t(1), t(2)], trainable: vec![t(3)] }),
             opt: OptState { m1: vec![t(3)], m2: vec![t(3)], step: 7 },
             tokens: Tensor::i32(vec![1, 1, 2], vec![0, 1]),

@@ -35,7 +35,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::ops::{AdapterParams, LossAndGradsReq, SampleGrads, Variant};
+use crate::runtime::ops::{AdapterParams, AdapterVariant, LossAndGradsReq, SampleGrads, Variant};
 use crate::runtime::{BackendSpec, ExecBackend, Tensor};
 use crate::util::lock_unpoisoned;
 
@@ -166,11 +166,16 @@ impl EnginePool {
 pub struct GradReducer {
     config: String,
     variant: Variant,
+    adapter: AdapterVariant,
 }
 
 impl GradReducer {
-    pub fn new(config: impl Into<String>, variant: Variant) -> GradReducer {
-        GradReducer { config: config.into(), variant }
+    pub fn new(
+        config: impl Into<String>,
+        variant: Variant,
+        adapter: AdapterVariant,
+    ) -> GradReducer {
+        GradReducer { config: config.into(), variant, adapter }
     }
 
     /// Contiguous shard plan: `bs` samples over at most `workers` shards,
@@ -218,6 +223,7 @@ impl GradReducer {
             let req = LossAndGradsReq {
                 config: self.config.clone(),
                 variant: self.variant,
+                adapter: self.adapter,
                 params: params.clone(),
                 tokens: Tensor::i32(
                     vec![range.len(), stride],
@@ -405,7 +411,7 @@ mod tests {
         let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 21);
         let tokens = Tensor::i32(vec![bs, seq1], corpus.block(1, bs, seq1));
         let total_rows = bs * info.seq;
-        let reducer = GradReducer::new("tiny", Variant::Fused);
+        let reducer = GradReducer::new("tiny", Variant::Fused, AdapterVariant::Dora);
 
         let mut reference: Option<(f32, Vec<Tensor>)> = None;
         for workers in [1usize, 3] {

@@ -6,7 +6,7 @@
 //! must reproduce the full DoRA composition's logits within 1e-5 f32.
 
 use dorafactors::models::forward::{self, NativeModel};
-use dorafactors::runtime::ops::{AdapterParams, Variant};
+use dorafactors::runtime::ops::{AdapterParams, AdapterVariant, Variant};
 use dorafactors::runtime::{ConfigInfo, Tensor, TensorData};
 use dorafactors::util::prop::{check, prop_close};
 use dorafactors::util::rng::Rng;
@@ -113,7 +113,7 @@ fn property_merged_logits_match_composed_within_1e5() {
         let composed = model
             .infer_logits(&tokens, bs, seq)
             .map_err(|e| format!("composed infer: {e:#}"))?;
-        let merged = forward::merge_adapter_params(&info, &params)
+        let merged = forward::merge_adapter_params(&info, &params, AdapterVariant::Dora)
             .map_err(|e| format!("merge: {e:#}"))?;
         let fast = forward::merged_infer_logits(&info, &merged, &tokens, bs, seq)
             .map_err(|e| format!("merged infer: {e:#}"))?;
@@ -125,6 +125,60 @@ fn property_merged_logits_match_composed_within_1e5() {
                 1e-5,
                 &format!("logit {i} (d={d} r={r} layers={n_layers} scale={scale:.3})"),
             )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_variant_merges_match_their_composed_paths() {
+    // The adapter-variant merge formulas (rsLoRA's rank-stabilized scale,
+    // BoRA's frozen column gain) against their composed forwards, over
+    // random shapes — the factored column-norm path included.
+    check("variant merged == composed logits", 12, |g| {
+        let d = g.usize_in(8, 36);
+        let r = g.usize_in(1, d.min(6));
+        let vocab = g.usize_in(12, 32);
+        let seq = g.usize_in(3, 8);
+        let n_layers = g.usize_in(1, 2);
+        let bs = g.usize_in(1, 3);
+        let scale = g.f64_in(0.25, 3.0);
+        let info = prop_config(vocab, d, n_layers, seq, r, scale, bs);
+        let seed = 4000 + g.case as u64;
+        let leaves = forward::init_leaves(&info, seed);
+        let mut trainable = leaves.trainable;
+        let mut rng = Rng::new(seed ^ 0x5CA1E);
+        for l in 0..n_layers {
+            set_f32(&mut trainable[3 * l + 1], |b| {
+                for x in b.iter_mut() {
+                    *x = rng.normal() as f32 * 0.12;
+                }
+            });
+        }
+        let params = AdapterParams { frozen: leaves.frozen, trainable };
+        let tokens: Vec<i32> =
+            (0..bs * seq).map(|_| g.usize_in(0, vocab - 1) as i32).collect();
+        for adapter in [AdapterVariant::RsLora, AdapterVariant::Bora] {
+            let kernels = forward::kernels_for(Variant::Fused, &info, false)
+                .map_err(|e| format!("kernels: {e:#}"))?;
+            let model = NativeModel::new(&info, &params.frozen, &params.trainable, kernels)
+                .map_err(|e| format!("model: {e:#}"))?
+                .with_adapter(adapter);
+            let composed = model
+                .infer_logits(&tokens, bs, seq)
+                .map_err(|e| format!("composed infer: {e:#}"))?;
+            let merged = forward::merge_adapter_params(&info, &params, adapter)
+                .map_err(|e| format!("merge: {e:#}"))?;
+            let fast = forward::merged_infer_logits(&info, &merged, &tokens, bs, seq)
+                .map_err(|e| format!("merged infer: {e:#}"))?;
+            for i in 0..bs * vocab {
+                prop_close(
+                    composed[i] as f64,
+                    fast[i] as f64,
+                    1e-5,
+                    &format!("{adapter:?} logit {i} (d={d} r={r} scale={scale:.3})"),
+                )?;
+            }
         }
         Ok(())
     });
@@ -158,7 +212,7 @@ fn property_merged_parity_holds_for_eager_variant_too() {
         let composed = model
             .infer_logits(&tokens, 2, 6)
             .map_err(|e| format!("composed infer: {e:#}"))?;
-        let merged = forward::merge_adapter_params(&info, &params)
+        let merged = forward::merge_adapter_params(&info, &params, AdapterVariant::Dora)
             .map_err(|e| format!("merge: {e:#}"))?;
         let fast = forward::merged_infer_logits(&info, &merged, &tokens, 2, 6)
             .map_err(|e| format!("merged infer: {e:#}"))?;

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::ops::{reduce_sample_grads, InitReq, Variant};
+use dorafactors::runtime::ops::{reduce_sample_grads, AdapterVariant, InitReq, Variant};
 use dorafactors::runtime::{BackendSpec, EnginePool, ExecBackend, GradReducer, Tensor};
 
 fn tiny_cfg(workers: usize, accum: usize) -> TrainerCfg {
@@ -38,7 +38,7 @@ fn reduced_gradients_are_bitwise_identical_across_worker_counts() {
     let mut corpus = dorafactors::coordinator::data::MarkovCorpus::new(info.vocab, 3, 77);
     let tokens = Tensor::i32(vec![bs, seq1], corpus.block(1, bs, seq1));
     let total_rows = bs * info.seq;
-    let reducer = GradReducer::new("tiny", Variant::Fused);
+    let reducer = GradReducer::new("tiny", Variant::Fused, AdapterVariant::Dora);
 
     let mut reference: Option<(f32, Vec<Tensor>)> = None;
     for workers in [1usize, 2, 3, 4] {
@@ -99,6 +99,26 @@ fn adamw_state_is_bitwise_identical_after_ten_steps() {
         let a = tr.to_adapter(&format!("w{workers}")).unwrap();
         assert_eq!(a.train_workers as usize, workers);
         assert_eq!(a.grad_accum, 1);
+    }
+}
+
+#[test]
+fn variant_trajectories_are_worker_count_invariant_too() {
+    // The adapter-variant axis rides the same determinism contract: an
+    // rsLoRA run's loss trajectory is bitwise worker-count invariant.
+    let mut reference: Option<Vec<u32>> = None;
+    for workers in [1usize, 3] {
+        let mut tr = Trainer::with_spec(
+            &BackendSpec::Native,
+            TrainerCfg { variant: "fused-rslora".into(), ..tiny_cfg(workers, 1) },
+        )
+        .unwrap();
+        tr.train_steps(8).unwrap();
+        let losses: Vec<u32> = tr.history.iter().map(|r| r.loss.to_bits()).collect();
+        match &reference {
+            None => reference = Some(losses),
+            Some(l0) => assert_eq!(&losses, l0, "{workers} workers (rslora)"),
+        }
     }
 }
 
