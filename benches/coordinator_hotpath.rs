@@ -165,6 +165,7 @@ fn main() {
                 max_wait: Duration::from_millis(1),
                 workers: 1,
                 fast_path: FastPath::Composed,
+                queue_depth: 32,
             },
         )
         .expect("native server");
@@ -188,6 +189,7 @@ fn main() {
                 max_wait: Duration::from_millis(20),
                 workers: 1,
                 fast_path: FastPath::Composed,
+                queue_depth: 32,
             },
         )
         .expect("native server");
@@ -239,6 +241,7 @@ fn main() {
                 max_wait: Duration::from_millis(20),
                 workers: 1,
                 fast_path: FastPath::Composed,
+                queue_depth: 32,
             },
             adapters,
         )
@@ -290,6 +293,7 @@ fn main() {
                     max_wait: Duration::ZERO,
                     workers: pool,
                     fast_path,
+                    queue_depth: 32,
                 },
             )
             .expect("pool server");
@@ -353,6 +357,7 @@ fn main() {
                 max_wait: Duration::from_millis(2),
                 workers: pool,
                 fast_path: FastPath::Merged,
+                queue_depth: 32,
             },
             adapters,
         )

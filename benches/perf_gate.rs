@@ -13,7 +13,10 @@
 //!   zero-skip before/after trajectory rows;
 //! * each adapter variant's fused forward (rsLoRA, BoRA) stays within
 //!   1.2x of the Dora fused forward — the variant axis must not tax the
-//!   compose hot path.
+//!   compose hot path;
+//! * streaming decode tokens/sec: merged > composed at pool {1, 2} —
+//!   per-token, the precomputed merged weights must beat re-composing
+//!   the adapter every step.
 //!
 //! Trial counts are sized for a CI runner (~seconds, not minutes); the
 //! full-resolution sweeps live in `compose_kernel`, `backward_kernel`
@@ -27,7 +30,7 @@
 use std::time::Duration;
 
 use dorafactors::bench::timing;
-use dorafactors::coordinator::{FastPath, Server, ServerCfg};
+use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg};
 use dorafactors::dora::compose_cpu;
 use dorafactors::dora::config::ActShape;
 use dorafactors::kernels::gemm::{self, naive, SMALL_K_MAX};
@@ -399,6 +402,7 @@ fn main() {
                     max_wait: Duration::ZERO,
                     workers: pool,
                     fast_path,
+                    queue_depth: 32,
                 },
             )
             .expect("pool server");
@@ -434,12 +438,72 @@ fn main() {
     let (merged1, composed1) = (median_of(1, "merged"), median_of(1, "composed"));
     let merged_ok = merged1 < composed1;
 
+    // Streaming decode: tokens/sec through the continuous-batching
+    // scheduler at pool {1, 2} x {merged, composed} on the `small`
+    // config (one greedy 32-token stream per trial — the steady-state
+    // per-token path, not the batching window). Gate: the merged fast
+    // path out-decodes composed at BOTH pool sizes — per-token the
+    // one-matmul-per-layer merged step is the whole point.
+    let mut decode_rows: Vec<Json> = Vec::new();
+    let mut decode_medians: Vec<((usize, &'static str), f64)> = Vec::new();
+    const DECODE_TOKENS: usize = 32;
+    for pool in [1usize, 2] {
+        for fast_path in [FastPath::Merged, FastPath::Composed] {
+            let server = Server::start(
+                BackendSpec::Native,
+                ServerCfg {
+                    config: "small".into(),
+                    max_wait: Duration::ZERO,
+                    workers: pool,
+                    fast_path,
+                    queue_depth: 32,
+                },
+            )
+            .expect("decode server");
+            let client = server.client();
+            let opts = GenOptions { max_tokens: DECODE_TOKENS, ..GenOptions::default() };
+            let serve_cfg = timing::BenchCfg { warmup: 1, trials: 10, time_cap_s: 3.0 };
+            let m = timing::bench("decode stream", serve_cfg, || {
+                let tokens = client.generate_collect(&[1, 2, 3, 4], opts).unwrap();
+                assert_eq!(tokens.len(), DECODE_TOKENS);
+            });
+            drop(client);
+            let sm = server.shutdown();
+            assert_eq!(sm.decode_failed, 0, "decode bench stream failed");
+            let tok_per_s = DECODE_TOKENS as f64 / m.median_s;
+            decode_medians.push(((pool, fast_path.as_str()), m.median_s));
+            decode_rows.push(Json::obj(vec![
+                ("pool", Json::Num(pool as f64)),
+                ("fast_path", Json::Str(fast_path.as_str().into())),
+                ("tokens", Json::Num(DECODE_TOKENS as f64)),
+                ("median_s", Json::Num(m.median_s)),
+                ("tok_per_s", Json::Num(tok_per_s)),
+            ]));
+            println!(
+                "decode small pool={pool} path={}: {:.0} tok/s ({:.1} us/token)",
+                fast_path.as_str(),
+                tok_per_s,
+                m.median_s / DECODE_TOKENS as f64 * 1e6
+            );
+        }
+    }
+    let decode_of = |pool: usize, path: &str| -> f64 {
+        decode_medians
+            .iter()
+            .find(|((p, fp), _)| *p == pool && *fp == path)
+            .map(|(_, v)| *v)
+            .expect("decode median recorded")
+    };
+    let decode_ok = decode_of(1, "merged") < decode_of(1, "composed")
+        && decode_of(2, "merged") < decode_of(2, "composed");
+
     // Emit the summary BEFORE asserting: a violated invariant must still
     // upload the numbers that show it.
     let json = Json::obj(vec![
         ("bench", Json::Str("perf_gate".into())),
         ("kernels", Json::Arr(kernel_rows)),
         ("serving", Json::Arr(serving_rows)),
+        ("decode", Json::Arr(decode_rows)),
         ("compose_geomean_speedup", Json::Num(compose_geomean)),
         ("gemm_geomean_speedup", Json::Num(gemm_geomean)),
         (
@@ -447,6 +511,7 @@ fn main() {
             Json::obj(vec![
                 ("fused_le_eager", Json::Bool(compose_ok)),
                 ("merged_lt_composed_pool1", Json::Bool(merged_ok)),
+                ("decode_merged_gt_composed", Json::Bool(decode_ok)),
                 ("gemm_blocked_beats_naive_e2e", Json::Bool(gemm_ok)),
                 ("gemm_nt_2x_e2e", Json::Bool(gemm_nt_ok)),
                 ("smallk_beats_blocked_r_le_64", Json::Bool(smallk_ok)),
@@ -489,6 +554,15 @@ fn main() {
         "blocked GEMM geomean speedup {gemm_geomean:.2} < 2.0 on the e2e rows"
     );
     assert!(smallk_ok, "small-K path lost to generic blocked at r <= {SMALL_K_MAX}");
+    assert!(
+        decode_ok,
+        "merged decode did not out-decode composed at some pool size: \
+         pool1 merged {:.3e}s vs composed {:.3e}s, pool2 merged {:.3e}s vs composed {:.3e}s",
+        decode_of(1, "merged"),
+        decode_of(1, "composed"),
+        decode_of(2, "merged"),
+        decode_of(2, "composed")
+    );
     assert!(
         variant_ok,
         "an adapter variant's fused forward exceeded 1.2x the Dora forward: {variant_ratios:?}"

@@ -82,6 +82,7 @@ fn main() -> Result<()> {
             max_wait: Duration::from_millis(5),
             workers,
             fast_path,
+            queue_depth: 64,
         },
         adapters,
     )?;

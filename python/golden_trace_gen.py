@@ -55,10 +55,24 @@ for op. All variants share the Dora state at init (B = 0 makes both
 gains exactly 1), so the step-1 losses agree bitwise and the traces
 diverge only through training.
 
-Usage:  python3 python/golden_trace_gen.py [--check]
+The greedy-decode fixture (``golden_decode_tiny.json``) rides the same
+replica too: a seed-7 init with every layer's B and magnitude pushed off
+init by a seeded perturbation, then greedy-argmax decode continuations
+for a battery of prompts through BOTH serving paths — the composed
+forward
+(``models::forward::decode_logits``, full DoRA composition per step) and
+the merged-weight fast path (``merge_adapter_params`` +
+``merged_decode_logits``) — for all three adapter variants. Token IDs
+are integers, so the fixture asserts them BITWISE: every float op on the
+decode path (sequential-k matmuls, factored norms, compose order, glibc
+tanhf) is mirrored exactly, and an argmax flip anywhere would change a
+token.
+
+Usage:  python3 python/golden_trace_gen.py [--check | --decode-only]
 Writes: rust/tests/golden/golden_trace_tiny_fused.json
         rust/tests/golden/golden_trace_tiny_fused_rslora.json
         rust/tests/golden/golden_trace_tiny_fused_bora.json
+        rust/tests/golden/golden_decode_tiny.json
 """
 
 import ctypes
@@ -627,7 +641,164 @@ def run_shadow_f64(seed=7, branching=3, steps=52, variant="dora"):
     return losses
 
 
+# --------------------------------------------------------------------------
+# Greedy-decode replica: the streaming scheduler's token-sequence fixture
+# (coordinator::scheduler greedy sampling over runtime decode_step /
+# decode_step_merged). Bit-exact, asserted bitwise on the i32 tokens.
+# --------------------------------------------------------------------------
+
+DECODE_INIT_SEED = 7
+DECODE_PERTURB_SEED = 55
+DECODE_PERTURB_SCALE = 0.5
+# An untrained model is a static token -> token map, so greedy decode
+# reaches a short cycle within a few steps; several prompts with distinct
+# last tokens pin many independent argmax decisions instead of one.
+DECODE_PROMPTS = [[3, 11, 7, 2], [0], [63], [17, 29], [44, 13, 57], [31]]
+DECODE_TOKENS = 6
+
+
+def decode_leaves():
+    """init_leaves(7) with one Rng(55) stream perturbing each layer's B
+    (`*x = rng.normal() as f32 * scale`) and magnitude
+    (`*x *= 1.0 + rng.normal() as f32 * scale`), in leaf order. At init
+    the tied head makes every token a greedy fixed point (dot(h, embed)
+    is dominated by the start embedding riding the residual stream), so
+    the adapter has to be pushed hard enough that g strays well off 1
+    and the token map becomes nontrivial — and off init the three
+    variants are genuinely different models."""
+    frozen, trainable = init_leaves(DECODE_INIT_SEED)
+    vrng = Rng(DECODE_PERTURB_SEED)
+    scale = F32(DECODE_PERTURB_SCALE)
+    for l in range(N_LAYERS):
+        b = trainable[3 * l + 1].reshape(-1)
+        for i in range(b.shape[0]):
+            b[i] = F32(F32(vrng.normal()) * scale)
+        mag = trainable[3 * l + 2]
+        for i in range(mag.shape[0]):
+            mag[i] = F32(mag[i] * F32(F32(1.0) + F32(F32(vrng.normal()) * scale)))
+    return frozen, trainable
+
+
+def decode_composed(frozen, trainable, variant, prompt):
+    """Greedy decode through models::forward::decode_logits — the full
+    DoRA composition per step. One row per step: the model is row-local
+    (sequential-k matmul accumulation), so a request decodes the same
+    tokens bitwise at any co-resident batch size — the scheduler's
+    continuous-batching determinism contract, replicated here at n=1."""
+    s_eff = variant_scale(variant)
+    bora = variant == "bora"
+    embed = frozen[0]
+    cur = prompt[-1]
+    out = []
+    for _ in range(DECODE_TOKENS):
+        h = embed[cur : cur + 1].copy()
+        for l in range(N_LAYERS):
+            w = frozen[1 + l]
+            a, b, mag = trainable[3 * l], trainable[3 * l + 1], trainable[3 * l + 2]
+            g_col = layer_g_col(w, a, b, s_eff) if bora else None
+            hin = h * g_col[None, :] if g_col is not None else h
+            base = matmul_nt(hin, w)
+            u = matmul_nt(hin, a)
+            lora = matmul_nt(u, b)
+            g, _c = layer_g(w, a, b, mag, s_eff)
+            # kernels::generic::forward_rows: t1 = s*l; t2 = g*t1;
+            # t3 = (g-1)*base; delta = t3 + t2.
+            t1 = s_eff * lora
+            t2 = g[None, :] * t1
+            t3 = (g - F32(1.0))[None, :] * base
+            delta = t3 + t2
+            h = h + tanhf32(base + delta)
+        logits = matmul_nt(h, embed)[0]
+        cur = int(np.argmax(logits))  # first max index, like the scheduler
+        out.append(cur)
+    return out
+
+
+def merge_params(frozen, trainable, variant):
+    """models::forward::merge_adapter_params — f32 op order preserved:
+    m[j,k] = (g[j] * (w[j,k] + s*ba[j,k])) * g_col[k], left-associated."""
+    s = variant_scale(variant)
+    merged = []
+    for l in range(N_LAYERS):
+        w = frozen[1 + l]
+        a, b, mag = trainable[3 * l], trainable[3 * l + 1], trainable[3 * l + 2]
+        g, _c = layer_g(w, a, b, mag, s)
+        ba = matmul_nn(b, a)
+        m = g[:, None] * (w + s * ba)
+        if variant == "bora":
+            m = m * layer_g_col(w, a, b, s)[None, :]
+        merged.append(m)
+    return merged
+
+
+def decode_merged(frozen, trainable, variant, prompt):
+    """Greedy decode through the merged fast path: one plain matmul +
+    residual tanh per layer (models::forward::merged_decode_logits)."""
+    embed = frozen[0]
+    merged = merge_params(frozen, trainable, variant)
+    cur = prompt[-1]
+    out = []
+    for _ in range(DECODE_TOKENS):
+        h = embed[cur : cur + 1].copy()
+        for m in merged:
+            h = h + tanhf32(matmul_nt(h, m))
+        logits = matmul_nt(h, embed)[0]
+        cur = int(np.argmax(logits))
+        out.append(cur)
+    return out
+
+
+def decode_fixture():
+    frozen, trainable = decode_leaves()
+    variants = {}
+    for variant in ["dora", "rslora", "bora"]:
+        comp = [decode_composed(frozen, trainable, variant, p) for p in DECODE_PROMPTS]
+        merg = [decode_merged(frozen, trainable, variant, p) for p in DECODE_PROMPTS]
+        assert all(0 <= t < VOCAB for seq in comp + merg for t in seq)
+        variants[variant] = {"composed": comp, "merged": merg}
+        print(f"decode {variant:7} composed {comp}")
+        print(f"decode {variant:7} merged   {merg}")
+    # Off init the variant math has to bite: rsLoRA (scale) and BoRA
+    # (column gain) must each diverge from DoRA on at least one path.
+    for other in ["rslora", "bora"]:
+        assert any(
+            variants["dora"][p] != variants[other][p] for p in ["composed", "merged"]
+        ), f"{other} decode never diverged from dora — perturbation too small"
+    return {
+        "config": "tiny",
+        "init_seed": DECODE_INIT_SEED,
+        "n_tokens": DECODE_TOKENS,
+        "perturb_scale": DECODE_PERTURB_SCALE,
+        "perturb_seed": DECODE_PERTURB_SEED,
+        "prompts": DECODE_PROMPTS,
+        "variants": variants,
+    }
+
+
+def golden_dir():
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust",
+        "tests",
+        "golden",
+    )
+
+
+def write_decode_fixture():
+    out = decode_fixture()
+    os.makedirs(golden_dir(), exist_ok=True)
+    path = os.path.join(golden_dir(), "golden_decode_tiny.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main():
+    if "--decode-only" in sys.argv:
+        write_decode_fixture()
+        return
+
     all_losses = {}
     for variant in ["dora", "rslora", "bora"]:
         losses = run_golden(variant=variant)
@@ -658,15 +829,11 @@ def main():
         assert gap > 1e-3, f"{variant} never diverged from dora: {gap}"
 
     if "--check" in sys.argv:
+        decode_fixture()  # run the decode asserts too, write nothing
         return
 
-    golden_dir = os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "rust",
-        "tests",
-        "golden",
-    )
-    os.makedirs(golden_dir, exist_ok=True)
+    out_dir = golden_dir()
+    os.makedirs(out_dir, exist_ok=True)
     for variant, token, fname in [
         ("dora", "fused", "golden_trace_tiny_fused.json"),
         ("rslora", "fused-rslora", "golden_trace_tiny_fused_rslora.json"),
@@ -680,11 +847,13 @@ def main():
             "tolerance": 1e-6,
             "variant": token,
         }
-        path = os.path.join(golden_dir, fname)
+        path = os.path.join(out_dir, fname)
         with open(path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {path}")
+
+    write_decode_fixture()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 //! Perf-trajectory diff: compare a fresh `perf_gate` BENCH JSON against
-//! a committed baseline snapshot (`bench_baselines/BENCH_pr6.json`) and
+//! a committed baseline snapshot (`bench_baselines/BENCH_pr8.json`) and
 //! render per-row deltas, so perf regressions show up as a reviewable
 //! table instead of silently drifting (bench_results/ is gitignored —
 //! the committed snapshot is the only history).
@@ -7,9 +7,10 @@
 //! Rows are matched by identity key — `kernel` name plus its shape
 //! columns (`rows`/`d_out` for compose rows, `m`/`k`/`n` for GEMM rows)
 //! plus the adapter `variant` when the row carries one,
-//! `pool`+`fast_path` for serving rows — and compared on the row's
-//! primary metric (ns_per_elem, ns_per_mac, or median_s). Rows present
-//! on only one side are listed separately rather than dropped.
+//! `pool`+`fast_path` for serving and streaming-decode rows — and
+//! compared on the row's primary metric (ns_per_elem, ns_per_mac, or
+//! median_s). Rows present on only one side are listed separately
+//! rather than dropped.
 
 use crate::util::json::{Json, JsonError};
 use crate::util::table::Table;
@@ -73,6 +74,15 @@ fn serving_key(row: &Json) -> Result<String, JsonError> {
     ))
 }
 
+/// Identity key of a streaming `decode` row (tokens/sec trajectory).
+fn decode_key(row: &Json) -> Result<String, JsonError> {
+    Ok(format!(
+        "decode pool={} path={}",
+        row.get("pool")?.as_usize()?,
+        row.get("fast_path")?.as_str()?
+    ))
+}
+
 /// The row's primary metric: most specific time-per-work field present.
 fn metric_of(row: &Json) -> Result<(&'static str, f64), JsonError> {
     for name in ["ns_per_elem", "ns_per_mac"] {
@@ -96,6 +106,12 @@ fn collect(doc: &Json) -> Result<Vec<(String, &'static str, f64)>, JsonError> {
         for row in rows.as_arr()? {
             let (metric, v) = metric_of(row)?;
             out.push((serving_key(row)?, metric, v));
+        }
+    }
+    if let Some(rows) = doc.opt("decode") {
+        for row in rows.as_arr()? {
+            let (metric, v) = metric_of(row)?;
+            out.push((decode_key(row)?, metric, v));
         }
     }
     Ok(out)
@@ -205,6 +221,16 @@ mod tests {
                     ("req_per_s", Json::Num(2000.0)),
                 ])]),
             ),
+            (
+                "decode",
+                Json::Arr(vec![Json::obj(vec![
+                    ("pool", Json::Num(1.0)),
+                    ("fast_path", Json::Str("merged".into())),
+                    ("tokens", Json::Num(32.0)),
+                    ("median_s", Json::Num(0.004)),
+                    ("tok_per_s", Json::Num(8000.0)),
+                ])]),
+            ),
         ])
     }
 
@@ -213,7 +239,7 @@ mod tests {
         let base = doc(false);
         let fresh = doc(true);
         let d = diff(&base, &fresh).unwrap();
-        assert_eq!(d.rows.len(), 3); // 2 kernel rows + 1 serving row
+        assert_eq!(d.rows.len(), 4); // 2 kernel rows + 1 serving + 1 decode row
         assert!(d.only_baseline.is_empty());
         assert_eq!(d.only_fresh, vec!["gemm_ba_r8_smallk 128x8x128".to_string()]);
         let compose = d.rows.iter().find(|r| r.key.starts_with("compose_fused")).unwrap();

@@ -13,11 +13,18 @@
 //!   path with composed fallback, global + per-adapter + per-worker
 //!   metrics, adapter hot-loading, malformed-output fan-out instead of
 //!   batcher panics).
+//! * `scheduler` — streaming autoregressive decode: a continuous-batching
+//!   scheduler over the same engine pool (requests join and leave the
+//!   running batch between decode steps), per-request seeded sampling
+//!   (greedy / temperature / top-k), bounded admission with typed
+//!   [`Overloaded`] load-shedding, and TTFT / per-token SLO histograms.
 
 pub mod data;
+pub mod scheduler;
 pub mod server;
 pub mod trainer;
 
+pub use scheduler::{FinishReason, GenOptions, GenStream, Overloaded, TokenEvent};
 pub use server::{
     AdapterMetrics, Client, FastPath, Reply, Server, ServerCfg, ServerMetrics, WorkerMetrics,
     DEFAULT_ADAPTER,

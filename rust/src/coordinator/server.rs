@@ -46,6 +46,14 @@
 //! output — a bad group fans an `Err` to each of its requests and the
 //! pool keeps serving; and no metrics mutex is ever `unwrap()`ed, so a
 //! panicking worker cannot poison later `metrics()` calls into panics.
+//!
+//! Next to the one-shot batcher, the server runs a second data path: a
+//! streaming decode scheduler ([`super::scheduler`]) with continuous
+//! batching, reached through [`Client::generate`]. Both paths share one
+//! [`EnginePool`] and one adapter table; the scheduler has its own
+//! bounded admission queue ([`ServerCfg::queue_depth`]) with typed
+//! [`Overloaded`](super::scheduler::Overloaded) load-shedding and SLO
+//! metrics (TTFT / per-token latency histograms, queue-depth gauges).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -63,6 +71,8 @@ use crate::runtime::{
     Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, Tensor,
 };
 use crate::util::lock_unpoisoned;
+
+use super::scheduler::{DecodeScheduler, DecodeShared, GenOptions, GenRequest, GenStream};
 
 /// The adapter name single-adapter entrypoints register under, and the
 /// route [`Client::infer`] takes when the caller names no adapter.
@@ -111,6 +121,11 @@ pub struct ServerCfg {
     /// Requested inference fast path (the effective path is recorded in
     /// [`ServerMetrics::fast_path`]).
     pub fast_path: FastPath,
+    /// Bound on the streaming-decode admission queue: [`Client::generate`]
+    /// calls beyond this many waiting requests are shed with a typed
+    /// [`Overloaded`](super::scheduler::Overloaded) error instead of
+    /// queueing unboundedly.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerCfg {
@@ -120,6 +135,7 @@ impl Default for ServerCfg {
             max_wait: Duration::from_millis(20),
             workers: 0,
             fast_path: FastPath::Merged,
+            queue_depth: 32,
         }
     }
 }
@@ -220,6 +236,35 @@ pub struct ServerMetrics {
     pub compose_backend: String,
     /// Execution backend kind ("pjrt" / "native" / "mock").
     pub exec_backend: String,
+
+    // --- Streaming-decode (scheduler) counters and SLO histograms ---
+    /// Streaming requests admitted into a decode slot.
+    pub decode_requests: u64,
+    /// Streams that finished (EOS or max-tokens).
+    pub decode_completed: u64,
+    /// Streams answered with an engine/shutdown error.
+    pub decode_failed: u64,
+    /// Streams cancelled by a client dropping its [`GenStream`].
+    pub decode_cancelled: u64,
+    /// Tokens delivered to streaming clients.
+    pub decode_tokens: u64,
+    /// Batched decode-step engine calls executed.
+    pub decode_steps: u64,
+    /// Streaming requests rejected with `Overloaded` (gauge snapshot of
+    /// the shed counter, filled by [`Server::metrics`]).
+    pub shed_requests: u64,
+    /// Streaming requests waiting for admission (gauge, filled by
+    /// [`Server::metrics`]).
+    pub decode_queue_depth: usize,
+    /// Requests currently decoding in the continuous batch (gauge,
+    /// filled by [`Server::metrics`]).
+    pub decode_in_flight: usize,
+    /// Per-request time-to-first-token samples (µs, submit -> first
+    /// token event).
+    pub ttft_us: Vec<f64>,
+    /// Per-token decode latency samples (µs, step-to-step, first token
+    /// excluded — that one is TTFT).
+    pub token_latency_us: Vec<f64>,
 }
 
 impl ServerMetrics {
@@ -234,16 +279,38 @@ impl ServerMetrics {
     pub fn mean_occupancy(&self) -> f64 {
         crate::util::stats::mean(&self.occupancies)
     }
+
+    /// Streaming SLO: median time-to-first-token (µs).
+    pub fn ttft_p50_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.ttft_us, 50.0)
+    }
+
+    /// Streaming SLO: p99 time-to-first-token (µs).
+    pub fn ttft_p99_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.ttft_us, 99.0)
+    }
+
+    /// Streaming SLO: median per-token latency (µs).
+    pub fn token_p50_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.token_latency_us, 50.0)
+    }
+
+    /// Streaming SLO: p99 per-token latency (µs).
+    pub fn token_p99_us(&self) -> f64 {
+        crate::util::stats::percentile(&self.token_latency_us, 99.0)
+    }
 }
 
 /// One adapter's serving state: the parameter snapshot plus (when the
 /// merged fast path is active and the merge succeeded) the precomputed
-/// merged weights. Immutable once built — hot-loads swap the whole entry.
-struct AdapterEntry {
-    params: Arc<AdapterParams>,
+/// merged weights. Immutable once built — hot-loads swap the whole
+/// entry. `pub(crate)` so the decode scheduler can pin a request's
+/// snapshot at admission time.
+pub(crate) struct AdapterEntry {
+    pub(crate) params: Arc<AdapterParams>,
     /// Which compose math this adapter's requests (and its merge) use.
-    variant: AdapterVariant,
-    merged: Option<Arc<MergedParams>>,
+    pub(crate) variant: AdapterVariant,
+    pub(crate) merged: Option<Arc<MergedParams>>,
 }
 
 /// The shared adapter table: name -> entry snapshot. Slots hold `Arc`s so
@@ -257,6 +324,7 @@ type SharedAdapters = Arc<Mutex<BTreeMap<String, Arc<AdapterEntry>>>>;
 pub struct Client {
     tx: Sender<Request>,
     adapters: SharedAdapters,
+    decode: Arc<DecodeShared>,
     default_adapter: String,
     seq: usize,
     vocab: usize,
@@ -293,6 +361,71 @@ impl Client {
         reply_rx.recv().context("server dropped request")?
     }
 
+    /// Streaming autoregressive decode on the server's default adapter:
+    /// returns a [`GenStream`] yielding one token event per decode step
+    /// as the continuous-batching scheduler produces them.
+    pub fn generate(&self, prompt: &[i32], opts: GenOptions) -> Result<GenStream> {
+        self.generate_with(&self.default_adapter, prompt, opts)
+    }
+
+    /// [`Client::generate`] routed to a named adapter. Fails fast with a
+    /// typed [`Overloaded`](super::scheduler::Overloaded) error when the
+    /// admission queue is full (downcast to distinguish from validation
+    /// errors). The adapter entry is snapshotted here, so the stream
+    /// decodes against one consistent parameter set even across a
+    /// concurrent hot-load.
+    pub fn generate_with(
+        &self,
+        adapter: &str,
+        prompt: &[i32],
+        opts: GenOptions,
+    ) -> Result<GenStream> {
+        if prompt.is_empty() || prompt.len() > self.seq {
+            bail!("prompt length {} outside 1..={}", prompt.len(), self.seq);
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            bail!("token {t} outside vocab 0..{}", self.vocab);
+        }
+        if opts.max_tokens == 0 {
+            bail!("max_tokens must be >= 1");
+        }
+        if let Some(e) = opts.eos {
+            if e < 0 || e as usize >= self.vocab {
+                bail!("eos token {e} outside vocab 0..{}", self.vocab);
+            }
+        }
+        let entry = lock_unpoisoned(&self.adapters).get(adapter).cloned();
+        let Some(entry) = entry else {
+            bail!("adapter {adapter:?} is not loaded on this server");
+        };
+        let (tx, rx) = mpsc::channel();
+        self.decode.try_push(GenRequest {
+            adapter: adapter.to_string(),
+            entry,
+            prompt: prompt.to_vec(),
+            opts,
+            tx,
+            enqueued: Instant::now(),
+        })?;
+        Ok(GenStream::new(rx))
+    }
+
+    /// Blocking convenience: run [`Client::generate`] and collect the
+    /// full decoded token sequence.
+    pub fn generate_collect(&self, prompt: &[i32], opts: GenOptions) -> Result<Vec<i32>> {
+        self.generate(prompt, opts)?.collect()
+    }
+
+    /// Blocking convenience: [`Client::generate_with`] + collect.
+    pub fn generate_collect_with(
+        &self,
+        adapter: &str,
+        prompt: &[i32],
+        opts: GenOptions,
+    ) -> Result<Vec<i32>> {
+        self.generate_with(adapter, prompt, opts)?.collect()
+    }
+
     /// Adapter names currently loaded (snapshot).
     pub fn adapters(&self) -> Vec<String> {
         lock_unpoisoned(&self.adapters).keys().cloned().collect()
@@ -306,7 +439,9 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     metrics: Arc<Mutex<ServerMetrics>>,
     adapters: SharedAdapters,
+    decode: Arc<DecodeShared>,
     join: Option<std::thread::JoinHandle<()>>,
+    sched_join: Option<std::thread::JoinHandle<()>>,
     info: ConfigInfo,
     default_adapter: String,
     /// Effective fast path (policy after backend-support resolution).
@@ -457,7 +592,10 @@ impl Server {
         } else {
             cfg.workers
         };
-        let pool = EnginePool::start(&spec, workers).context("starting serving pool")?;
+        // The pool is shared between the one-shot batcher and the decode
+        // scheduler (both route by adapter affinity); it drains and joins
+        // when the LAST holder drops.
+        let pool = Arc::new(EnginePool::start(&spec, workers).context("starting serving pool")?);
 
         let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
         let stop = Arc::new(AtomicBool::new(false));
@@ -484,20 +622,36 @@ impl Server {
             ctx: ctx.clone(),
             stop: stop.clone(),
             max_wait: cfg.max_wait,
-            pool,
+            pool: pool.clone(),
         };
         let join = std::thread::spawn(move || {
             batcher.run(rx);
-            // Dropping the batcher drops the pool: queued jobs drain and
-            // every in-flight reply is fanned before this thread exits.
+            // Dropping the batcher releases its pool handle: queued jobs
+            // drain and every in-flight reply is fanned before exit.
         });
+
+        // The streaming-decode scheduler runs on its own thread, sharing
+        // the pool and the metrics sink with the batcher.
+        let decode = Arc::new(DecodeShared::new(cfg.queue_depth));
+        let sched = DecodeScheduler {
+            config: cfg.config.clone(),
+            vocab: info.vocab,
+            slots: info.train_batch,
+            shared: decode.clone(),
+            pool,
+            metrics: metrics.clone(),
+            stop: stop.clone(),
+        };
+        let sched_join = std::thread::spawn(move || sched.run());
 
         Ok(Server {
             client_tx: tx,
             stop,
             metrics,
             adapters,
+            decode,
             join: Some(join),
+            sched_join: Some(sched_join),
             info,
             default_adapter,
             fast_path,
@@ -508,6 +662,7 @@ impl Server {
         Client {
             tx: self.client_tx.clone(),
             adapters: self.adapters.clone(),
+            decode: self.decode.clone(),
             default_adapter: self.default_adapter.clone(),
             seq: self.info.seq,
             vocab: self.info.vocab,
@@ -577,16 +732,31 @@ impl Server {
     }
 
     pub fn metrics(&self) -> ServerMetrics {
-        lock_unpoisoned(&self.metrics).clone()
+        let mut m = lock_unpoisoned(&self.metrics).clone();
+        self.fill_gauges(&mut m);
+        m
     }
 
-    /// Stop the batcher (and its pool) and join.
+    /// Copy the scheduler's live load gauges into a metrics snapshot.
+    fn fill_gauges(&self, m: &mut ServerMetrics) {
+        m.shed_requests = self.decode.shed.load(Ordering::Relaxed);
+        m.decode_queue_depth = self.decode.queue_depth();
+        m.decode_in_flight = self.decode.in_flight.load(Ordering::SeqCst);
+    }
+
+    /// Stop the batcher and the decode scheduler (and their shared pool)
+    /// and join.
     pub fn shutdown(mut self) -> ServerMetrics {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
-        lock_unpoisoned(&self.metrics).clone()
+        if let Some(j) = self.sched_join.take() {
+            let _ = j.join();
+        }
+        let mut m = lock_unpoisoned(&self.metrics).clone();
+        self.fill_gauges(&mut m);
+        m
     }
 }
 
@@ -594,6 +764,9 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.sched_join.take() {
             let _ = j.join();
         }
     }
@@ -650,8 +823,9 @@ fn validate_adapter_params(info: &ConfigInfo, name: &str, params: &AdapterParams
 /// NaN-safe argmax over one row of logits: NaN entries are skipped (a
 /// `partial_cmp(..).unwrap()` here once panicked and killed the batcher
 /// thread); ties keep the first index. A fully poisoned row degrades to a
-/// deterministic `(0, NaN)` reply instead of a panic.
-fn argmax(row: &[f32]) -> (i32, f32) {
+/// deterministic `(0, NaN)` reply instead of a panic. Shared with the
+/// decode scheduler's greedy sampling path.
+pub(crate) fn argmax(row: &[f32]) -> (i32, f32) {
     let mut best: Option<usize> = None;
     for (i, v) in row.iter().enumerate() {
         if v.is_nan() {
@@ -685,7 +859,7 @@ struct Batcher {
     ctx: Arc<GroupCtx>,
     stop: Arc<AtomicBool>,
     max_wait: Duration,
-    pool: EnginePool,
+    pool: Arc<EnginePool>,
 }
 
 impl Batcher {
@@ -890,6 +1064,7 @@ mod tests {
             max_wait: Duration::from_millis(5),
             workers: 1,
             fast_path: FastPath::Merged,
+            queue_depth: 8,
         }
     }
 
@@ -971,6 +1146,91 @@ mod tests {
         assert!(m.batches < 4, "batches {}", m.batches);
         assert!(replies.iter().any(|r| r.batch_occupancy > 1));
         assert!(m.mean_occupancy() > 1.0, "occupancy {}", m.mean_occupancy());
+    }
+
+    #[test]
+    fn native_streams_greedy_tokens_with_slo_metrics() {
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        let client = server.client();
+        let opts = GenOptions { max_tokens: 8, ..GenOptions::default() };
+        // First decode token == the one-shot infer's argmax (row-local
+        // prefill: same last token, same logits row).
+        let reply = client.infer(&[1, 2, 3]).unwrap();
+        let stream = client.generate(&[1, 2, 3], opts).unwrap();
+        let events: Vec<crate::coordinator::TokenEvent> =
+            stream.map(|e| e.unwrap()).collect();
+        assert_eq!(events.len(), 8);
+        assert_eq!(events[0].token, reply.next_token);
+        assert_eq!(events[0].logit, reply.logit);
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.index, i);
+            assert!(ev.top.is_empty(), "streaming replies must not ship logits");
+            assert_eq!(
+                ev.finish,
+                (i == 7).then_some(crate::coordinator::FinishReason::MaxTokens)
+            );
+        }
+        // The collect path reproduces the stream bitwise.
+        let again = client.generate_collect(&[1, 2, 3], opts).unwrap();
+        assert_eq!(again, events.iter().map(|e| e.token).collect::<Vec<_>>());
+        let m = server.shutdown();
+        assert_eq!(m.decode_requests, 2);
+        assert_eq!(m.decode_completed, 2);
+        assert_eq!(m.decode_failed, 0);
+        assert_eq!(m.decode_cancelled, 0);
+        assert_eq!(m.decode_tokens, 16);
+        assert_eq!(m.ttft_us.len(), 2);
+        assert_eq!(m.token_latency_us.len(), 14);
+        assert!(m.ttft_p99_us() >= m.ttft_p50_us());
+        assert!(m.token_p99_us() > 0.0);
+        assert_eq!(m.decode_in_flight, 0);
+        assert_eq!(m.decode_queue_depth, 0);
+        assert_eq!(m.shed_requests, 0);
+    }
+
+    #[test]
+    fn generate_validates_prompt_options_and_adapter() {
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        let client = server.client();
+        let opts = GenOptions::default();
+        assert!(client.generate(&[], opts).is_err());
+        assert!(client.generate(&[0; 10_000], opts).is_err());
+        assert!(client.generate(&[-1], opts).is_err());
+        assert!(client.generate(&[1_000_000], opts).is_err());
+        assert!(client
+            .generate(&[1], GenOptions { max_tokens: 0, ..opts })
+            .is_err());
+        assert!(client
+            .generate(&[1], GenOptions { eos: Some(1_000_000), ..opts })
+            .is_err());
+        let err = client.generate_with("nope", &[1], opts).unwrap_err();
+        assert!(format!("{err:#}").contains("nope"), "{err:#}");
+        // None of those rejections are Overloaded sheds.
+        assert!(err.downcast_ref::<crate::coordinator::Overloaded>().is_none());
+        let m = server.shutdown();
+        assert_eq!(m.decode_requests, 0);
+        assert_eq!(m.shed_requests, 0);
+    }
+
+    #[test]
+    fn temperature_streams_are_seed_reproducible_at_the_server() {
+        let server = Server::start(BackendSpec::Native, tiny_cfg()).unwrap();
+        let client = server.client();
+        let opts = GenOptions {
+            max_tokens: 12,
+            temperature: 0.9,
+            top_k: 8,
+            seed: 1234,
+            ..GenOptions::default()
+        };
+        let a = client.generate_collect(&[3, 1, 4], opts).unwrap();
+        let b = client.generate_collect(&[3, 1, 4], opts).unwrap();
+        assert_eq!(a, b, "same seed must reproduce the stream bitwise");
+        let c = client
+            .generate_collect(&[3, 1, 4], GenOptions { seed: 99, ..opts })
+            .unwrap();
+        assert_ne!(a, c, "different seed should diverge at T=0.9");
+        drop(server);
     }
 
     #[test]

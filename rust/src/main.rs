@@ -5,6 +5,7 @@
 //!   info               manifest + device + config summary
 //!   train              run a training job against the AOT artifacts
 //!   serve-demo         start the batched server and fire demo traffic
+//!   generate           stream an autoregressive decode token by token
 //!   adapters list      list checkpoints in the adapter store
 //!   adapters train     train a NAMED adapter with periodic checkpoints
 //!   adapters serve     serve one or more named adapters from the store
@@ -19,7 +20,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use dorafactors::bench::report;
-use dorafactors::coordinator::{FastPath, Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::runtime::ops::{parse_variant_spec, variant_token};
 use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, Engine};
 use dorafactors::util::Args;
@@ -31,11 +32,12 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(),
         Some("train") => cmd_train(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
+        Some("generate") => cmd_generate(&args),
         Some("adapters") => cmd_adapters(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             eprintln!(
-                "usage: dorafactors <report|info|train|serve-demo|adapters|bench-diff> [--flags]\n\
+                "usage: dorafactors <report|info|train|serve-demo|generate|adapters|bench-diff> [--flags]\n\
                  \n\
                  report <id>     one of: {}\n\
                  train           --config tiny|small|e2e \
@@ -43,14 +45,18 @@ fn main() -> Result<()> {
                  --steps N --seed S [--eval-every N] \
                  [--train-workers N (data-parallel pool)] [--grad-accum K]\n\
                  serve-demo      --config tiny|small --requests N \
-                 [--workers N] [--fast-path merged|composed]\n\
+                 [--workers N] [--fast-path merged|composed] [--queue-depth N]\n\
+                 generate        [--adapter NAME [--store DIR]] [--config tiny] \
+                 [--prompt 1,2,3] [--max-tokens N] [--temperature T] [--top-k K] \
+                 [--seed S] [--top-logits K] [--workers N] [--fast-path merged|composed]\n\
                  adapters list   [--store DIR]\n\
                  adapters train  --adapter NAME [--config tiny] [--variant SPEC] [--steps N] \
                  [--seed S] [--checkpoint-every N] [--store DIR] [--resume] \
                  [--train-workers N] [--grad-accum K]\n\
-                 adapters serve  --adapter NAME[,NAME...] [--requests N] [--store DIR] \
-                 [--workers N (0 = all cores)] [--fast-path merged|composed]\n\
-                 bench-diff      [--baseline bench_baselines/BENCH_pr6.json] \
+                 adapters serve  --adapter NAME[,NAME...] [--requests N] [--streams N] \
+                 [--max-tokens N] [--store DIR] [--workers N (0 = all cores)] \
+                 [--fast-path merged|composed] [--queue-depth N] [--metrics-every-ms N]\n\
+                 bench-diff      [--baseline bench_baselines/BENCH_pr8.json] \
                  [--fresh bench_results/BENCH_ci.json]",
                 report::REPORT_IDS.join(" ")
             );
@@ -63,7 +69,7 @@ fn main() -> Result<()> {
 /// snapshot and print per-row deltas (the perf trajectory lives in git;
 /// bench_results/ is gitignored).
 fn cmd_bench_diff(args: &Args) -> Result<()> {
-    let baseline_path = args.get_or("baseline", "bench_baselines/BENCH_pr6.json");
+    let baseline_path = args.get_or("baseline", "bench_baselines/BENCH_pr8.json");
     let fresh_path = args.get_or("fresh", "bench_results/BENCH_ci.json");
     let read = |path: &str| -> Result<dorafactors::util::json::Json> {
         let text = std::fs::read_to_string(path).with_context(|| {
@@ -246,33 +252,93 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 10)),
             workers: args.get_usize("workers", 0),
             fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
+            queue_depth: args.get_usize("queue-depth", 64),
         },
         adapters,
     )?;
+    let n_streams = args.get_usize("streams", 0);
     println!(
-        "serving {} adapter(s) {:?} on config {config} ({} requests round-robin, \
+        "serving {} adapter(s) {:?} on config {config} ({} requests + {} streams round-robin, \
          {} pool workers, {} fast path)",
         names.len(),
         server.adapter_names(),
         n,
+        n_streams,
         server.metrics().workers,
         server.fast_path().as_str()
     );
     let client = server.client();
-    let handles: Vec<_> = (0..n)
-        .map(|i| {
-            let c = client.clone();
-            let adapter = names[i % names.len()].clone();
-            std::thread::spawn(move || c.infer_with(&adapter, &[(i % 7 + 1) as i32, 2, 3, 4]))
-        })
-        .collect();
-    for h in handles {
-        let r = h.join().unwrap()?;
-        println!(
-            "adapter={:12} next_token={:4}  latency={:7.1?}  occupancy={}",
-            r.adapter, r.next_token, r.latency, r.batch_occupancy
-        );
-    }
+    // Periodic metrics logging: batch counters plus the streaming gauges
+    // (admission-queue depth, in-flight decode slots, shed requests) so
+    // saturation is visible while the server runs, not only at shutdown.
+    let every = Duration::from_millis(args.get_u64("metrics-every-ms", 1000));
+    let done = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| -> Result<()> {
+        let logger = scope.spawn(|| {
+            let mut last = std::time::Instant::now();
+            while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(20));
+                if last.elapsed() < every {
+                    continue;
+                }
+                last = std::time::Instant::now();
+                let m = server.metrics();
+                println!(
+                    "[metrics] completed {:5} failed {:3} batches {:5} occupancy {:.2} | \
+                     streaming: queue {:3} in-flight {:2} tokens {:6} shed {:3}",
+                    m.completed,
+                    m.failed,
+                    m.batches,
+                    m.mean_occupancy(),
+                    m.decode_queue_depth,
+                    m.decode_in_flight,
+                    m.decode_tokens,
+                    m.shed_requests
+                );
+            }
+        });
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let c = client.clone();
+                let adapter = names[i % names.len()].clone();
+                std::thread::spawn(move || c.infer_with(&adapter, &[(i % 7 + 1) as i32, 2, 3, 4]))
+            })
+            .collect();
+        let stream_handles: Vec<_> = (0..n_streams)
+            .map(|i| {
+                let c = client.clone();
+                let adapter = names[i % names.len()].clone();
+                let opts = GenOptions {
+                    max_tokens: args.get_usize("max-tokens", 16),
+                    temperature: args.get_f64("temperature", 0.0) as f32,
+                    seed: i as u64,
+                    ..GenOptions::default()
+                };
+                std::thread::spawn(move || {
+                    let prompt = [(i % 7 + 1) as i32, 2];
+                    c.generate_collect_with(&adapter, &prompt, opts)
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap()?;
+            println!(
+                "adapter={:12} next_token={:4}  latency={:7.1?}  occupancy={}",
+                r.adapter, r.next_token, r.latency, r.batch_occupancy
+            );
+        }
+        for (i, h) in stream_handles.into_iter().enumerate() {
+            let tokens = h.join().unwrap()?;
+            println!(
+                "stream {i:3} decoded {} tokens: {:?}...",
+                tokens.len(),
+                &tokens[..tokens.len().min(6)]
+            );
+        }
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        logger.join().unwrap();
+        Ok(())
+    })?;
     let m = server.shutdown();
     println!(
         "served {} requests in {} engine calls ({} merged / {} composed); \
@@ -285,6 +351,19 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
         m.p95_us(),
         m.exec_backend
     );
+    if m.decode_requests > 0 {
+        println!(
+            "streaming: {} streams, {} tokens, {} shed; ttft p50 {:.0} us p99 {:.0} us, \
+             token p50 {:.0} us p99 {:.0} us",
+            m.decode_requests,
+            m.decode_tokens,
+            m.shed_requests,
+            m.ttft_p50_us(),
+            m.ttft_p99_us(),
+            m.token_p50_us(),
+            m.token_p99_us()
+        );
+    }
     for (name, am) in &m.per_adapter {
         println!(
             "  adapter {:12} completed {:4} failed {:3} batches {:4} p95 {:8.0} us occupancy {:.2}",
@@ -396,6 +475,83 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Stream one autoregressive decode to stdout, token by token as each
+/// lands (the CLI face of `Client::generate`). With `--adapter` the
+/// request runs against a stored checkpoint; without it a fresh-init
+/// adapter on `--config` serves the request, so a clean checkout can
+/// stream immediately.
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt: Vec<i32> = args
+        .get_or("prompt", "1,2,3")
+        .split(',')
+        .map(|t| t.trim().parse::<i32>().with_context(|| format!("bad --prompt token {t:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    let opts = GenOptions {
+        max_tokens: args.get_usize("max-tokens", 32),
+        temperature: args.get_f64("temperature", 0.0) as f32,
+        top_k: args.get_usize("top-k", 0),
+        seed: args.get_u64("seed", 0),
+        top_logits: args.get_usize("top-logits", 0),
+        ..GenOptions::default()
+    };
+    let cfg = |config: String| ServerCfg {
+        config,
+        max_wait: Duration::from_millis(2),
+        workers: args.get_usize("workers", 1),
+        fast_path: FastPath::parse(args.get_or("fast-path", "merged"))
+            .unwrap_or(FastPath::Merged),
+        queue_depth: args.get_usize("queue-depth", 16),
+    };
+    let (server, adapter_name) = match args.get("adapter") {
+        Some(name) => {
+            let adapter = store_from(args)?.load(name)?;
+            let config = adapter.config.clone();
+            (
+                Server::start_with_adapters(BackendSpec::auto(), cfg(config), vec![adapter])?,
+                name.to_string(),
+            )
+        }
+        None => {
+            let config = args.get_or("config", "tiny").to_string();
+            let server = Server::start(BackendSpec::auto(), cfg(config))?;
+            let name = server.default_adapter().to_string();
+            (server, name)
+        }
+    };
+    println!(
+        "generate: adapter {adapter_name:?}, prompt {prompt:?}, max {} tokens, \
+         temperature {}, {} fast path",
+        opts.max_tokens,
+        opts.temperature,
+        server.fast_path().as_str()
+    );
+    let stream = server.client().generate_with(&adapter_name, &prompt, opts)?;
+    let mut finish = None;
+    for ev in stream {
+        let ev = ev?;
+        use std::io::Write;
+        print!("{} ", ev.token);
+        std::io::stdout().flush().ok();
+        if !ev.top.is_empty() {
+            let alts: Vec<String> =
+                ev.top.iter().map(|(t, l)| format!("{t}:{l:.3}")).collect();
+            print!("[{}] ", alts.join(" "));
+        }
+        finish = ev.finish;
+    }
+    println!();
+    let m = server.shutdown();
+    println!(
+        "finished ({:?}): {} tokens; ttft {:.2} ms, token p50 {:.2} ms p99 {:.2} ms",
+        finish,
+        m.decode_tokens,
+        m.ttft_p50_us() / 1e3,
+        m.token_p50_us() / 1e3,
+        m.token_p99_us() / 1e3
+    );
+    Ok(())
+}
+
 fn cmd_serve_demo(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny").to_string();
     let n = args.get_usize("requests", 16);
@@ -406,6 +562,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(10),
             workers: args.get_usize("workers", 0),
             fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
+            queue_depth: args.get_usize("queue-depth", 64),
         },
     )?;
     let client = server.client();

@@ -289,6 +289,19 @@ pub fn merged_infer_logits(
     Ok(matmul_nt(&last, e, bs, d, info.vocab))
 }
 
+/// Merged-weight decode step: next-token logits `[n, vocab]` for `n`
+/// single tokens (the streaming scheduler's fast path). The model is
+/// row-local, so this is exactly [`merged_infer_logits`] at `seq = 1` —
+/// each row's logits are a function of its token alone, bitwise
+/// independent of the co-resident rows.
+pub fn merged_decode_logits(
+    info: &ConfigInfo,
+    merged: &MergedParams,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    merged_infer_logits(info, merged, tokens, tokens.len(), 1)
+}
+
 // ---------------------------------------------------------------------------
 // Dense ops (the non-adapter matmuls the AOT artifacts lower to XLA dots).
 // All three route through the blocked/register-tiled cores in
@@ -550,6 +563,13 @@ impl<'a> NativeModel<'a> {
             last[row * d..(row + 1) * d].copy_from_slice(&h[src..src + d]);
         }
         Ok(matmul_nt(&last, self.embed(), bs, d, self.info.vocab))
+    }
+
+    /// Composed-path decode step: next-token logits `[n, vocab]` for `n`
+    /// single tokens — [`Self::infer_logits`] at `seq = 1` (row-local
+    /// model, so no per-request sequence state is needed).
+    pub fn decode_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.infer_logits(tokens, tokens.len(), 1)
     }
 
     /// Mean cross-entropy of tokens [bs, seq+1] (inputs = [:, :seq],

@@ -22,9 +22,10 @@ use anyhow::{bail, Result};
 
 use crate::runtime::native::NativeEngine;
 use crate::runtime::ops::{
-    ApplyUpdateReq, ApplyUpdateResp, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp,
-    EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq,
-    InitResp, LossAndGradsReq, LossAndGradsResp, TrainStepReq, TrainStepResp,
+    ApplyUpdateReq, ApplyUpdateResp, ComposeReq, ComposeResp, DecodeStepMergedReq, DecodeStepReq,
+    DecodeStepResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp,
+    InferMergedReq, InferReq, InferResp, InitReq, InitResp, LossAndGradsReq, LossAndGradsResp,
+    TrainStepReq, TrainStepResp,
 };
 use crate::runtime::{manifest, ConfigInfo, Engine, Tensor};
 use crate::util::lock_unpoisoned;
@@ -157,6 +158,14 @@ impl ExecBackend {
                 let info = self.config(&r.config)?;
                 EngineOut::Infer(InferResp::unpack(info.train_batch, info.vocab, outs)?)
             }
+            EngineOp::DecodeStep(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::DecodeStep(DecodeStepResp::unpack(r.tokens.elems(), info.vocab, outs)?)
+            }
+            EngineOp::DecodeStepMerged(r) => {
+                let info = self.config(&r.config)?;
+                EngineOut::DecodeStep(DecodeStepResp::unpack(r.tokens.elems(), info.vocab, outs)?)
+            }
             EngineOp::DoraLinear(_) => EngineOut::DoraLinear(DoraLinearResp::unpack(outs)?),
             EngineOp::Compose(_) => EngineOut::Compose(ComposeResp::unpack(outs)?),
         })
@@ -218,6 +227,24 @@ impl ExecBackend {
         match self.execute(&EngineOp::InferMerged(req))? {
             EngineOut::Infer(r) => Ok(r),
             other => bail!("engine returned {other:?} for an infer_merged op"),
+        }
+    }
+
+    /// One continuous-batching decode step (composed path): next-token
+    /// logits for the newest token of each active streaming request.
+    /// Same validated response contract as [`ExecBackend::infer`].
+    pub fn decode_step(&self, req: DecodeStepReq) -> Result<DecodeStepResp> {
+        match self.execute(&EngineOp::DecodeStep(req))? {
+            EngineOut::DecodeStep(r) => Ok(r),
+            other => bail!("engine returned {other:?} for a decode_step op"),
+        }
+    }
+
+    /// Merged-weight decode step (the streaming fast path).
+    pub fn decode_step_merged(&self, req: DecodeStepMergedReq) -> Result<DecodeStepResp> {
+        match self.execute(&EngineOp::DecodeStepMerged(req))? {
+            EngineOut::DecodeStep(r) => Ok(r),
+            other => bail!("engine returned {other:?} for a decode_step_merged op"),
         }
     }
 
@@ -351,9 +378,10 @@ fn pjrt_usable(dir: &Path) -> bool {
 pub type MockResult = std::result::Result<Vec<Tensor>, String>;
 
 /// Scripted execution backend for tests and benches: pops pre-loaded
-/// results in order; once the script is exhausted, `infer_*` artifacts
-/// return well-formed zero logits (so "server keeps serving after a bad
-/// batch" is testable) and everything else errors.
+/// results in order; once the script is exhausted, `infer_*` and
+/// `decode_step_*` artifacts return well-formed zero logits (so "server
+/// keeps serving after a bad batch" is testable) and everything else
+/// errors.
 #[derive(Clone)]
 pub struct MockExec {
     info: ConfigInfo,
@@ -374,7 +402,7 @@ impl MockExec {
         &self.info
     }
 
-    fn run(&self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         if let Some(scripted) = lock_unpoisoned(&self.script).pop_front() {
             return scripted.map_err(|msg| anyhow::anyhow!(msg));
         }
@@ -383,6 +411,16 @@ impl MockExec {
             return Ok(vec![Tensor::f32(
                 vec![self.info.train_batch, self.info.vocab],
                 vec![0.0; n],
+            )]);
+        }
+        if name.starts_with("decode_step_") {
+            // Decode-step batches are variably sized: derive n from the
+            // trailing `[n]` token tensor so the zero-logit fallback
+            // stays well-formed for any occupancy.
+            let n = inputs.last().map(Tensor::elems).unwrap_or(self.info.train_batch);
+            return Ok(vec![Tensor::f32(
+                vec![n, self.info.vocab],
+                vec![0.0; n * self.info.vocab],
             )]);
         }
         bail!("mock script exhausted for artifact {name:?}")

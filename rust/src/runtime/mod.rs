@@ -40,9 +40,10 @@ pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
 pub use native::NativeEngine;
 pub use ops::{
     reduce_sample_grads, AdapterParams, ApplyUpdateReq, ApplyUpdateResp, ComposeReq,
-    ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp,
-    InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant, LossAndGradsReq,
-    LossAndGradsResp, MergedParams, OptState, SampleGrads, TrainStepReq, TrainStepResp, Variant,
+    ComposeResp, DecodeStepMergedReq, DecodeStepReq, DecodeStepResp, DoraLinearReq,
+    DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq, InferReq, InferResp,
+    InitReq, InitResp, LinearVariant, LossAndGradsReq, LossAndGradsResp, MergedParams, OptState,
+    SampleGrads, TrainStepReq, TrainStepResp, Variant,
 };
 pub use pool::{EnginePool, GradReducer, PoolJob};
 

@@ -11,8 +11,9 @@
 //! [`NativeEngine::run`] remains as the string-name compatibility shim:
 //! it accepts the same artifact names and I/O conventions the AOT
 //! manifest defines — `init_<cfg>`, `train_<cfg>_<variant>`,
-//! `eval_<cfg>_<variant>`, `infer_<cfg>_<variant>`, plus the
-//! single-module `dora_linear_<variant>` and
+//! `eval_<cfg>_<variant>`, `infer_<cfg>_<variant>`, the streaming
+//! `decode_step_<cfg>_<variant>` / `decode_step_merged_<cfg>` steps,
+//! plus the single-module `dora_linear_<variant>` and
 //! `compose_<variant>_<rows>x<dout>` units — parses them into typed ops,
 //! and flattens the typed response back to the positional output list.
 //! PJRT artifact naming therefore still resolves against this engine.
@@ -35,10 +36,10 @@ use crate::models::forward::{self, init_leaves, kernels_for, NativeModel};
 use crate::numerics::half::Dtype;
 use crate::runtime::ops::{
     parse_variant_spec, variant_token, AdapterParams, AdapterVariant, ApplyUpdateReq,
-    ApplyUpdateResp, ComposeReq, ComposeResp, DoraLinearReq, DoraLinearResp, EngineOp, EngineOut,
-    EvalReq, EvalResp, InferMergedReq, InferReq, InferResp, InitReq, InitResp, LinearVariant,
-    LossAndGradsReq, LossAndGradsResp, MergedParams, OptState, SampleGrads, TrainStepReq,
-    TrainStepResp, Variant,
+    ApplyUpdateResp, ComposeReq, ComposeResp, DecodeStepMergedReq, DecodeStepReq, DecodeStepResp,
+    DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq,
+    InferReq, InferResp, InitReq, InitResp, LinearVariant, LossAndGradsReq, LossAndGradsResp,
+    MergedParams, OptState, SampleGrads, TrainStepReq, TrainStepResp, Variant,
 };
 use crate::runtime::{ConfigInfo, Tensor};
 
@@ -130,6 +131,12 @@ impl NativeEngine {
             EngineOp::InferMerged(r) => {
                 run_infer_merged(self.config(&r.config)?, r).map(EngineOut::Infer)
             }
+            EngineOp::DecodeStep(r) => {
+                run_decode_step(self.config(&r.config)?, r).map(EngineOut::DecodeStep)
+            }
+            EngineOp::DecodeStepMerged(r) => {
+                run_decode_step_merged(self.config(&r.config)?, r).map(EngineOut::DecodeStep)
+            }
             EngineOp::DoraLinear(r) => run_dora_linear(r).map(EngineOut::DoraLinear),
             EngineOp::Compose(r) => run_compose(r).map(EngineOut::Compose),
         }
@@ -194,6 +201,19 @@ impl NativeEngine {
             let (variant, adapter) =
                 parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
             return Ok(ArtifactKind::Infer(self.config(cfg)?, variant, adapter));
+        }
+        // Same ordering hazard as infer: "decode_step_merged_tiny" would
+        // otherwise parse as config "merged" + variant "tiny".
+        if let Some(cfg) = name.strip_prefix("decode_step_merged_") {
+            return Ok(ArtifactKind::DecodeStepMerged(self.config(cfg)?));
+        }
+        if let Some(rest) = name.strip_prefix("decode_step_") {
+            let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
+                format!("artifact {name:?}: expected decode_step_<cfg>_<variant>")
+            })?;
+            let (variant, adapter) =
+                parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
+            return Ok(ArtifactKind::DecodeStep(self.config(cfg)?, variant, adapter));
         }
         if let Some(variant) = name.strip_prefix("dora_linear_") {
             let variant = LinearVariant::parse(variant)
@@ -320,6 +340,28 @@ impl NativeEngine {
                     tokens: inputs[nl + 1].clone(),
                 }))
             }
+            ArtifactKind::DecodeStep(info, variant, adapter) => {
+                let (params, tokens) = split_params_tokens(info, name, inputs)?;
+                Ok(EngineOp::DecodeStep(DecodeStepReq {
+                    config: info.name.clone(),
+                    variant,
+                    adapter,
+                    params,
+                    tokens,
+                }))
+            }
+            ArtifactKind::DecodeStepMerged(info) => {
+                let nl = info.n_layers;
+                expect_inputs(name, inputs, nl + 2)?;
+                Ok(EngineOp::DecodeStepMerged(DecodeStepMergedReq {
+                    config: info.name.clone(),
+                    params: Arc::new(MergedParams {
+                        embed: inputs[0].clone(),
+                        layers: inputs[1..1 + nl].to_vec(),
+                    }),
+                    tokens: inputs[nl + 1].clone(),
+                }))
+            }
             ArtifactKind::DoraLinear(variant) => {
                 expect_inputs(name, inputs, 5)?;
                 Ok(EngineOp::DoraLinear(DoraLinearReq {
@@ -354,6 +396,8 @@ enum ArtifactKind {
     Eval(&'static ConfigInfo, Variant, AdapterVariant),
     Infer(&'static ConfigInfo, Variant, AdapterVariant),
     InferMerged(&'static ConfigInfo),
+    DecodeStep(&'static ConfigInfo, Variant, AdapterVariant),
+    DecodeStepMerged(&'static ConfigInfo),
     DoraLinear(LinearVariant),
     Compose(Variant, usize, usize),
 }
@@ -615,6 +659,62 @@ fn run_infer_merged(info: &'static ConfigInfo, req: &InferMergedReq) -> Result<I
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let logits = forward::merged_infer_logits(info, &req.params, tokens, bs, seq)?;
     Ok(InferResp { logits: Tensor::f32(vec![bs, info.vocab], logits) })
+}
+
+/// Shared token validation for the decode-step ops: rank-1 `[n]`,
+/// n >= 1, n <= train_batch (the scheduler's slot capacity — one row per
+/// co-resident streaming request).
+fn decode_tokens<'a>(
+    info: &ConfigInfo,
+    label: &str,
+    tokens: &'a Tensor,
+) -> Result<&'a [i32]> {
+    if tokens.shape.len() != 1 {
+        bail!(
+            "op {label:?} input \"tokens\": expected rank-1 [n], got {:?}",
+            tokens.shape
+        );
+    }
+    let n = tokens.shape[0];
+    if n == 0 || n > info.train_batch {
+        bail!(
+            "op {label:?}: decode batch size {n} outside 1..={}",
+            info.train_batch
+        );
+    }
+    tokens.as_i32().context("tokens must be i32")
+}
+
+/// DecodeStep: next-token logits `[n, vocab]` for the newest token of
+/// each of `n` active streaming requests (the composed path — full DoRA
+/// composition per step). The model is row-local, so each row's logits
+/// are bitwise-independent of the co-resident rows: the continuous
+/// batcher's determinism contract rests on this op.
+fn run_decode_step(info: &'static ConfigInfo, req: &DecodeStepReq) -> Result<DecodeStepResp> {
+    let label =
+        format!("decode_step_{}_{}", info.name, variant_token(req.variant, req.adapter));
+    validate_params(info, &label, &req.params)?;
+    let tokens = decode_tokens(info, &label, &req.tokens)?;
+    let n = tokens.len();
+    let kernels = kernels_for(req.variant, info, false)?;
+    let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
+        .with_adapter(req.adapter);
+    let logits = model.decode_logits(tokens)?;
+    Ok(DecodeStepResp { logits: Tensor::f32(vec![n, info.vocab], logits) })
+}
+
+/// DecodeStepMerged: the decode step over precomputed merged weights —
+/// the streaming fast path (one matmul per layer per token).
+fn run_decode_step_merged(
+    info: &'static ConfigInfo,
+    req: &DecodeStepMergedReq,
+) -> Result<DecodeStepResp> {
+    let label = format!("decode_step_merged_{}", info.name);
+    validate_merged(info, &label, &req.params)?;
+    let tokens = decode_tokens(info, &label, &req.tokens)?;
+    let n = tokens.len();
+    let logits = forward::merged_decode_logits(info, &req.params, tokens)?;
+    Ok(DecodeStepResp { logits: Tensor::f32(vec![n, info.vocab], logits) })
 }
 
 /// DoraLinear: x [bs, sq, d] + w [d, d] + a [r, d] + b [d, r] + mag [d]
@@ -1068,6 +1168,11 @@ mod tests {
         assert!(!eng.supports("eval_tiny_nope-rslora"));
         assert!(eng.supports("infer_merged_tiny"));
         assert!(!eng.supports("infer_merged_nocfg"));
+        assert!(eng.supports("decode_step_tiny_fused"));
+        assert!(eng.supports("decode_step_tiny_fused-bora"));
+        assert!(eng.supports("decode_step_merged_tiny"));
+        assert!(!eng.supports("decode_step_tiny_nope"));
+        assert!(!eng.supports("decode_step_merged_nocfg"));
         assert!(eng.supports("compose_fused_512x2048"));
         // Input-count mismatch is an error, not a panic.
         assert!(eng.run("init_tiny", &[]).is_err());
@@ -1213,6 +1318,115 @@ mod tests {
             }))
             .unwrap_err();
         assert!(format!("{err:#}").contains("shape"), "{err:#}");
+    }
+
+    #[test]
+    fn decode_step_is_row_local_and_matches_infer() {
+        // The property the continuous batcher's determinism contract
+        // rests on: a request's decode-step logits row is bitwise the
+        // same whether the request runs alone, shares the step with
+        // other requests, or runs through the full-prompt infer path
+        // (the last position of infer depends only on its own token).
+        let eng = NativeEngine::new();
+        let info = eng.config("tiny").unwrap();
+        let leaves = eng.run("init_tiny", &[Tensor::scalar_i32(2)]).unwrap();
+        let params = Arc::new(AdapterParams::from_flat(info, leaves).unwrap());
+        let decode = |toks: Vec<i32>| -> Vec<f32> {
+            let n = toks.len();
+            match eng
+                .execute(&EngineOp::DecodeStep(DecodeStepReq {
+                    config: "tiny".into(),
+                    variant: Variant::Fused,
+                    adapter: AdapterVariant::Dora,
+                    params: params.clone(),
+                    tokens: Tensor::i32(vec![n], toks),
+                }))
+                .unwrap()
+            {
+                EngineOut::DecodeStep(r) => {
+                    assert_eq!(r.logits.shape, vec![n, info.vocab]);
+                    r.logits.as_f32().unwrap().to_vec()
+                }
+                other => panic!("wrong response kind: {other:?}"),
+            }
+        };
+        let solo_a = decode(vec![7]);
+        let solo_b = decode(vec![13]);
+        let batched = decode(vec![7, 13, 21]);
+        assert_eq!(&batched[..info.vocab], &solo_a[..], "row 0 depends on co-resident rows");
+        assert_eq!(
+            &batched[info.vocab..2 * info.vocab],
+            &solo_b[..],
+            "row 1 depends on co-resident rows"
+        );
+        // Full-prompt infer's last-position logits == decoding the
+        // prompt's final token alone (the row-local prefill shortcut).
+        let bs = info.train_batch;
+        let mut prompt = vec![0i32; bs * info.seq];
+        prompt[info.seq - 1] = 7; // row 0 ends in token 7
+        let infer = match eng
+            .execute(&EngineOp::Infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
+                params: params.clone(),
+                tokens: Tensor::i32(vec![bs, info.seq], prompt),
+            }))
+            .unwrap()
+        {
+            EngineOut::Infer(r) => r.logits.as_f32().unwrap().to_vec(),
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        assert_eq!(&infer[..info.vocab], &solo_a[..], "infer vs decode_step diverge");
+
+        // Merged decode agrees with composed decode at merge tolerance,
+        // through both the typed path and the artifact-name shim.
+        let merged = Arc::new(
+            crate::models::forward::merge_adapter_params(
+                info,
+                &params,
+                AdapterVariant::Dora,
+            )
+            .unwrap(),
+        );
+        let fast = match eng
+            .execute(&EngineOp::DecodeStepMerged(DecodeStepMergedReq {
+                config: "tiny".into(),
+                params: merged.clone(),
+                tokens: Tensor::i32(vec![2], vec![7, 13]),
+            }))
+            .unwrap()
+        {
+            EngineOut::DecodeStep(r) => r.logits.as_f32().unwrap().to_vec(),
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        for (i, (&m, &c)) in fast.iter().zip(batched[..2 * info.vocab].iter()).enumerate() {
+            assert!(
+                (m - c).abs() <= 1e-5 * c.abs().max(1.0),
+                "logit {i}: merged {m} vs composed {c}"
+            );
+        }
+        let mut shim_inputs = vec![merged.embed.clone()];
+        shim_inputs.extend(merged.layers.iter().cloned());
+        shim_inputs.push(Tensor::i32(vec![2], vec![7, 13]));
+        let outs = eng.run("decode_step_merged_tiny", &shim_inputs).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap(), &fast[..]);
+
+        // Validation: wrong tokens rank, empty batch, oversized batch,
+        // out-of-vocab token — all Err, never a panic.
+        let step = |tokens: Tensor| {
+            eng.execute(&EngineOp::DecodeStep(DecodeStepReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                adapter: AdapterVariant::Dora,
+                params: params.clone(),
+                tokens,
+            }))
+        };
+        assert!(step(Tensor::i32(vec![1, 2], vec![1, 2])).is_err());
+        assert!(step(Tensor::i32(vec![0], vec![])).is_err());
+        assert!(step(Tensor::i32(vec![bs + 1], vec![1; bs + 1])).is_err());
+        assert!(step(Tensor::i32(vec![1], vec![info.vocab as i32])).is_err());
     }
 
     #[test]

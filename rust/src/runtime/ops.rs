@@ -16,6 +16,10 @@
 //!   over pre-reduced gradients.
 //! * [`EvalReq`] / [`EvalResp`] — held-out mean loss.
 //! * [`InferReq`] / [`InferResp`] — last-position logits (serving).
+//! * [`DecodeStepReq`] / [`DecodeStepResp`] — one continuous-batching
+//!   decode step: next-token logits for the newest token of each active
+//!   streaming request ([`DecodeStepMergedReq`] is its merged-weight
+//!   fast path).
 //! * [`DoraLinearReq`] / [`DoraLinearResp`] — one adapted module.
 //! * [`ComposeReq`] / [`ComposeResp`] — one compose unit.
 //!
@@ -626,6 +630,69 @@ pub struct InferMergedReq {
     pub tokens: Tensor,
 }
 
+/// One continuous-batching decode step: next-token logits for `n`
+/// co-resident streaming requests, each contributing its single newest
+/// token. `tokens` is rank-1 `[n]` (one token per active request; `n` is
+/// the current decode-batch occupancy, 1..=train_batch).
+///
+/// The model is row-local (no cross-position attention), so a request's
+/// logits row is a function of ITS token only — bitwise-independent of
+/// which other requests share the step. That property is what makes the
+/// scheduler's determinism contract (DESIGN.md §3.9) hold without any
+/// per-request sequence cache in the engine.
+#[derive(Debug, Clone)]
+pub struct DecodeStepReq {
+    pub config: String,
+    pub variant: Variant,
+    pub adapter: AdapterVariant,
+    pub params: Arc<AdapterParams>,
+    /// `[n]` i32 — the newest token of each active request.
+    pub tokens: Tensor,
+}
+
+/// Merged-weight decode step: same contract as [`DecodeStepReq`] over the
+/// precomputed [`MergedParams`] (the steady-state streaming fast path —
+/// one matmul per layer per token).
+#[derive(Debug, Clone)]
+pub struct DecodeStepMergedReq {
+    pub config: String,
+    pub params: Arc<MergedParams>,
+    /// `[n]` i32 — the newest token of each active request.
+    pub tokens: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeStepResp {
+    /// `[n, vocab]` f32 next-token logits, request order preserved.
+    pub logits: Tensor,
+}
+
+impl DecodeStepResp {
+    /// Validate engine outputs down to a well-formed `[n, vocab]` logits
+    /// tensor. Any mismatch is an `Err` the scheduler fans to the step's
+    /// requests — never a panic.
+    pub fn unpack(n: usize, vocab: usize, mut outs: Vec<Tensor>) -> Result<DecodeStepResp> {
+        if outs.is_empty() {
+            bail!("engine returned no outputs for the decode_step op");
+        }
+        let first = outs.swap_remove(0);
+        if first.shape != [n, vocab] {
+            bail!("decode_step output shape {:?} != expected [{n}, {vocab}]", first.shape);
+        }
+        let logits = first
+            .as_f32()
+            .context("decode_step output has wrong dtype (expected f32 logits)")?;
+        if logits.len() != n * vocab {
+            bail!(
+                "decode_step output has {} elements, expected {}",
+                logits.len(),
+                n * vocab
+            );
+        }
+        Ok(DecodeStepResp { logits: first })
+    }
+}
+
 /// One DoRA-adapted linear module: `y = base + compose(base, lora, g, s)`
 /// with `g` derived from the supplied magnitude vector.
 #[derive(Debug, Clone)]
@@ -693,6 +760,8 @@ pub enum EngineOp {
     Eval(EvalReq),
     Infer(InferReq),
     InferMerged(InferMergedReq),
+    DecodeStep(DecodeStepReq),
+    DecodeStepMerged(DecodeStepMergedReq),
     DoraLinear(DoraLinearReq),
     Compose(ComposeReq),
 }
@@ -706,6 +775,7 @@ pub enum EngineOut {
     ApplyUpdate(ApplyUpdateResp),
     Eval(EvalResp),
     Infer(InferResp),
+    DecodeStep(DecodeStepResp),
     DoraLinear(DoraLinearResp),
     Compose(ComposeResp),
 }
@@ -730,6 +800,10 @@ impl EngineOp {
                 format!("infer_{}_{}", r.config, variant_token(r.variant, r.adapter))
             }
             EngineOp::InferMerged(r) => format!("infer_merged_{}", r.config),
+            EngineOp::DecodeStep(r) => {
+                format!("decode_step_{}_{}", r.config, variant_token(r.variant, r.adapter))
+            }
+            EngineOp::DecodeStepMerged(r) => format!("decode_step_merged_{}", r.config),
             EngineOp::DoraLinear(r) => format!("dora_linear_{}", r.variant.as_str()),
             EngineOp::Compose(r) => {
                 if r.base.shape.len() != 2 {
@@ -809,6 +883,22 @@ impl EngineOp {
                 v.push(r.tokens.clone());
                 v
             }
+            EngineOp::DecodeStep(r) => {
+                let mut v = Vec::with_capacity(
+                    r.params.frozen.len() + r.params.trainable.len() + 1,
+                );
+                v.extend(r.params.frozen.iter().cloned());
+                v.extend(r.params.trainable.iter().cloned());
+                v.push(r.tokens.clone());
+                v
+            }
+            EngineOp::DecodeStepMerged(r) => {
+                let mut v = Vec::with_capacity(r.params.layers.len() + 2);
+                v.push(r.params.embed.clone());
+                v.extend(r.params.layers.iter().cloned());
+                v.push(r.tokens.clone());
+                v
+            }
             EngineOp::DoraLinear(r) => vec![
                 r.x.clone(),
                 r.w.clone(),
@@ -830,6 +920,8 @@ impl EngineOp {
             EngineOp::Eval(_) => "eval",
             EngineOp::Infer(_) => "infer",
             EngineOp::InferMerged(_) => "infer_merged",
+            EngineOp::DecodeStep(_) => "decode_step",
+            EngineOp::DecodeStepMerged(_) => "decode_step_merged",
             EngineOp::DoraLinear(_) => "dora_linear",
             EngineOp::Compose(_) => "compose",
         }
@@ -875,6 +967,7 @@ impl EngineOut {
             }
             EngineOut::Eval(r) => vec![Tensor::f32(vec![], vec![r.loss])],
             EngineOut::Infer(r) => vec![r.logits],
+            EngineOut::DecodeStep(r) => vec![r.logits],
             EngineOut::DoraLinear(r) => vec![r.y],
             EngineOut::Compose(r) => vec![r.delta],
         }
@@ -1046,6 +1139,60 @@ mod tests {
         assert_eq!(packed.len(), 4);
         assert_eq!(packed[0].shape, vec![8, d]);
         assert_eq!(packed[3].shape, vec![1, 3]);
+    }
+
+    #[test]
+    fn decode_step_ops_render_pack_and_unpack() {
+        let t = |n: usize| Tensor::f32(vec![n], vec![0.0; n]);
+        let params = Arc::new(AdapterParams { frozen: vec![t(2)], trainable: vec![t(3)] });
+        let step = |adapter: AdapterVariant| {
+            EngineOp::DecodeStep(DecodeStepReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                adapter,
+                params: params.clone(),
+                tokens: Tensor::i32(vec![3], vec![1, 2, 3]),
+            })
+        };
+        assert_eq!(
+            step(AdapterVariant::Dora).artifact_name().unwrap(),
+            "decode_step_tiny_fused"
+        );
+        assert_eq!(
+            step(AdapterVariant::Bora).artifact_name().unwrap(),
+            "decode_step_tiny_fused-bora"
+        );
+        assert_eq!(step(AdapterVariant::Dora).kind(), "decode_step");
+        // frozen(1) + trainable(1) + tokens.
+        let packed = step(AdapterVariant::Dora).pack_inputs();
+        assert_eq!(packed.len(), 3);
+        assert_eq!(packed[2].shape, vec![3]);
+
+        let d = 4usize;
+        let merged = EngineOp::DecodeStepMerged(DecodeStepMergedReq {
+            config: "tiny".into(),
+            params: Arc::new(MergedParams {
+                embed: Tensor::f32(vec![8, d], vec![0.0; 8 * d]),
+                layers: vec![Tensor::f32(vec![d, d], vec![0.0; d * d])],
+            }),
+            tokens: Tensor::i32(vec![2], vec![0, 1]),
+        });
+        assert_eq!(merged.artifact_name().unwrap(), "decode_step_merged_tiny");
+        assert_eq!(merged.kind(), "decode_step_merged");
+        // embed + 1 layer + tokens.
+        assert_eq!(merged.pack_inputs().len(), 3);
+
+        // Response validation mirrors InferResp::unpack.
+        assert!(DecodeStepResp::unpack(2, 4, vec![]).is_err());
+        assert!(
+            DecodeStepResp::unpack(2, 4, vec![Tensor::f32(vec![2, 3], vec![0.0; 6])]).is_err()
+        );
+        assert!(
+            DecodeStepResp::unpack(2, 4, vec![Tensor::i32(vec![2, 4], vec![0; 8])]).is_err()
+        );
+        let ok =
+            DecodeStepResp::unpack(2, 4, vec![Tensor::f32(vec![2, 4], vec![0.5; 8])]).unwrap();
+        assert_eq!(ok.logits.shape, vec![2, 4]);
     }
 
     #[test]

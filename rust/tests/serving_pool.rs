@@ -17,6 +17,7 @@ fn cfg(workers: usize, fast_path: FastPath) -> ServerCfg {
         max_wait: Duration::from_millis(2),
         workers,
         fast_path,
+        queue_depth: 8,
     }
 }
 
