@@ -166,6 +166,7 @@ fn main() {
                 workers: 1,
                 fast_path: FastPath::Composed,
                 queue_depth: 32,
+                ..ServerCfg::default()
             },
         )
         .expect("native server");
@@ -190,6 +191,7 @@ fn main() {
                 workers: 1,
                 fast_path: FastPath::Composed,
                 queue_depth: 32,
+                ..ServerCfg::default()
             },
         )
         .expect("native server");
@@ -242,6 +244,7 @@ fn main() {
                 workers: 1,
                 fast_path: FastPath::Composed,
                 queue_depth: 32,
+                ..ServerCfg::default()
             },
             adapters,
         )
@@ -294,6 +297,7 @@ fn main() {
                     workers: pool,
                     fast_path,
                     queue_depth: 32,
+                    ..ServerCfg::default()
                 },
             )
             .expect("pool server");
@@ -358,6 +362,7 @@ fn main() {
                 workers: pool,
                 fast_path: FastPath::Merged,
                 queue_depth: 32,
+                ..ServerCfg::default()
             },
             adapters,
         )

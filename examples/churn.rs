@@ -1,0 +1,231 @@
+//! Churn smoke: multi-tenant serving under a DELIBERATELY small
+//! merged-weight budget — more adapters than the cache can hold, mixed
+//! one-shot and streaming traffic, and the hot adapter swapped between
+//! two parameter sets mid-flight. The native engine is deterministic, so
+//! every reply is checked bitwise against per-(adapter, path) references
+//! captured on quiescent single-adapter servers before the churn starts.
+//!
+//! Exit criteria (asserted): the budget forced evictions, zero replies
+//! mismatched their reference, zero failed requests or merge builds, and
+//! the resident high-water mark never exceeded the budget. Sized for a
+//! CI smoke job (~seconds).
+//!
+//! Run with:
+//!   cargo run --release --example churn -- \
+//!       [--adapters 8] [--seconds 8] [--clients 3] [--swaps 32] \
+//!       [--merge-budget-mb 0.03125 (= 2 tiny merges)]
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq};
+use dorafactors::util::Args;
+
+const PROMPT: [i32; 4] = [3, 1, 4, 1];
+const STREAM_TOKENS: usize = 10;
+
+fn tiny_adapter(be: &ExecBackend, name: &str, seed: i32) -> Result<Adapter> {
+    let info = be.config("tiny")?;
+    let init = be.init(InitReq { config: "tiny".into(), seed })?;
+    Adapter::new(name, &info, seed as u64, 0, init.params)
+}
+
+/// One-shot logits and greedy stream tokens for one parameter set on one
+/// path, from a quiescent single-adapter server.
+fn references(adapter: &Adapter, path: FastPath) -> Result<(Vec<f32>, Vec<i32>)> {
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            fast_path: path,
+            queue_depth: 8,
+            ..ServerCfg::default()
+        },
+        vec![adapter.clone()],
+    )?;
+    let client = server.client();
+    let logits = client.infer_with(&adapter.name, &PROMPT)?.logits;
+    let tokens = client.generate_collect_with(
+        &adapter.name,
+        &PROMPT,
+        GenOptions { max_tokens: STREAM_TOKENS, ..GenOptions::default() },
+    )?;
+    drop(client);
+    server.shutdown();
+    Ok((logits, tokens))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_adapters = args.get_usize("adapters", 8).max(2);
+    let seconds = args.get_f64("seconds", 8.0);
+    let n_clients = args.get_usize("clients", 3);
+    let swaps = args.get_usize("swaps", 32);
+    // Default budget: two tiny merges (16 KiB each) — far fewer than the
+    // hosted adapters, so eviction churn is guaranteed.
+    let budget_mb = args.get_f64("merge-budget-mb", 2.0 * 16.0 / 1024.0);
+    let budget = (budget_mb * 1024.0 * 1024.0) as u64;
+
+    let be = ExecBackend::native();
+    // Adapter 0 churns between two versions: its seeded init and a
+    // briefly-trained replacement (the checkpoint-reload shape).
+    let mut adapters = Vec::with_capacity(n_adapters);
+    for i in 0..n_adapters {
+        adapters.push(tiny_adapter(&be, &format!("a{i}"), i as i32 + 1)?);
+    }
+    let mut tr = Trainer::with_spec(
+        &BackendSpec::Native,
+        TrainerCfg {
+            config: "tiny".into(),
+            variant: "fused".into(),
+            seed: 77,
+            branching: 3,
+            eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
+        },
+    )?;
+    tr.train_steps(4)?;
+    let a0_trained = tr.to_adapter("a0")?;
+
+    // Reference book: (adapter name, path) -> logits, plus the stream
+    // token sequences adapter 0 may produce (2 versions x 2 paths).
+    println!("building references for {n_adapters} adapters x 2 paths...");
+    let mut logits_refs: BTreeMap<(String, &'static str), Vec<Vec<f32>>> = BTreeMap::new();
+    let mut a0_tokens: Vec<Vec<i32>> = Vec::new();
+    for path in [FastPath::Merged, FastPath::Composed] {
+        for a in &adapters {
+            let (logits, tokens) = references(a, path)?;
+            logits_refs.entry((a.name.clone(), path.as_str())).or_default().push(logits);
+            if a.name == "a0" {
+                a0_tokens.push(tokens);
+            }
+        }
+        let (logits, tokens) = references(&a0_trained, path)?;
+        logits_refs.entry(("a0".into(), path.as_str())).or_default().push(logits);
+        a0_tokens.push(tokens);
+    }
+    let logits_refs = Arc::new(logits_refs);
+    let a0_tokens = Arc::new(a0_tokens);
+
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        ServerCfg {
+            config: "tiny".into(),
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            fast_path: FastPath::Merged,
+            queue_depth: 16,
+            merge_budget: Some(budget),
+            ..ServerCfg::default()
+        },
+        adapters,
+    )?;
+    println!(
+        "churning {n_adapters} adapters under a {:.0} KiB budget for {seconds:.1} s \
+         ({n_clients} one-shot clients + 1 streamer + {swaps} hot-swaps)",
+        budget as f64 / 1024.0
+    );
+    let client = server.client();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mismatches = Arc::new(AtomicUsize::new(0));
+
+    let hammers: Vec<_> = (0..n_clients)
+        .map(|tid| {
+            let c = client.clone();
+            let stop = stop.clone();
+            let refs = logits_refs.clone();
+            let mismatches = mismatches.clone();
+            std::thread::spawn(move || -> Result<usize> {
+                let mut served = 0usize;
+                let mut i = tid;
+                while !stop.load(Ordering::SeqCst) {
+                    let name = format!("a{}", i % n_adapters);
+                    i += 1;
+                    let reply = c.infer_with(&name, &PROMPT)?;
+                    let ok = refs[&(name.clone(), reply.path.as_str())]
+                        .iter()
+                        .any(|r| *r == reply.logits);
+                    if !ok {
+                        mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    served += 1;
+                }
+                Ok(served)
+            })
+        })
+        .collect();
+    let streamer = {
+        let c = client.clone();
+        let stop = stop.clone();
+        let a0_tokens = a0_tokens.clone();
+        let mismatches = mismatches.clone();
+        std::thread::spawn(move || -> Result<usize> {
+            let mut streams = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                let tokens = c.generate_collect_with(
+                    "a0",
+                    &PROMPT,
+                    GenOptions { max_tokens: STREAM_TOKENS, ..GenOptions::default() },
+                )?;
+                if !a0_tokens.iter().any(|r| *r == tokens) {
+                    mismatches.fetch_add(1, Ordering::Relaxed);
+                }
+                streams += 1;
+            }
+            Ok(streams)
+        })
+    };
+
+    // Churn driver: swap a0 between its two versions across the run.
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    let gap = Duration::from_secs_f64(seconds / swaps.max(1) as f64);
+    let mut swapped = 0usize;
+    while Instant::now() < deadline {
+        let params = if swapped % 2 == 0 {
+            a0_trained.params.clone()
+        } else {
+            tiny_adapter(&be, "a0", 1)?.params
+        };
+        server.load_adapter("a0", params)?;
+        swapped += 1;
+        if swapped >= swaps {
+            std::thread::sleep(deadline.saturating_duration_since(Instant::now()));
+            break;
+        }
+        std::thread::sleep(gap);
+    }
+    stop.store(true, Ordering::SeqCst);
+    let served: usize = hammers.into_iter().map(|h| h.join().unwrap()).sum::<Result<usize>>()?;
+    let streams = streamer.join().unwrap()?;
+    let m = server.shutdown();
+
+    println!(
+        "served {served} one-shots + {streams} streams with {swapped} hot-swaps; \
+         cache: {} hits / {} misses, {} promotions, {} evictions, {} rejected, \
+         high water {} KiB of {} KiB",
+        m.cache_hits,
+        m.cache_misses,
+        m.cache_promotions,
+        m.cache_evictions,
+        m.cache_rejects,
+        m.cache_high_water_bytes / 1024,
+        m.merge_budget_bytes / 1024
+    );
+    let bad = mismatches.load(Ordering::Relaxed);
+    assert_eq!(bad, 0, "{bad} replies matched no quiescent reference");
+    assert!(served > 0 && streams > 0, "traffic never flowed");
+    assert!(m.cache_evictions > 0, "budget never forced an eviction — smoke proved nothing");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.decode_failed, 0);
+    assert_eq!(m.merge_fallbacks, 0, "an async merge build failed");
+    assert!(m.cache_high_water_bytes <= budget, "budget overshot");
+    println!("churn OK");
+    Ok(())
+}

@@ -83,6 +83,7 @@ fn main() -> Result<()> {
             workers,
             fast_path,
             queue_depth: 64,
+            ..ServerCfg::default()
         },
         adapters,
     )?;

@@ -53,6 +53,7 @@ fn main() -> Result<()> {
         workers,
         fast_path,
         queue_depth,
+        ..ServerCfg::default()
     };
     let adapter = |name: &str, seed: i32, variant| -> Result<Adapter> {
         let init = be.init(InitReq { config: config.clone(), seed })?;

@@ -7,10 +7,15 @@
 //! Rows are matched by identity key — `kernel` name plus its shape
 //! columns (`rows`/`d_out` for compose rows, `m`/`k`/`n` for GEMM rows)
 //! plus the adapter `variant` when the row carries one,
-//! `pool`+`fast_path` for serving and streaming-decode rows — and
-//! compared on the row's primary metric (ns_per_elem, ns_per_mac, or
-//! median_s). Rows present on only one side are listed separately
-//! rather than dropped.
+//! `pool`+`fast_path` for serving and streaming-decode rows,
+//! `adapters`+`mix`+`budget` for merged-cache rows — and compared on the
+//! row's primary metric (ns_per_elem, ns_per_mac, or median_s). Rows
+//! present on only one side are listed separately rather than dropped.
+//!
+//! [`BenchDiff::gate`] turns the comparison into a CI verdict: removed
+//! rows always fail, and new rows fail unless the run opts in with
+//! `--allow-new-keys` (so a PR that adds bench coverage can land without
+//! first rewriting the committed baseline).
 
 use crate::util::json::{Json, JsonError};
 use crate::util::table::Table;
@@ -43,6 +48,29 @@ pub struct BenchDiff {
     pub only_baseline: Vec<String>,
     /// Keys present only in the fresh run (new rows).
     pub only_fresh: Vec<String>,
+}
+
+impl BenchDiff {
+    /// CI strictness verdict over row identity. Rows that vanished from
+    /// the fresh run always fail (lost coverage); rows the baseline has
+    /// never seen fail too unless `allow_new_keys` — the escape hatch a
+    /// PR that *adds* bench coverage uses until the baseline snapshot is
+    /// re-committed.
+    pub fn gate(&self, allow_new_keys: bool) -> Result<(), String> {
+        if !self.only_baseline.is_empty() {
+            return Err(format!(
+                "bench rows missing from fresh run: {}",
+                self.only_baseline.join(", ")
+            ));
+        }
+        if !allow_new_keys && !self.only_fresh.is_empty() {
+            return Err(format!(
+                "bench rows absent from baseline (pass --allow-new-keys to accept): {}",
+                self.only_fresh.join(", ")
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Identity key of a `kernels` row. The adapter-variant column is part
@@ -83,6 +111,16 @@ fn decode_key(row: &Json) -> Result<String, JsonError> {
     ))
 }
 
+/// Identity key of a merged-`cache` row (budgeted multi-tenant sweep).
+fn cache_key(row: &Json) -> Result<String, JsonError> {
+    Ok(format!(
+        "cache adapters={} mix={} budget={}",
+        row.get("adapters")?.as_usize()?,
+        row.get("mix")?.as_str()?,
+        row.get("budget")?.as_str()?
+    ))
+}
+
 /// The row's primary metric: most specific time-per-work field present.
 fn metric_of(row: &Json) -> Result<(&'static str, f64), JsonError> {
     for name in ["ns_per_elem", "ns_per_mac"] {
@@ -112,6 +150,12 @@ fn collect(doc: &Json) -> Result<Vec<(String, &'static str, f64)>, JsonError> {
         for row in rows.as_arr()? {
             let (metric, v) = metric_of(row)?;
             out.push((decode_key(row)?, metric, v));
+        }
+    }
+    if let Some(rows) = doc.opt("cache") {
+        for row in rows.as_arr()? {
+            let (metric, v) = metric_of(row)?;
+            out.push((cache_key(row)?, metric, v));
         }
     }
     Ok(out)
@@ -306,6 +350,44 @@ mod tests {
                 "compose_fused 512x2048 variant=bora".to_string(),
             ]
         );
+    }
+
+    #[test]
+    fn cache_rows_key_on_adapters_mix_and_budget() {
+        let row = Json::obj(vec![
+            ("adapters", Json::Num(1000.0)),
+            ("mix", Json::Str("zipf".into())),
+            ("budget", Json::Str("tight".into())),
+            ("median_s", Json::Num(0.02)),
+            ("hit_rate", Json::Num(0.9)),
+        ]);
+        assert_eq!(cache_key(&row).unwrap(), "cache adapters=1000 mix=zipf budget=tight");
+        let base = doc(false);
+        let mut fresh = doc(false);
+        if let Json::Obj(map) = &mut fresh {
+            map.insert("cache".to_string(), Json::Arr(vec![row]));
+        }
+        let d = diff(&base, &fresh).unwrap();
+        assert_eq!(d.only_fresh, vec!["cache adapters=1000 mix=zipf budget=tight".to_string()]);
+    }
+
+    #[test]
+    fn gate_fails_on_removed_rows_and_gates_new_rows_behind_the_flag() {
+        // Identical docs pass under either strictness.
+        let clean = diff(&doc(false), &doc(false)).unwrap();
+        assert!(clean.gate(false).is_ok());
+
+        // A fresh run with a new row fails strict mode but passes with
+        // --allow-new-keys; legacy (matched) keys still diff normally.
+        let grew = diff(&doc(false), &doc(true)).unwrap();
+        let err = grew.gate(false).unwrap_err();
+        assert!(err.contains("gemm_ba_r8_smallk 128x8x128"), "unexpected gate error: {err}");
+        assert!(grew.gate(true).is_ok());
+        assert_eq!(grew.rows.len(), 4);
+
+        // A fresh run that *lost* a row fails even with the flag.
+        let shrank = diff(&doc(true), &doc(false)).unwrap();
+        assert!(shrank.gate(true).unwrap_err().contains("missing from fresh run"));
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //!   running batch between decode steps), per-request seeded sampling
 //!   (greedy / temperature / top-k), bounded admission with typed
 //!   [`Overloaded`] load-shedding, and TTFT / per-token SLO histograms.
+//!
+//! Multi-tenant serving runs the merged fast path under an explicit byte
+//! budget ([`ServerCfg::merge_budget`]): a
+//! [`MergedCache`](crate::runtime::MergedCache) owns merged-weight
+//! residency (LRU/clock eviction, async promotion, decode-stream
+//! pinning), and both data paths fall back to the composed path while an
+//! adapter is cold.
 
 pub mod data;
 pub mod scheduler;

@@ -58,12 +58,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::ops::{DecodeStepMergedReq, DecodeStepReq, Variant};
-use crate::runtime::{EnginePool, Tensor};
+use crate::runtime::ops::{DecodeStepMergedReq, DecodeStepReq, MergedParams, Variant};
+use crate::runtime::{EnginePool, MergedCache, Tensor};
 use crate::util::lock_unpoisoned;
 use crate::util::rng::Rng;
 
-use super::server::{argmax, AdapterEntry, ServerMetrics};
+use super::server::{argmax, AdapterEntry, BuildReq, ServerMetrics};
 
 /// Typed load-shed rejection: the streaming admission queue was full.
 /// Carried inside the `anyhow::Error` returned by
@@ -262,6 +262,12 @@ impl DecodeShared {
 struct Slot {
     adapter: String,
     entry: Arc<AdapterEntry>,
+    /// Merged weights snapshotted ONCE at admission. A stream must not
+    /// flip between the merged and composed paths mid-decode (their
+    /// logits differ by float reassociation), so this fixes the path —
+    /// and with it the whole token sequence — for the stream's life,
+    /// even across a concurrent promotion or eviction.
+    merged: Option<Arc<MergedParams>>,
     /// Newest token — the model is row-local, so this IS the decode
     /// state (no KV cache; see module docs).
     last: i32,
@@ -292,6 +298,12 @@ pub(crate) struct DecodeScheduler {
     pub(crate) shared: Arc<DecodeShared>,
     pub(crate) pool: Arc<EnginePool>,
     pub(crate) metrics: Arc<Mutex<ServerMetrics>>,
+    /// The server's merged-weight cache: admission pins a stream's
+    /// adapter (evict-exempt until the stream retires) and records the
+    /// hit/miss.
+    pub(crate) cache: Arc<MergedCache>,
+    /// Builder-thread submit side; `None` outside budgeted mode.
+    pub(crate) merge_tx: Option<Sender<BuildReq>>,
     pub(crate) stop: Arc<AtomicBool>,
 }
 
@@ -323,6 +335,8 @@ impl DecodeScheduler {
         self.shared.stopped.store(true, Ordering::SeqCst);
         self.shared.in_flight.store(0, Ordering::SeqCst);
         for slot in active.drain(..) {
+            // Queued (never-admitted) requests below hold no pin.
+            self.cache.unpin(&slot.adapter);
             let _ = slot.tx.send(Err(anyhow::anyhow!("server stopped")));
         }
         let mut q = lock_unpoisoned(&self.shared.queue);
@@ -340,12 +354,34 @@ impl DecodeScheduler {
             while active.len() < self.slots {
                 let Some(req) = q.pop_front() else { break };
                 let now = Instant::now();
+                // One merge-slot snapshot per stream (see [`Slot::merged`]).
+                // A cold adapter under budgeted mode schedules its async
+                // build and streams composed.
+                let merged = req.entry.merged.snapshot();
+                match &merged {
+                    Some(_) => self.cache.note_hit(&req.adapter),
+                    None => {
+                        if let Some(btx) = &self.merge_tx {
+                            if self.cache.note_miss(&req.adapter, req.entry.gen) {
+                                let _ = btx.send(BuildReq {
+                                    name: req.adapter.clone(),
+                                    entry: req.entry.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+                // Pin for the stream's whole life (admission to retire):
+                // budget eviction must not churn the merge an active
+                // stream's adapter holds resident.
+                self.cache.pin(&req.adapter);
                 // Row-local prefill: the prompt's last token seeds the
                 // decode state (validated non-empty by the client).
                 let last = *req.prompt.last().unwrap_or(&0);
                 active.push(Slot {
                     adapter: req.adapter,
                     entry: req.entry,
+                    merged,
                     last,
                     produced: 0,
                     opts: req.opts,
@@ -366,20 +402,26 @@ impl DecodeScheduler {
     /// entry, submit one batched `decode_step` per group to the pool,
     /// barrier on the replies, then sample/emit/retire per slot.
     fn step(&self, active: &mut Vec<Slot>) {
-        // Group by (adapter, entry identity): two requests share an
-        // engine call only if they decode against the SAME snapshot (a
-        // hot-swapped adapter must not mix old and new weights in one
-        // batch).
-        let mut groups: BTreeMap<(String, usize), Vec<usize>> = BTreeMap::new();
+        // Group by (adapter, entry identity, merge identity): two
+        // requests share an engine call only if they decode against the
+        // SAME snapshot on the SAME path (a hot-swapped adapter must not
+        // mix old and new weights in one batch, and a composed stream
+        // must not ride a merged group's engine call).
+        let mut groups: BTreeMap<(String, usize, usize), Vec<usize>> = BTreeMap::new();
         for (i, slot) in active.iter().enumerate() {
-            let key = (slot.adapter.clone(), Arc::as_ptr(&slot.entry) as usize);
+            let key = (
+                slot.adapter.clone(),
+                Arc::as_ptr(&slot.entry) as usize,
+                slot.merged.as_ref().map_or(0, |m| Arc::as_ptr(m) as usize),
+            );
             groups.entry(key).or_default().push(i);
         }
 
         let (tx, rx) = mpsc::channel::<(Vec<usize>, Result<Vec<f32>>)>();
         let mut jobs = 0usize;
-        for ((adapter, _), idxs) in groups {
+        for ((adapter, _, _), idxs) in groups {
             let entry = active[idxs[0]].entry.clone();
+            let merged = active[idxs[0]].merged.clone();
             let tokens: Vec<i32> = idxs.iter().map(|&i| active[i].last).collect();
             let config = self.config.clone();
             let tx = tx.clone();
@@ -388,7 +430,7 @@ impl DecodeScheduler {
                 Box::new(move |_worker, engine| {
                     let n = tokens.len();
                     let t = Tensor::i32(vec![n], tokens);
-                    let result = match &entry.merged {
+                    let result = match &merged {
                         Some(m) => engine.decode_step_merged(DecodeStepMergedReq {
                             config,
                             params: m.clone(),
@@ -495,9 +537,12 @@ impl DecodeScheduler {
         }
 
         // Retire in descending index order so swap_remove stays stable.
+        // Every retirement — finish, cancel (receiver drop), or failure —
+        // releases the stream's cache pin.
         retire.sort_by(|a, b| b.0.cmp(&a.0));
         for (i, _) in retire {
-            drop(active.swap_remove(i));
+            let slot = active.swap_remove(i);
+            self.cache.unpin(&slot.adapter);
         }
         self.shared.in_flight.store(active.len(), Ordering::SeqCst);
     }

@@ -35,6 +35,16 @@
 //! parameters+merge, never a torn mix; in-flight batches keep the
 //! snapshot they already took.
 //!
+//! **Multi-tenant budget.** Under [`ServerCfg::merge_budget`] resident
+//! merged weights are capped at an explicit byte budget
+//! ([`MergedCache`]): cold adapters serve immediately on the composed
+//! path while a builder thread merges them off the hot path; the
+//! finished merge is promoted atomically into the entry's [`MergeSlot`]
+//! (the same torn-weight-free exchange as hot-swap) after LRU/clock
+//! eviction makes room, and adapters pinned by an in-flight decode
+//! stream are evict-exempt (DESIGN.md §3.10). Without a budget every
+//! merge is built eagerly at load time — the original behavior.
+//!
 //! The server runs over any [`BackendSpec`]: PJRT over an artifacts
 //! directory, the native kernel-registry engine, or a scripted mock.
 //! Pool workers reconnect the spec on their own threads (PJRT clients are
@@ -56,7 +66,7 @@
 //! metrics (TTFT / per-token latency histograms, queue-depth gauges).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -68,7 +78,8 @@ use crate::runtime::ops::{
     AdapterParams, AdapterVariant, InferMergedReq, InferReq, InitReq, MergedParams, Variant,
 };
 use crate::runtime::{
-    Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, Tensor,
+    Adapter, AdapterStore, BackendSpec, CachePolicy, ConfigInfo, EnginePool, ExecBackend,
+    MergeSlot, MergedCache, Tensor,
 };
 use crate::util::lock_unpoisoned;
 
@@ -107,6 +118,21 @@ impl FastPath {
     }
 }
 
+/// How merged weights are built, resolved at startup from the effective
+/// fast path and [`ServerCfg::merge_budget`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MergeMode {
+    /// Composed policy (or a backend without the merged artifact): no
+    /// merges are ever built.
+    Off,
+    /// Merged policy, no budget: merge synchronously at load time, the
+    /// original behavior.
+    Eager,
+    /// Merged policy under a byte budget: serve composed until the
+    /// builder thread promotes an async merge into the cache.
+    Lazy,
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerCfg {
@@ -126,6 +152,16 @@ pub struct ServerCfg {
     /// [`Overloaded`](super::scheduler::Overloaded) error instead of
     /// queueing unboundedly.
     pub queue_depth: usize,
+    /// Byte budget for resident merged weights (`--merge-budget-mb`).
+    /// `None` (the default) merges every adapter eagerly at load time —
+    /// the unbudgeted legacy behavior. `Some(bytes)` serves cold
+    /// adapters composed while merges build asynchronously and are
+    /// promoted/evicted under the budget (only meaningful with the
+    /// Merged fast path).
+    pub merge_budget: Option<u64>,
+    /// Eviction policy for the budgeted merged-weight cache
+    /// (`--cache-policy`).
+    pub cache_policy: CachePolicy,
 }
 
 impl Default for ServerCfg {
@@ -136,6 +172,8 @@ impl Default for ServerCfg {
             workers: 0,
             fast_path: FastPath::Merged,
             queue_depth: 32,
+            merge_budget: None,
+            cache_policy: CachePolicy::Lru,
         }
     }
 }
@@ -162,6 +200,10 @@ pub struct Reply {
     pub latency: Duration,
     /// How many real requests shared the engine call.
     pub batch_occupancy: usize,
+    /// Which path actually served this reply. Under a merge budget the
+    /// same adapter answers [`FastPath::Composed`] while cold and
+    /// [`FastPath::Merged`] once its merge is promoted.
+    pub path: FastPath,
 }
 
 /// Per-adapter serving counters (one entry per adapter name routed to).
@@ -265,6 +307,36 @@ pub struct ServerMetrics {
     /// Per-token decode latency samples (µs, step-to-step, first token
     /// excluded — that one is TTFT).
     pub token_latency_us: Vec<f64>,
+
+    // --- Merged-weight cache (budgeted multi-tenant serving). All of
+    // these are snapshots of the cache's own accounting, filled by
+    // [`Server::metrics`]; in eager (unbudgeted) mode the gauges reflect
+    // the unbounded cache (misses/evictions stay 0). ---
+    /// Serves that found a resident merge (one per one-shot engine call
+    /// or admitted stream).
+    pub cache_hits: u64,
+    /// Serves that found the slot cold and ran composed.
+    pub cache_misses: u64,
+    /// Merges evicted under budget pressure.
+    pub cache_evictions: u64,
+    /// Merges promoted to resident.
+    pub cache_promotions: u64,
+    /// Built merges rejected at promotion (did not fit the budget).
+    pub cache_rejects: u64,
+    /// Built merges discarded because a hot-swap outran the build.
+    pub cache_stale_discards: u64,
+    /// Accounted resident merged bytes (gauge, 512-byte rounded).
+    pub cache_resident_bytes: u64,
+    /// Peak accounted resident bytes over the server's lifetime.
+    pub cache_high_water_bytes: u64,
+    /// Configured merge budget in bytes (0 = unbounded).
+    pub merge_budget_bytes: u64,
+    /// Resident merge count (gauge).
+    pub cache_resident: usize,
+    /// Adapters currently pinned by in-flight decode streams (gauge).
+    pub cache_pinned: usize,
+    /// Names of the adapters whose merges are resident (gauge, sorted).
+    pub resident_adapters: Vec<String>,
 }
 
 impl ServerMetrics {
@@ -301,16 +373,26 @@ impl ServerMetrics {
     }
 }
 
-/// One adapter's serving state: the parameter snapshot plus (when the
-/// merged fast path is active and the merge succeeded) the precomputed
-/// merged weights. Immutable once built — hot-loads swap the whole
+/// Monotonic generation counter for adapter entries. Each load/hot-swap
+/// mints a fresh generation; the merged-weight cache keys residency and
+/// build claims on it, so a merge built against a replaced entry is
+/// recognized as stale and discarded instead of published.
+static NEXT_ENTRY_GEN: AtomicU64 = AtomicU64::new(1);
+
+/// One adapter's serving state: the parameter snapshot plus the
+/// publication slot its merged weights appear in (filled at load time in
+/// eager mode, or by the async builder after cache promotion in budgeted
+/// mode; empty while cold/evicted — the composed fallback). The params
+/// and variant are immutable once built — hot-loads swap the whole
 /// entry. `pub(crate)` so the decode scheduler can pin a request's
 /// snapshot at admission time.
 pub(crate) struct AdapterEntry {
     pub(crate) params: Arc<AdapterParams>,
     /// Which compose math this adapter's requests (and its merge) use.
     pub(crate) variant: AdapterVariant,
-    pub(crate) merged: Option<Arc<MergedParams>>,
+    /// Cache generation this entry was registered under.
+    pub(crate) gen: u64,
+    pub(crate) merged: Arc<MergeSlot>,
 }
 
 /// The shared adapter table: name -> entry snapshot. Slots hold `Arc`s so
@@ -440,12 +522,17 @@ pub struct Server {
     metrics: Arc<Mutex<ServerMetrics>>,
     adapters: SharedAdapters,
     decode: Arc<DecodeShared>,
+    cache: Arc<MergedCache>,
+    /// Submit side of the async merge builder (budgeted mode only).
+    merge_tx: Option<Sender<BuildReq>>,
     join: Option<std::thread::JoinHandle<()>>,
     sched_join: Option<std::thread::JoinHandle<()>>,
+    merge_join: Option<std::thread::JoinHandle<()>>,
     info: ConfigInfo,
     default_adapter: String,
     /// Effective fast path (policy after backend-support resolution).
     fast_path: FastPath,
+    merge_mode: MergeMode,
 }
 
 impl Server {
@@ -569,13 +656,36 @@ impl Server {
         };
         drop(probe);
 
+        // Budgeted mode only engages when the merged path is effective;
+        // eager mode runs the SAME cache unbounded, so the counters and
+        // residency gauges are live in both.
+        let merge_mode = match (fast_path, cfg.merge_budget) {
+            (FastPath::Composed, _) => MergeMode::Off,
+            (FastPath::Merged, None) => MergeMode::Eager,
+            (FastPath::Merged, Some(_)) => MergeMode::Lazy,
+        };
+        let cache = Arc::new(match merge_mode {
+            MergeMode::Lazy => {
+                MergedCache::new(cfg.merge_budget.unwrap_or(u64::MAX), cfg.cache_policy)
+            }
+            _ => MergedCache::unbounded(cfg.cache_policy),
+        });
+
         let mut merge_fallbacks = 0u64;
         let mut table = BTreeMap::new();
         for (name, params, variant) in adapters {
             validate_adapter_params(&info, &name, &params)?;
-            let entry =
-                build_entry(&info, &name, params, variant, fast_path, &mut merge_fallbacks);
-            if table.insert(name.clone(), Arc::new(entry)).is_some() {
+            let (entry, merged) =
+                build_entry(&info, &name, params, variant, merge_mode, &mut merge_fallbacks);
+            let entry = Arc::new(entry);
+            // Register (and, eagerly-merged, promote) BEFORE the table
+            // insert: a request can never observe the entry with its
+            // merge still unpublished in eager mode.
+            cache.register(&name, entry.gen);
+            if let Some(m) = merged {
+                cache.promote(&name, entry.gen, &entry.merged, m);
+            }
+            if table.insert(name.clone(), entry).is_some() {
                 bail!("duplicate adapter name {name:?}");
             }
         }
@@ -610,10 +720,30 @@ impl Server {
         }));
         let adapters: SharedAdapters = Arc::new(Mutex::new(table));
 
+        // Budgeted mode: one builder thread merges cold adapters off the
+        // serving hot path and offers the results for cache promotion.
+        // It exits when the last BuildReq sender drops (batcher ctx,
+        // scheduler, and the Server handle below).
+        let (merge_tx, merge_join) = match merge_mode {
+            MergeMode::Lazy => {
+                let (btx, brx) = mpsc::channel::<BuildReq>();
+                let (b_info, b_cache, b_metrics) =
+                    (info.clone(), cache.clone(), metrics.clone());
+                let join = std::thread::Builder::new()
+                    .name("merge-builder".into())
+                    .spawn(move || run_merge_builder(brx, b_info, b_cache, b_metrics))
+                    .context("spawning merge builder")?;
+                (Some(btx), Some(join))
+            }
+            _ => (None, None),
+        };
+
         let ctx = Arc::new(GroupCtx {
             config: cfg.config.clone(),
             adapters: adapters.clone(),
             metrics: metrics.clone(),
+            cache: cache.clone(),
+            merge_tx: merge_tx.clone(),
             bs: info.train_batch,
             seq: info.seq,
             vocab: info.vocab,
@@ -640,6 +770,8 @@ impl Server {
             shared: decode.clone(),
             pool,
             metrics: metrics.clone(),
+            cache: cache.clone(),
+            merge_tx: merge_tx.clone(),
             stop: stop.clone(),
         };
         let sched_join = std::thread::spawn(move || sched.run());
@@ -650,11 +782,15 @@ impl Server {
             metrics,
             adapters,
             decode,
+            cache,
+            merge_tx,
             join: Some(join),
             sched_join: Some(sched_join),
+            merge_join,
             info,
             default_adapter,
             fast_path,
+            merge_mode,
         })
     }
 
@@ -708,9 +844,18 @@ impl Server {
         crate::runtime::adapters::validate_name(name)?;
         params.validate(&self.info, name)?;
         let mut fallbacks = 0u64;
-        let entry =
-            build_entry(&self.info, name, params, variant, self.fast_path, &mut fallbacks);
-        lock_unpoisoned(&self.adapters).insert(name.to_string(), Arc::new(entry));
+        let (entry, merged) =
+            build_entry(&self.info, name, params, variant, self.merge_mode, &mut fallbacks);
+        let entry = Arc::new(entry);
+        // Register the new generation first: the cache releases the old
+        // entry's residency (in-flight snapshots of the OLD entry keep
+        // serving its merge until they drain — see cache module docs)
+        // and marks any still-running async build of it stale.
+        self.cache.register(name, entry.gen);
+        if let Some(m) = merged {
+            self.cache.promote(name, entry.gen, &entry.merged, m);
+        }
+        lock_unpoisoned(&self.adapters).insert(name.to_string(), entry);
         let mut m = lock_unpoisoned(&self.metrics);
         m.hot_loads += 1;
         m.merge_fallbacks += fallbacks;
@@ -737,16 +882,41 @@ impl Server {
         m
     }
 
-    /// Copy the scheduler's live load gauges into a metrics snapshot.
+    /// Copy the scheduler's live load gauges and the merged-weight
+    /// cache's counters/gauges into a metrics snapshot.
     fn fill_gauges(&self, m: &mut ServerMetrics) {
         m.shed_requests = self.decode.shed.load(Ordering::Relaxed);
         m.decode_queue_depth = self.decode.queue_depth();
         m.decode_in_flight = self.decode.in_flight.load(Ordering::SeqCst);
+        let cs = self.cache.stats();
+        m.cache_hits = cs.hits;
+        m.cache_misses = cs.misses;
+        m.cache_evictions = cs.evictions;
+        m.cache_promotions = cs.promotions;
+        m.cache_rejects = cs.rejected;
+        m.cache_stale_discards = cs.stale;
+        m.cache_resident_bytes = cs.resident_bytes;
+        m.cache_high_water_bytes = cs.high_water_bytes;
+        m.merge_budget_bytes = cs.budget_bytes;
+        m.cache_resident = cs.resident_count;
+        m.cache_pinned = cs.pinned_count;
+        m.resident_adapters = self.cache.resident().into_iter().map(|(n, _)| n).collect();
     }
 
-    /// Stop the batcher and the decode scheduler (and their shared pool)
-    /// and join.
-    pub fn shutdown(mut self) -> ServerMetrics {
+    /// The cache's replayable residency event stream (one alloc per
+    /// promotion, one free per eviction/replacement): replaying it on a
+    /// fresh [`CachingAllocator`](crate::memsim::CachingAllocator)
+    /// reconstructs [`ServerMetrics::cache_high_water_bytes`].
+    pub fn mem_events(&self) -> Vec<crate::memsim::Event> {
+        self.cache.events()
+    }
+
+    /// Join order on stop: the batcher and scheduler first (their exit
+    /// drops the last pool handles, draining in-flight jobs and with
+    /// them the GroupCtx/scheduler BuildReq senders), then our own
+    /// sender, which lets the builder's `recv` disconnect and the
+    /// builder thread exit.
+    fn join_threads(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
             let _ = j.join();
@@ -754,6 +924,16 @@ impl Server {
         if let Some(j) = self.sched_join.take() {
             let _ = j.join();
         }
+        self.merge_tx.take();
+        if let Some(j) = self.merge_join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Stop the batcher, the decode scheduler (and their shared pool),
+    /// and the merge builder, and join.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self.join_threads();
         let mut m = lock_unpoisoned(&self.metrics).clone();
         self.fill_gauges(&mut m);
         m
@@ -762,31 +942,28 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-        if let Some(j) = self.sched_join.take() {
-            let _ = j.join();
-        }
+        self.join_threads();
     }
 }
 
-/// Build one adapter's serving entry. The merge is best-effort under the
-/// merged policy: an adapter whose leaves cannot merge (e.g. a scripted
-/// mock's placeholder tensors) serves the composed path instead, counted
-/// in `fallbacks` — serving availability beats path preference.
+/// Build one adapter's serving entry, plus — in eager mode — its merged
+/// weights, ready for the caller to promote before publishing the entry.
+/// The eager merge is best-effort: an adapter whose leaves cannot merge
+/// (e.g. a scripted mock's placeholder tensors) serves the composed path
+/// instead, counted in `fallbacks` — serving availability beats path
+/// preference. In lazy (budgeted) mode no merge is built here; the first
+/// cold serve schedules one on the builder thread.
 fn build_entry(
     info: &ConfigInfo,
     name: &str,
     params: AdapterParams,
     variant: AdapterVariant,
-    fast_path: FastPath,
+    mode: MergeMode,
     fallbacks: &mut u64,
-) -> AdapterEntry {
-    let merged = match fast_path {
-        FastPath::Composed => None,
-        FastPath::Merged => match forward::merge_adapter_params(info, &params, variant) {
+) -> (AdapterEntry, Option<Arc<MergedParams>>) {
+    let merged = match mode {
+        MergeMode::Off | MergeMode::Lazy => None,
+        MergeMode::Eager => match forward::merge_adapter_params(info, &params, variant) {
             Ok(m) => Some(Arc::new(m)),
             Err(e) => {
                 eprintln!(
@@ -798,7 +975,48 @@ fn build_entry(
             }
         },
     };
-    AdapterEntry { params: Arc::new(params), variant, merged }
+    let entry = AdapterEntry {
+        params: Arc::new(params),
+        variant,
+        gen: NEXT_ENTRY_GEN.fetch_add(1, Ordering::Relaxed),
+        merged: Arc::new(MergeSlot::empty()),
+    };
+    (entry, merged)
+}
+
+/// A queued async merge build (budgeted mode): the entry whose leaves
+/// the builder thread should merge and offer for cache promotion.
+pub(crate) struct BuildReq {
+    pub(crate) name: String,
+    pub(crate) entry: Arc<AdapterEntry>,
+}
+
+/// Builder-thread main loop (budgeted mode): merge each claimed entry's
+/// leaves off the serving hot path and promote the result. A failed
+/// merge is latched in the cache (no rebuild storm) and counted as a
+/// fallback — the adapter keeps serving composed. Exits when every
+/// sender is gone.
+fn run_merge_builder(
+    rx: Receiver<BuildReq>,
+    info: ConfigInfo,
+    cache: Arc<MergedCache>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+) {
+    while let Ok(req) = rx.recv() {
+        match forward::merge_adapter_params(&info, &req.entry.params, req.entry.variant) {
+            Ok(m) => {
+                cache.promote(&req.name, req.entry.gen, &req.entry.merged, Arc::new(m));
+            }
+            Err(e) => {
+                eprintln!(
+                    "server: adapter {:?}: async merge failed ({e:#}); serving composed",
+                    req.name
+                );
+                cache.build_failed(&req.name, req.entry.gen);
+                lock_unpoisoned(&metrics).merge_fallbacks += 1;
+            }
+        }
+    }
 }
 
 /// Leaf-count check for one adapter against the server config. Startup
@@ -848,6 +1066,9 @@ struct GroupCtx {
     config: String,
     adapters: SharedAdapters,
     metrics: Arc<Mutex<ServerMetrics>>,
+    cache: Arc<MergedCache>,
+    /// Builder-thread submit side; `None` outside budgeted mode.
+    merge_tx: Option<Sender<BuildReq>>,
     bs: usize,
     seq: usize,
     vocab: usize,
@@ -953,11 +1174,27 @@ fn serve_group(
     let tokens = Tensor::i32(vec![bs, seq], tokens);
 
     let occupancy = group.len();
-    // Fast path: the entry's precomputed merged weights, when present;
-    // the full composition otherwise. Both are Arc snapshots — no
-    // whole-model copy on the serving hot path.
-    let used_merged = entry.merged.is_some();
-    let result = match &entry.merged {
+    // Fast path: ONE snapshot of the entry's merge slot decides the
+    // whole group's path — it either sees a promoted merge in full or
+    // serves composed; a concurrent promote/evict cannot tear it. A cold
+    // miss under budgeted mode schedules the async build (the claim
+    // dedupes concurrent misses) and serves composed right now.
+    let merged = entry.merged.snapshot();
+    match &merged {
+        Some(_) => ctx.cache.note_hit(adapter),
+        None => {
+            if let Some(btx) = &ctx.merge_tx {
+                if ctx.cache.note_miss(adapter, entry.gen) {
+                    let _ = btx.send(BuildReq {
+                        name: adapter.to_string(),
+                        entry: entry.clone(),
+                    });
+                }
+            }
+        }
+    }
+    let used_merged = merged.is_some();
+    let result = match &merged {
         Some(merged) => engine.infer_merged(InferMergedReq {
             config: ctx.config.clone(),
             params: merged.clone(),
@@ -992,6 +1229,7 @@ fn serve_group(
                     adapter: adapter.to_string(),
                     latency,
                     batch_occupancy: occupancy,
+                    path: if used_merged { FastPath::Merged } else { FastPath::Composed },
                 }));
             }
             let n = lats_us.len();
@@ -1065,8 +1303,14 @@ mod tests {
             workers: 1,
             fast_path: FastPath::Merged,
             queue_depth: 8,
+            merge_budget: None,
+            cache_policy: CachePolicy::Lru,
         }
     }
+
+    /// Accounted bytes of one tiny-config merge (embed [64,32] + two
+    /// [32,32] layers = 4096 f32 = 16 KiB, already 512-aligned).
+    const TINY_MERGE_BYTES: u64 = 16 * 1024;
 
     fn tiny_adapter(name: &str, seed: i32) -> Adapter {
         let be = ExecBackend::native();
@@ -1088,6 +1332,7 @@ mod tests {
         assert_eq!(reply.adapter, DEFAULT_ADAPTER);
         assert_eq!(reply.logits.len(), 64); // tiny vocab
         assert_eq!(reply.logits[reply.next_token as usize], reply.logit);
+        assert_eq!(reply.path, FastPath::Merged);
         let m = server.shutdown();
         assert_eq!(m.completed, 1);
         assert_eq!(m.failed, 0);
@@ -1118,6 +1363,7 @@ mod tests {
         assert_eq!(server.fast_path(), FastPath::Composed);
         let reply = server.client().infer(&[1, 2, 3]).unwrap();
         assert_eq!(reply.logits.len(), 64);
+        assert_eq!(reply.path, FastPath::Composed);
         let m = server.shutdown();
         assert_eq!(m.fast_path, "composed");
         assert_eq!(m.composed_batches, 1);
@@ -1647,6 +1893,148 @@ mod tests {
         assert_eq!(i, 0); // ties (incl. all-NaN) keep the first index
         assert!(v.is_nan());
         assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), (1, -1.0));
+    }
+
+    #[test]
+    fn budgeted_cache_serves_composed_then_promotes_and_evicts() {
+        // A budget holding exactly ONE tiny merge: cold adapters must
+        // answer immediately on the composed path, promote asynchronously,
+        // and squeeze each other out — with the accounting gauges never
+        // exceeding the budget.
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            ServerCfg { merge_budget: Some(TINY_MERGE_BYTES), ..tiny_cfg() },
+            vec![tiny_adapter("a", 1), tiny_adapter("b", 2)],
+        )
+        .unwrap();
+        let client = server.client();
+        // The very first request finds the slot cold — it is served NOW,
+        // composed, not blocked behind the merge build.
+        let first = client.infer_with("a", &[1, 2, 3]).unwrap();
+        assert_eq!(first.path, FastPath::Composed);
+        // The async build promotes; poll until a merged-path reply lands.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let merged_reply = loop {
+            let r = client.infer_with("a", &[1, 2, 3]).unwrap();
+            if r.path == FastPath::Merged {
+                break r;
+            }
+            assert!(Instant::now() < deadline, "merge was never promoted");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // Composed-fallback correctness: the two paths differ only by
+        // float reassociation in the merge.
+        for (i, (&m, &c)) in merged_reply.logits.iter().zip(&first.logits).enumerate() {
+            assert!(
+                (m - c).abs() <= 1e-5 * c.abs().max(1.0),
+                "logit {i}: merged {m} vs composed {c}"
+            );
+        }
+        let m = server.metrics();
+        assert_eq!(m.merge_budget_bytes, TINY_MERGE_BYTES);
+        assert_eq!(m.cache_promotions, 1);
+        assert!(m.cache_misses >= 1);
+        assert!(m.cache_hits >= 1);
+        assert_eq!(m.cache_resident, 1);
+        assert_eq!(m.resident_adapters, vec!["a".to_string()]);
+        assert_eq!(m.cache_resident_bytes, TINY_MERGE_BYTES);
+        assert_eq!(m.cache_evictions, 0);
+        // "b" promoting must evict "a" — the budget holds one merge.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let r = client.infer_with("b", &[1, 2, 3]).unwrap();
+            if r.path == FastPath::Merged {
+                break;
+            }
+            assert!(Instant::now() < deadline, "b's merge was never promoted");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // The event stream replays to the same high-water mark.
+        let events = server.mem_events();
+        let m = server.shutdown();
+        assert_eq!(m.cache_evictions, 1);
+        assert_eq!(m.cache_promotions, 2);
+        assert_eq!(m.resident_adapters, vec!["b".to_string()]);
+        assert_eq!(m.cache_resident_bytes, TINY_MERGE_BYTES);
+        assert!(
+            m.cache_high_water_bytes <= TINY_MERGE_BYTES,
+            "budget overshoot: {} > {TINY_MERGE_BYTES}",
+            m.cache_high_water_bytes
+        );
+        assert_eq!(crate::memsim::peak_of_events(&events), m.cache_high_water_bytes);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn eager_mode_reports_live_cache_gauges() {
+        // No budget: merges are eager, the unbounded cache still keeps
+        // the books (hits + residency), and nothing is ever evicted.
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            tiny_cfg(),
+            vec![tiny_adapter("a", 1), tiny_adapter("b", 2)],
+        )
+        .unwrap();
+        let client = server.client();
+        client.infer_with("a", &[1, 2]).unwrap();
+        client.infer_with("b", &[1, 2]).unwrap();
+        let m = server.shutdown();
+        assert_eq!(m.merge_budget_bytes, 0, "0 encodes unbounded");
+        assert_eq!(m.cache_resident, 2);
+        assert_eq!(m.cache_resident_bytes, 2 * TINY_MERGE_BYTES);
+        assert_eq!(m.cache_promotions, 2);
+        assert_eq!(m.cache_hits, 2);
+        assert_eq!(m.cache_misses, 0);
+        assert_eq!(m.cache_evictions, 0);
+        assert_eq!(
+            m.resident_adapters,
+            vec!["a".to_string(), "b".to_string()]
+        );
+    }
+
+    #[test]
+    fn hot_swap_under_budget_releases_residency_and_repromotes() {
+        // A hot-swap while the old merge is resident: residency transfers
+        // to the new generation only after ITS build promotes; the old
+        // bytes are released immediately (no double accounting).
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            ServerCfg { merge_budget: Some(TINY_MERGE_BYTES), ..tiny_cfg() },
+            vec![tiny_adapter("live", 1)],
+        )
+        .unwrap();
+        let client = server.client();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let before = loop {
+            let r = client.infer_with("live", &[2, 3, 4]).unwrap();
+            if r.path == FastPath::Merged {
+                break r;
+            }
+            assert!(Instant::now() < deadline, "merge was never promoted");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        server.load_adapter("live", tiny_adapter("live", 9).params).unwrap();
+        // The swap itself frees the old residency (not an eviction).
+        let m = server.metrics();
+        assert_eq!(m.cache_resident, 0);
+        assert_eq!(m.cache_resident_bytes, 0);
+        assert_eq!(m.cache_evictions, 0);
+        // New weights serve (composed at first), then re-promote.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let after = loop {
+            let r = client.infer_with("live", &[2, 3, 4]).unwrap();
+            if r.path == FastPath::Merged {
+                break r;
+            }
+            assert!(Instant::now() < deadline, "swap was never re-promoted");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        assert_ne!(before.logits, after.logits, "hot-swap had no effect");
+        let m = server.shutdown();
+        assert_eq!(m.cache_promotions, 2);
+        assert_eq!(m.hot_loads, 1);
+        assert!(m.cache_high_water_bytes <= TINY_MERGE_BYTES);
+        assert_eq!(m.failed, 0);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use anyhow::{bail, Context, Result};
 use dorafactors::bench::report;
 use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::runtime::ops::{parse_variant_spec, variant_token};
-use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, Engine};
+use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, CachePolicy, Engine};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -55,9 +55,10 @@ fn main() -> Result<()> {
                  [--train-workers N] [--grad-accum K]\n\
                  adapters serve  --adapter NAME[,NAME...] [--requests N] [--streams N] \
                  [--max-tokens N] [--store DIR] [--workers N (0 = all cores)] \
-                 [--fast-path merged|composed] [--queue-depth N] [--metrics-every-ms N]\n\
+                 [--fast-path merged|composed] [--queue-depth N] [--metrics-every-ms N] \
+                 [--merge-budget-mb MB (0 = unbounded)] [--cache-policy lru|clock]\n\
                  bench-diff      [--baseline bench_baselines/BENCH_pr8.json] \
-                 [--fresh bench_results/BENCH_ci.json]",
+                 [--fresh bench_results/BENCH_ci.json] [--allow-new-keys]",
                 report::REPORT_IDS.join(" ")
             );
             std::process::exit(2);
@@ -85,6 +86,14 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     let rendered = dorafactors::bench::diff::render(&baseline, &fresh)
         .with_context(|| format!("diffing {baseline_path} vs {fresh_path}"))?;
     println!("{rendered}");
+    // Row-identity gate: lost rows always fail; rows new to this run
+    // (e.g. a PR adding bench coverage) need the explicit opt-in until
+    // the baseline snapshot is re-committed.
+    let d = dorafactors::bench::diff::diff(&baseline, &fresh)
+        .with_context(|| format!("diffing {baseline_path} vs {fresh_path}"))?;
+    if let Err(msg) = d.gate(args.has("allow-new-keys")) {
+        bail!("{msg}");
+    }
     Ok(())
 }
 
@@ -245,6 +254,12 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
         .map(|name| store.load(name))
         .collect::<Result<Vec<_>>>()?;
     let config = adapters[0].config.clone();
+    // --merge-budget-mb 0 (the default) keeps the legacy unbounded
+    // eager-merge behavior; any positive budget switches the merged path
+    // to lazy async promotion under LRU/clock eviction.
+    let budget_mb = args.get_f64("merge-budget-mb", 0.0);
+    let merge_budget =
+        if budget_mb > 0.0 { Some((budget_mb * 1024.0 * 1024.0) as u64) } else { None };
     let server = Server::start_with_adapters(
         BackendSpec::auto(),
         ServerCfg {
@@ -253,6 +268,8 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
             workers: args.get_usize("workers", 0),
             fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
             queue_depth: args.get_usize("queue-depth", 64),
+            merge_budget,
+            cache_policy: CachePolicy::parse(args.get_or("cache-policy", "lru"))?,
         },
         adapters,
     )?;
@@ -285,7 +302,8 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
                 let m = server.metrics();
                 println!(
                     "[metrics] completed {:5} failed {:3} batches {:5} occupancy {:.2} | \
-                     streaming: queue {:3} in-flight {:2} tokens {:6} shed {:3}",
+                     streaming: queue {:3} in-flight {:2} tokens {:6} shed {:3} | \
+                     cache: hit {:5} miss {:4} evict {:3} resident {:3} ({} KiB, pinned {})",
                     m.completed,
                     m.failed,
                     m.batches,
@@ -293,7 +311,13 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
                     m.decode_queue_depth,
                     m.decode_in_flight,
                     m.decode_tokens,
-                    m.shed_requests
+                    m.shed_requests,
+                    m.cache_hits,
+                    m.cache_misses,
+                    m.cache_evictions,
+                    m.cache_resident,
+                    m.cache_resident_bytes / 1024,
+                    m.cache_pinned
                 );
             }
         });
@@ -351,6 +375,20 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
         m.p95_us(),
         m.exec_backend
     );
+    if merge_budget.is_some() {
+        println!(
+            "cache: {} hits / {} misses, {} promotions, {} evictions, {} rejected, \
+             high water {} KiB of {} KiB budget; resident at shutdown: {:?}",
+            m.cache_hits,
+            m.cache_misses,
+            m.cache_promotions,
+            m.cache_evictions,
+            m.cache_rejects,
+            m.cache_high_water_bytes / 1024,
+            m.merge_budget_bytes / 1024,
+            m.resident_adapters
+        );
+    }
     if m.decode_requests > 0 {
         println!(
             "streaming: {} streams, {} tokens, {} shed; ttft p50 {:.0} us p99 {:.0} us, \
@@ -501,6 +539,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         fast_path: FastPath::parse(args.get_or("fast-path", "merged"))
             .unwrap_or(FastPath::Merged),
         queue_depth: args.get_usize("queue-depth", 16),
+        ..ServerCfg::default()
     };
     let (server, adapter_name) = match args.get("adapter") {
         Some(name) => {
@@ -563,6 +602,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
             workers: args.get_usize("workers", 0),
             fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
             queue_depth: args.get_usize("queue-depth", 64),
+            ..ServerCfg::default()
         },
     )?;
     let client = server.client();

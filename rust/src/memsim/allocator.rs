@@ -78,13 +78,17 @@ impl CachingAllocator {
         Self::default()
     }
 
-    fn round(bytes: u64) -> u64 {
-        bytes.div_ceil(GRANULARITY) * GRANULARITY
+    /// Round a request up to the allocator's 512-byte granularity — the
+    /// size `alloc` will account for it. Callers that enforce byte
+    /// budgets against [`CachingAllocator::allocated`] (the merged-weight
+    /// cache) use this so their arithmetic matches the accounting.
+    pub fn round_up(bytes: u64) -> u64 {
+        bytes.max(1).div_ceil(GRANULARITY) * GRANULARITY
     }
 
     /// Allocate a named tensor. Panics on duplicate names (stream bug).
     pub fn alloc(&mut self, name: &str, bytes: u64) {
-        let size = Self::round(bytes.max(1));
+        let size = Self::round_up(bytes);
         assert!(
             !self.live.contains_key(name),
             "double alloc of {name:?}"
@@ -197,7 +201,7 @@ mod tests {
     use super::*;
 
     fn r(b: u64) -> u64 {
-        CachingAllocator::round(b)
+        CachingAllocator::round_up(b)
     }
 
     #[test]
@@ -237,7 +241,7 @@ mod tests {
             let sz = i * 3 << 20;
             a.alloc("t", sz);
             a.free("t");
-            total += CachingAllocator::round(sz);
+            total += CachingAllocator::round_up(sz);
         }
         assert_eq!(a.reserved(), total, "no reuse possible");
     }

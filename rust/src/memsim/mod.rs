@@ -1,7 +1,13 @@
 //! Memory simulator: a caching-allocator model (PyTorch-CUDA-style) that
 //! replays allocation event streams to regenerate the paper's three memory
 //! metrics (allocator peak, working-set delta, reserved VRAM — Appendix D).
+//!
+//! Beyond offline replay, the allocator is the live bookkeeping spine of
+//! the serving layer's budgeted merged-weight cache
+//! ([`crate::runtime::cache`]): every merge promotion/eviction is an
+//! alloc/free here, so resident bytes, the high-water mark, and the
+//! replayable residency event stream all come from one accounting model.
 
 pub mod allocator;
 
-pub use allocator::{CachingAllocator, Event};
+pub use allocator::{peak_of_events, CachingAllocator, Event, EventKind};

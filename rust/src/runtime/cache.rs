@@ -1,0 +1,762 @@
+//! Budgeted merged-weight cache for multi-tenant adapter serving.
+//!
+//! The paper's memory argument — hundreds of adapted modules make dense
+//! per-module products infeasible on one device — reappears one level up
+//! in serving: a fleet hosts thousands of adapters per base model, and a
+//! resident merged `W' = m ⊙ (W + s·B·A) / rownorm` for every one of them
+//! is exactly the unbounded transient footprint the factored-norm kernels
+//! were built to avoid. This module bounds it: merged weights live under
+//! an explicit byte budget, cold adapters serve the composed path while
+//! their merge builds asynchronously, and an LRU/clock policy evicts.
+//!
+//! Per-adapter lifecycle (DESIGN.md §3.10):
+//!
+//! ```text
+//!   cold --miss claimed--> building --promote--> resident
+//!     ^                       |                    |
+//!     |        stale / rejected / build failed     | evicted (budget
+//!     +-----------------------+--------------------+  pressure, unpinned)
+//! ```
+//!
+//! **Publication.** Each adapter entry owns a [`MergeSlot`] — a mutex'd
+//! `Option<Arc<MergedParams>>`. Serving paths [`MergeSlot::snapshot`] it
+//! once per engine call: they either see the whole merge or none of it,
+//! the same torn-weight-free exchange the hot-swap table gives parameter
+//! sets. [`MergedCache::promote`] fills the slot only after accounting
+//! and eviction have made room, and only if the adapter's registered
+//! generation still matches the one the merge was built from (a build
+//! that raced a hot-swap is discarded as stale, never published).
+//!
+//! **Eviction vs. replacement.** Budget eviction clears the victim's
+//! slot — the entry stays in the serving table and falls back to the
+//! composed path until re-promoted. Replacement ([`MergedCache::register`]
+//! with a new generation) releases the old residency *without* clearing
+//! the old entry's slot: the old entry is leaving the table anyway, and
+//! in-flight groups that snapshotted it keep serving its merge bitwise
+//! until they drain. Either way the `Arc` keeps evicted bytes alive for
+//! holders; the budget governs *accounted residency*, not liveness.
+//!
+//! **Pinning.** A decode stream pins its adapter for its whole lifetime
+//! (admission → finish/cancel). Pinned adapters are exempt from budget
+//! eviction — a promotion that cannot fit without evicting pinned
+//! residents is rejected (counted) and the adapter stays composed.
+//! Pins do NOT block replacement: a hot-swap is a correctness event.
+//!
+//! **Accounting spine.** Every promotion/eviction is an alloc/free on a
+//! [`CachingAllocator`] (512-byte rounded, like the CUDA allocator it
+//! models) and is appended to a replayable [`Event`] stream — so
+//! resident bytes, the high-water mark, and `mem_events` replay all agree
+//! by construction. The property test below churns random
+//! register/promote/pin/evict sequences against exactly that invariant.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{bail, Result};
+
+use crate::memsim::{CachingAllocator, Event};
+use crate::runtime::ops::MergedParams;
+use crate::util::lock_unpoisoned;
+
+/// Eviction policy over resident merged weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePolicy {
+    /// Evict the least-recently-served resident merge.
+    #[default]
+    Lru,
+    /// Clock (second-chance): a sweeping hand clears reference bits and
+    /// evicts the first unreferenced resident it meets — LRU-approximate
+    /// with O(1) bookkeeping per hit.
+    Clock,
+}
+
+impl CachePolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Clock => "clock",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CachePolicy> {
+        match s {
+            "lru" => Ok(CachePolicy::Lru),
+            "clock" => Ok(CachePolicy::Clock),
+            other => bail!("cache policy must be lru|clock, got {other:?}"),
+        }
+    }
+}
+
+/// Outcome of a [`MergedCache::promote`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Promotion {
+    /// The merge is published and accounted under the budget.
+    Resident,
+    /// The merge did not fit (oversized, or the budget is held by pinned
+    /// residents). The adapter keeps serving composed; a later miss may
+    /// rebuild and retry.
+    Rejected,
+    /// The merge was built against a generation that has since been
+    /// replaced (hot-swap raced the build). Discarded, never published.
+    Stale,
+}
+
+/// Counter/gauge snapshot of a [`MergedCache`].
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    /// Engine calls served from a resident merge.
+    pub hits: u64,
+    /// Engine calls that found the slot cold and served composed.
+    pub misses: u64,
+    /// Residents evicted under budget pressure.
+    pub evictions: u64,
+    /// Merges published and accounted.
+    pub promotions: u64,
+    /// Built merges rejected at promotion (did not fit).
+    pub rejected: u64,
+    /// Built merges discarded because a hot-swap outran the build.
+    pub stale: u64,
+    /// Accounted resident bytes right now (512-byte rounded).
+    pub resident_bytes: u64,
+    /// Resident merge count right now.
+    pub resident_count: usize,
+    /// Peak accounted resident bytes over the cache's lifetime.
+    pub high_water_bytes: u64,
+    /// Adapter names currently holding at least one pin.
+    pub pinned_count: usize,
+    /// Configured budget in bytes; 0 means unbounded.
+    pub budget_bytes: u64,
+}
+
+/// One adapter's merged-weight publication point: an atomically exchanged
+/// `Option<Arc<MergedParams>>`. Serving paths snapshot it once per engine
+/// call, so a concurrent promote/evict can never expose a torn merge —
+/// only the whole previous or the whole next state.
+#[derive(Default)]
+pub struct MergeSlot {
+    cell: Mutex<Option<Arc<MergedParams>>>,
+}
+
+impl MergeSlot {
+    pub fn empty() -> MergeSlot {
+        MergeSlot::default()
+    }
+
+    /// The current merge, if resident (one refcount bump; callers reuse
+    /// the snapshot for the whole engine call).
+    pub fn snapshot(&self) -> Option<Arc<MergedParams>> {
+        lock_unpoisoned(&self.cell).clone()
+    }
+
+    fn publish(&self, m: Arc<MergedParams>) {
+        *lock_unpoisoned(&self.cell) = Some(m);
+    }
+
+    fn clear(&self) {
+        *lock_unpoisoned(&self.cell) = None;
+    }
+}
+
+/// Bytes a merge occupies under cache accounting: f32 payload rounded to
+/// the allocator's granularity. Budget math done with this function
+/// matches [`CacheStats::resident_bytes`] exactly.
+pub fn accounted_bytes(m: &MergedParams) -> u64 {
+    let elems = m.embed.elems() + m.layers.iter().map(|t| t.elems()).sum::<usize>();
+    CachingAllocator::round_up(elems as u64 * 4)
+}
+
+/// One resident merge's bookkeeping record.
+struct Resident {
+    /// Entry generation the merge was built from.
+    gen: u64,
+    /// The owning entry's publication slot (cleared on eviction).
+    slot: Arc<MergeSlot>,
+    /// Accounted (rounded) bytes.
+    bytes: u64,
+    /// LRU recency stamp (monotonic tick).
+    last_used: u64,
+    /// Clock reference bit.
+    referenced: bool,
+}
+
+struct Inner {
+    resident: BTreeMap<String, Resident>,
+    /// Clock ring: resident names in insertion order; the hand sweeps it.
+    ring: Vec<String>,
+    hand: usize,
+    /// Current registered generation per adapter name — the authority
+    /// promote and miss-claims are checked against.
+    registered: BTreeMap<String, u64>,
+    /// Builds claimed via `note_miss` and not yet resolved, per name.
+    building: BTreeMap<String, u64>,
+    /// Generations whose merge build failed — never re-claimed, so an
+    /// unmergeable adapter cannot trigger a rebuild storm.
+    failed: BTreeMap<String, u64>,
+    /// Pin counts per adapter name (streams in flight).
+    pins: BTreeMap<String, usize>,
+    alloc: CachingAllocator,
+    events: Vec<Event>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    promotions: u64,
+    rejected: u64,
+    stale: u64,
+}
+
+impl Inner {
+    /// Drop a name's residency: free the accounting, log the event, fix
+    /// the clock ring. Clears the entry's publication slot only for
+    /// budget eviction (`clear_slot`) — replacement leaves the old slot
+    /// filled for in-flight snapshot holders (module docs).
+    fn remove_resident(&mut self, name: &str, clear_slot: bool) {
+        let Some(r) = self.resident.remove(name) else { return };
+        let key = format!("{name}#{}", r.gen);
+        self.alloc.free(&key);
+        self.events.push(Event::free(&key));
+        if let Some(pos) = self.ring.iter().position(|n| n == name) {
+            self.ring.remove(pos);
+            if pos < self.hand {
+                self.hand -= 1;
+            }
+            if self.ring.is_empty() {
+                self.hand = 0;
+            } else {
+                self.hand %= self.ring.len();
+            }
+        }
+        if clear_slot {
+            r.slot.clear();
+        }
+    }
+}
+
+fn is_pinned(pins: &BTreeMap<String, usize>, name: &str) -> bool {
+    pins.get(name).is_some_and(|&c| c > 0)
+}
+
+/// The budgeted merged-weight cache. One per server; shared by the
+/// one-shot batcher, the decode scheduler, and the async merge builder.
+pub struct MergedCache {
+    budget: u64,
+    policy: CachePolicy,
+    inner: Mutex<Inner>,
+}
+
+impl MergedCache {
+    pub fn new(budget_bytes: u64, policy: CachePolicy) -> MergedCache {
+        MergedCache {
+            budget: budget_bytes,
+            policy,
+            inner: Mutex::new(Inner {
+                resident: BTreeMap::new(),
+                ring: Vec::new(),
+                hand: 0,
+                registered: BTreeMap::new(),
+                building: BTreeMap::new(),
+                failed: BTreeMap::new(),
+                pins: BTreeMap::new(),
+                alloc: CachingAllocator::new(),
+                events: Vec::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                promotions: 0,
+                rejected: 0,
+                stale: 0,
+            }),
+        }
+    }
+
+    /// A cache that never evicts (the legacy eager-merge server mode —
+    /// same code path, effectively infinite budget).
+    pub fn unbounded(policy: CachePolicy) -> MergedCache {
+        MergedCache::new(u64::MAX, policy)
+    }
+
+    /// Configured budget in raw bytes (`u64::MAX` = unbounded).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Declare `gen` the current generation for `name` (startup load or
+    /// hot-swap). Releases any residency held by a previous generation
+    /// (without clearing the old entry's slot — see module docs), drops
+    /// pending build claims, and clears the failed-build latch so the new
+    /// leaves get a fresh merge attempt.
+    pub fn register(&self, name: &str, gen: u64) {
+        let mut s = self.lock();
+        s.registered.insert(name.to_string(), gen);
+        s.building.remove(name);
+        s.failed.remove(name);
+        s.remove_resident(name, false);
+    }
+
+    /// Record a merged-path serve. Touches recency when the name is still
+    /// resident (a snapshot can outlive its residency — the serve still
+    /// counts as a hit: it ran on merged weights).
+    pub fn note_hit(&self, name: &str) {
+        let mut s = self.lock();
+        s.hits += 1;
+        s.tick += 1;
+        let tick = s.tick;
+        if let Some(r) = s.resident.get_mut(name) {
+            r.last_used = tick;
+            r.referenced = true;
+        }
+    }
+
+    /// Record a composed-path serve of a mergeable adapter. Returns true
+    /// exactly once per (name, generation): the caller should schedule an
+    /// async merge build. Concurrent misses, already-resident races,
+    /// stale generations, and failed builds all return false.
+    pub fn note_miss(&self, name: &str, gen: u64) -> bool {
+        let mut s = self.lock();
+        s.misses += 1;
+        if s.registered.get(name) != Some(&gen)
+            || s.failed.get(name) == Some(&gen)
+            || s.building.get(name) == Some(&gen)
+            || s.resident.contains_key(name)
+        {
+            return false;
+        }
+        s.building.insert(name.to_string(), gen);
+        true
+    }
+
+    /// Publish a built merge: verify the generation is still current,
+    /// evict per policy until the accounted bytes fit the budget, account
+    /// the allocation, and fill the entry's slot. The slot is filled only
+    /// on [`Promotion::Resident`] — a stale or rejected build is never
+    /// visible to serving paths.
+    pub fn promote(
+        &self,
+        name: &str,
+        gen: u64,
+        slot: &Arc<MergeSlot>,
+        merged: Arc<MergedParams>,
+    ) -> Promotion {
+        let bytes = accounted_bytes(&merged);
+        let mut s = self.lock();
+        if s.building.get(name) == Some(&gen) {
+            s.building.remove(name);
+        }
+        if s.registered.get(name) != Some(&gen) {
+            s.stale += 1;
+            return Promotion::Stale;
+        }
+        if s.resident.contains_key(name) {
+            // A duplicate build raced an earlier promotion of the same
+            // generation; the slot is already published.
+            return Promotion::Resident;
+        }
+        if bytes > self.budget {
+            s.rejected += 1;
+            return Promotion::Rejected;
+        }
+        while s.alloc.allocated().saturating_add(bytes) > self.budget {
+            let Some(victim) = self.pick_victim(&mut s) else {
+                // Everything resident is pinned: stay composed.
+                s.rejected += 1;
+                return Promotion::Rejected;
+            };
+            s.remove_resident(&victim, true);
+            s.evictions += 1;
+        }
+        let key = format!("{name}#{gen}");
+        s.alloc.alloc(&key, bytes);
+        s.events.push(Event::alloc(&key, bytes));
+        s.tick += 1;
+        let last_used = s.tick;
+        s.resident.insert(
+            name.to_string(),
+            Resident { gen, slot: slot.clone(), bytes, last_used, referenced: true },
+        );
+        s.ring.push(name.to_string());
+        s.promotions += 1;
+        slot.publish(merged);
+        Promotion::Resident
+    }
+
+    /// A build for (name, gen) failed: release the claim and latch the
+    /// generation as unmergeable so later misses don't re-claim it.
+    pub fn build_failed(&self, name: &str, gen: u64) {
+        let mut s = self.lock();
+        if s.building.get(name) == Some(&gen) {
+            s.building.remove(name);
+        }
+        if s.registered.get(name) == Some(&gen) {
+            s.failed.insert(name.to_string(), gen);
+        }
+    }
+
+    /// Exempt `name` from budget eviction (an in-flight decode stream).
+    /// Counted: pin/unpin pairs nest.
+    pub fn pin(&self, name: &str) {
+        let mut s = self.lock();
+        *s.pins.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    /// Release one pin. Unbalanced unpins are ignored (defensive).
+    pub fn unpin(&self, name: &str) {
+        let mut s = self.lock();
+        if let Some(c) = s.pins.get_mut(name) {
+            *c -= 1;
+            if *c == 0 {
+                s.pins.remove(name);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let s = self.lock();
+        CacheStats {
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            promotions: s.promotions,
+            rejected: s.rejected,
+            stale: s.stale,
+            resident_bytes: s.alloc.allocated(),
+            resident_count: s.resident.len(),
+            high_water_bytes: s.alloc.max_allocated(),
+            pinned_count: s.pins.len(),
+            budget_bytes: if self.budget == u64::MAX { 0 } else { self.budget },
+        }
+    }
+
+    /// `(name, accounted bytes)` of every resident merge, name-sorted.
+    pub fn resident(&self) -> Vec<(String, u64)> {
+        let s = self.lock();
+        s.resident.iter().map(|(n, r)| (n.clone(), r.bytes)).collect()
+    }
+
+    /// The replayable residency event stream (one alloc per promotion,
+    /// one free per eviction/replacement). Replaying it on a fresh
+    /// [`CachingAllocator`] reconstructs [`CacheStats::high_water_bytes`].
+    pub fn events(&self) -> Vec<Event> {
+        self.lock().events.clone()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        lock_unpoisoned(&self.inner)
+    }
+
+    /// Choose an eviction victim among unpinned residents, or None if
+    /// every resident is pinned.
+    fn pick_victim(&self, s: &mut Inner) -> Option<String> {
+        if !s.resident.keys().any(|n| !is_pinned(&s.pins, n)) {
+            return None;
+        }
+        match self.policy {
+            CachePolicy::Lru => s
+                .resident
+                .iter()
+                .filter(|(n, _)| !is_pinned(&s.pins, n))
+                .min_by_key(|(_, r)| r.last_used)
+                .map(|(n, _)| n.clone()),
+            CachePolicy::Clock => {
+                // Two full sweeps suffice: the first clears every
+                // reference bit an unpinned resident holds.
+                for _ in 0..(2 * s.ring.len() + 1) {
+                    if s.ring.is_empty() {
+                        return None;
+                    }
+                    s.hand %= s.ring.len();
+                    let name = s.ring[s.hand].clone();
+                    if is_pinned(&s.pins, &name) {
+                        s.hand += 1;
+                        continue;
+                    }
+                    let referenced = {
+                        let r = s.resident.get_mut(&name).expect("ring entry resident");
+                        std::mem::replace(&mut r.referenced, false)
+                    };
+                    if referenced {
+                        s.hand += 1;
+                    } else {
+                        return Some(name);
+                    }
+                }
+                // Unreachable with a consistent ring; keep a safe default.
+                s.ring.iter().find(|n| !is_pinned(&s.pins, n)).cloned()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::peak_of_events;
+    use crate::runtime::Tensor;
+    use crate::util::prop::{check, prop_assert};
+
+    /// A synthetic merge of exactly `elems` f32 elements (no layers —
+    /// the cache only measures bytes).
+    fn merged(elems: usize) -> Arc<MergedParams> {
+        Arc::new(MergedParams {
+            embed: Tensor::f32(vec![elems], vec![0.0; elems]),
+            layers: vec![],
+        })
+    }
+
+    /// One 512-byte accounting unit.
+    fn unit() -> Arc<MergedParams> {
+        merged(128)
+    }
+
+    fn slot() -> Arc<MergeSlot> {
+        Arc::new(MergeSlot::empty())
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [CachePolicy::Lru, CachePolicy::Clock] {
+            assert_eq!(CachePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(CachePolicy::parse("mru").is_err());
+        assert_eq!(CachePolicy::default(), CachePolicy::Lru);
+    }
+
+    #[test]
+    fn accounted_bytes_rounds_to_granularity() {
+        assert_eq!(accounted_bytes(&merged(1)), 512);
+        assert_eq!(accounted_bytes(&merged(128)), 512);
+        assert_eq!(accounted_bytes(&merged(129)), 1024);
+        let with_layers = MergedParams {
+            embed: Tensor::f32(vec![128], vec![0.0; 128]),
+            layers: vec![Tensor::f32(vec![128], vec![0.0; 128])],
+        };
+        assert_eq!(accounted_bytes(&with_layers), 1024);
+    }
+
+    #[test]
+    fn promote_publishes_and_accounts() {
+        let cache = MergedCache::new(1024, CachePolicy::Lru);
+        cache.register("a", 1);
+        let sa = slot();
+        assert!(sa.snapshot().is_none());
+        assert_eq!(cache.promote("a", 1, &sa, unit()), Promotion::Resident);
+        assert!(sa.snapshot().is_some());
+        let st = cache.stats();
+        assert_eq!(st.promotions, 1);
+        assert_eq!(st.resident_bytes, 512);
+        assert_eq!(st.resident_count, 1);
+        assert_eq!(st.budget_bytes, 1024);
+        assert_eq!(cache.resident(), vec![("a".to_string(), 512)]);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_served() {
+        let cache = MergedCache::new(1024, CachePolicy::Lru);
+        let (sa, sb, sc) = (slot(), slot(), slot());
+        for (n, g) in [("a", 1), ("b", 2), ("c", 3)] {
+            cache.register(n, g);
+        }
+        assert_eq!(cache.promote("a", 1, &sa, unit()), Promotion::Resident);
+        assert_eq!(cache.promote("b", 2, &sb, unit()), Promotion::Resident);
+        cache.note_hit("a"); // a is now more recent than b
+        assert_eq!(cache.promote("c", 3, &sc, unit()), Promotion::Resident);
+        let names: Vec<String> = cache.resident().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a".to_string(), "c".to_string()]);
+        // The victim's slot is cleared so serving falls back to composed.
+        assert!(sb.snapshot().is_none());
+        assert!(sa.snapshot().is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn clock_clears_reference_bits_before_evicting() {
+        let cache = MergedCache::new(1024, CachePolicy::Clock);
+        let (sa, sb, sc) = (slot(), slot(), slot());
+        for (n, g) in [("a", 1), ("b", 2), ("c", 3)] {
+            cache.register(n, g);
+        }
+        cache.promote("a", 1, &sa, unit());
+        cache.promote("b", 2, &sb, unit());
+        // Both referenced: the hand clears a then b, wraps, evicts a.
+        assert_eq!(cache.promote("c", 3, &sc, unit()), Promotion::Resident);
+        let names: Vec<String> = cache.resident().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["b".to_string(), "c".to_string()]);
+        assert!(sa.snapshot().is_none());
+    }
+
+    #[test]
+    fn pinned_residents_survive_the_squeeze() {
+        let cache = MergedCache::new(512, CachePolicy::Lru);
+        cache.register("a", 1);
+        cache.register("b", 2);
+        let (sa, sb) = (slot(), slot());
+        cache.pin("a");
+        assert_eq!(cache.promote("a", 1, &sa, unit()), Promotion::Resident);
+        // No unpinned victim: b is rejected, a stays.
+        assert_eq!(cache.promote("b", 2, &sb, unit()), Promotion::Rejected);
+        assert!(sa.snapshot().is_some());
+        assert!(sb.snapshot().is_none());
+        let st = cache.stats();
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.pinned_count, 1);
+        // Releasing the pin lets the next promotion evict a.
+        cache.unpin("a");
+        assert_eq!(cache.promote("b", 2, &sb, unit()), Promotion::Resident);
+        assert!(sa.snapshot().is_none());
+        assert!(sb.snapshot().is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn stale_promotion_is_discarded_unpublished() {
+        let cache = MergedCache::new(4096, CachePolicy::Lru);
+        cache.register("a", 1);
+        let s1 = slot();
+        cache.register("a", 2); // hot-swap outran the build
+        assert_eq!(cache.promote("a", 1, &s1, unit()), Promotion::Stale);
+        assert!(s1.snapshot().is_none());
+        assert_eq!(cache.stats().stale, 1);
+        assert_eq!(cache.stats().resident_count, 0);
+        let s2 = slot();
+        assert_eq!(cache.promote("a", 2, &s2, unit()), Promotion::Resident);
+    }
+
+    #[test]
+    fn replacement_releases_bytes_but_keeps_old_snapshot_serving() {
+        let cache = MergedCache::new(4096, CachePolicy::Lru);
+        cache.register("a", 1);
+        let s1 = slot();
+        cache.promote("a", 1, &s1, unit());
+        assert_eq!(cache.stats().resident_bytes, 512);
+        // Hot-swap: residency is released immediately, but the OLD
+        // entry's slot stays filled — in-flight groups that snapshotted
+        // it keep serving the old merge bitwise until they drain.
+        cache.register("a", 2);
+        assert_eq!(cache.stats().resident_bytes, 0);
+        assert!(s1.snapshot().is_some());
+    }
+
+    #[test]
+    fn oversized_merge_is_rejected() {
+        let cache = MergedCache::new(512, CachePolicy::Lru);
+        cache.register("a", 1);
+        assert_eq!(cache.promote("a", 1, &slot(), merged(256)), Promotion::Rejected);
+        assert_eq!(cache.stats().rejected, 1);
+        assert_eq!(cache.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn miss_claims_once_and_failed_builds_do_not_retry() {
+        let cache = MergedCache::new(4096, CachePolicy::Lru);
+        cache.register("a", 1);
+        assert!(cache.note_miss("a", 1));
+        assert!(!cache.note_miss("a", 1), "claim must dedupe");
+        cache.build_failed("a", 1);
+        assert!(!cache.note_miss("a", 1), "failed gen must not re-claim");
+        assert!(!cache.note_miss("a", 99), "unregistered gen must not claim");
+        // A hot-swap resets the latch: the new leaves deserve an attempt.
+        cache.register("a", 2);
+        assert!(cache.note_miss("a", 2));
+        assert_eq!(cache.stats().misses, 5);
+    }
+
+    #[test]
+    fn events_replay_reconstructs_high_water() {
+        let cache = MergedCache::new(1024, CachePolicy::Lru);
+        for (n, g) in [("a", 1), ("b", 2), ("c", 3)] {
+            cache.register(n, g);
+        }
+        cache.promote("a", 1, &slot(), unit());
+        cache.promote("b", 2, &slot(), merged(256)); // 1024 B: evicts a
+        cache.register("b", 4); // replacement frees b
+        cache.promote("c", 3, &slot(), unit());
+        let st = cache.stats();
+        assert!(st.high_water_bytes <= 1024);
+        assert_eq!(peak_of_events(&cache.events()), st.high_water_bytes);
+    }
+
+    #[test]
+    fn randomized_churn_preserves_accounting_invariants() {
+        // The satellite property: under random register/promote/pin/
+        // unpin/fail sequences, accounted resident bytes == the sum of
+        // live merges, the budget is never exceeded, residency and slot
+        // publication agree, and event replay reconstructs the same
+        // high-water mark.
+        check("cache accounting", 40, |g| {
+            let policy = g.pick(&[CachePolicy::Lru, CachePolicy::Clock]);
+            let budget = 512 * g.usize_in(1, 5) as u64;
+            let cache = MergedCache::new(budget, policy);
+            let names = ["a", "b", "c", "d"];
+            let mut gens: BTreeMap<&str, u64> = BTreeMap::new();
+            let mut slots: BTreeMap<&str, Arc<MergeSlot>> = BTreeMap::new();
+            let mut pins: BTreeMap<&str, usize> = BTreeMap::new();
+            let mut next_gen = 0u64;
+            for n in names {
+                next_gen += 1;
+                gens.insert(n, next_gen);
+                slots.insert(n, slot());
+                cache.register(n, next_gen);
+            }
+            for _ in 0..60 {
+                let n = g.pick(&names);
+                match g.usize_in(0, 6) {
+                    0 => {
+                        // Hot-swap to a new generation.
+                        next_gen += 1;
+                        gens.insert(n, next_gen);
+                        slots.insert(n, slot());
+                        cache.register(n, next_gen);
+                    }
+                    1 | 2 => {
+                        // Build + promote at the current generation.
+                        let m = merged(128 * g.usize_in(1, 3));
+                        cache.promote(n, gens[n], &slots[n], m);
+                    }
+                    3 => {
+                        // A build that lost a race to a hot-swap.
+                        cache.promote(n, gens[n] + 1000, &slots[n], unit());
+                    }
+                    4 => {
+                        cache.pin(n);
+                        *pins.entry(n).or_insert(0) += 1;
+                    }
+                    5 => {
+                        if pins.get(n).copied().unwrap_or(0) > 0 {
+                            *pins.get_mut(n).unwrap() -= 1;
+                            cache.unpin(n);
+                        }
+                    }
+                    6 => {
+                        if cache.note_miss(n, gens[n]) && g.bool() {
+                            cache.build_failed(n, gens[n]);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+                let st = cache.stats();
+                let live: u64 = cache.resident().iter().map(|(_, b)| *b).sum();
+                prop_assert(
+                    st.resident_bytes == live,
+                    format!("accounted {} != sum of live merges {live}", st.resident_bytes),
+                )?;
+                prop_assert(
+                    st.resident_bytes <= budget,
+                    format!("budget overshoot: {} > {budget}", st.resident_bytes),
+                )?;
+                for n in names {
+                    let resident = cache.resident().iter().any(|(r, _)| r == n);
+                    prop_assert(
+                        resident == slots[n].snapshot().is_some(),
+                        format!("{n}: residency and slot publication disagree"),
+                    )?;
+                }
+            }
+            let st = cache.stats();
+            prop_assert(
+                peak_of_events(&cache.events()) == st.high_water_bytes,
+                "event replay reconstructs a different high-water mark",
+            )
+        });
+    }
+}

@@ -23,6 +23,7 @@
 
 pub mod adapters;
 pub mod backend;
+pub mod cache;
 pub mod manifest;
 pub mod native;
 pub mod ops;
@@ -36,6 +37,7 @@ use anyhow::{bail, Context, Result};
 
 pub use adapters::{Adapter, AdapterStore, AdapterSummary, CkptError};
 pub use backend::{BackendSpec, ExecBackend, MockExec};
+pub use cache::{accounted_bytes, CachePolicy, CacheStats, MergeSlot, MergedCache, Promotion};
 pub use manifest::{ArtifactInfo, ConfigInfo, IoDtype, IoSlot, Manifest};
 pub use native::NativeEngine;
 pub use ops::{

@@ -1,0 +1,386 @@
+//! Adapter-churn chaos tests: sustained load/evict/hot-swap/train-
+//! checkpoint-reload churn on a BUDGETED merged-weight cache, under
+//! concurrent one-shot and streaming traffic. The native engine is
+//! deterministic, so every reply must bitwise-match a quiescent
+//! single-adapter reference for its served path — a torn merge, a stale
+//! promotion, or a half-swapped entry would produce a third value.
+//! All tests run unconditionally on the native engine.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
+use dorafactors::runtime::ops::AdapterParams;
+use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, ExecBackend, InitReq};
+
+/// Accounted bytes of one tiny-config merge (embed [64, 32] plus two
+/// [32, 32] layers = 4096 f32 = 16 KiB, already 512-byte aligned).
+const TINY_MERGE_BYTES: u64 = 16 * 1024;
+
+const PROMPT: [i32; 4] = [2, 7, 1, 8];
+const STREAM_TOKENS: usize = 12;
+
+fn cfg(workers: usize, fast_path: FastPath, merge_budget: Option<u64>) -> ServerCfg {
+    ServerCfg {
+        config: "tiny".into(),
+        max_wait: Duration::from_millis(2),
+        workers,
+        fast_path,
+        queue_depth: 8,
+        merge_budget,
+        ..ServerCfg::default()
+    }
+}
+
+fn tiny_adapter(name: &str, seed: i32) -> Adapter {
+    let be = ExecBackend::native();
+    let info = be.config("tiny").unwrap();
+    let init = be.init(InitReq { config: "tiny".into(), seed }).unwrap();
+    Adapter::new(name, &info, seed as u64, 0, init.params).unwrap()
+}
+
+/// Unique scratch directory for an adapter-store test, removed on drop.
+struct ScratchDir(std::path::PathBuf);
+
+impl ScratchDir {
+    fn new(tag: &str) -> ScratchDir {
+        let dir =
+            std::env::temp_dir().join(format!("dora_churn_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ScratchDir(dir)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Quiescent single-adapter references for one parameter set on one fast
+/// path: the one-shot logits for [`PROMPT`] and the greedy
+/// [`STREAM_TOKENS`]-token decode sequence.
+fn references(params: &AdapterParams, path: FastPath) -> (Vec<f32>, Vec<i32>) {
+    let server = Server::start_with_params(
+        BackendSpec::Native,
+        cfg(1, path, None),
+        params.frozen.clone(),
+        params.trainable.clone(),
+    )
+    .unwrap();
+    let client = server.client();
+    let logits = client.infer(&PROMPT).unwrap().logits;
+    let tokens = client
+        .generate_collect(
+            &PROMPT,
+            GenOptions { max_tokens: STREAM_TOKENS, ..GenOptions::default() },
+        )
+        .unwrap();
+    drop(client);
+    server.shutdown();
+    (logits, tokens)
+}
+
+#[test]
+fn churn_under_traffic_matches_references() {
+    // Three versions of the hot adapter: two seeded inits swapped via
+    // load_adapter, and one trained checkpoint reloaded from the store
+    // via hot_load — the full train -> checkpoint -> serve churn loop.
+    let scratch = ScratchDir::new("refs");
+    let store = AdapterStore::open(&scratch.0).unwrap();
+    let p1 = tiny_adapter("hot", 1).params;
+    let p2 = tiny_adapter("hot", 2).params;
+    let mut tr = Trainer::with_spec(
+        &BackendSpec::Native,
+        TrainerCfg {
+            config: "tiny".into(),
+            variant: "fused".into(),
+            seed: 31,
+            branching: 3,
+            eval_every: 0,
+            train_workers: 0,
+            grad_accum: 1,
+        },
+    )
+    .unwrap();
+    tr.train_steps(8).unwrap();
+    let trained = tr.to_adapter("hot").unwrap();
+    let p3 = trained.params.clone();
+    store.save(&trained).unwrap();
+
+    let fillers: Vec<Adapter> = (0..6).map(|i| tiny_adapter(&format!("f{i}"), 10 + i)).collect();
+
+    // Per-path reference sets, computed on quiescent servers before any
+    // churn: the hot adapter may serve any of its three versions, each
+    // filler exactly its own parameters.
+    let mut hot_logits: BTreeMap<&'static str, Vec<Vec<f32>>> = BTreeMap::new();
+    let mut hot_tokens: Vec<Vec<i32>> = Vec::new();
+    let mut filler_logits: BTreeMap<(String, &'static str), Vec<f32>> = BTreeMap::new();
+    for path in [FastPath::Merged, FastPath::Composed] {
+        let mut logits_set = Vec::new();
+        for params in [&p1, &p2, &p3] {
+            let (logits, tokens) = references(params, path);
+            logits_set.push(logits);
+            hot_tokens.push(tokens);
+        }
+        assert_ne!(logits_set[0], logits_set[1], "seeds produced identical logits");
+        assert_ne!(logits_set[1], logits_set[2], "training changed nothing");
+        hot_logits.insert(path.as_str(), logits_set);
+        for f in &fillers {
+            let (logits, _) = references(&f.params, path);
+            filler_logits.insert((f.name.clone(), path.as_str()), logits);
+        }
+    }
+    let hot_logits = Arc::new(hot_logits);
+    let hot_tokens = Arc::new(hot_tokens);
+    let filler_logits = Arc::new(filler_logits);
+
+    for pool in [1usize, 2] {
+        // Budget for two merges across seven adapters: promotion and
+        // eviction run constantly under the traffic below.
+        let mut adapters = vec![tiny_adapter("hot", 1)];
+        adapters.extend(fillers.iter().cloned());
+        let server = Server::start_with_adapters(
+            BackendSpec::Native,
+            cfg(pool, FastPath::Merged, Some(2 * TINY_MERGE_BYTES)),
+            adapters,
+        )
+        .unwrap();
+        let client = server.client();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let names: Vec<String> =
+            std::iter::once("hot".to_string()).chain((0..6).map(|i| format!("f{i}"))).collect();
+        let hammers: Vec<_> = (0..3)
+            .map(|tid: usize| {
+                let c = client.clone();
+                let stop = stop.clone();
+                let names = names.clone();
+                let hot_logits = hot_logits.clone();
+                let filler_logits = filler_logits.clone();
+                std::thread::spawn(move || {
+                    let mut served = 0usize;
+                    let mut i = tid;
+                    while !stop.load(Ordering::SeqCst) {
+                        let name = &names[i % names.len()];
+                        i += 1;
+                        let reply = c.infer_with(name, &PROMPT).unwrap();
+                        let path = reply.path.as_str();
+                        if name == "hot" {
+                            assert!(
+                                hot_logits[path].iter().any(|r| *r == reply.logits),
+                                "hot reply on {path} path matches no version's reference"
+                            );
+                        } else {
+                            assert_eq!(
+                                reply.logits,
+                                filler_logits[&(name.clone(), path)],
+                                "{name} reply diverged on the {path} path"
+                            );
+                        }
+                        served += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+        let streamer = {
+            let c = client.clone();
+            let stop = stop.clone();
+            let hot_tokens = hot_tokens.clone();
+            std::thread::spawn(move || {
+                let mut streams = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    let tokens = c
+                        .generate_collect_with(
+                            "hot",
+                            &PROMPT,
+                            GenOptions { max_tokens: STREAM_TOKENS, ..GenOptions::default() },
+                        )
+                        .unwrap();
+                    // The slot snapshots entry and merge at admission, so
+                    // the whole sequence must come from ONE (version,
+                    // path) pair — a mid-stream flip would splice two
+                    // references together.
+                    assert!(
+                        hot_tokens.iter().any(|r| *r == tokens),
+                        "stream matches no (version, path) reference: {tokens:?}"
+                    );
+                    streams += 1;
+                }
+                streams
+            })
+        };
+
+        // Churn driver: swap the hot adapter between its two seeded
+        // versions, reloading the trained checkpoint every fourth swap.
+        const SWAPS: usize = 24;
+        for i in 0..SWAPS {
+            if i % 4 == 3 {
+                server.hot_load(&store, "hot").unwrap();
+            } else if i % 2 == 0 {
+                server.load_adapter("hot", p2.clone()).unwrap();
+            } else {
+                server.load_adapter("hot", p1.clone()).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        stop.store(true, Ordering::SeqCst);
+        let served: usize = hammers.into_iter().map(|h| h.join().unwrap()).sum();
+        let streams = streamer.join().unwrap();
+        assert!(served > 0, "hammer threads never completed a request");
+        assert!(streams > 0, "streamer never completed a stream");
+
+        let m = server.shutdown();
+        assert_eq!(m.completed, served as u64);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.decode_failed, 0);
+        assert_eq!(m.hot_loads, SWAPS as u64);
+        assert_eq!(m.merge_fallbacks, 0, "an async merge build failed");
+        assert!(
+            m.cache_evictions > 0,
+            "budget never forced an eviction (pool={pool}): {m:?}"
+        );
+        assert!(m.cache_high_water_bytes <= 2 * TINY_MERGE_BYTES);
+        assert!(m.cache_resident <= 2);
+    }
+}
+
+#[test]
+fn shutdown_mid_churn_drains_cleanly() {
+    // Shutdown while hammers, a stream, and the async merge builder are
+    // all in flight: no panic, no hang, and the books still balance —
+    // in-flight requests either complete or surface an error to their
+    // caller, never silently vanish.
+    let adapters: Vec<Adapter> = (0..4).map(|i| tiny_adapter(&format!("c{i}"), i)).collect();
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        cfg(2, FastPath::Merged, Some(TINY_MERGE_BYTES)),
+        adapters,
+    )
+    .unwrap();
+    let client = server.client();
+    let hammers: Vec<_> = (0..3)
+        .map(|tid: usize| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0usize;
+                for i in 0.. {
+                    let name = format!("c{}", (tid + i) % 4);
+                    match c.infer_with(&name, &PROMPT) {
+                        Ok(reply) => {
+                            assert!(reply.logit.is_finite());
+                            ok += 1;
+                        }
+                        // The server shut down underneath us: the reply
+                        // channel reports it instead of hanging.
+                        Err(_) => break,
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let streamer = {
+        let c = client.clone();
+        std::thread::spawn(move || {
+            let mut ok = 0usize;
+            while c
+                .generate_collect_with(
+                    "c0",
+                    &PROMPT,
+                    GenOptions { max_tokens: STREAM_TOKENS, ..GenOptions::default() },
+                )
+                .is_ok()
+            {
+                ok += 1;
+            }
+            ok
+        })
+    };
+    // Let traffic and promotion churn start, swap once, then pull the
+    // plug mid-flight.
+    let p_new = tiny_adapter("c0", 9).params;
+    std::thread::sleep(Duration::from_millis(50));
+    server.load_adapter("c0", p_new).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let m = server.shutdown();
+
+    let served: usize = hammers.into_iter().map(|h| h.join().unwrap()).sum();
+    let streams = streamer.join().unwrap();
+    assert!(served > 0, "no request completed before shutdown");
+    assert!(streams > 0 || m.decode_requests > 0, "streamer never ran");
+    assert_eq!(m.failed, 0, "shutdown turned an accepted request into a failure");
+    assert!(m.completed >= served as u64);
+    assert_eq!(m.hot_loads, 1);
+}
+
+#[test]
+fn pinned_adapter_survives_cache_squeeze() {
+    // A one-merge budget hosting two adapters: the adapter with an
+    // active decode stream is pin-exempt from eviction, so the other
+    // adapter's promotions are REJECTED (served composed) until the
+    // stream's receiver drops and releases the pin.
+    let server = Server::start_with_adapters(
+        BackendSpec::Native,
+        cfg(1, FastPath::Merged, Some(TINY_MERGE_BYTES)),
+        vec![tiny_adapter("pin", 1), tiny_adapter("b", 2)],
+    )
+    .unwrap();
+    let client = server.client();
+    // An endless unconsumed stream: admission pins "pin" and queues its
+    // merge build.
+    let stream = client
+        .generate_with(
+            "pin",
+            &PROMPT,
+            GenOptions { max_tokens: usize::MAX, ..GenOptions::default() },
+        )
+        .unwrap();
+    let wait_until = |what: &str, cond: &dyn Fn() -> bool| {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+    wait_until("pin promotion", &|| {
+        server.metrics().resident_adapters == vec!["pin".to_string()]
+    });
+    assert_eq!(server.metrics().cache_pinned, 1);
+
+    // Squeeze: traffic on "b" keeps re-queuing its merge, but promotion
+    // cannot evict the pinned resident — every "b" reply stays composed.
+    let squeezes = 20usize;
+    for _ in 0..squeezes {
+        let reply = client.infer_with("b", &PROMPT).unwrap();
+        assert_eq!(
+            reply.path,
+            FastPath::Composed,
+            "b was promoted while the budget was pinned"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mid = server.metrics();
+    assert_eq!(mid.resident_adapters, vec!["pin".to_string()], "pin was evicted");
+    assert!(mid.cache_rejects > 0, "the squeeze never attempted a promotion: {mid:?}");
+    assert_eq!(mid.cache_evictions, 0);
+
+    // Cancel mid-stream by dropping the receiver: the scheduler retires
+    // the slot and releases the pin without any explicit cancel call.
+    drop(stream);
+    wait_until("stream cancellation", &|| server.metrics().decode_cancelled == 1);
+    wait_until("pin release", &|| server.metrics().cache_pinned == 0);
+
+    // Now "b" can take the budget: its next builds evict "pin".
+    wait_until("b promotion", &|| {
+        client.infer_with("b", &PROMPT).unwrap();
+        server.metrics().resident_adapters == vec!["b".to_string()]
+    });
+    let m = server.shutdown();
+    assert!(m.cache_evictions >= 1, "taking the budget never evicted the pin: {m:?}");
+    assert!(m.cache_high_water_bytes <= TINY_MERGE_BYTES);
+    assert_eq!(m.merge_fallbacks, 0);
+}

@@ -18,6 +18,7 @@ fn cfg(workers: usize, fast_path: FastPath) -> ServerCfg {
         workers,
         fast_path,
         queue_depth: 8,
+        ..ServerCfg::default()
     }
 }
 

@@ -17,6 +17,7 @@ fn cfg(workers: usize, fast_path: FastPath, queue_depth: usize) -> ServerCfg {
         workers,
         fast_path,
         queue_depth,
+        ..ServerCfg::default()
     }
 }
 
