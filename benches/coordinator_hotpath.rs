@@ -19,7 +19,7 @@ use dorafactors::dora::mem_events;
 use dorafactors::memsim::allocator::CachingAllocator;
 use dorafactors::numerics::Dtype;
 use dorafactors::runtime::{
-    manifest, Adapter, BackendSpec, Engine, ExecBackend, InitReq, NativeEngine, Tensor,
+    manifest, Adapter, BackendSpec, Engine, ExecBackend, InitReq, NativeEngine, Precision, Tensor,
 };
 use dorafactors::util::rng::Rng;
 use dorafactors::util::table::{fmt_secs, Table};
@@ -98,6 +98,7 @@ fn main() {
                 eval_every: 0,
                 train_workers: 0,
                 grad_accum: 1,
+                precision: Precision::F32,
             },
         )
         .expect("native trainer");
@@ -132,6 +133,7 @@ fn main() {
                     eval_every: 0,
                     train_workers: workers,
                     grad_accum: accum,
+                    precision: Precision::F32,
                 },
             )
             .expect("data-parallel trainer");
@@ -230,7 +232,11 @@ fn main() {
         let adapters: Vec<Adapter> = (0..n_adapters)
             .map(|i| {
                 let init = be
-                    .init(InitReq { config: "tiny".into(), seed: i as i32 })
+                    .init(InitReq {
+                        config: "tiny".into(),
+                        seed: i as i32,
+                        precision: Precision::F32,
+                    })
                     .expect("init");
                 Adapter::new(format!("adapter-{i}"), &info, i as u64, 0, init.params)
                     .expect("adapter")
@@ -348,7 +354,11 @@ fn main() {
         let adapters: Vec<Adapter> = (0..2)
             .map(|i| {
                 let init = be
-                    .init(InitReq { config: "small".into(), seed: 100 + i as i32 })
+                    .init(InitReq {
+                        config: "small".into(),
+                        seed: 100 + i as i32,
+                        precision: Precision::F32,
+                    })
                     .expect("init");
                 Adapter::new(format!("pool-adapter-{i}"), &info, i as u64, 0, init.params)
                     .expect("adapter")

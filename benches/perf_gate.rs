@@ -21,7 +21,12 @@
 //!   bursty Zipf(1.0) vs uniform traffic at tight/loose byte budgets —
 //!   the budget is never overshot, the 1000-adapter tight-budget Zipf
 //!   row stays > 80% merged-hit with < 10% of merges resident, and Zipf
-//!   beats uniform on hit rate at every size.
+//!   beats uniform on hit rate at every size;
+//! * precision (DESIGN.md §3.11): a bf16 merged replica accounts
+//!   0.45-0.55x the f32 bytes (the half-budget serving contract), and
+//!   the bf16 merged serving row holds >= 0.9x the f32 throughput at
+//!   pool 1 (soft-bf16 rounds at shape-fixed points, so the merged hot
+//!   loop pays only the elementwise rounding passes).
 //!
 //! Trial counts are sized for a CI runner (~seconds, not minutes); the
 //! full-resolution sweeps live in `compose_kernel`, `backward_kernel`
@@ -44,7 +49,9 @@ use dorafactors::kernels::{ComposeKernel, EagerCpu, FusedCpu};
 use dorafactors::models::forward::{self, NativeModel};
 use dorafactors::numerics::Dtype;
 use dorafactors::runtime::ops::{AdapterParams, AdapterVariant, Variant};
-use dorafactors::runtime::{Adapter, BackendSpec, ConfigInfo, ExecBackend, InitReq, TensorData};
+use dorafactors::runtime::{
+    accounted_bytes, Adapter, BackendSpec, ConfigInfo, ExecBackend, InitReq, Precision, TensorData,
+};
 use dorafactors::util::json::Json;
 use dorafactors::util::rng::Rng;
 use dorafactors::util::stats;
@@ -533,7 +540,11 @@ fn main() {
         let adapters: Vec<Adapter> = (0..n_adapters)
             .map(|i| {
                 let init = be
-                    .init(InitReq { config: "tiny".into(), seed: i as i32 })
+                    .init(InitReq {
+                        config: "tiny".into(),
+                        seed: i as i32,
+                        precision: Precision::F32,
+                    })
                     .expect("init");
                 Adapter::new(format!("a{i}"), &tiny_info, i as u64, 0, init.params)
                     .expect("adapter")
@@ -653,6 +664,75 @@ fn main() {
             .collect::<Vec<_>>(),
     );
 
+    // -----------------------------------------------------------------
+    // Precision rows (DESIGN.md §3.11): the bf16 serving operating
+    // point. Byte side: a bf16 merged replica accounts ~half the f32
+    // bytes — the cache-budget contract that lets a bf16 fleet fit ~2x
+    // the adapters. Throughput side: the merged fast path served at
+    // bf16 stays within 0.9x of the f32 row — soft-bf16 rounds at
+    // shape-fixed points only, so the merged hot loop may pay at most
+    // the elementwise rounding passes, never a kernel regression.
+    // -----------------------------------------------------------------
+    let (merged_bytes_f32, merged_bytes_bf16) = {
+        let init = be
+            .init(InitReq { config: "tiny".into(), seed: 7, precision: Precision::F32 })
+            .expect("precision init");
+        let bytes = |precision| {
+            let merged = forward::merge_adapter_params(
+                &tiny_info,
+                &init.params,
+                AdapterVariant::Dora,
+                precision,
+            )
+            .expect("precision merge");
+            accounted_bytes(&merged)
+        };
+        (bytes(Precision::F32), bytes(Precision::Bf16))
+    };
+    let bytes_ratio = merged_bytes_bf16 as f64 / merged_bytes_f32 as f64;
+    let precision_bytes_ok = (0.45..=0.55).contains(&bytes_ratio);
+    println!(
+        "merged replica bytes tiny: f32 {merged_bytes_f32} B, bf16 {merged_bytes_bf16} B \
+         ({bytes_ratio:.2}x)"
+    );
+
+    let bf16_merged1 = {
+        let server = Server::start(
+            BackendSpec::Native,
+            ServerCfg {
+                config: "small".into(),
+                max_wait: Duration::ZERO,
+                workers: 1,
+                fast_path: FastPath::Merged,
+                queue_depth: 32,
+                precision: Precision::Bf16,
+                ..ServerCfg::default()
+            },
+        )
+        .expect("bf16 pool server");
+        let client = server.client();
+        let serve_cfg = timing::BenchCfg { warmup: 2, trials: 20, time_cap_s: 3.0 };
+        let m = timing::bench("bf16 pool rtt", serve_cfg, || {
+            client.infer(&[1, 2, 3, 4]).unwrap();
+        });
+        drop(client);
+        server.shutdown();
+        m.median_s
+    };
+    serving_rows.push(Json::obj(vec![
+        ("pool", Json::Num(1.0)),
+        ("fast_path", Json::Str("merged".into())),
+        ("precision", Json::Str("bf16".into())),
+        ("median_s", Json::Num(bf16_merged1)),
+        ("req_per_s", Json::Num(1.0 / bf16_merged1)),
+    ]));
+    let bf16_tput_ratio = merged1 / bf16_merged1;
+    let precision_tput_ok = bf16_tput_ratio >= 0.9;
+    println!(
+        "serve small pool=1 path=merged precision=bf16: {:.0} us/req ({bf16_tput_ratio:.2}x f32)",
+        bf16_merged1 * 1e6
+    );
+
     // Emit the summary BEFORE asserting: a violated invariant must still
     // upload the numbers that show it.
     let json = Json::obj(vec![
@@ -663,6 +743,15 @@ fn main() {
         ("cache", Json::Arr(cache_rows)),
         ("compose_geomean_speedup", Json::Num(compose_geomean)),
         ("gemm_geomean_speedup", Json::Num(gemm_geomean)),
+        (
+            "precision",
+            Json::obj(vec![
+                ("merged_bytes_f32", Json::Num(merged_bytes_f32 as f64)),
+                ("merged_bytes_bf16", Json::Num(merged_bytes_bf16 as f64)),
+                ("bytes_ratio", Json::Num(bytes_ratio)),
+                ("merged_pool1_tput_ratio", Json::Num(bf16_tput_ratio)),
+            ]),
+        ),
         (
             "invariants",
             Json::obj(vec![
@@ -676,6 +765,8 @@ fn main() {
                 ("cache_budget_never_exceeded", Json::Bool(cache_budget_ok)),
                 ("cache_zipf1000_hot", Json::Bool(cache_zipf1000_ok)),
                 ("cache_zipf_hits_beat_uniform", Json::Bool(cache_hits_ordered)),
+                ("bf16_merged_bytes_half_f32", Json::Bool(precision_bytes_ok)),
+                ("bf16_merged_tput_ge_0p9_f32", Json::Bool(precision_tput_ok)),
             ]),
         ),
     ]);
@@ -744,6 +835,16 @@ fn main() {
         cache_tput_ratio >= 0.9,
         "Zipf throughput fell more than the noise floor below uniform: \
          geomean ratio {cache_tput_ratio:.3} < 0.9 ({cache_results:?})"
+    );
+    assert!(
+        precision_bytes_ok,
+        "bf16 merged replica is not ~half the f32 bytes: \
+         {merged_bytes_bf16} B vs {merged_bytes_f32} B ({bytes_ratio:.2}x, need 0.45-0.55)"
+    );
+    assert!(
+        precision_tput_ok,
+        "bf16 merged serving fell below 0.9x f32 throughput: \
+         {bf16_merged1:.3e}s vs {merged1:.3e}s ({bf16_tput_ratio:.2}x)"
     );
     println!(
         "perf gate OK: compose geomean {compose_geomean:.2}x, gemm geomean {gemm_geomean:.2}x, \

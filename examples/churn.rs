@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
-use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq};
+use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq, Precision};
 use dorafactors::util::Args;
 
 const PROMPT: [i32; 4] = [3, 1, 4, 1];
@@ -30,7 +30,7 @@ const STREAM_TOKENS: usize = 10;
 
 fn tiny_adapter(be: &ExecBackend, name: &str, seed: i32) -> Result<Adapter> {
     let info = be.config("tiny")?;
-    let init = be.init(InitReq { config: "tiny".into(), seed })?;
+    let init = be.init(InitReq { config: "tiny".into(), seed, precision: Precision::F32 })?;
     Adapter::new(name, &info, seed as u64, 0, init.params)
 }
 
@@ -89,6 +89,7 @@ fn main() -> Result<()> {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            precision: Precision::F32,
         },
     )?;
     tr.train_steps(4)?;

@@ -14,7 +14,7 @@ use std::fmt::Write as _;
 use anyhow::Result;
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::ExecBackend;
+use dorafactors::runtime::{ExecBackend, Precision};
 use dorafactors::util::table::Table;
 use dorafactors::util::Args;
 
@@ -53,6 +53,7 @@ fn main() -> Result<()> {
                     eval_every: 0,
                     train_workers: 0,
                     grad_accum: 1,
+                    precision: Precision::F32,
                 },
             )?;
             tr.train_steps(steps)?;

@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use dorafactors::coordinator::data::MarkovCorpus;
 use dorafactors::coordinator::{FastPath, Server, ServerCfg, Trainer, TrainerCfg};
-use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, InitReq};
+use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, InitReq, Precision};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -54,6 +54,7 @@ fn main() -> Result<()> {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            precision: Precision::F32,
         },
     )?;
     let ckpt_every = (train_steps / 2).max(1);
@@ -70,7 +71,8 @@ fn main() -> Result<()> {
 
     // --- phase 2: serve "tuned" alongside an untrained "base" adapter -----
     println!("\n== phase 2: serving 2 adapters, {n_clients} clients x {n_requests} requests ==");
-    let base_init = backend.init(InitReq { config: config.clone(), seed: 1234 })?;
+    let base_init =
+        backend.init(InitReq { config: config.clone(), seed: 1234, precision: Precision::F32 })?;
     let adapters = vec![
         store.load("tuned")?,
         Adapter::new("base", &info, 1234, 0, base_init.params)?,

@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use dorafactors::coordinator::{FastPath, GenOptions, Overloaded, Server, ServerCfg};
 use dorafactors::runtime::ops::AdapterVariant;
-use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq};
+use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq, Precision};
 use dorafactors::util::Args;
 
 /// Poll `probe` until it holds or `what` times out (scheduler gauges lag
@@ -56,7 +56,7 @@ fn main() -> Result<()> {
         ..ServerCfg::default()
     };
     let adapter = |name: &str, seed: i32, variant| -> Result<Adapter> {
-        let init = be.init(InitReq { config: config.clone(), seed })?;
+        let init = be.init(InitReq { config: config.clone(), seed, precision: Precision::F32 })?;
         Ok(Adapter::new(name, &info, seed as u64, 0, init.params)?.with_variant(variant))
     };
 

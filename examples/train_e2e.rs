@@ -29,7 +29,7 @@ use std::fmt::Write as _;
 use anyhow::{bail, Context, Result};
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::{AdapterStore, BackendSpec, ExecBackend};
+use dorafactors::runtime::{AdapterStore, BackendSpec, ExecBackend, Precision};
 use dorafactors::util::json;
 use dorafactors::util::Args;
 
@@ -123,6 +123,7 @@ fn main() -> Result<()> {
         eval_every,
         train_workers,
         grad_accum,
+        precision: Precision::parse(args.get_or("precision", "f32"))?,
     };
     // One construction path owns every engine connection: the trainer's
     // backend (and, data-parallel, its worker pool) — no throwaway

@@ -1,5 +1,5 @@
 //! Perf-trajectory diff: compare a fresh `perf_gate` BENCH JSON against
-//! a committed baseline snapshot (`bench_baselines/BENCH_pr8.json`) and
+//! a committed baseline snapshot (`bench_baselines/BENCH_pr10.json`) and
 //! render per-row deltas, so perf regressions show up as a reviewable
 //! table instead of silently drifting (bench_results/ is gitignored —
 //! the committed snapshot is the only history).
@@ -93,22 +93,35 @@ fn kernel_key(row: &Json) -> Result<String, JsonError> {
     }
 }
 
-/// Identity key of a `serving` row.
+/// Identity key of a `serving` row. Like the kernel variant column, the
+/// precision column joins the identity only when the row carries one:
+/// committed baselines that predate the precision axis keep matching
+/// their (implicitly f32) fresh counterparts.
 fn serving_key(row: &Json) -> Result<String, JsonError> {
     Ok(format!(
-        "serve pool={} path={}",
+        "serve pool={} path={}{}",
         row.get("pool")?.as_usize()?,
-        row.get("fast_path")?.as_str()?
+        row.get("fast_path")?.as_str()?,
+        precision_suffix(row)?
     ))
 }
 
 /// Identity key of a streaming `decode` row (tokens/sec trajectory).
 fn decode_key(row: &Json) -> Result<String, JsonError> {
     Ok(format!(
-        "decode pool={} path={}",
+        "decode pool={} path={}{}",
         row.get("pool")?.as_usize()?,
-        row.get("fast_path")?.as_str()?
+        row.get("fast_path")?.as_str()?,
+        precision_suffix(row)?
     ))
+}
+
+/// ` precision=<p>` when the row carries the column, `""` otherwise.
+fn precision_suffix(row: &Json) -> Result<String, JsonError> {
+    Ok(match row.opt("precision") {
+        Some(p) => format!(" precision={}", p.as_str()?),
+        None => String::new(),
+    })
 }
 
 /// Identity key of a merged-`cache` row (budgeted multi-tenant sweep).
@@ -350,6 +363,35 @@ mod tests {
                 "compose_fused 512x2048 variant=bora".to_string(),
             ]
         );
+    }
+
+    #[test]
+    fn precision_rows_key_separately_and_legacy_rows_keep_their_keys() {
+        let legacy = Json::obj(vec![
+            ("pool", Json::Num(1.0)),
+            ("fast_path", Json::Str("merged".into())),
+            ("median_s", Json::Num(0.001)),
+        ]);
+        // Pre-precision rows keep the exact key the committed baseline
+        // used (implicitly f32).
+        assert_eq!(serving_key(&legacy).unwrap(), "serve pool=1 path=merged");
+        let bf16 = Json::obj(vec![
+            ("pool", Json::Num(1.0)),
+            ("fast_path", Json::Str("merged".into())),
+            ("precision", Json::Str("bf16".into())),
+            ("median_s", Json::Num(0.0011)),
+        ]);
+        assert_eq!(serving_key(&bf16).unwrap(), "serve pool=1 path=merged precision=bf16");
+        assert_eq!(decode_key(&bf16).unwrap(), "decode pool=1 path=merged precision=bf16");
+        // Same pool + path, different precision: two distinct rows, so a
+        // diff of {legacy} vs {legacy, bf16} flags the bf16 row as new
+        // instead of colliding with the f32 row.
+        let base = Json::obj(vec![("serving", Json::Arr(vec![legacy.clone()]))]);
+        let fresh = Json::obj(vec![("serving", Json::Arr(vec![legacy, bf16]))]);
+        let d = diff(&base, &fresh).unwrap();
+        assert_eq!(d.rows.len(), 1);
+        assert!(d.only_baseline.is_empty());
+        assert_eq!(d.only_fresh, vec!["serve pool=1 path=merged precision=bf16".to_string()]);
     }
 
     #[test]

@@ -58,7 +58,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::ops::{DecodeStepMergedReq, DecodeStepReq, MergedParams, Variant};
+use crate::runtime::ops::{DecodeStepMergedReq, DecodeStepReq, MergedParams, Precision, Variant};
 use crate::runtime::{EnginePool, MergedCache, Tensor};
 use crate::util::lock_unpoisoned;
 use crate::util::rng::Rng;
@@ -291,6 +291,9 @@ enum Retire {
 /// sharing the [`EnginePool`] with the one-shot batcher.
 pub(crate) struct DecodeScheduler {
     pub(crate) config: String,
+    /// Serving precision threaded into every composed decode step (the
+    /// merged path carries it inside [`MergedParams`]).
+    pub(crate) precision: Precision,
     pub(crate) vocab: usize,
     /// Active-slot capacity (the config's `train_batch`; decode-step
     /// tokens tensors are validated against it by the engine).
@@ -424,6 +427,7 @@ impl DecodeScheduler {
             let merged = active[idxs[0]].merged.clone();
             let tokens: Vec<i32> = idxs.iter().map(|&i| active[i].last).collect();
             let config = self.config.clone();
+            let precision = self.precision;
             let tx = tx.clone();
             self.pool.submit(
                 &adapter,
@@ -440,6 +444,7 @@ impl DecodeScheduler {
                             config,
                             variant: Variant::Fused,
                             adapter: entry.variant,
+                            precision,
                             params: entry.params.clone(),
                             tokens: t,
                         }),

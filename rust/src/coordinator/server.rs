@@ -75,7 +75,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::models::forward;
 use crate::runtime::ops::{
-    AdapterParams, AdapterVariant, InferMergedReq, InferReq, InitReq, MergedParams, Variant,
+    AdapterParams, AdapterVariant, InferMergedReq, InferReq, InitReq, MergedParams, Precision,
+    Variant,
 };
 use crate::runtime::{
     Adapter, AdapterStore, BackendSpec, CachePolicy, ConfigInfo, EnginePool, ExecBackend,
@@ -162,6 +163,11 @@ pub struct ServerCfg {
     /// Eviction policy for the budgeted merged-weight cache
     /// (`--cache-policy`).
     pub cache_policy: CachePolicy,
+    /// Serving precision: `Bf16` serves bf16-rounded weights and
+    /// activations (merged replicas account HALF the f32 bytes under
+    /// [`ServerCfg::merge_budget`], so the same budget fits ~2× the
+    /// adapters); `F32` is the historical full-precision path.
+    pub precision: Precision,
 }
 
 impl Default for ServerCfg {
@@ -174,6 +180,7 @@ impl Default for ServerCfg {
             queue_depth: 32,
             merge_budget: None,
             cache_policy: CachePolicy::Lru,
+            precision: Precision::F32,
         }
     }
 }
@@ -533,6 +540,8 @@ pub struct Server {
     /// Effective fast path (policy after backend-support resolution).
     fast_path: FastPath,
     merge_mode: MergeMode,
+    /// Serving precision every entry is built and served under.
+    precision: Precision,
 }
 
 impl Server {
@@ -545,7 +554,11 @@ impl Server {
     pub fn start(spec: impl Into<BackendSpec>, cfg: ServerCfg) -> Result<Server> {
         let spec = spec.into();
         let backend = spec.connect()?;
-        let init = backend.init(InitReq { config: cfg.config.clone(), seed: 0 })?;
+        let init = backend.init(InitReq {
+            config: cfg.config.clone(),
+            seed: 0,
+            precision: cfg.precision,
+        })?;
         // Reuse the already-connected backend as the validation probe
         // (on PJRT a fresh connect would re-load the engine and
         // re-compile the infer executable for nothing).
@@ -606,6 +619,18 @@ impl Server {
                     cfg.config
                 );
             }
+            // Serving a checkpoint at a different precision than it was
+            // trained under silently changes its logits; reject up front
+            // (pre-precision checkpoints decode as f32 and serve under
+            // the default config unchanged).
+            if a.precision != cfg.precision {
+                bail!(
+                    "adapter {:?} was trained at precision {:?}, server is configured for {:?}",
+                    a.name,
+                    a.precision.as_str(),
+                    cfg.precision.as_str()
+                );
+            }
         }
         let spec = spec.into();
         let probe = spec.connect().context("connecting execution backend")?;
@@ -638,7 +663,8 @@ impl Server {
             .first()
             .map(|(n, _, _)| n.clone())
             .context("no adapters to serve")?;
-        let artifact = format!("infer_{}_fused", cfg.config);
+        let artifact =
+            format!("infer_{}_fused{}", cfg.config, cfg.precision.token_suffix());
         probe
             .ensure_artifact(&artifact)
             .with_context(|| format!("validating serving artifact {artifact:?}"))?;
@@ -647,7 +673,11 @@ impl Server {
         let fast_path = match cfg.fast_path {
             FastPath::Merged
                 if probe
-                    .ensure_artifact(&format!("infer_merged_{}", cfg.config))
+                    .ensure_artifact(&format!(
+                        "infer_merged_{}{}",
+                        cfg.config,
+                        cfg.precision.token_suffix()
+                    ))
                     .is_ok() =>
             {
                 FastPath::Merged
@@ -675,8 +705,15 @@ impl Server {
         let mut table = BTreeMap::new();
         for (name, params, variant) in adapters {
             validate_adapter_params(&info, &name, &params)?;
-            let (entry, merged) =
-                build_entry(&info, &name, params, variant, merge_mode, &mut merge_fallbacks);
+            let (entry, merged) = build_entry(
+                &info,
+                &name,
+                params,
+                variant,
+                cfg.precision,
+                merge_mode,
+                &mut merge_fallbacks,
+            );
             let entry = Arc::new(entry);
             // Register (and, eagerly-merged, promote) BEFORE the table
             // insert: a request can never observe the entry with its
@@ -729,9 +766,12 @@ impl Server {
                 let (btx, brx) = mpsc::channel::<BuildReq>();
                 let (b_info, b_cache, b_metrics) =
                     (info.clone(), cache.clone(), metrics.clone());
+                let b_precision = cfg.precision;
                 let join = std::thread::Builder::new()
                     .name("merge-builder".into())
-                    .spawn(move || run_merge_builder(brx, b_info, b_cache, b_metrics))
+                    .spawn(move || {
+                        run_merge_builder(brx, b_info, b_precision, b_cache, b_metrics)
+                    })
                     .context("spawning merge builder")?;
                 (Some(btx), Some(join))
             }
@@ -740,6 +780,7 @@ impl Server {
 
         let ctx = Arc::new(GroupCtx {
             config: cfg.config.clone(),
+            precision: cfg.precision,
             adapters: adapters.clone(),
             metrics: metrics.clone(),
             cache: cache.clone(),
@@ -765,6 +806,7 @@ impl Server {
         let decode = Arc::new(DecodeShared::new(cfg.queue_depth));
         let sched = DecodeScheduler {
             config: cfg.config.clone(),
+            precision: cfg.precision,
             vocab: info.vocab,
             slots: info.train_batch,
             shared: decode.clone(),
@@ -791,6 +833,7 @@ impl Server {
             default_adapter,
             fast_path,
             merge_mode,
+            precision: cfg.precision,
         })
     }
 
@@ -844,8 +887,15 @@ impl Server {
         crate::runtime::adapters::validate_name(name)?;
         params.validate(&self.info, name)?;
         let mut fallbacks = 0u64;
-        let (entry, merged) =
-            build_entry(&self.info, name, params, variant, self.merge_mode, &mut fallbacks);
+        let (entry, merged) = build_entry(
+            &self.info,
+            name,
+            params,
+            variant,
+            self.precision,
+            self.merge_mode,
+            &mut fallbacks,
+        );
         let entry = Arc::new(entry);
         // Register the new generation first: the cache releases the old
         // entry's residency (in-flight snapshots of the OLD entry keep
@@ -871,6 +921,13 @@ impl Server {
                 "adapter {name:?} targets config {:?}, server is configured for {:?}",
                 adapter.config,
                 self.info.name
+            );
+        }
+        if adapter.precision != self.precision {
+            bail!(
+                "adapter {name:?} was trained at precision {:?}, server is configured for {:?}",
+                adapter.precision.as_str(),
+                self.precision.as_str()
             );
         }
         self.load_adapter_variant(name, adapter.params, adapter.variant)
@@ -958,12 +1015,14 @@ fn build_entry(
     name: &str,
     params: AdapterParams,
     variant: AdapterVariant,
+    precision: Precision,
     mode: MergeMode,
     fallbacks: &mut u64,
 ) -> (AdapterEntry, Option<Arc<MergedParams>>) {
     let merged = match mode {
         MergeMode::Off | MergeMode::Lazy => None,
-        MergeMode::Eager => match forward::merge_adapter_params(info, &params, variant) {
+        MergeMode::Eager => match forward::merge_adapter_params(info, &params, variant, precision)
+        {
             Ok(m) => Some(Arc::new(m)),
             Err(e) => {
                 eprintln!(
@@ -999,11 +1058,13 @@ pub(crate) struct BuildReq {
 fn run_merge_builder(
     rx: Receiver<BuildReq>,
     info: ConfigInfo,
+    precision: Precision,
     cache: Arc<MergedCache>,
     metrics: Arc<Mutex<ServerMetrics>>,
 ) {
     while let Ok(req) = rx.recv() {
-        match forward::merge_adapter_params(&info, &req.entry.params, req.entry.variant) {
+        match forward::merge_adapter_params(&info, &req.entry.params, req.entry.variant, precision)
+        {
             Ok(m) => {
                 cache.promote(&req.name, req.entry.gen, &req.entry.merged, Arc::new(m));
             }
@@ -1064,6 +1125,7 @@ pub(crate) fn argmax(row: &[f32]) -> (i32, f32) {
 /// pool worker.
 struct GroupCtx {
     config: String,
+    precision: Precision,
     adapters: SharedAdapters,
     metrics: Arc<Mutex<ServerMetrics>>,
     cache: Arc<MergedCache>,
@@ -1204,6 +1266,7 @@ fn serve_group(
             config: ctx.config.clone(),
             variant: Variant::Fused,
             adapter: entry.variant,
+            precision: ctx.precision,
             params: entry.params.clone(),
             tokens,
         }),
@@ -1305,6 +1368,7 @@ mod tests {
             queue_depth: 8,
             merge_budget: None,
             cache_policy: CachePolicy::Lru,
+            precision: Precision::F32,
         }
     }
 
@@ -1315,7 +1379,9 @@ mod tests {
     fn tiny_adapter(name: &str, seed: i32) -> Adapter {
         let be = ExecBackend::native();
         let info = be.config("tiny").unwrap();
-        let init = be.init(InitReq { config: "tiny".into(), seed }).unwrap();
+        let init = be
+            .init(InitReq { config: "tiny".into(), seed, precision: Precision::F32 })
+            .unwrap();
         Adapter::new(name, &info, seed as u64, 0, init.params).unwrap()
     }
 
@@ -1611,6 +1677,7 @@ mod tests {
                 eval_every: 0,
                 train_workers: 0,
                 grad_accum: 1,
+                precision: Precision::F32,
             },
         )
         .unwrap();

@@ -51,7 +51,7 @@ use anyhow::{bail, Context, Result};
 use super::data::MarkovCorpus;
 use crate::runtime::ops::{
     parse_variant_spec, reduce_sample_grads, variant_token, AdapterParams, AdapterVariant,
-    ApplyUpdateReq, EvalReq, InitReq, OptState, TrainStepReq, Variant,
+    ApplyUpdateReq, EvalReq, InitReq, OptState, Precision, TrainStepReq, Variant,
 };
 use crate::runtime::{
     Adapter, AdapterStore, BackendSpec, ConfigInfo, EnginePool, ExecBackend, GradReducer,
@@ -80,6 +80,11 @@ pub struct TrainerCfg {
     /// Micro-steps accumulated per optimizer update (data-parallel path
     /// only; effective batch = `grad_accum * train_batch`).
     pub grad_accum: usize,
+    /// Operating precision: `F32` is the historical full-precision path;
+    /// `Bf16` stores/serves weights and activations rounded to bf16
+    /// while gradients and AdamW state stay f32 master weights (the
+    /// bf16-master-f32 scheme). Init and update ops always run f32.
+    pub precision: Precision,
 }
 
 impl Default for TrainerCfg {
@@ -92,6 +97,7 @@ impl Default for TrainerCfg {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            precision: Precision::F32,
         }
     }
 }
@@ -157,7 +163,11 @@ impl Trainer {
         parse_variant_spec(&cfg.variant)?;
         let pool = Self::pool_for(&backend, &cfg)?;
         let init = backend
-            .init(InitReq { config: cfg.config.clone(), seed: cfg.seed as i32 })
+            .init(InitReq {
+                config: cfg.config.clone(),
+                seed: cfg.seed as i32,
+                precision: cfg.precision,
+            })
             .with_context(|| format!("initializing config {}", cfg.config))?;
         Self::with_parts(backend, pool, cfg, init.params, 0)
     }
@@ -170,7 +180,11 @@ impl Trainer {
         let backend = spec.connect()?;
         let pool = Self::pool_for_spec(spec, &cfg)?;
         let init = backend
-            .init(InitReq { config: cfg.config.clone(), seed: cfg.seed as i32 })
+            .init(InitReq {
+                config: cfg.config.clone(),
+                seed: cfg.seed as i32,
+                precision: cfg.precision,
+            })
             .with_context(|| format!("initializing config {}", cfg.config))?;
         Self::with_parts(backend, pool, cfg, init.params, 0)
     }
@@ -268,6 +282,18 @@ impl Trainer {
                 adapter_variant.as_str()
             );
         }
+        // Same guard for precision: a bf16 checkpoint resumed at f32 (or
+        // vice versa) would silently change the rounding scheme mid-run.
+        // Pre-precision checkpoints decode as f32, so historic resumes
+        // under the default config still work.
+        if adapter.precision != cfg.precision {
+            bail!(
+                "adapter {:?} was trained at precision {:?}, trainer is configured for {:?}",
+                adapter.name,
+                adapter.precision.as_str(),
+                cfg.precision.as_str()
+            );
+        }
         Ok(())
     }
 
@@ -300,7 +326,12 @@ impl Trainer {
         // startup cost is paid.
         if pool.is_some() {
             for artifact in [
-                format!("loss_and_grads_{}_{}", info.name, variant_token(variant, adapter)),
+                format!(
+                    "loss_and_grads_{}_{}{}",
+                    info.name,
+                    variant_token(variant, adapter),
+                    cfg.precision.token_suffix()
+                ),
                 format!("apply_update_{}", info.name),
             ] {
                 backend.ensure_artifact(&artifact).with_context(|| {
@@ -415,7 +446,8 @@ impl Trainer {
             (*self.params).clone(),
         )?
         .with_provenance(workers, accum, accum * self.info.train_batch as u32)
-        .with_variant(self.adapter))
+        .with_variant(self.adapter)
+        .with_precision(self.cfg.precision))
     }
 
     /// Write the adapter to `store` under `name` every `every_steps`
@@ -455,6 +487,7 @@ impl Trainer {
             config: self.cfg.config.clone(),
             variant: self.variant,
             adapter: self.adapter,
+            precision: self.cfg.precision,
             params: self.params.clone(),
             opt: self.opt.clone(),
             tokens,
@@ -490,7 +523,12 @@ impl Trainer {
         let seq1 = self.info.seq + 1;
         let accum = self.cfg.grad_accum;
         let total_rows = accum * bs * self.info.seq;
-        let reducer = GradReducer::new(self.cfg.config.clone(), self.variant, self.adapter);
+        let reducer = GradReducer::new(
+            self.cfg.config.clone(),
+            self.variant,
+            self.adapter,
+            self.cfg.precision,
+        );
         let prev_step = self.opt.step;
         let first = self.history.len();
         for _ in 0..k {
@@ -559,6 +597,7 @@ impl Trainer {
             config: self.cfg.config.clone(),
             variant: self.variant,
             adapter: self.adapter,
+            precision: self.cfg.precision,
             params: self.params.clone(),
             tokens: self.eval_tokens.clone(),
         })?;
@@ -603,6 +642,7 @@ mod tests {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            precision: Precision::F32,
         }
     }
 
@@ -767,6 +807,39 @@ mod tests {
         let (mean, max) = Trainer::loss_delta(&dp, &rs);
         assert!(mean < 1e-5, "mean |dloss| {mean}");
         assert!(max < 1e-5, "max |dloss| {max}");
+    }
+
+    #[test]
+    fn bf16_trains_stamps_checkpoints_and_the_resume_guard_holds() {
+        let bf16 = |seed| TrainerCfg { precision: Precision::Bf16, ..tiny("fused", seed) };
+        // bf16-master-f32 training runs to finite positive losses.
+        let mut tr = Trainer::new(NativeEngine::new(), bf16(11)).unwrap();
+        tr.train_steps(8).unwrap();
+        assert!(tr.history.iter().all(|r| r.loss.is_finite() && r.loss > 0.0));
+        // bf16 rounds the forward trace, so its trajectory differs from
+        // f32 — but stays close (the master weights are f32).
+        let mut full = Trainer::new(NativeEngine::new(), tiny("fused", 11)).unwrap();
+        full.train_steps(8).unwrap();
+        let (mean, _max) = Trainer::loss_delta(&tr, &full);
+        assert!(mean < 0.1, "bf16 diverged from f32: mean |dloss| {mean}");
+        // Checkpoints record the operating precision.
+        let a = tr.to_adapter("half").unwrap();
+        assert_eq!(a.precision, Precision::Bf16);
+        // Resuming at the matching precision works; a mismatch bails
+        // before any training step runs.
+        assert!(Trainer::from_adapter(NativeEngine::new(), bf16(11), &a).is_ok());
+        let err =
+            Trainer::from_adapter(NativeEngine::new(), tiny("fused", 11), &a).unwrap_err();
+        assert!(format!("{err:#}").contains("precision"), "{err:#}");
+        // And the f32 checkpoint can't be resumed as bf16 either.
+        let f = full.to_adapter("full").unwrap();
+        assert!(Trainer::from_adapter(NativeEngine::new(), bf16(11), &f).is_err());
+        // bf16 run-to-run determinism: same cfg, bitwise-equal leaves.
+        let mut again = Trainer::new(NativeEngine::new(), bf16(11)).unwrap();
+        again.train_steps(8).unwrap();
+        for (x, y) in tr.trainable().iter().zip(again.trainable()) {
+            assert!(x.bitwise_eq(y), "bf16 training is not run-to-run deterministic");
+        }
     }
 
     // --- Data-parallel path (native pool; unconditional) ---

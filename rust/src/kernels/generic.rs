@@ -22,8 +22,20 @@ use crate::numerics::half::{round_bf16, round_f16, Dtype};
 /// Compile-time dtype marker: quantize an f32 intermediate to the storage
 /// precision. `q` is the identity for f32, so the f32 instantiations are
 /// exactly the historical flat kernels.
+///
+/// ```
+/// use dorafactors::kernels::generic::{Elem, F32, SoftBf16};
+///
+/// // f32 is the identity; soft-bf16 rounds after every op, so the
+/// // §3.1 collapse zone (g = 1 + 1e-3 rounds to exactly 1) appears in
+/// // the monomorphized loops with no separate bf16 code path.
+/// assert_eq!(F32::q(1.0 + 1e-3), 1.0 + 1e-3);
+/// assert_eq!(SoftBf16::q(1.0 + 1e-3), 1.0);
+/// ```
 pub trait Elem: Send + Sync + 'static {
+    /// The runtime [`Dtype`] this marker monomorphizes.
     const DTYPE: Dtype;
+    /// Quantize one f32 intermediate to the storage precision.
     fn q(x: f32) -> f32;
 }
 

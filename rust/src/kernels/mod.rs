@@ -27,7 +27,7 @@
 pub mod eager;
 pub mod fused;
 pub mod gemm;
-pub(crate) mod generic;
+pub mod generic;
 pub(crate) mod norm;
 pub mod tiled;
 

@@ -22,7 +22,7 @@ use anyhow::{bail, Context, Result};
 use dorafactors::bench::report;
 use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::runtime::ops::{parse_variant_spec, variant_token};
-use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, CachePolicy, Engine};
+use dorafactors::runtime::{manifest, AdapterStore, BackendSpec, CachePolicy, Engine, Precision};
 use dorafactors::util::Args;
 
 fn main() -> Result<()> {
@@ -42,22 +42,25 @@ fn main() -> Result<()> {
                  report <id>     one of: {}\n\
                  train           --config tiny|small|e2e \
                  --variant eager|fused|dora|rslora|bora|<kernel>-<adapter> \
-                 --steps N --seed S [--eval-every N] \
+                 --steps N --seed S [--eval-every N] [--precision f32|bf16] \
                  [--train-workers N (data-parallel pool)] [--grad-accum K]\n\
                  serve-demo      --config tiny|small --requests N \
-                 [--workers N] [--fast-path merged|composed] [--queue-depth N]\n\
+                 [--workers N] [--fast-path merged|composed] [--queue-depth N] \
+                 [--precision f32|bf16]\n\
                  generate        [--adapter NAME [--store DIR]] [--config tiny] \
                  [--prompt 1,2,3] [--max-tokens N] [--temperature T] [--top-k K] \
-                 [--seed S] [--top-logits K] [--workers N] [--fast-path merged|composed]\n\
+                 [--seed S] [--top-logits K] [--workers N] [--fast-path merged|composed] \
+                 [--precision f32|bf16 (default: the checkpoint's)]\n\
                  adapters list   [--store DIR]\n\
                  adapters train  --adapter NAME [--config tiny] [--variant SPEC] [--steps N] \
                  [--seed S] [--checkpoint-every N] [--store DIR] [--resume] \
-                 [--train-workers N] [--grad-accum K]\n\
+                 [--train-workers N] [--grad-accum K] [--precision f32|bf16]\n\
                  adapters serve  --adapter NAME[,NAME...] [--requests N] [--streams N] \
                  [--max-tokens N] [--store DIR] [--workers N (0 = all cores)] \
                  [--fast-path merged|composed] [--queue-depth N] [--metrics-every-ms N] \
-                 [--merge-budget-mb MB (0 = unbounded)] [--cache-policy lru|clock]\n\
-                 bench-diff      [--baseline bench_baselines/BENCH_pr8.json] \
+                 [--merge-budget-mb MB (0 = unbounded)] [--cache-policy lru|clock] \
+                 [--precision f32|bf16 (default: the checkpoints')]\n\
+                 bench-diff      [--baseline bench_baselines/BENCH_pr10.json] \
                  [--fresh bench_results/BENCH_ci.json] [--allow-new-keys]",
                 report::REPORT_IDS.join(" ")
             );
@@ -70,7 +73,7 @@ fn main() -> Result<()> {
 /// snapshot and print per-row deltas (the perf trajectory lives in git;
 /// bench_results/ is gitignored).
 fn cmd_bench_diff(args: &Args) -> Result<()> {
-    let baseline_path = args.get_or("baseline", "bench_baselines/BENCH_pr8.json");
+    let baseline_path = args.get_or("baseline", "bench_baselines/BENCH_pr10.json");
     let fresh_path = args.get_or("fresh", "bench_results/BENCH_ci.json");
     let read = |path: &str| -> Result<dorafactors::util::json::Json> {
         let text = std::fs::read_to_string(path).with_context(|| {
@@ -118,8 +121,8 @@ fn cmd_adapters_list(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "{:20} {:8} {:8} {:>6} {:>8} {:>7} {:>12}",
-        "name", "config", "variant", "rank", "step", "eff-bs", "bytes"
+        "{:20} {:8} {:8} {:9} {:>6} {:>8} {:>7} {:>12}",
+        "name", "config", "variant", "precision", "rank", "step", "eff-bs", "bytes"
     );
     for a in listed {
         let eff = if a.effective_batch == 0 {
@@ -128,10 +131,11 @@ fn cmd_adapters_list(args: &Args) -> Result<()> {
             a.effective_batch.to_string()
         };
         println!(
-            "{:20} {:8} {:8} {:>6} {:>8} {:>7} {:>12}",
+            "{:20} {:8} {:8} {:9} {:>6} {:>8} {:>7} {:>12}",
             a.name,
             a.config,
             a.variant.as_str(),
+            a.precision.as_str(),
             a.rank,
             a.step,
             eff,
@@ -159,6 +163,7 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 0),
         train_workers: args.get_usize("train-workers", 0),
         grad_accum: args.get_usize("grad-accum", 1),
+        precision: Precision::parse(args.get_or("precision", "f32"))?,
     };
     let steps = args.get_usize("steps", 50);
     let ckpt_every = args.get_usize("checkpoint-every", 0);
@@ -205,6 +210,20 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
             );
         }
         cfg.variant = variant_token(kernel, adapter.variant);
+        // And the stored precision: resuming a bf16 run at f32 (or the
+        // reverse) would change every subsequent step's numerics, so an
+        // explicit --precision that disagrees is an error; with no flag
+        // the checkpoint's precision carries forward (pre-precision
+        // checkpoints resume as f32).
+        if args.get("precision").is_some() && cfg.precision != adapter.precision {
+            bail!(
+                "--precision {} conflicts with checkpoint precision {}; \
+                 drop --precision to resume",
+                cfg.precision.as_str(),
+                adapter.precision.as_str()
+            );
+        }
+        cfg.precision = adapter.precision;
         Trainer::from_adapter_spec(&BackendSpec::auto(), cfg.clone(), &adapter)?
     } else {
         Trainer::auto(cfg.clone())?
@@ -213,10 +232,11 @@ fn cmd_adapters_train(args: &Args) -> Result<()> {
         tr.set_checkpointing(store.clone(), name.clone(), ckpt_every)?;
     }
     println!(
-        "training adapter {name:?}: config={} variant={} seed={} backend={} store={:?} \
-         train-workers={} grad-accum={}",
+        "training adapter {name:?}: config={} variant={} precision={} seed={} backend={} \
+         store={:?} train-workers={} grad-accum={}",
         cfg.config,
         cfg.variant,
+        cfg.precision.as_str(),
         cfg.seed,
         tr.backend_kind(),
         store.dir(),
@@ -254,6 +274,13 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
         .map(|name| store.load(name))
         .collect::<Result<Vec<_>>>()?;
     let config = adapters[0].config.clone();
+    // The server runs ONE precision instance-wide and every adapter must
+    // match it (start_with_adapters enforces this); with no flag the
+    // first checkpoint's precision carries over, like --config.
+    let precision = match args.get("precision") {
+        Some(p) => Precision::parse(p)?,
+        None => adapters[0].precision,
+    };
     // --merge-budget-mb 0 (the default) keeps the legacy unbounded
     // eager-merge behavior; any positive budget switches the merged path
     // to lazy async promotion under LRU/clock eviction.
@@ -270,6 +297,7 @@ fn cmd_adapters_serve(args: &Args) -> Result<()> {
             queue_depth: args.get_usize("queue-depth", 64),
             merge_budget,
             cache_policy: CachePolicy::parse(args.get_or("cache-policy", "lru"))?,
+            precision,
         },
         adapters,
     )?;
@@ -484,14 +512,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 0),
         train_workers: args.get_usize("train-workers", 0),
         grad_accum: args.get_usize("grad-accum", 1),
+        precision: Precision::parse(args.get_or("precision", "f32"))?,
     };
     let steps = args.get_usize("steps", 50);
     let mut tr = Trainer::auto(cfg.clone())?;
     println!(
-        "training config={} variant={} seed={} params={} backend={} compose={} ({}) \
+        "training config={} variant={} precision={} seed={} params={} backend={} compose={} ({}) \
          train-workers={} grad-accum={}",
         cfg.config,
         cfg.variant,
+        cfg.precision.as_str(),
         cfg.seed,
         tr.config_info().n_params,
         tr.backend_kind(),
@@ -532,27 +562,41 @@ fn cmd_generate(args: &Args) -> Result<()> {
         top_logits: args.get_usize("top-logits", 0),
         ..GenOptions::default()
     };
-    let cfg = |config: String| ServerCfg {
+    let cfg = |config: String, precision: Precision| ServerCfg {
         config,
         max_wait: Duration::from_millis(2),
         workers: args.get_usize("workers", 1),
         fast_path: FastPath::parse(args.get_or("fast-path", "merged"))
             .unwrap_or(FastPath::Merged),
         queue_depth: args.get_usize("queue-depth", 16),
+        precision,
         ..ServerCfg::default()
+    };
+    // With --adapter and no --precision the checkpoint's precision wins
+    // (pre-precision checkpoints serve as f32); without --adapter the
+    // flag picks the fresh-init server's precision.
+    let precision_flag = match args.get("precision") {
+        Some(p) => Some(Precision::parse(p)?),
+        None => None,
     };
     let (server, adapter_name) = match args.get("adapter") {
         Some(name) => {
             let adapter = store_from(args)?.load(name)?;
             let config = adapter.config.clone();
+            let precision = precision_flag.unwrap_or(adapter.precision);
             (
-                Server::start_with_adapters(BackendSpec::auto(), cfg(config), vec![adapter])?,
+                Server::start_with_adapters(
+                    BackendSpec::auto(),
+                    cfg(config, precision),
+                    vec![adapter],
+                )?,
                 name.to_string(),
             )
         }
         None => {
             let config = args.get_or("config", "tiny").to_string();
-            let server = Server::start(BackendSpec::auto(), cfg(config))?;
+            let precision = precision_flag.unwrap_or_default();
+            let server = Server::start(BackendSpec::auto(), cfg(config, precision))?;
             let name = server.default_adapter().to_string();
             (server, name)
         }
@@ -602,6 +646,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
             workers: args.get_usize("workers", 0),
             fast_path: FastPath::parse(args.get_or("fast-path", "merged"))?,
             queue_depth: args.get_usize("queue-depth", 64),
+            precision: Precision::parse(args.get_or("precision", "f32"))?,
             ..ServerCfg::default()
         },
     )?;

@@ -41,7 +41,7 @@ use crate::dora::config::{ActShape, ModuleShape};
 use crate::dora::norm_cpu::AllocTracker;
 use crate::kernels::{registry, BackendKind, ComposeKernel, KernelChoice, NormEngine};
 use crate::numerics::half::Dtype;
-use crate::runtime::ops::{AdapterParams, AdapterVariant, MergedParams};
+use crate::runtime::ops::{AdapterParams, AdapterVariant, MergedParams, Precision};
 use crate::runtime::{ConfigInfo, Tensor};
 use crate::util::rng::Rng;
 
@@ -200,14 +200,29 @@ pub fn merge_adapter_params(
     info: &ConfigInfo,
     params: &AdapterParams,
     adapter: AdapterVariant,
+    precision: Precision,
 ) -> Result<MergedParams> {
     params.validate(info, &format!("merge_{}", info.name))?;
     let d = info.d_model;
     let r = info.rank;
     let s = variant_scale(adapter, info);
+    let dt = precision.dtype();
     let norm = registry().norm(BackendKind::Fused);
-    let eps = Dtype::F32.division_eps();
+    let eps = dt.division_eps();
     let budget = DispatchEnv::default().norm_chunk_bytes;
+    // Under bf16 the merge reads the SAME bf16-rounded leaf views the
+    // composed forward serves from, so the merged replica reproduces the
+    // composed bf16 path (to reassociation), not a mixed f32/bf16 hybrid.
+    let qstore;
+    let params = if precision == Precision::F32 {
+        params
+    } else {
+        qstore = AdapterParams {
+            frozen: params.frozen.iter().map(|t| quantize_tensor(t, dt)).collect(),
+            trainable: params.trainable.iter().map(|t| quantize_tensor(t, dt)).collect(),
+        };
+        &qstore
+    };
     let mut layers = Vec::with_capacity(info.n_layers);
     for l in 0..info.n_layers {
         let w = params.frozen[1 + l].as_f32()?;
@@ -216,15 +231,18 @@ pub fn merge_adapter_params(
         let mag = params.trainable[3 * l + 2].as_f32()?;
         let mut tracker = AllocTracker::new();
         let shape = ModuleShape::new(d, d, r);
-        let c = norm.weight_norm(w, a, b, s, shape, budget, Dtype::F32, &mut tracker);
-        let g = crate::dora::norm_cpu::magnitude_divide(mag, &c, eps);
+        let c = norm.weight_norm(w, a, b, s, shape, budget, dt, &mut tracker);
+        let mut g = crate::dora::norm_cpu::magnitude_divide(mag, &c, eps);
+        quantize_buf(dt, &mut g);
         let g_col = if adapter == AdapterVariant::Bora {
             // Same zero-B trick as `layer_g_col`: both column norms run
             // the identical code path, so `g_col = 1` exactly at init.
             let b0 = vec![0f32; d * r];
-            let m_col = norm.weight_colnorm(w, a, &b0, s, shape, budget, Dtype::F32, &mut tracker);
-            let c_col = norm.weight_colnorm(w, a, b, s, shape, budget, Dtype::F32, &mut tracker);
-            Some(crate::dora::norm_cpu::magnitude_divide(&m_col, &c_col, eps))
+            let m_col = norm.weight_colnorm(w, a, &b0, s, shape, budget, dt, &mut tracker);
+            let c_col = norm.weight_colnorm(w, a, b, s, shape, budget, dt, &mut tracker);
+            let mut gc = crate::dora::norm_cpu::magnitude_divide(&m_col, &c_col, eps);
+            quantize_buf(dt, &mut gc);
+            Some(gc)
         } else {
             None
         };
@@ -248,9 +266,12 @@ pub fn merge_adapter_params(
                 }
             }
         }
+        // The replica is STORED at the serving precision — this is the
+        // halved-bytes object the merged cache accounts dtype-aware.
+        quantize_buf(dt, &mut merged);
         layers.push(Tensor::f32(vec![d, d], merged));
     }
-    Ok(MergedParams { embed: params.frozen[0].clone(), layers })
+    Ok(MergedParams { embed: params.frozen[0].clone(), layers, precision })
 }
 
 /// Merged-weight inference: last-position logits `[bs, vocab]` for a
@@ -268,6 +289,7 @@ pub fn merged_infer_logits(
         bail!("token {t} outside vocab 0..{}", info.vocab);
     }
     let e = merged.embed.as_f32()?;
+    let dt = merged.precision.dtype();
     let rows = tokens.len();
     let mut h = vec![0f32; rows * d];
     for (i, &t) in tokens.iter().enumerate() {
@@ -276,17 +298,26 @@ pub fn merged_infer_logits(
     }
     for layer in &merged.layers {
         let wp = layer.as_f32()?;
-        let y = matmul_nt(&h, wp, rows, d, d);
+        let mut y = matmul_nt(&h, wp, rows, d, d);
+        quantize_buf(dt, &mut y);
+        let mut t = vec![0f32; rows * d];
         for i in 0..rows * d {
-            h[i] += y[i].tanh();
+            t[i] = y[i].tanh();
         }
+        quantize_buf(dt, &mut t);
+        for i in 0..rows * d {
+            h[i] += t[i];
+        }
+        quantize_buf(dt, &mut h);
     }
     let mut last = vec![0f32; bs * d];
     for row in 0..bs {
         let src = (row * seq + seq - 1) * d;
         last[row * d..(row + 1) * d].copy_from_slice(&h[src..src + d]);
     }
-    Ok(matmul_nt(&last, e, bs, d, info.vocab))
+    let mut logits = matmul_nt(&last, e, bs, d, info.vocab);
+    quantize_buf(dt, &mut logits);
+    Ok(logits)
 }
 
 /// Merged-weight decode step: next-token logits `[n, vocab]` for `n`
@@ -338,17 +369,48 @@ fn scale_cols(h: &[f32], g_col: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
+/// Round a buffer in place to the storage dtype — the shape-fixed-point
+/// quantization of the `bf16-master-f32` scheme (DESIGN.md §3.11). A
+/// no-op for f32 (the f32 path stays bitwise-untouched); elementwise RNE
+/// otherwise, so the rounding itself is row-local and deterministic.
+fn quantize_buf(dt: Dtype, v: &mut [f32]) {
+    if dt != Dtype::F32 {
+        for x in v.iter_mut() {
+            *x = dt.quantize(*x);
+        }
+    }
+}
+
+/// Quantized copy of an f32 tensor (i32 tensors pass through unchanged).
+pub(crate) fn quantize_tensor(t: &Tensor, dt: Dtype) -> Tensor {
+    match t.as_f32() {
+        Ok(v) => Tensor::f32(t.shape.clone(), v.iter().map(|&x| dt.quantize(x)).collect()),
+        Err(_) => t.clone(),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The model
 // ---------------------------------------------------------------------------
 
 /// A borrowed view of one model's parameters plus its kernel handles.
+///
+/// Under [`Precision::Bf16`] ([`Self::with_precision`]) the model holds
+/// bf16-rounded COPIES of the leaves: the borrowed tensors stay the f32
+/// master weights (the optimizer updates those), while every forward
+/// read — and every shape-fixed activation — goes through the rounded
+/// view. That is the whole of the paper's "bf16 with f32 master weights"
+/// scheme at the model level.
 pub struct NativeModel<'a> {
     pub info: &'a ConfigInfo,
     frozen: &'a [Tensor],
     trainable: &'a [Tensor],
     kernels: VariantKernels,
     adapter: AdapterVariant,
+    precision: Precision,
+    /// bf16-rounded forward views of `frozen`/`trainable` (None for f32).
+    qfrozen: Option<Vec<Tensor>>,
+    qtrainable: Option<Vec<Tensor>>,
 }
 
 /// Per-layer activations saved by the training forward for the backward.
@@ -409,7 +471,16 @@ impl<'a> NativeModel<'a> {
                 info.trainable.len()
             );
         }
-        Ok(NativeModel { info, frozen, trainable, kernels, adapter: AdapterVariant::Dora })
+        Ok(NativeModel {
+            info,
+            frozen,
+            trainable,
+            kernels,
+            adapter: AdapterVariant::Dora,
+            precision: Precision::F32,
+            qfrozen: None,
+            qtrainable: None,
+        })
     }
 
     /// Re-type the model as an adapter variant ([`AdapterVariant::Dora`]
@@ -418,6 +489,50 @@ impl<'a> NativeModel<'a> {
     pub fn with_adapter(mut self, adapter: AdapterVariant) -> NativeModel<'a> {
         self.adapter = adapter;
         self
+    }
+
+    /// Re-type the model's numeric operating point ([`Precision::F32`] is
+    /// the [`Self::new`] default). `Bf16` snapshots bf16-rounded copies
+    /// of all leaves for the forward; the borrowed masters stay f32.
+    pub fn with_precision(mut self, precision: Precision) -> NativeModel<'a> {
+        self.precision = precision;
+        if precision == Precision::Bf16 {
+            let dt = precision.dtype();
+            self.qfrozen =
+                Some(self.frozen.iter().map(|t| quantize_tensor(t, dt)).collect());
+            self.qtrainable =
+                Some(self.trainable.iter().map(|t| quantize_tensor(t, dt)).collect());
+        } else {
+            self.qfrozen = None;
+            self.qtrainable = None;
+        }
+        self
+    }
+
+    /// The storage/activation dtype of this model's forward.
+    fn dtype(&self) -> Dtype {
+        self.precision.dtype()
+    }
+
+    /// Round a buffer at a shape-fixed point (no-op for f32).
+    fn q(&self, v: &mut [f32]) {
+        quantize_buf(self.dtype(), v);
+    }
+
+    /// The leaf tensor the FORWARD reads: the bf16 view when one exists,
+    /// the borrowed f32 master otherwise.
+    fn frozen_leaf(&self, i: usize) -> &Tensor {
+        match &self.qfrozen {
+            Some(v) => &v[i],
+            None => &self.frozen[i],
+        }
+    }
+
+    fn trainable_leaf(&self, i: usize) -> &Tensor {
+        match &self.qtrainable {
+            Some(v) => &v[i],
+            None => &self.trainable[i],
+        }
     }
 
     pub fn tier(&self) -> Tier {
@@ -434,18 +549,18 @@ impl<'a> NativeModel<'a> {
     }
 
     fn embed(&self) -> &[f32] {
-        self.frozen[0].as_f32().expect("embed is f32")
+        self.frozen_leaf(0).as_f32().expect("embed is f32")
     }
 
     fn layer_w(&self, l: usize) -> &[f32] {
-        self.frozen[1 + l].as_f32().expect("w is f32")
+        self.frozen_leaf(1 + l).as_f32().expect("w is f32")
     }
 
     fn layer_abm(&self, l: usize) -> (&[f32], &[f32], &[f32]) {
         (
-            self.trainable[3 * l].as_f32().expect("a is f32"),
-            self.trainable[3 * l + 1].as_f32().expect("b is f32"),
-            self.trainable[3 * l + 2].as_f32().expect("mag is f32"),
+            self.trainable_leaf(3 * l).as_f32().expect("a is f32"),
+            self.trainable_leaf(3 * l + 1).as_f32().expect("b is f32"),
+            self.trainable_leaf(3 * l + 2).as_f32().expect("mag is f32"),
         )
     }
 
@@ -472,10 +587,14 @@ impl<'a> NativeModel<'a> {
         Ok(h)
     }
 
-    /// One layer's norm + magnitude division (c detached).
+    /// One layer's norm + magnitude division (c detached). Under bf16 the
+    /// norm kernel quantizes its intermediates, the division uses the
+    /// half-precision epsilon (Appendix B), and `g` is rounded — it is a
+    /// stored activation of the forward.
     fn layer_g(&self, l: usize) -> (Vec<f32>, Vec<f32>) {
         let d = self.info.d_model;
         let s = self.scale();
+        let dt = self.dtype();
         let (a, b, mag) = self.layer_abm(l);
         let mut tracker = AllocTracker::new();
         let c = self.kernels.norm.weight_norm(
@@ -485,10 +604,11 @@ impl<'a> NativeModel<'a> {
             s,
             ModuleShape::new(d, d, self.info.rank),
             DispatchEnv::default().norm_chunk_bytes,
-            Dtype::F32,
+            dt,
             &mut tracker,
         );
-        let g = crate::dora::norm_cpu::magnitude_divide(mag, &c, Dtype::F32.division_eps());
+        let mut g = crate::dora::norm_cpu::magnitude_divide(mag, &c, dt.division_eps());
+        self.q(&mut g);
         (g, c)
     }
 
@@ -506,6 +626,7 @@ impl<'a> NativeModel<'a> {
         let d = self.info.d_model;
         let r = self.info.rank;
         let s = self.scale();
+        let dt = self.dtype();
         let (a, b, _) = self.layer_abm(l);
         let w = self.layer_w(l);
         let shape = ModuleShape::new(d, d, r);
@@ -513,14 +634,13 @@ impl<'a> NativeModel<'a> {
         let mut tracker = AllocTracker::new();
         let b0 = vec![0f32; d * r];
         let m_col =
-            self.kernels.norm.weight_colnorm(w, a, &b0, s, shape, budget, Dtype::F32, &mut tracker);
+            self.kernels.norm.weight_colnorm(w, a, &b0, s, shape, budget, dt, &mut tracker);
         let c_col =
-            self.kernels.norm.weight_colnorm(w, a, b, s, shape, budget, Dtype::F32, &mut tracker);
-        Some(crate::dora::norm_cpu::magnitude_divide(
-            &m_col,
-            &c_col,
-            Dtype::F32.division_eps(),
-        ))
+            self.kernels.norm.weight_colnorm(w, a, b, s, shape, budget, dt, &mut tracker);
+        let mut g_col =
+            crate::dora::norm_cpu::magnitude_divide(&m_col, &c_col, dt.division_eps());
+        self.q(&mut g_col);
+        Some(g_col)
     }
 
     /// Inference forward: tokens [bs*seq] -> hidden states [rows, d].
@@ -537,16 +657,29 @@ impl<'a> NativeModel<'a> {
             let (a, b, _) = self.layer_abm(l);
             // BoRA scales the module INPUT by the derived column gain;
             // the residual stream itself stays unscaled.
-            let hs = self.layer_g_col(l).map(|gc| scale_cols(&h, &gc, d));
+            let hs = self.layer_g_col(l).map(|gc| {
+                let mut v = scale_cols(&h, &gc, d);
+                self.q(&mut v);
+                v
+            });
             let hin: &[f32] = hs.as_deref().unwrap_or(&h);
-            let base = matmul_nt(hin, self.layer_w(l), rows, d, d);
-            let u = matmul_nt(hin, a, rows, d, r);
-            let lora = matmul_nt(&u, b, rows, r, d);
+            let mut base = matmul_nt(hin, self.layer_w(l), rows, d, d);
+            self.q(&mut base);
+            let mut u = matmul_nt(hin, a, rows, d, r);
+            self.q(&mut u);
+            let mut lora = matmul_nt(&u, b, rows, r, d);
+            self.q(&mut lora);
             let (g, _c) = self.layer_g(l);
-            self.kernels.compose().forward(&base, &lora, &g, s, act, Dtype::F32, &mut delta);
+            self.kernels.compose().forward(&base, &lora, &g, s, act, self.dtype(), &mut delta);
+            let mut t = vec![0f32; rows * d];
             for i in 0..rows * d {
-                h[i] += (base[i] + delta[i]).tanh();
+                t[i] = (base[i] + delta[i]).tanh();
             }
+            self.q(&mut t);
+            for i in 0..rows * d {
+                h[i] += t[i];
+            }
+            self.q(&mut h);
         }
         Ok(h)
     }
@@ -562,7 +695,9 @@ impl<'a> NativeModel<'a> {
             let src = (row * seq + seq - 1) * d;
             last[row * d..(row + 1) * d].copy_from_slice(&h[src..src + d]);
         }
-        Ok(matmul_nt(&last, self.embed(), bs, d, self.info.vocab))
+        let mut logits = matmul_nt(&last, self.embed(), bs, d, self.info.vocab);
+        self.q(&mut logits);
+        Ok(logits)
     }
 
     /// Composed-path decode step: next-token logits `[n, vocab]` for `n`
@@ -579,7 +714,9 @@ impl<'a> NativeModel<'a> {
         self.check_tokens(tokens)?;
         let (inputs, targets) = split_tokens(tokens, bs, seq);
         let h = self.hidden_forward(&inputs)?;
-        let logits = matmul_nt(&h, self.embed(), bs * seq, self.info.d_model, self.info.vocab);
+        let mut logits =
+            matmul_nt(&h, self.embed(), bs * seq, self.info.d_model, self.info.vocab);
+        self.q(&mut logits);
         let (loss, _) = xent_forward_backward(&logits, &targets, self.info.vocab);
         Ok(loss)
     }
@@ -612,23 +749,34 @@ impl<'a> NativeModel<'a> {
             // BoRA scales the module INPUT by the derived column gain;
             // the trace keeps the SCALED input (the matmul operand the
             // adapter gradients contract against).
-            let hs = g_col.as_ref().map(|gc| scale_cols(&h, gc, d));
+            let hs = g_col.as_ref().map(|gc| {
+                let mut v = scale_cols(&h, gc, d);
+                self.q(&mut v);
+                v
+            });
             let hin: &[f32] = hs.as_deref().unwrap_or(&h);
-            let base = matmul_nt(hin, self.layer_w(l), rows, d, d);
-            let u = matmul_nt(hin, a, rows, d, r);
-            let lora = matmul_nt(&u, b, rows, r, d);
+            let mut base = matmul_nt(hin, self.layer_w(l), rows, d, d);
+            self.q(&mut base);
+            let mut u = matmul_nt(hin, a, rows, d, r);
+            self.q(&mut u);
+            let mut lora = matmul_nt(&u, b, rows, r, d);
+            self.q(&mut lora);
             let (g, c) = self.layer_g(l);
             let mut delta = vec![0f32; rows * d];
             let mut inner = vec![0f32; rows * d];
             self.kernels
                 .compose()
-                .forward_dual(&base, &lora, &g, s, act, Dtype::F32, &mut delta, &mut inner);
+                .forward_dual(&base, &lora, &g, s, act, self.dtype(), &mut delta, &mut inner);
             let mut t = vec![0f32; rows * d];
-            let mut h_next = h.clone();
             for i in 0..rows * d {
                 t[i] = (base[i] + delta[i]).tanh();
+            }
+            self.q(&mut t);
+            let mut h_next = h.clone();
+            for i in 0..rows * d {
                 h_next[i] += t[i];
             }
+            self.q(&mut h_next);
             let traced_h = match hs {
                 Some(v) => v,
                 None => h,
@@ -636,7 +784,8 @@ impl<'a> NativeModel<'a> {
             layers.push(LayerTrace { h: traced_h, u, inner, t, g, c, g_col });
             h = h_next;
         }
-        let logits = matmul_nt(&h, self.embed(), rows, d, self.info.vocab);
+        let mut logits = matmul_nt(&h, self.embed(), rows, d, self.info.vocab);
+        self.q(&mut logits);
         let (loss_terms, d_logits) = xent_grad(&logits, targets, self.info.vocab, inv);
         let loss = xent_mean_loss(&loss_terms, rows);
         Ok(Trace { layers, h_final: h, d_logits, loss_terms, loss })
@@ -660,7 +809,12 @@ impl<'a> NativeModel<'a> {
         let s = self.scale();
         let rows = row1 - row0;
         let act = ActShape::new(rows, d);
-        let eps = Dtype::F32.division_eps();
+        // Gradients are f32 master-weight math at EVERY precision (the
+        // `bf16-master-f32` accumulate side): the kernels below run with
+        // Dtype::F32 over the bf16-rounded trace. Only the magnitude
+        // division epsilon follows the forward's dtype, so dmag matches
+        // the clamp the forward actually applied.
+        let eps = self.dtype().division_eps();
         let vocab = self.info.vocab;
         // dh = d_logits @ Embed  [rows, d].
         let d_logits = &trace.d_logits[row0 * vocab..row1 * vocab];
@@ -1050,11 +1204,13 @@ mod tests {
             });
         }
         let params = AdapterParams { frozen: leaves.frozen.clone(), trainable };
-        let merged = merge_adapter_params(&info, &params, AdapterVariant::Dora).unwrap();
+        let merged =
+            merge_adapter_params(&info, &params, AdapterVariant::Dora, Precision::F32).unwrap();
         assert_eq!(merged.layers.len(), info.n_layers);
         assert_eq!(merged.layers[0].shape, vec![info.d_model, info.d_model]);
         // The merge is deterministic (the hot-swap protocol relies on it).
-        let again = merge_adapter_params(&info, &params, AdapterVariant::Dora).unwrap();
+        let again =
+            merge_adapter_params(&info, &params, AdapterVariant::Dora, Precision::F32).unwrap();
         for (x, y) in merged.layers.iter().zip(&again.layers) {
             assert!(x.bitwise_eq(y));
         }
@@ -1077,9 +1233,13 @@ mod tests {
         // Bad tokens error instead of panicking.
         assert!(merged_infer_logits(&info, &merged, &[-1], 1, 1).is_err());
         // Malformed params error out of the merge.
-        assert!(
-            merge_adapter_params(&info, &AdapterParams::default(), AdapterVariant::Dora).is_err()
-        );
+        assert!(merge_adapter_params(
+            &info,
+            &AdapterParams::default(),
+            AdapterVariant::Dora,
+            Precision::F32
+        )
+        .is_err());
     }
 
     #[test]
@@ -1144,7 +1304,8 @@ mod tests {
         let tokens: Vec<i32> = (0..bs * seq).map(|i| (i % info.vocab) as i32).collect();
         let mut per_variant = Vec::new();
         for adapter in [AdapterVariant::RsLora, AdapterVariant::Bora] {
-            let merged = merge_adapter_params(&info, &params, adapter).unwrap();
+            let merged =
+                merge_adapter_params(&info, &params, adapter, Precision::F32).unwrap();
             let kernels = kernels_for(crate::runtime::ops::Variant::Fused, &info, false).unwrap();
             let model = NativeModel::new(&info, &params.frozen, &params.trainable, kernels)
                 .unwrap()

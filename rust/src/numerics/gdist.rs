@@ -15,14 +15,19 @@ use crate::util::stats;
 /// Summary of a g-value population.
 #[derive(Debug, Clone)]
 pub struct GDistribution {
+    /// Population size.
     pub n: usize,
+    /// Mean of the g values (paper: ≈ 1.0).
     pub mean: f64,
+    /// Standard deviation (paper: ≈ 0.0015).
     pub std: f64,
     /// Fraction with |g-1| < eps_bf16/2 (bf16 collapse zone).
     pub frac_bf16_zone: f64,
     /// Fraction with |g-1| < eps_f16/2 (fp16 collapse zone).
     pub frac_f16_zone: f64,
+    /// Smallest g in the population.
     pub min: f64,
+    /// Largest g in the population.
     pub max: f64,
 }
 
@@ -30,6 +35,45 @@ pub struct GDistribution {
 /// iff |g-1| < machine_eps(dt)/2, i.e. g rounds to exactly 1.
 pub fn in_collapse_zone(g: f64, dt: Dtype) -> bool {
     (g - 1.0).abs() < (dt.machine_eps() as f64) / 2.0
+}
+
+/// Cosine similarity of two equal-length f32 vectors, accumulated in f64.
+///
+/// This is the metric of the precision gates (DESIGN.md §3.11): the
+/// bf16-vs-f32 final logits of every config × adapter-variant × serving
+/// path must keep `cosine > 0.9999`. Accumulation runs in f64 so the
+/// metric itself adds no rounding noise at gate resolution.
+///
+/// A zero (or empty) vector on either side returns 0.0 — a dead output
+/// compared against anything reads as maximally dissimilar, so a gate
+/// fails loudly instead of propagating NaN.
+///
+/// ```
+/// use dorafactors::numerics::gdist::cosine;
+///
+/// let a = [1.0f32, 2.0, 3.0];
+/// let scaled: Vec<f32> = a.iter().map(|x| 2.0 * x).collect();
+/// assert!((cosine(&a, &scaled) - 1.0).abs() < 1e-12);
+/// assert!((cosine(&a, &[-1.0, -2.0, -3.0]) + 1.0).abs() < 1e-12);
+/// assert_eq!(cosine(&a, &[0.0; 3]), 0.0);
+/// ```
+///
+/// # Panics
+///
+/// Panics if the slices differ in length — gate inputs come from the
+/// same logit shape, so a mismatch is a harness bug, not data.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "cosine: length mismatch {} vs {}", a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
 }
 
 /// Analyze a population of g values.
@@ -90,6 +134,19 @@ mod tests {
         assert_eq!(d.mean, 1.0);
         assert_eq!(d.frac_bf16_zone, 1.0);
         assert_eq!(d.frac_f16_zone, 1.0);
+    }
+
+    #[test]
+    fn cosine_tracks_perturbation_size() {
+        // The gate metric behaves monotonically: a tiny relative
+        // perturbation keeps cosine above the 0.9999 gate, a gross one
+        // does not.
+        let a: Vec<f32> = (0..256).map(|i| ((i * 37) % 101) as f32 - 50.0).collect();
+        let tiny: Vec<f32> = a.iter().map(|x| x * 1.0001 + 1e-4).collect();
+        assert!(cosine(&a, &tiny) > 0.9999);
+        let gross: Vec<f32> = a.iter().map(|x| -x + 7.0).collect();
+        assert!(cosine(&a, &gross) < 0.0);
+        assert_eq!(cosine(&[], &[]), 0.0);
     }
 
     #[test]

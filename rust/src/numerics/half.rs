@@ -8,6 +8,20 @@
 /// Round an f32 to bfloat16 precision (RNE), returning the value as f32.
 ///
 /// bf16 = top 16 bits of f32 (1 sign, 8 exponent, 7 mantissa bits).
+///
+/// This is the rounding primitive of the `--precision bf16` operating
+/// point: the soft-bf16 forward applies it elementwise at every
+/// shape-fixed point (weights on snapshot, activations between ops), so
+/// CPU runs model bf16 *numerics* exactly without bf16 storage or speed.
+///
+/// ```
+/// use dorafactors::numerics::half::round_bf16;
+///
+/// // Exactly representable values pass through untouched...
+/// assert_eq!(round_bf16(1.5), 1.5);
+/// // ...while g = 1 + 1e-3 collapses to 1.0 (the §3.1 collapse zone):
+/// assert_eq!(round_bf16(1.0 + 1e-3), 1.0);
+/// ```
 #[inline]
 pub fn round_bf16(x: f32) -> f32 {
     let bits = x.to_bits();
@@ -118,8 +132,11 @@ pub const F16_EPS: f32 = 0.0009765625;
 /// Supported emulated dtypes for the stability sweeps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// IEEE 754 single precision — the identity under [`Dtype::quantize`].
     F32,
+    /// bfloat16: 8 exponent / 7 mantissa bits (f32 range, coarse steps).
     Bf16,
+    /// IEEE fp16: 5 exponent / 10 mantissa bits (narrow range, finer steps).
     F16,
 }
 

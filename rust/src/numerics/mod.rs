@@ -4,6 +4,13 @@
 //! Everything here is exact: bf16/fp16 rounding phenomena do not depend on
 //! hardware, so this module is the authoritative reproduction of the
 //! paper's numerical claims (§3.1, Figure 1).
+//!
+//! It is also the substrate of the runtime's `--precision bf16` operating
+//! point (DESIGN.md §3.11): [`half::round_bf16`] is the rounding primitive
+//! the soft-bf16 forward applies at every shape-fixed point, and
+//! [`gdist::cosine`] is the metric of the bf16-vs-f32 logit gates.
+
+#![warn(missing_docs)]
 
 pub mod gdist;
 pub mod half;

@@ -21,8 +21,11 @@ use super::half::Dtype;
 /// given |g-1| offset.
 #[derive(Debug, Clone)]
 pub struct StabilityPoint {
+    /// The |g-1| offset of this sweep point (log-spaced, 1e-6..1e-1).
     pub g_offset: f64,
+    /// Peak absolute error of the naive (all-quantized) form vs fp64.
     pub err_naive: f64,
+    /// Peak absolute error of the stable (fp32-intermediate) form vs fp64.
     pub err_stable: f64,
 }
 
@@ -39,6 +42,17 @@ pub fn compose_naive_quantized(base: f32, lora: f32, g: f32, s: f32, dt: Dtype) 
 /// g is NOT quantized to the storage dtype (it is produced by the fp32
 /// magnitude division, Eq. 6) — quantizing it is precisely the collapse
 /// the paper's design avoids.
+///
+/// ```
+/// use dorafactors::numerics::{stability, Dtype};
+///
+/// // g = 1 + 1e-3 with base = 100: truth is 0.1. The naive bf16 form
+/// // loses the whole correction; the stable form keeps it.
+/// let naive = stability::compose_naive_quantized(100.0, 0.0, 1.0 + 1e-3, 1.0, Dtype::Bf16);
+/// assert_eq!(naive, 0.0);
+/// let stable = stability::compose_stable_quantized(100.0, 0.0, 1.0 + 1e-3, 1.0, Dtype::Bf16);
+/// assert!((stable as f64 - 0.1).abs() < 5e-4);
+/// ```
 #[inline]
 pub fn compose_stable_quantized(base: f32, lora: f32, g: f32, s: f32, dt: Dtype) -> f32 {
     let delta = (g - 1.0) * base + g * (s * lora);

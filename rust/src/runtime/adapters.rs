@@ -31,7 +31,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::ops::{AdapterParams, AdapterVariant};
+use crate::runtime::ops::{AdapterParams, AdapterVariant, Precision};
 use crate::runtime::{ConfigInfo, Tensor, TensorData};
 use crate::util::json::{self, Json};
 
@@ -104,6 +104,12 @@ pub struct Adapter {
     /// Adapter variant the leaves were trained as. Additive header key:
     /// checkpoints written before the variant axis decode as `Dora`.
     pub variant: AdapterVariant,
+    /// Precision the adapter was trained under. Additive header key:
+    /// pre-precision checkpoints decode as `F32`. The leaves themselves
+    /// are ALWAYS stored as f32 master weights — precision records the
+    /// operating point (how forward/serving rounds), not the payload
+    /// encoding, so the bitwise round-trip guarantee is unchanged.
+    pub precision: Precision,
     /// Frozen + trainable leaves, manifest flatten order.
     pub params: AdapterParams,
 }
@@ -141,6 +147,7 @@ impl Adapter {
             grad_accum: 1,
             effective_batch: info.train_batch as u32,
             variant: AdapterVariant::Dora,
+            precision: Precision::F32,
             params,
         })
     }
@@ -162,6 +169,12 @@ impl Adapter {
     /// Record the adapter variant the leaves were trained as.
     pub fn with_variant(mut self, variant: AdapterVariant) -> Adapter {
         self.variant = variant;
+        self
+    }
+
+    /// Record the precision the adapter was trained under.
+    pub fn with_precision(mut self, precision: Precision) -> Adapter {
+        self.precision = precision;
         self
     }
 
@@ -209,6 +222,7 @@ impl Adapter {
             ("grad_accum", Json::Num(self.grad_accum as f64)),
             ("effective_batch", Json::Num(self.effective_batch as f64)),
             ("variant", Json::Str(self.variant.as_str().to_string())),
+            ("precision", Json::Str(self.precision.as_str().to_string())),
             ("frozen", leaf_meta(&self.params.frozen)),
             ("trainable", leaf_meta(&self.params.trainable)),
         ])
@@ -357,6 +371,16 @@ impl Adapter {
                 .context("parsing checkpoint adapter variant")?,
             None => AdapterVariant::Dora,
         };
+        // Precision follows the same additive contract: absent = f32
+        // (every pre-precision checkpoint trained at f32), unknown = an
+        // error — silently serving at the wrong operating point would
+        // break the bf16 determinism story.
+        let precision = match header.opt("precision") {
+            Some(v) => {
+                Precision::parse(v.as_str()?).context("parsing checkpoint precision")?
+            }
+            None => Precision::F32,
+        };
         Ok(Adapter {
             name,
             config: header.get("config")?.as_str()?.to_string(),
@@ -368,6 +392,7 @@ impl Adapter {
             grad_accum: prov("grad_accum", 1),
             effective_batch: prov("effective_batch", 0),
             variant,
+            precision,
             params: AdapterParams { frozen, trainable },
         })
     }
@@ -439,6 +464,9 @@ pub struct AdapterSummary {
     pub effective_batch: u32,
     /// Adapter variant (pre-variant checkpoints list as `Dora`).
     pub variant: AdapterVariant,
+    /// Precision the adapter was trained under (pre-precision
+    /// checkpoints list as `F32`).
+    pub precision: Precision,
     pub file_bytes: u64,
 }
 
@@ -596,6 +624,11 @@ impl AdapterStore {
                     .and_then(|v| v.as_str().ok())
                     .and_then(|s| AdapterVariant::parse(s).ok())
                     .unwrap_or_default(),
+                precision: header
+                    .opt("precision")
+                    .and_then(|v| v.as_str().ok())
+                    .and_then(|s| Precision::parse(s).ok())
+                    .unwrap_or_default(),
                 file_bytes,
             });
         }
@@ -706,6 +739,8 @@ mod tests {
         assert_eq!(old.effective_batch, 0);
         // The variant key is additive the same way: no key = DoRA.
         assert_eq!(old.variant, AdapterVariant::Dora);
+        // And precision: pre-precision checkpoints decode as f32.
+        assert_eq!(old.precision, Precision::F32);
     }
 
     #[test]
@@ -741,6 +776,43 @@ mod tests {
         bytes[body_end..].copy_from_slice(&sum.to_le_bytes());
         let err = Adapter::decode(&bytes).unwrap_err();
         assert!(format!("{err:#}").contains("adapter variant"), "{err:#}");
+    }
+
+    #[test]
+    fn precision_roundtrips_and_lists() {
+        let ts = TestStore::new("precision");
+        // Fresh adapters are f32 unless tagged.
+        assert_eq!(tiny_adapter("fresh", 1).precision, Precision::F32);
+        let a = tiny_adapter("half", 9).with_precision(Precision::Bf16);
+        ts.store.save(&a).unwrap();
+        let back = ts.store.load("half").unwrap();
+        assert_eq!(back.precision, Precision::Bf16);
+        // The payload is still f32 master weights regardless of the
+        // operating precision: the bitwise round trip is unchanged.
+        assert_bitwise_eq(&a, &back);
+        assert_eq!(a.encode(), back.encode());
+        // Header-level listing surfaces the precision without a payload
+        // decode.
+        ts.store.save(&tiny_adapter("plain", 2)).unwrap();
+        let listed = ts.store.list().unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].name, "half");
+        assert_eq!(listed[0].precision, Precision::Bf16);
+        assert_eq!(listed[1].name, "plain");
+        assert_eq!(listed[1].precision, Precision::F32);
+        // An unknown precision string in the header is a decode error,
+        // not a silent f32 fallback.
+        let mut bytes = a.encode();
+        let pos = bytes
+            .windows(18)
+            .position(|w| w == b"\"precision\":\"bf16\"")
+            .expect("precision value in header");
+        bytes[pos + 13..pos + 17].copy_from_slice(b"bf17");
+        let body_end = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..body_end]);
+        bytes[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = Adapter::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("precision"), "{err:#}");
     }
 
     fn assert_bitwise_eq(a: &Adapter, b: &Adapter) {

@@ -511,10 +511,12 @@ mod tests {
 
     #[test]
     fn typed_ops_run_against_native_and_mock() {
-        use crate::runtime::ops::{AdapterVariant, InferReq, InitReq, Variant};
+        use crate::runtime::ops::{AdapterVariant, InferReq, InitReq, Precision, Variant};
         let be = ExecBackend::native();
         let info = be.config("tiny").unwrap();
-        let init = be.init(InitReq { config: "tiny".into(), seed: 0 }).unwrap();
+        let init = be
+            .init(InitReq { config: "tiny".into(), seed: 0, precision: Precision::F32 })
+            .unwrap();
         assert_eq!(init.params.frozen.len(), info.frozen.len());
         let tokens = Tensor::i32(
             vec![info.train_batch, info.seq],
@@ -526,6 +528,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: params.clone(),
                 tokens: tokens.clone(),
             })
@@ -544,6 +547,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params,
                 tokens,
             })

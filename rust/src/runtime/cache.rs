@@ -157,12 +157,14 @@ impl MergeSlot {
     }
 }
 
-/// Bytes a merge occupies under cache accounting: f32 payload rounded to
+/// Bytes a merge occupies under cache accounting: the payload at the
+/// merge's storage precision (4 B/elem f32, 2 B/elem bf16) rounded to
 /// the allocator's granularity. Budget math done with this function
-/// matches [`CacheStats::resident_bytes`] exactly.
+/// matches [`CacheStats::resident_bytes`] exactly — a bf16 fleet fits
+/// ~2× the adapters of an f32 fleet under the same budget.
 pub fn accounted_bytes(m: &MergedParams) -> u64 {
     let elems = m.embed.elems() + m.layers.iter().map(|t| t.elems()).sum::<usize>();
-    CachingAllocator::round_up(elems as u64 * 4)
+    CachingAllocator::round_up(elems as u64 * m.precision.bytes_per_elem() as u64)
 }
 
 /// One resident merge's bookkeeping record.
@@ -491,6 +493,7 @@ impl MergedCache {
 mod tests {
     use super::*;
     use crate::memsim::peak_of_events;
+    use crate::runtime::ops::Precision;
     use crate::runtime::Tensor;
     use crate::util::prop::{check, prop_assert};
 
@@ -500,6 +503,16 @@ mod tests {
         Arc::new(MergedParams {
             embed: Tensor::f32(vec![elems], vec![0.0; elems]),
             layers: vec![],
+            precision: Precision::F32,
+        })
+    }
+
+    /// The same synthetic merge accounted at bf16 storage precision.
+    fn merged_bf16(elems: usize) -> Arc<MergedParams> {
+        Arc::new(MergedParams {
+            embed: Tensor::f32(vec![elems], vec![0.0; elems]),
+            layers: vec![],
+            precision: Precision::Bf16,
         })
     }
 
@@ -529,8 +542,38 @@ mod tests {
         let with_layers = MergedParams {
             embed: Tensor::f32(vec![128], vec![0.0; 128]),
             layers: vec![Tensor::f32(vec![128], vec![0.0; 128])],
+            precision: Precision::F32,
         };
         assert_eq!(accounted_bytes(&with_layers), 1024);
+    }
+
+    #[test]
+    fn bf16_merges_account_half_the_bytes_and_fit_twice_as_many() {
+        // 1024 f32 elements: 4096 B at f32, 2048 B at bf16 — the ISSUE's
+        // "bf16 merged-replica bytes ≈ ½ f32" serving contract.
+        assert_eq!(accounted_bytes(&merged(1024)), 4096);
+        assert_eq!(accounted_bytes(&merged_bf16(1024)), 2048);
+        // Under one 4096 B budget: two bf16 merges are co-resident where
+        // a second f32 merge would have evicted the first.
+        let cache = MergedCache::new(4096, CachePolicy::Lru);
+        cache.register("a", 1);
+        cache.register("b", 2);
+        let (sa, sb) = (slot(), slot());
+        assert_eq!(cache.promote("a", 1, &sa, merged_bf16(1024)), Promotion::Resident);
+        assert_eq!(cache.promote("b", 2, &sb, merged_bf16(1024)), Promotion::Resident);
+        let st = cache.stats();
+        assert_eq!(st.resident_count, 2, "bf16 fleet fits 2x adapters per budget");
+        assert_eq!(st.resident_bytes, 4096);
+        assert_eq!(st.evictions, 0);
+
+        let f32_cache = MergedCache::new(4096, CachePolicy::Lru);
+        f32_cache.register("a", 1);
+        f32_cache.register("b", 2);
+        let (fa, fb) = (slot(), slot());
+        assert_eq!(f32_cache.promote("a", 1, &fa, merged(1024)), Promotion::Resident);
+        assert_eq!(f32_cache.promote("b", 2, &fb, merged(1024)), Promotion::Resident);
+        assert_eq!(f32_cache.stats().resident_count, 1, "f32 pair must evict");
+        assert_eq!(f32_cache.stats().evictions, 1);
     }
 
     #[test]
@@ -709,8 +752,11 @@ mod tests {
                         cache.register(n, next_gen);
                     }
                     1 | 2 => {
-                        // Build + promote at the current generation.
-                        let m = merged(128 * g.usize_in(1, 3));
+                        // Build + promote at the current generation
+                        // (either storage precision — accounting must
+                        // hold for mixed-precision fleets too).
+                        let elems = 128 * g.usize_in(1, 3);
+                        let m = if g.bool() { merged_bf16(elems * 2) } else { merged(elems) };
                         cache.promote(n, gens[n], &slots[n], m);
                     }
                     3 => {

@@ -45,7 +45,7 @@ pub use ops::{
     ComposeResp, DecodeStepMergedReq, DecodeStepReq, DecodeStepResp, DoraLinearReq,
     DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq, InferReq, InferResp,
     InitReq, InitResp, LinearVariant, LossAndGradsReq, LossAndGradsResp, MergedParams, OptState,
-    SampleGrads, TrainStepReq, TrainStepResp, Variant,
+    Precision, SampleGrads, TrainStepReq, TrainStepResp, Variant,
 };
 pub use pool::{EnginePool, GradReducer, PoolJob};
 

@@ -39,7 +39,7 @@ use crate::runtime::ops::{
     ApplyUpdateResp, ComposeReq, ComposeResp, DecodeStepMergedReq, DecodeStepReq, DecodeStepResp,
     DoraLinearReq, DoraLinearResp, EngineOp, EngineOut, EvalReq, EvalResp, InferMergedReq,
     InferReq, InferResp, InitReq, InitResp, LinearVariant, LossAndGradsReq, LossAndGradsResp,
-    MergedParams, OptState, SampleGrads, TrainStepReq, TrainStepResp, Variant,
+    MergedParams, OptState, Precision, SampleGrads, TrainStepReq, TrainStepResp, Variant,
 };
 use crate::runtime::{ConfigInfo, Tensor};
 
@@ -167,14 +167,16 @@ impl NativeEngine {
                     format!("artifact {name:?}: expected {prefix}<cfg>_<variant>")
                 })?;
                 // The token is either a bare kernel variant ("fused" —
-                // the Dora names, unchanged) or "<kernel>-<adapter>".
+                // the Dora names, unchanged) or "<kernel>-<adapter>",
+                // optionally with a trailing "-bf16" precision suffix.
+                let (precision, variant) = Precision::split_token(variant);
                 let (variant, adapter) =
                     parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
                 let info = self.config(cfg)?;
                 return Ok(if train {
-                    ArtifactKind::Train(info, variant, adapter)
+                    ArtifactKind::Train(info, variant, adapter, precision)
                 } else {
-                    ArtifactKind::Eval(info, variant, adapter)
+                    ArtifactKind::Eval(info, variant, adapter, precision)
                 });
             }
         }
@@ -182,38 +184,45 @@ impl NativeEngine {
             let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
                 format!("artifact {name:?}: expected loss_and_grads_<cfg>_<variant>")
             })?;
+            let (precision, variant) = Precision::split_token(variant);
             let (variant, adapter) =
                 parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
-            return Ok(ArtifactKind::LossAndGrads(self.config(cfg)?, variant, adapter));
+            return Ok(ArtifactKind::LossAndGrads(self.config(cfg)?, variant, adapter, precision));
         }
         if let Some(cfg) = name.strip_prefix("apply_update_") {
             return Ok(ArtifactKind::ApplyUpdate(self.config(cfg)?));
         }
         // Checked before the generic infer grammar: "infer_merged_tiny"
-        // would otherwise parse as config "merged" + variant "tiny".
+        // would otherwise parse as config "merged" + variant "tiny". The
+        // merged ops carry the precision suffix on the config segment
+        // ("infer_merged_tiny-bf16") — there is no variant token.
         if let Some(cfg) = name.strip_prefix("infer_merged_") {
-            return Ok(ArtifactKind::InferMerged(self.config(cfg)?));
+            let (precision, cfg) = Precision::split_token(cfg);
+            return Ok(ArtifactKind::InferMerged(self.config(cfg)?, precision));
         }
         if let Some(rest) = name.strip_prefix("infer_") {
             let (cfg, variant) = rest
                 .rsplit_once('_')
                 .with_context(|| format!("artifact {name:?}: expected infer_<cfg>_<variant>"))?;
+            let (precision, variant) = Precision::split_token(variant);
             let (variant, adapter) =
                 parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
-            return Ok(ArtifactKind::Infer(self.config(cfg)?, variant, adapter));
+            return Ok(ArtifactKind::Infer(self.config(cfg)?, variant, adapter, precision));
         }
         // Same ordering hazard as infer: "decode_step_merged_tiny" would
         // otherwise parse as config "merged" + variant "tiny".
         if let Some(cfg) = name.strip_prefix("decode_step_merged_") {
-            return Ok(ArtifactKind::DecodeStepMerged(self.config(cfg)?));
+            let (precision, cfg) = Precision::split_token(cfg);
+            return Ok(ArtifactKind::DecodeStepMerged(self.config(cfg)?, precision));
         }
         if let Some(rest) = name.strip_prefix("decode_step_") {
             let (cfg, variant) = rest.rsplit_once('_').with_context(|| {
                 format!("artifact {name:?}: expected decode_step_<cfg>_<variant>")
             })?;
+            let (precision, variant) = Precision::split_token(variant);
             let (variant, adapter) =
                 parse_variant_spec(variant).with_context(|| format!("artifact {name:?}"))?;
-            return Ok(ArtifactKind::DecodeStep(self.config(cfg)?, variant, adapter));
+            return Ok(ArtifactKind::DecodeStep(self.config(cfg)?, variant, adapter, precision));
         }
         if let Some(variant) = name.strip_prefix("dora_linear_") {
             let variant = LinearVariant::parse(variant)
@@ -244,9 +253,13 @@ impl NativeEngine {
                 expect_inputs(name, inputs, 1)?;
                 expect_shape(name, "seed", &inputs[0], &[])?;
                 let seed = inputs[0].as_i32().context("init seed must be i32")?[0];
-                Ok(EngineOp::Init(InitReq { config: info.name.clone(), seed }))
+                Ok(EngineOp::Init(InitReq {
+                    config: info.name.clone(),
+                    seed,
+                    precision: Precision::F32,
+                }))
             }
-            ArtifactKind::Train(info, variant, adapter) => {
+            ArtifactKind::Train(info, variant, adapter, precision) => {
                 let nf = info.frozen.len();
                 let nt = info.trainable.len();
                 expect_inputs(name, inputs, nf + 3 * nt + 2)?;
@@ -257,6 +270,7 @@ impl NativeEngine {
                     config: info.name.clone(),
                     variant,
                     adapter,
+                    precision,
                     params: Arc::new(AdapterParams {
                         frozen: inputs[..nf].to_vec(),
                         trainable: inputs[nf..nf + nt].to_vec(),
@@ -269,7 +283,7 @@ impl NativeEngine {
                     tokens: inputs[nf + 3 * nt + 1].clone(),
                 }))
             }
-            ArtifactKind::LossAndGrads(info, variant, adapter) => {
+            ArtifactKind::LossAndGrads(info, variant, adapter, precision) => {
                 let nf = info.frozen.len();
                 let nt = info.trainable.len();
                 expect_inputs(name, inputs, nf + nt + 2)?;
@@ -283,6 +297,7 @@ impl NativeEngine {
                     config: info.name.clone(),
                     variant,
                     adapter,
+                    precision,
                     params: Arc::new(AdapterParams {
                         frozen: inputs[..nf].to_vec(),
                         trainable: inputs[nf..nf + nt].to_vec(),
@@ -308,27 +323,29 @@ impl NativeEngine {
                     grads: inputs[3 * nt + 1..].to_vec(),
                 }))
             }
-            ArtifactKind::Eval(info, variant, adapter) => {
+            ArtifactKind::Eval(info, variant, adapter, precision) => {
                 let (params, tokens) = split_params_tokens(info, name, inputs)?;
                 Ok(EngineOp::Eval(EvalReq {
                     config: info.name.clone(),
                     variant,
                     adapter,
+                    precision,
                     params,
                     tokens,
                 }))
             }
-            ArtifactKind::Infer(info, variant, adapter) => {
+            ArtifactKind::Infer(info, variant, adapter, precision) => {
                 let (params, tokens) = split_params_tokens(info, name, inputs)?;
                 Ok(EngineOp::Infer(InferReq {
                     config: info.name.clone(),
                     variant,
                     adapter,
+                    precision,
                     params,
                     tokens,
                 }))
             }
-            ArtifactKind::InferMerged(info) => {
+            ArtifactKind::InferMerged(info, precision) => {
                 let nl = info.n_layers;
                 expect_inputs(name, inputs, nl + 2)?;
                 Ok(EngineOp::InferMerged(InferMergedReq {
@@ -336,21 +353,23 @@ impl NativeEngine {
                     params: Arc::new(MergedParams {
                         embed: inputs[0].clone(),
                         layers: inputs[1..1 + nl].to_vec(),
+                        precision,
                     }),
                     tokens: inputs[nl + 1].clone(),
                 }))
             }
-            ArtifactKind::DecodeStep(info, variant, adapter) => {
+            ArtifactKind::DecodeStep(info, variant, adapter, precision) => {
                 let (params, tokens) = split_params_tokens(info, name, inputs)?;
                 Ok(EngineOp::DecodeStep(DecodeStepReq {
                     config: info.name.clone(),
                     variant,
                     adapter,
+                    precision,
                     params,
                     tokens,
                 }))
             }
-            ArtifactKind::DecodeStepMerged(info) => {
+            ArtifactKind::DecodeStepMerged(info, precision) => {
                 let nl = info.n_layers;
                 expect_inputs(name, inputs, nl + 2)?;
                 Ok(EngineOp::DecodeStepMerged(DecodeStepMergedReq {
@@ -358,6 +377,7 @@ impl NativeEngine {
                     params: Arc::new(MergedParams {
                         embed: inputs[0].clone(),
                         layers: inputs[1..1 + nl].to_vec(),
+                        precision,
                     }),
                     tokens: inputs[nl + 1].clone(),
                 }))
@@ -390,14 +410,14 @@ impl NativeEngine {
 /// Parsed artifact-name descriptor (the shim's grammar).
 enum ArtifactKind {
     Init(&'static ConfigInfo),
-    Train(&'static ConfigInfo, Variant, AdapterVariant),
-    LossAndGrads(&'static ConfigInfo, Variant, AdapterVariant),
+    Train(&'static ConfigInfo, Variant, AdapterVariant, Precision),
+    LossAndGrads(&'static ConfigInfo, Variant, AdapterVariant, Precision),
     ApplyUpdate(&'static ConfigInfo),
-    Eval(&'static ConfigInfo, Variant, AdapterVariant),
-    Infer(&'static ConfigInfo, Variant, AdapterVariant),
-    InferMerged(&'static ConfigInfo),
-    DecodeStep(&'static ConfigInfo, Variant, AdapterVariant),
-    DecodeStepMerged(&'static ConfigInfo),
+    Eval(&'static ConfigInfo, Variant, AdapterVariant, Precision),
+    Infer(&'static ConfigInfo, Variant, AdapterVariant, Precision),
+    InferMerged(&'static ConfigInfo, Precision),
+    DecodeStep(&'static ConfigInfo, Variant, AdapterVariant, Precision),
+    DecodeStepMerged(&'static ConfigInfo, Precision),
     DoraLinear(LinearVariant),
     Compose(Variant, usize, usize),
 }
@@ -483,7 +503,12 @@ fn run_init(info: &'static ConfigInfo, req: &InitReq) -> Result<InitResp> {
 /// `[k, bs, seq+1]` — the scan-over-steps contract, executed as k native
 /// steps.
 fn run_train(info: &'static ConfigInfo, req: &TrainStepReq) -> Result<TrainStepResp> {
-    let label = format!("train_{}_{}", info.name, variant_token(req.variant, req.adapter));
+    let label = format!(
+        "train_{}_{}{}",
+        info.name,
+        variant_token(req.variant, req.adapter),
+        req.precision.token_suffix()
+    );
     validate_params(info, &label, &req.params)?;
     let k = info.chunk_steps;
     let bs = info.train_batch;
@@ -521,7 +546,8 @@ fn run_train(info: &'static ConfigInfo, req: &TrainStepReq) -> Result<TrainStepR
         // with the view alive, the update after it drops.
         let (loss, grads) = {
             let model = NativeModel::new(info, &req.params.frozen, &params, kernels.clone())?
-                .with_adapter(req.adapter);
+                .with_adapter(req.adapter)
+                .with_precision(req.precision);
             model.loss_and_grads(block, bs)?
         };
         forward::adamw_step(&mut params, &mut m1, &mut m2, &grads, step0 + i as i32 + 1);
@@ -542,8 +568,12 @@ fn run_loss_and_grads(
     info: &'static ConfigInfo,
     req: &LossAndGradsReq,
 ) -> Result<LossAndGradsResp> {
-    let label =
-        format!("loss_and_grads_{}_{}", info.name, variant_token(req.variant, req.adapter));
+    let label = format!(
+        "loss_and_grads_{}_{}{}",
+        info.name,
+        variant_token(req.variant, req.adapter),
+        req.precision.token_suffix()
+    );
     validate_params(info, &label, &req.params)?;
     let seq1 = info.seq + 1;
     if req.tokens.shape.len() != 2 || req.tokens.shape[1] != seq1 || req.tokens.shape[0] == 0 {
@@ -556,7 +586,8 @@ fn run_loss_and_grads(
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let kernels = kernels_for(req.variant, info, true)?;
     let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
-        .with_adapter(req.adapter);
+        .with_adapter(req.adapter)
+        .with_precision(req.precision);
     let per_sample = model.loss_and_sample_grads(tokens, mb, req.total_rows)?;
     let samples = per_sample
         .into_iter()
@@ -620,14 +651,20 @@ fn run_apply_update(info: &'static ConfigInfo, req: &ApplyUpdateReq) -> Result<A
 
 /// Eval: mean loss over one held-out token block `[bs, seq+1]`.
 fn run_eval(info: &'static ConfigInfo, req: &EvalReq) -> Result<EvalResp> {
-    let label = format!("eval_{}_{}", info.name, variant_token(req.variant, req.adapter));
+    let label = format!(
+        "eval_{}_{}{}",
+        info.name,
+        variant_token(req.variant, req.adapter),
+        req.precision.token_suffix()
+    );
     validate_params(info, &label, &req.params)?;
     let bs = info.train_batch;
     expect_shape(&label, "tokens", &req.tokens, &[bs, info.seq + 1])?;
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let kernels = kernels_for(req.variant, info, false)?;
     let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
-        .with_adapter(req.adapter);
+        .with_adapter(req.adapter)
+        .with_precision(req.precision);
     let loss = model.eval_loss(tokens, bs)?;
     Ok(EvalResp { loss })
 }
@@ -635,7 +672,12 @@ fn run_eval(info: &'static ConfigInfo, req: &EvalReq) -> Result<EvalResp> {
 /// Infer: last-position logits `[bs, vocab]` for a token batch
 /// `[bs, seq]` (the Tier-2 serving path).
 fn run_infer(info: &'static ConfigInfo, req: &InferReq) -> Result<InferResp> {
-    let label = format!("infer_{}_{}", info.name, variant_token(req.variant, req.adapter));
+    let label = format!(
+        "infer_{}_{}{}",
+        info.name,
+        variant_token(req.variant, req.adapter),
+        req.precision.token_suffix()
+    );
     validate_params(info, &label, &req.params)?;
     let bs = info.train_batch;
     let seq = info.seq;
@@ -643,7 +685,8 @@ fn run_infer(info: &'static ConfigInfo, req: &InferReq) -> Result<InferResp> {
     let tokens = req.tokens.as_i32().context("tokens must be i32")?;
     let kernels = kernels_for(req.variant, info, false)?;
     let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
-        .with_adapter(req.adapter);
+        .with_adapter(req.adapter)
+        .with_precision(req.precision);
     let logits = model.infer_logits(tokens, bs, seq)?;
     Ok(InferResp { logits: Tensor::f32(vec![bs, info.vocab], logits) })
 }
@@ -651,7 +694,7 @@ fn run_infer(info: &'static ConfigInfo, req: &InferReq) -> Result<InferResp> {
 /// InferMerged: last-position logits over precomputed merged weights —
 /// the serving fast path (one matmul per layer, no norm/compose).
 fn run_infer_merged(info: &'static ConfigInfo, req: &InferMergedReq) -> Result<InferResp> {
-    let label = format!("infer_merged_{}", info.name);
+    let label = format!("infer_merged_{}{}", info.name, req.params.precision.token_suffix());
     validate_merged(info, &label, &req.params)?;
     let bs = info.train_batch;
     let seq = info.seq;
@@ -691,14 +734,19 @@ fn decode_tokens<'a>(
 /// are bitwise-independent of the co-resident rows: the continuous
 /// batcher's determinism contract rests on this op.
 fn run_decode_step(info: &'static ConfigInfo, req: &DecodeStepReq) -> Result<DecodeStepResp> {
-    let label =
-        format!("decode_step_{}_{}", info.name, variant_token(req.variant, req.adapter));
+    let label = format!(
+        "decode_step_{}_{}{}",
+        info.name,
+        variant_token(req.variant, req.adapter),
+        req.precision.token_suffix()
+    );
     validate_params(info, &label, &req.params)?;
     let tokens = decode_tokens(info, &label, &req.tokens)?;
     let n = tokens.len();
     let kernels = kernels_for(req.variant, info, false)?;
     let model = NativeModel::new(info, &req.params.frozen, &req.params.trainable, kernels)?
-        .with_adapter(req.adapter);
+        .with_adapter(req.adapter)
+        .with_precision(req.precision);
     let logits = model.decode_logits(tokens)?;
     Ok(DecodeStepResp { logits: Tensor::f32(vec![n, info.vocab], logits) })
 }
@@ -709,7 +757,8 @@ fn run_decode_step_merged(
     info: &'static ConfigInfo,
     req: &DecodeStepMergedReq,
 ) -> Result<DecodeStepResp> {
-    let label = format!("decode_step_merged_{}", info.name);
+    let label =
+        format!("decode_step_merged_{}{}", info.name, req.params.precision.token_suffix());
     validate_merged(info, &label, &req.params)?;
     let tokens = decode_tokens(info, &label, &req.tokens)?;
     let n = tokens.len();
@@ -842,7 +891,11 @@ mod tests {
         let eng = NativeEngine::new();
         let via_shim = eng.run("init_tiny", &[Tensor::scalar_i32(3)]).unwrap();
         let via_typed = match eng
-            .execute(&EngineOp::Init(InitReq { config: "tiny".into(), seed: 3 }))
+            .execute(&EngineOp::Init(InitReq {
+                config: "tiny".into(),
+                seed: 3,
+                precision: Precision::F32,
+            }))
             .unwrap()
         {
             EngineOut::Init(r) => r,
@@ -918,6 +971,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: Arc::new(params.clone()),
                 opt: opt.clone(),
                 tokens: tokens.clone(),
@@ -970,6 +1024,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: Arc::new(params.clone()),
                 opt: OptState::zeros_like(&params.trainable),
                 tokens: Tensor::i32(vec![k, bs, seq1], block.clone()),
@@ -995,6 +1050,7 @@ mod tests {
                     config: "tiny".into(),
                     variant: Variant::Fused,
                     adapter: AdapterVariant::Dora,
+                    precision: Precision::F32,
                     params: Arc::new(step_params),
                     tokens: Tensor::i32(
                         vec![bs, seq1],
@@ -1067,6 +1123,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: Arc::new(AdapterParams {
                     frozen: leaves[..nf].to_vec(),
                     trainable: leaves[nf..].to_vec(),
@@ -1174,6 +1231,17 @@ mod tests {
         assert!(!eng.supports("decode_step_tiny_nope"));
         assert!(!eng.supports("decode_step_merged_nocfg"));
         assert!(eng.supports("compose_fused_512x2048"));
+        // Precision-suffixed names: "-bf16" rides on the variant token
+        // (or the merged ops' config segment) and composes with the
+        // adapter-variant grammar.
+        assert!(eng.supports("train_tiny_fused-bf16"));
+        assert!(eng.supports("infer_tiny_fused-rslora-bf16"));
+        assert!(eng.supports("loss_and_grads_tiny_eager-bora-bf16"));
+        assert!(eng.supports("infer_merged_tiny-bf16"));
+        assert!(eng.supports("decode_step_merged_tiny-bf16"));
+        assert!(eng.supports("decode_step_tiny_fused-bf16"));
+        assert!(!eng.supports("init_tiny-bf16")); // init is always f32 masters
+        assert!(!eng.supports("train_tiny_bf16")); // precision is a suffix, not a variant
         // Input-count mismatch is an error, not a panic.
         assert!(eng.run("init_tiny", &[]).is_err());
     }
@@ -1241,6 +1309,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: Arc::new(AdapterParams::default()),
                 tokens: Tensor::i32(vec![bs, info.seq], vec![1; bs * info.seq]),
             }))
@@ -1264,6 +1333,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: Arc::new(params.clone()),
                 tokens: tokens.clone(),
             }))
@@ -1272,9 +1342,13 @@ mod tests {
             EngineOut::Infer(r) => r,
             other => panic!("wrong response kind: {other:?}"),
         };
-        let merged =
-            crate::models::forward::merge_adapter_params(info, &params, AdapterVariant::Dora)
-                .unwrap();
+        let merged = crate::models::forward::merge_adapter_params(
+            info,
+            &params,
+            AdapterVariant::Dora,
+            Precision::F32,
+        )
+        .unwrap();
         let fast = match eng
             .execute(&EngineOp::InferMerged(InferMergedReq {
                 config: "tiny".into(),
@@ -1300,6 +1374,7 @@ mod tests {
         let short = MergedParams {
             embed: merged.embed.clone(),
             layers: merged.layers[..1].to_vec(),
+            precision: Precision::F32,
         };
         let err = eng
             .execute(&EngineOp::InferMerged(InferMergedReq {
@@ -1338,6 +1413,7 @@ mod tests {
                     config: "tiny".into(),
                     variant: Variant::Fused,
                     adapter: AdapterVariant::Dora,
+                    precision: Precision::F32,
                     params: params.clone(),
                     tokens: Tensor::i32(vec![n], toks),
                 }))
@@ -1369,6 +1445,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: params.clone(),
                 tokens: Tensor::i32(vec![bs, info.seq], prompt),
             }))
@@ -1386,6 +1463,7 @@ mod tests {
                 info,
                 &params,
                 AdapterVariant::Dora,
+                Precision::F32,
             )
             .unwrap(),
         );
@@ -1419,6 +1497,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter: AdapterVariant::Dora,
+                precision: Precision::F32,
                 params: params.clone(),
                 tokens,
             }))

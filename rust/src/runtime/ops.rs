@@ -140,6 +140,89 @@ pub fn parse_variant_spec(s: &str) -> Result<(Variant, AdapterVariant)> {
     )
 }
 
+/// The end-to-end numeric operating point of a run (ROADMAP open item 2;
+/// the paper's §eval bf16 measurement setting). Orthogonal to both
+/// [`Variant`] (eager/fused kernel path) and [`AdapterVariant`] (compose
+/// math): every (kernel, adapter) pair runs at either precision.
+///
+/// * `F32` — everything f32. The default; bitwise-identical to the
+///   pre-precision code (committed golden fixtures pin this path).
+/// * `Bf16` — the paper's "bf16 with f32 master weights" scheme: weights
+///   and activations round to soft-bf16 (round-to-nearest-even via
+///   `numerics::half`) at every shape-fixed point of the forward, while
+///   gradients, AdamW moments, and the trainable master leaves stay f32
+///   and the f64 fixed-order loss/grad reduction is unchanged. Rounding
+///   is elementwise on shape-fixed tensors, so bf16 runs inherit the f32
+///   path's bitwise run-to-run reproducibility and worker-count
+///   invariance (DESIGN.md §3.11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 2] = [Precision::F32, Precision::Bf16];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI `--precision` spec. `bf16-master-f32` is accepted as
+    /// an explicit alias for `bf16` (there is no bf16 mode WITHOUT f32
+    /// master weights — the alias just names the scheme).
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bf16" | "bf16-master-f32" => Ok(Precision::Bf16),
+            other => bail!("precision must be f32|bf16, got {other:?}"),
+        }
+    }
+
+    /// The storage/activation dtype the forward quantizes to.
+    pub fn dtype(self) -> crate::numerics::half::Dtype {
+        match self {
+            Precision::F32 => crate::numerics::half::Dtype::F32,
+            Precision::Bf16 => crate::numerics::half::Dtype::Bf16,
+        }
+    }
+
+    /// Bytes per element a merged-weight replica is accounted at (the
+    /// cache/memsim byte model): f32 = 4, bf16 = 2 — a bf16 fleet fits
+    /// ~2x the adapters under the same cache budget.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+
+    /// Additive artifact-name suffix: f32 renders the historic names
+    /// unchanged (golden fixtures and pinned manifests stay valid), bf16
+    /// appends `-bf16` to the variant token (`train_tiny_fused-bf16`) or,
+    /// for merged ops, to the config segment (`infer_merged_tiny-bf16`).
+    /// `-` cannot appear in a config name, so the suffix never collides.
+    pub fn token_suffix(self) -> &'static str {
+        match self {
+            Precision::F32 => "",
+            Precision::Bf16 => "-bf16",
+        }
+    }
+
+    /// Strip the optional precision suffix off an artifact token — the
+    /// parse-side inverse of [`Precision::token_suffix`].
+    pub fn split_token(token: &str) -> (Precision, &str) {
+        match token.strip_suffix("-bf16") {
+            Some(rest) => (Precision::Bf16, rest),
+            None => (Precision::F32, token),
+        }
+    }
+}
+
 /// The four single-module configurations of the paper's §1 table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinearVariant {
@@ -259,6 +342,11 @@ pub struct MergedParams {
     pub embed: Tensor,
     /// Per-layer `[d, d]` merged projection weights, layer order.
     pub layers: Vec<Tensor>,
+    /// Numeric operating point the replica was merged AT: `Bf16` replicas
+    /// hold bf16-rounded values (in f32 containers) and are accounted at
+    /// 2 bytes/elem by the merged cache; serving rounds their activations
+    /// at the same shape-fixed points as the composed bf16 path.
+    pub precision: Precision,
 }
 
 impl MergedParams {
@@ -290,10 +378,16 @@ impl OptState {
 }
 
 /// Seeded in-graph parameter init for a named config.
+///
+/// `precision` rides along for provenance (the trainer stamps it into
+/// checkpoints), but init emits f32 MASTER leaves at every precision —
+/// under `bf16-master-f32` the rounding happens at forward time, never
+/// in the stored masters — so one `init_<cfg>` artifact serves both.
 #[derive(Debug, Clone)]
 pub struct InitReq {
     pub config: String,
     pub seed: i32,
+    pub precision: Precision,
 }
 
 #[derive(Debug, Clone)]
@@ -319,6 +413,7 @@ pub struct TrainStepReq {
     pub config: String,
     pub variant: Variant,
     pub adapter: AdapterVariant,
+    pub precision: Precision,
     pub params: Arc<AdapterParams>,
     pub opt: OptState,
     pub tokens: Tensor,
@@ -370,6 +465,7 @@ pub struct LossAndGradsReq {
     pub config: String,
     pub variant: Variant,
     pub adapter: AdapterVariant,
+    pub precision: Precision,
     pub params: Arc<AdapterParams>,
     /// `[mb, seq+1]` micro-batch token block.
     pub tokens: Tensor,
@@ -560,6 +656,7 @@ pub struct EvalReq {
     pub config: String,
     pub variant: Variant,
     pub adapter: AdapterVariant,
+    pub precision: Precision,
     pub params: Arc<AdapterParams>,
     pub tokens: Tensor,
 }
@@ -587,6 +684,7 @@ pub struct InferReq {
     pub config: String,
     pub variant: Variant,
     pub adapter: AdapterVariant,
+    pub precision: Precision,
     pub params: Arc<AdapterParams>,
     pub tokens: Tensor,
 }
@@ -645,6 +743,7 @@ pub struct DecodeStepReq {
     pub config: String,
     pub variant: Variant,
     pub adapter: AdapterVariant,
+    pub precision: Precision,
     pub params: Arc<AdapterParams>,
     /// `[n]` i32 — the newest token of each active request.
     pub tokens: Tensor,
@@ -786,24 +885,43 @@ impl EngineOp {
     pub fn artifact_name(&self) -> Result<String> {
         Ok(match self {
             EngineOp::Init(r) => format!("init_{}", r.config),
-            EngineOp::TrainStep(r) => {
-                format!("train_{}_{}", r.config, variant_token(r.variant, r.adapter))
-            }
-            EngineOp::LossAndGrads(r) => {
-                format!("loss_and_grads_{}_{}", r.config, variant_token(r.variant, r.adapter))
-            }
+            EngineOp::TrainStep(r) => format!(
+                "train_{}_{}{}",
+                r.config,
+                variant_token(r.variant, r.adapter),
+                r.precision.token_suffix()
+            ),
+            EngineOp::LossAndGrads(r) => format!(
+                "loss_and_grads_{}_{}{}",
+                r.config,
+                variant_token(r.variant, r.adapter),
+                r.precision.token_suffix()
+            ),
             EngineOp::ApplyUpdate(r) => format!("apply_update_{}", r.config),
-            EngineOp::Eval(r) => {
-                format!("eval_{}_{}", r.config, variant_token(r.variant, r.adapter))
+            EngineOp::Eval(r) => format!(
+                "eval_{}_{}{}",
+                r.config,
+                variant_token(r.variant, r.adapter),
+                r.precision.token_suffix()
+            ),
+            EngineOp::Infer(r) => format!(
+                "infer_{}_{}{}",
+                r.config,
+                variant_token(r.variant, r.adapter),
+                r.precision.token_suffix()
+            ),
+            EngineOp::InferMerged(r) => {
+                format!("infer_merged_{}{}", r.config, r.params.precision.token_suffix())
             }
-            EngineOp::Infer(r) => {
-                format!("infer_{}_{}", r.config, variant_token(r.variant, r.adapter))
+            EngineOp::DecodeStep(r) => format!(
+                "decode_step_{}_{}{}",
+                r.config,
+                variant_token(r.variant, r.adapter),
+                r.precision.token_suffix()
+            ),
+            EngineOp::DecodeStepMerged(r) => {
+                format!("decode_step_merged_{}{}", r.config, r.params.precision.token_suffix())
             }
-            EngineOp::InferMerged(r) => format!("infer_merged_{}", r.config),
-            EngineOp::DecodeStep(r) => {
-                format!("decode_step_{}_{}", r.config, variant_token(r.variant, r.adapter))
-            }
-            EngineOp::DecodeStepMerged(r) => format!("decode_step_merged_{}", r.config),
             EngineOp::DoraLinear(r) => format!("dora_linear_{}", r.variant.as_str()),
             EngineOp::Compose(r) => {
                 if r.base.shape.len() != 2 {
@@ -1059,6 +1177,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter,
+                precision: Precision::F32,
                 params: params.clone(),
                 tokens: Tensor::i32(vec![1, 2], vec![0, 1]),
             })
@@ -1072,6 +1191,7 @@ mod tests {
             config: "tiny".into(),
             variant: Variant::Fused,
             adapter: AdapterVariant::Bora,
+            precision: Precision::F32,
             params: params.clone(),
             opt: OptState::default(),
             tokens: Tensor::i32(vec![1, 1, 2], vec![0, 1]),
@@ -1081,6 +1201,7 @@ mod tests {
             config: "tiny".into(),
             variant: Variant::Fused,
             adapter: AdapterVariant::RsLora,
+            precision: Precision::F32,
             params,
             tokens: Tensor::i32(vec![2, 3], vec![0; 6]),
             total_rows: 64,
@@ -1089,8 +1210,82 @@ mod tests {
     }
 
     #[test]
+    fn precision_parses_and_suffixes_artifact_names() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("bf16-master-f32").unwrap(), Precision::Bf16);
+        assert!(Precision::parse("fp16").is_err());
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::F32.bytes_per_elem(), 4);
+        assert_eq!(Precision::Bf16.bytes_per_elem(), 2);
+        // Suffix/split round-trips for every (token, precision) pair.
+        for p in Precision::ALL {
+            for tok in ["fused", "eager-rslora", "fused-bora"] {
+                let rendered = format!("{tok}{}", p.token_suffix());
+                assert_eq!(Precision::split_token(&rendered), (p, tok));
+            }
+        }
+
+        let t = |n: usize| Tensor::f32(vec![n], vec![0.0; n]);
+        let params = Arc::new(AdapterParams { frozen: vec![t(2)], trainable: vec![t(3)] });
+        let infer = |precision: Precision, adapter: AdapterVariant| {
+            EngineOp::Infer(InferReq {
+                config: "tiny".into(),
+                variant: Variant::Fused,
+                adapter,
+                precision,
+                params: params.clone(),
+                tokens: Tensor::i32(vec![1, 2], vec![0, 1]),
+            })
+        };
+        // f32 renders the historic names; bf16 appends the suffix.
+        assert_eq!(
+            infer(Precision::F32, AdapterVariant::Dora).artifact_name().unwrap(),
+            "infer_tiny_fused"
+        );
+        assert_eq!(
+            infer(Precision::Bf16, AdapterVariant::Dora).artifact_name().unwrap(),
+            "infer_tiny_fused-bf16"
+        );
+        assert_eq!(
+            infer(Precision::Bf16, AdapterVariant::RsLora).artifact_name().unwrap(),
+            "infer_tiny_fused-rslora-bf16"
+        );
+        let train = EngineOp::TrainStep(TrainStepReq {
+            config: "tiny".into(),
+            variant: Variant::Fused,
+            adapter: AdapterVariant::Dora,
+            precision: Precision::Bf16,
+            params: params.clone(),
+            opt: OptState::default(),
+            tokens: Tensor::i32(vec![1, 1, 2], vec![0, 1]),
+        });
+        assert_eq!(train.artifact_name().unwrap(), "train_tiny_fused-bf16");
+        // Init never carries a precision suffix: masters are f32 at every
+        // precision, so one artifact serves both.
+        let init =
+            EngineOp::Init(InitReq { config: "tiny".into(), seed: 0, precision: Precision::Bf16 });
+        assert_eq!(init.artifact_name().unwrap(), "init_tiny");
+        // Merged ops suffix the config segment.
+        let merged = |precision: Precision| {
+            EngineOp::InferMerged(InferMergedReq {
+                config: "tiny".into(),
+                params: Arc::new(MergedParams {
+                    embed: Tensor::f32(vec![8, 4], vec![0.0; 32]),
+                    layers: vec![Tensor::f32(vec![4, 4], vec![0.0; 16])],
+                    precision,
+                }),
+                tokens: Tensor::i32(vec![1, 3], vec![0, 1, 2]),
+            })
+        };
+        assert_eq!(merged(Precision::F32).artifact_name().unwrap(), "infer_merged_tiny");
+        assert_eq!(merged(Precision::Bf16).artifact_name().unwrap(), "infer_merged_tiny-bf16");
+    }
+
+    #[test]
     fn artifact_names_render_the_manifest_convention() {
-        let init = EngineOp::Init(InitReq { config: "tiny".into(), seed: 0 });
+        let init =
+            EngineOp::Init(InitReq { config: "tiny".into(), seed: 0, precision: Precision::F32 });
         assert_eq!(init.artifact_name().unwrap(), "init_tiny");
         let compose = EngineOp::Compose(ComposeReq {
             variant: Variant::Fused,
@@ -1126,6 +1321,7 @@ mod tests {
                 Tensor::f32(vec![d, d], vec![0.0; d * d]),
                 Tensor::f32(vec![d, d], vec![0.0; d * d]),
             ],
+            precision: Precision::F32,
         };
         let op = EngineOp::InferMerged(InferMergedReq {
             config: "tiny".into(),
@@ -1150,6 +1346,7 @@ mod tests {
                 config: "tiny".into(),
                 variant: Variant::Fused,
                 adapter,
+                precision: Precision::F32,
                 params: params.clone(),
                 tokens: Tensor::i32(vec![3], vec![1, 2, 3]),
             })
@@ -1174,6 +1371,7 @@ mod tests {
             params: Arc::new(MergedParams {
                 embed: Tensor::f32(vec![8, d], vec![0.0; 8 * d]),
                 layers: vec![Tensor::f32(vec![d, d], vec![0.0; d * d])],
+                precision: Precision::F32,
             }),
             tokens: Tensor::i32(vec![2], vec![0, 1]),
         });
@@ -1241,6 +1439,7 @@ mod tests {
             config: "tiny".into(),
             variant: Variant::Fused,
             adapter: AdapterVariant::Dora,
+            precision: Precision::F32,
             params: Arc::new(AdapterParams { frozen: vec![t(2)], trainable: vec![t(3)] }),
             tokens: Tensor::i32(vec![2, 3], vec![0; 6]),
             total_rows: 64,
@@ -1361,6 +1560,7 @@ mod tests {
             config: "tiny".into(),
             variant: Variant::Fused,
             adapter: AdapterVariant::Dora,
+            precision: Precision::F32,
             params: Arc::new(AdapterParams { frozen: vec![t(1), t(2)], trainable: vec![t(3)] }),
             opt: OptState { m1: vec![t(3)], m2: vec![t(3)], step: 7 },
             tokens: Tensor::i32(vec![1, 1, 2], vec![0, 1]),

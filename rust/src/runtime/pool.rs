@@ -35,7 +35,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::ops::{AdapterParams, AdapterVariant, LossAndGradsReq, SampleGrads, Variant};
+use crate::runtime::ops::{
+    AdapterParams, AdapterVariant, LossAndGradsReq, Precision, SampleGrads, Variant,
+};
 use crate::runtime::{BackendSpec, ExecBackend, Tensor};
 use crate::util::lock_unpoisoned;
 
@@ -167,6 +169,7 @@ pub struct GradReducer {
     config: String,
     variant: Variant,
     adapter: AdapterVariant,
+    precision: Precision,
 }
 
 impl GradReducer {
@@ -174,8 +177,9 @@ impl GradReducer {
         config: impl Into<String>,
         variant: Variant,
         adapter: AdapterVariant,
+        precision: Precision,
     ) -> GradReducer {
-        GradReducer { config: config.into(), variant, adapter }
+        GradReducer { config: config.into(), variant, adapter, precision }
     }
 
     /// Contiguous shard plan: `bs` samples over at most `workers` shards,
@@ -224,6 +228,7 @@ impl GradReducer {
                 config: self.config.clone(),
                 variant: self.variant,
                 adapter: self.adapter,
+                precision: self.precision,
                 params: params.clone(),
                 tokens: Tensor::i32(
                     vec![range.len(), stride],
@@ -404,14 +409,17 @@ mod tests {
         use crate::runtime::ops::{reduce_sample_grads, InitReq, Variant};
         let be = ExecBackend::native();
         let info = be.config("tiny").unwrap();
-        let init = be.init(InitReq { config: "tiny".into(), seed: 2 }).unwrap();
+        let init = be
+            .init(InitReq { config: "tiny".into(), seed: 2, precision: Precision::F32 })
+            .unwrap();
         let params = Arc::new(init.params);
         let bs = info.train_batch;
         let seq1 = info.seq + 1;
         let mut corpus = crate::coordinator::data::MarkovCorpus::new(info.vocab, 3, 21);
         let tokens = Tensor::i32(vec![bs, seq1], corpus.block(1, bs, seq1));
         let total_rows = bs * info.seq;
-        let reducer = GradReducer::new("tiny", Variant::Fused, AdapterVariant::Dora);
+        let reducer =
+            GradReducer::new("tiny", Variant::Fused, AdapterVariant::Dora, Precision::F32);
 
         let mut reference: Option<(f32, Vec<Tensor>)> = None;
         for workers in [1usize, 3] {

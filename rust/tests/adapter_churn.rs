@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 use dorafactors::coordinator::{FastPath, GenOptions, Server, ServerCfg, Trainer, TrainerCfg};
 use dorafactors::runtime::ops::AdapterParams;
-use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, ExecBackend, InitReq};
+use dorafactors::runtime::{Adapter, AdapterStore, BackendSpec, ExecBackend, InitReq, Precision};
 
 /// Accounted bytes of one tiny-config merge (embed [64, 32] plus two
 /// [32, 32] layers = 4096 f32 = 16 KiB, already 512-byte aligned).
@@ -37,7 +37,9 @@ fn cfg(workers: usize, fast_path: FastPath, merge_budget: Option<u64>) -> Server
 fn tiny_adapter(name: &str, seed: i32) -> Adapter {
     let be = ExecBackend::native();
     let info = be.config("tiny").unwrap();
-    let init = be.init(InitReq { config: "tiny".into(), seed }).unwrap();
+    let init = be
+        .init(InitReq { config: "tiny".into(), seed, precision: Precision::F32 })
+        .unwrap();
     Adapter::new(name, &info, seed as u64, 0, init.params).unwrap()
 }
 
@@ -102,6 +104,7 @@ fn churn_under_traffic_matches_references() {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            precision: Precision::F32,
         },
     )
     .unwrap();

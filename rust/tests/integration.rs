@@ -50,6 +50,7 @@ fn tiny_trainer_cfg(seed: u64) -> TrainerCfg {
         eval_every: 0,
         train_workers: 0,
         grad_accum: 1,
+        precision: dorafactors::runtime::Precision::F32,
     }
 }
 
@@ -70,6 +71,7 @@ fn native_train_then_serve_handoff_under_concurrent_load() {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            ..TrainerCfg::default()
         },
     )
     .unwrap();
@@ -129,6 +131,7 @@ fn native_eager_vs_fused_convergence_parity_end_to_end() {
                 eval_every: 4,
                 train_workers: 0,
                 grad_accum: 1,
+                ..TrainerCfg::default()
             },
         )
         .unwrap();
@@ -360,6 +363,7 @@ fn train_then_serve_handoff() {
             eval_every: 0,
             train_workers: 0,
             grad_accum: 1,
+            precision: dorafactors::runtime::Precision::F32,
         },
     )
     .unwrap();

@@ -6,7 +6,7 @@
 //! must reproduce the full DoRA composition's logits within 1e-5 f32.
 
 use dorafactors::models::forward::{self, NativeModel};
-use dorafactors::runtime::ops::{AdapterParams, AdapterVariant, Variant};
+use dorafactors::runtime::ops::{AdapterParams, AdapterVariant, Precision, Variant};
 use dorafactors::runtime::{ConfigInfo, Tensor, TensorData};
 use dorafactors::util::prop::{check, prop_close};
 use dorafactors::util::rng::Rng;
@@ -113,8 +113,9 @@ fn property_merged_logits_match_composed_within_1e5() {
         let composed = model
             .infer_logits(&tokens, bs, seq)
             .map_err(|e| format!("composed infer: {e:#}"))?;
-        let merged = forward::merge_adapter_params(&info, &params, AdapterVariant::Dora)
-            .map_err(|e| format!("merge: {e:#}"))?;
+        let merged =
+            forward::merge_adapter_params(&info, &params, AdapterVariant::Dora, Precision::F32)
+                .map_err(|e| format!("merge: {e:#}"))?;
         let fast = forward::merged_infer_logits(&info, &merged, &tokens, bs, seq)
             .map_err(|e| format!("merged infer: {e:#}"))?;
 
@@ -167,7 +168,7 @@ fn property_variant_merges_match_their_composed_paths() {
             let composed = model
                 .infer_logits(&tokens, bs, seq)
                 .map_err(|e| format!("composed infer: {e:#}"))?;
-            let merged = forward::merge_adapter_params(&info, &params, adapter)
+            let merged = forward::merge_adapter_params(&info, &params, adapter, Precision::F32)
                 .map_err(|e| format!("merge: {e:#}"))?;
             let fast = forward::merged_infer_logits(&info, &merged, &tokens, bs, seq)
                 .map_err(|e| format!("merged infer: {e:#}"))?;
@@ -212,8 +213,9 @@ fn property_merged_parity_holds_for_eager_variant_too() {
         let composed = model
             .infer_logits(&tokens, 2, 6)
             .map_err(|e| format!("composed infer: {e:#}"))?;
-        let merged = forward::merge_adapter_params(&info, &params, AdapterVariant::Dora)
-            .map_err(|e| format!("merge: {e:#}"))?;
+        let merged =
+            forward::merge_adapter_params(&info, &params, AdapterVariant::Dora, Precision::F32)
+                .map_err(|e| format!("merge: {e:#}"))?;
         let fast = forward::merged_infer_logits(&info, &merged, &tokens, 2, 6)
             .map_err(|e| format!("merged infer: {e:#}"))?;
         for i in 0..composed.len() {

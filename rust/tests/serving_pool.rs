@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use dorafactors::coordinator::{FastPath, Server, ServerCfg};
 use dorafactors::runtime::ops::AdapterParams;
-use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq};
+use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq, Precision};
 
 fn cfg(workers: usize, fast_path: FastPath) -> ServerCfg {
     ServerCfg {
@@ -25,7 +25,9 @@ fn cfg(workers: usize, fast_path: FastPath) -> ServerCfg {
 fn tiny_adapter(name: &str, seed: i32) -> Adapter {
     let be = ExecBackend::native();
     let info = be.config("tiny").unwrap();
-    let init = be.init(InitReq { config: "tiny".into(), seed }).unwrap();
+    let init = be
+        .init(InitReq { config: "tiny".into(), seed, precision: Precision::F32 })
+        .unwrap();
     Adapter::new(name, &info, seed as u64, 0, init.params).unwrap()
 }
 

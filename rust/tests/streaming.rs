@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 
 use dorafactors::coordinator::{FastPath, GenOptions, Overloaded, Server, ServerCfg};
 use dorafactors::runtime::ops::AdapterVariant;
-use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq, TensorData};
+use dorafactors::runtime::{Adapter, BackendSpec, ExecBackend, InitReq, Precision, TensorData};
 
 fn cfg(workers: usize, fast_path: FastPath, queue_depth: usize) -> ServerCfg {
     ServerCfg {
@@ -26,7 +26,9 @@ fn cfg(workers: usize, fast_path: FastPath, queue_depth: usize) -> ServerCfg {
 fn perturbed_adapter(name: &str, variant: AdapterVariant) -> Adapter {
     let be = ExecBackend::native();
     let info = be.config("tiny").unwrap();
-    let init = be.init(InitReq { config: "tiny".into(), seed: 3 }).unwrap();
+    let init = be
+        .init(InitReq { config: "tiny".into(), seed: 3, precision: Precision::F32 })
+        .unwrap();
     let mut adapter = Adapter::new(name, &info, 3, 0, init.params).unwrap();
     for t in adapter.params.trainable.iter_mut() {
         if let TensorData::F32(v) = &mut t.data {

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use dorafactors::coordinator::{Trainer, TrainerCfg};
-use dorafactors::runtime::ops::{reduce_sample_grads, AdapterVariant, InitReq, Variant};
+use dorafactors::runtime::ops::{reduce_sample_grads, AdapterVariant, InitReq, Precision, Variant};
 use dorafactors::runtime::{BackendSpec, EnginePool, ExecBackend, GradReducer, Tensor};
 
 fn tiny_cfg(workers: usize, accum: usize) -> TrainerCfg {
@@ -24,6 +24,7 @@ fn tiny_cfg(workers: usize, accum: usize) -> TrainerCfg {
         eval_every: 0,
         train_workers: workers,
         grad_accum: accum,
+        precision: Precision::F32,
     }
 }
 
@@ -31,14 +32,16 @@ fn tiny_cfg(workers: usize, accum: usize) -> TrainerCfg {
 fn reduced_gradients_are_bitwise_identical_across_worker_counts() {
     let be = ExecBackend::native();
     let info = be.config("tiny").unwrap();
-    let init = be.init(InitReq { config: "tiny".into(), seed: 9 }).unwrap();
+    let init = be
+        .init(InitReq { config: "tiny".into(), seed: 9, precision: Precision::F32 })
+        .unwrap();
     let params = Arc::new(init.params);
     let bs = info.train_batch; // 4: workers=3 is the uneven case (2/1/1)
     let seq1 = info.seq + 1;
     let mut corpus = dorafactors::coordinator::data::MarkovCorpus::new(info.vocab, 3, 77);
     let tokens = Tensor::i32(vec![bs, seq1], corpus.block(1, bs, seq1));
     let total_rows = bs * info.seq;
-    let reducer = GradReducer::new("tiny", Variant::Fused, AdapterVariant::Dora);
+    let reducer = GradReducer::new("tiny", Variant::Fused, AdapterVariant::Dora, Precision::F32);
 
     let mut reference: Option<(f32, Vec<Tensor>)> = None;
     for workers in [1usize, 2, 3, 4] {
